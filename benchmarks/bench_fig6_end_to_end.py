@@ -1,0 +1,40 @@
+"""Paper Fig. 6: end-to-end execution time vs input size (4 Mappers /
+2 Reducers).  Claims validated:
+
+  1. roughly linear total time in the linear regime (large inputs);
+  2. a flat, cold-start-dominated region at small inputs.
+"""
+
+from __future__ import annotations
+
+from .common import COLD_START_S, INPUT_SIZES, fmt_csv, run_paper_job
+
+
+def run(print_rows=True) -> list[str]:
+    rows = []
+    walls = []
+    for n in INPUT_SIZES:
+        report, wall, coord, _ = run_paper_job(n)
+        cold = sum(p.cold_start_seconds for p in coord.pools.values())
+        walls.append(wall)
+        rows.append(fmt_csv(
+            f"fig6/end_to_end/{n//1024}KiB", wall * 1e6,
+            f"cold_start_s={cold:.3f};mappers=4;reducers=2"))
+    # derived validation: linearity at the top end, flatness at the bottom
+    big_ratio = walls[-1] / walls[-2]
+    size_ratio = INPUT_SIZES[-1] / INPUT_SIZES[-2]
+    small_ratio = walls[1] / walls[0]
+    rows.append(fmt_csv("fig6/linearity", 0.0,
+                        f"t({INPUT_SIZES[-1]})/t({INPUT_SIZES[-2]})="
+                        f"{big_ratio:.2f}_vs_size_ratio={size_ratio:.1f}"))
+    rows.append(fmt_csv("fig6/cold_start_flatness", 0.0,
+                        f"t_small_ratio={small_ratio:.2f}_(≈1_means_cold-"
+                        f"start-dominated)"))
+    if print_rows:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Paper Fig. 7: average total time per component across input sizes.
+Claim validated: the Mapper dominates (buffer sort + combiner before upload);
+Coordinator/Splitter/Finalizer overheads stay small."""
+
+from __future__ import annotations
+
+from .common import INPUT_SIZES, fmt_csv, run_paper_job
+
+
+def run(print_rows=True) -> list[str]:
+    rows = []
+    for n in INPUT_SIZES[1:4]:
+        report, wall, _, _ = run_paper_job(n, cold_start=0.0)
+        comp = report.component_times()
+        for role in ("splitter", "mapper", "reducer", "finalizer"):
+            rows.append(fmt_csv(f"fig7/{role}/{n//1024}KiB",
+                                comp.get(role, 0.0) * 1e6,
+                                f"share={comp.get(role, 0.0)/max(wall,1e-9):.2f}"))
+        dominant = max(comp, key=comp.get)
+        rows.append(fmt_csv(f"fig7/dominant/{n//1024}KiB", 0.0,
+                            f"component={dominant}"))
+    if print_rows:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Fig. 8: stacked per-phase (processing / uploading / downloading)
+time per component.  Claims validated: Mapper is processing-heavy (sort +
+combiner), Reducer splits between download (spill fetch) and processing
+(merge + reduce)."""
+
+from __future__ import annotations
+
+from .common import INPUT_SIZES, fmt_csv, run_paper_job
+
+
+def run(print_rows=True) -> list[str]:
+    rows = []
+    n = INPUT_SIZES[3]
+    report, _, _, store = run_paper_job(n, cold_start=0.0)
+    phases = report.phase_times()
+    for role, ph in sorted(phases.items()):
+        total = sum(ph.values()) or 1e-9
+        for phase in ("processing", "uploading", "downloading"):
+            rows.append(fmt_csv(
+                f"fig8/{role}/{phase}/{n//1024}KiB", ph[phase] * 1e6,
+                f"share={ph[phase]/total:.2f}"))
+    m = phases.get("mapper", {})
+    if m:
+        rows.append(fmt_csv(
+            "fig8/mapper_processing_dominates", 0.0,
+            f"processing>{'upload' if m['processing'] > m['uploading'] else 'FAIL'}"))
+    rows.append(fmt_csv("fig8/shuffle_traffic_bytes", 0.0,
+                        f"uploaded={store.bytes_uploaded};"
+                        f"downloaded={store.bytes_downloaded}"))
+    if print_rows:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

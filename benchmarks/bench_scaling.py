@@ -1,0 +1,45 @@
+"""Beyond-paper scaling benches: worker-count scaling (the paper's
+'configurable scaling' §III) and gradient-compression shuffle volume —
+the training-plane analogue of the combiner claim."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.compression import compress_int8
+
+from .common import INPUT_SIZES, fmt_csv, run_paper_job
+
+
+def run(print_rows=True) -> list[str]:
+    rows = []
+    n = INPUT_SIZES[3]
+    # worker scaling at fixed input: more mappers → less mapper wall time
+    base = None
+    for m in (1, 2, 4, 8):
+        report, wall, _, _ = run_paper_job(n, cold_start=0.0, n_mappers=m,
+                                           n_reducers=2)
+        comp = report.component_times()
+        base = base or comp["mapper"]
+        rows.append(fmt_csv(f"scaling/mappers_{m}", wall * 1e6,
+                            f"mapper_avg_s={comp['mapper']:.4f};"
+                            f"speedup_vs_m1={base/comp['mapper']:.2f}"))
+
+    # gradient compression: spill-volume reduction on the wire
+    g = jnp.asarray(np.random.default_rng(0).normal(size=(1 << 20,)),
+                    jnp.float32)
+    q, scale = jax.jit(compress_int8)(g)
+    raw, comp_b = g.size * 4, q.size * 1 + 4
+    rows.append(fmt_csv("scaling/grad_compression_1M", 0.0,
+                        f"bytes {raw}->{comp_b} ({raw/comp_b:.2f}x);"
+                        f"max_err={float(jnp.max(jnp.abs(g - q*scale))):.4f}"))
+    if print_rows:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Shared benchmark scaffolding: the paper's experimental configuration.
+
+§IV-C: combiner + Finalizer enabled, 50 MB input/output buffers, 5 MB
+multipart, merge fan-in 100, spill threshold 75%, 4 Mappers / 2 Reducers.
+Input sizes are scaled to CPU-container scale (the paper's shape, not its
+absolute magnitudes); the autoscaler injects a Knative-like cold start so
+the small-input regime reproduces Fig. 6's flat region.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (AutoscalerConfig, Coordinator, MemoryStore,
+                        MetadataStore, make_wordcount_job)
+from repro.data.pipeline import synth_corpus
+
+MB = 1024 * 1024
+
+# paper §IV-C configuration (buffers kept at paper values; they exceed the
+# scaled corpus sizes, so the threshold mechanics still engage via ratio)
+PAPER_JOB = dict(
+    n_mappers=4,
+    n_reducers=2,
+    run_combiner=True,
+    run_finalizer=True,
+    input_buffer_bytes=50 * MB,
+    output_buffer_bytes=50 * MB,
+    multipart_bytes=5 * MB,
+    merge_fan_in=100,
+    spill_threshold=0.75,
+)
+
+COLD_START_S = 0.08          # Knative-ish activation delay (scaled)
+
+# input sizes (bytes of preprocessed text) — the paper's x-axis shape
+INPUT_SIZES = [64 * 1024, 256 * 1024, 1 * MB, 4 * MB, 16 * MB]
+
+
+def corpus_of_bytes(n_bytes: int, seed: int = 0) -> str:
+    words = synth_corpus(max(64, n_bytes // 6), vocab_words=5000, seed=seed)
+    return words[:n_bytes]
+
+
+def run_paper_job(n_bytes: int, cold_start: float = COLD_START_S,
+                  seed: int = 0, **overrides):
+    store = MemoryStore()
+    store.put("input/corpus.txt", corpus_of_bytes(n_bytes, seed).encode())
+    meta = MetadataStore()
+    coord = Coordinator(
+        store, meta,
+        autoscaler=AutoscalerConfig(cold_start=cold_start, max_scale=16,
+                                    scale_to_zero_grace=10.0),
+        speculative_execution=False)
+    cfg = make_wordcount_job(**{**PAPER_JOB, **overrides})
+    t0 = time.perf_counter()
+    report = coord.run_job(cfg)
+    wall = time.perf_counter() - t0
+    assert report.state.value == "DONE", report.error
+    return report, wall, coord, store
+
+
+def fmt_csv(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

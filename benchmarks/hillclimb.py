@@ -1,0 +1,108 @@
+"""§Perf hillclimb driver: compile a cell under a set of optimization opts
+and report the three roofline terms + deltas vs the recorded baseline.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch yi-34b \
+      --shape train_4k --opts act=sp,zero2=1 [--deploy] [--save tag]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.launch import dryrun as dr
+from repro.launch.mesh import make_production_mesh
+from repro import configs
+from repro.models import SHAPES_BY_NAME
+
+from .roofline import (CHIPS, HBM_BW, LINK_BW, PEAK_FLOPS,
+                       _attention_correction, _mamba_correction,
+                       model_flops_per_device)
+
+
+def parse_opts(s: str) -> dict:
+    out = {}
+    if not s:
+        return out
+    for kv in s.split(","):
+        k, _, v = kv.partition("=")
+        out[k] = (v in ("1", "true", "True")) if v in (
+            "0", "1", "true", "false", "True", "False") else v
+    return out
+
+
+def terms(arch: str, shape_name: str, flops, hbm, coll):
+    cfg = configs.get(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    corr = _attention_correction(cfg, shape) + _mamba_correction(cfg, shape)
+    flops = flops + corr
+    t = {"t_compute": flops / PEAK_FLOPS, "t_memory": hbm / HBM_BW,
+         "t_collective": coll / LINK_BW}
+    bound = max(t.values())
+    mf = model_flops_per_device(cfg, shape)
+    t["roofline_fraction"] = (mf / PEAK_FLOPS) / bound if bound else 0.0
+    t["dominant"] = max(t, key=lambda k: t[k] if k.startswith("t_") else -1)
+    return t
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--opts", default="")
+    ap.add_argument("--deploy", action="store_true",
+                    help="also compile the deploy variant (memory check)")
+    ap.add_argument("--baseline-dir", default="results/dryrun")
+    ap.add_argument("--save", default=None,
+                    help="save results under results/hillclimb/<save>.json")
+    args = ap.parse_args()
+    opts = parse_opts(args.opts)
+
+    mesh = make_production_mesh()
+    res = dr.account_costs(args.arch, args.shape, mesh, None, opts)
+    out = {
+        "arch": args.arch, "shape": args.shape, "opts": opts,
+        "flops_per_device": res["flops_per_device"],
+        "hbm_bytes_per_device": res["hbm_bytes_per_device"],
+        "collective_bytes_per_device": res["collective_bytes_per_device"],
+    }
+    t = terms(args.arch, args.shape, res["flops_per_device"],
+              res["hbm_bytes_per_device"],
+              res["collective_bytes_per_device"]["total"])
+    out.update(t)
+    if args.deploy:
+        _, compiled, _, tc = dr._compile_variant(args.arch, args.shape, mesh,
+                                                 None, "deploy", opts)
+        mem = compiled.memory_analysis()
+        out["peak_gib"] = (mem.argument_size_in_bytes
+                           + mem.output_size_in_bytes
+                           + mem.temp_size_in_bytes
+                           - mem.alias_size_in_bytes) / 2**30
+        out["deploy_compile_s"] = tc
+
+    base_path = os.path.join(args.baseline_dir,
+                             f"{args.arch}__{args.shape}__single.json")
+    if os.path.exists(base_path):
+        base = json.load(open(base_path))
+        bt = terms(args.arch, args.shape, base["flops_per_device"],
+                   base["hbm_bytes_per_device"],
+                   base["collective_bytes_per_device"]["total"])
+        out["baseline"] = bt
+        print(f"--- {args.arch} × {args.shape} with opts={opts}")
+        for k in ("t_compute", "t_memory", "t_collective",
+                  "roofline_fraction"):
+            d = t[k] / bt[k] - 1 if bt[k] else 0.0
+            print(f"  {k:20s} {bt[k]:10.4f} → {t[k]:10.4f}  ({d:+.1%})")
+        if "peak_gib" in out:
+            print(f"  peak_gib             {base['bytes_per_device']['peak_estimate']/2**30:10.2f} → {out['peak_gib']:10.2f}")
+    else:
+        print(json.dumps(out, indent=1))
+    if args.save:
+        os.makedirs("results/hillclimb", exist_ok=True)
+        with open(f"results/hillclimb/{args.save}.json", "w") as f:
+            json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Roofline analysis (§Roofline): three terms per (arch × shape) from the
+dry-run artifacts in results/dryrun/*.json.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs          (197 TF bf16)
+  memory term     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+  collective term = collective_bytes_per_device / link_bw      (50 GB/s)
+
+cost_analysis()/memory_analysis() on the SPMD executable are per-device, so
+no further division by chip count is needed.  Two analytic corrections cover
+FLOPs that live inside *data* loops the cost model counts once
+(EXPERIMENTS.md §Dry-run methodology):
+
+  * chunked-attention inner scan: the implementation computes full
+    rectangular (Sq × Skv) scores chunk by chunk; HLO saw one chunk →
+    add (n_chunks−1)/n_chunks of the analytic attention matmul FLOPs;
+  * mamba1 time-step scan: ≈ 9·B·L·d_inner·N VPU flops per pass.
+
+Train multiplier for corrected terms: forward + remat recompute + backward
+≈ 4× the forward matmul FLOPs under full-layer checkpointing.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro import configs
+from repro.models import SHAPES_BY_NAME
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per link
+CHIPS = 256                  # single-pod roofline
+
+
+def _attention_correction(cfg, shape) -> float:
+    """Analytic attention matmul FLOPs *missing* from the HLO count
+    (the (n_chunks-1)/n_chunks of the chunked score/value matmuls),
+    per device."""
+    if cfg.layer_kind != "attn" and cfg.shared_attn_every == 0:
+        return 0.0
+    s = shape.seq_len
+    if shape.kind == "decode":
+        return 0.0               # decode attention has no chunk loop
+    b_global = shape.global_batch
+    if shape.kind == "train":
+        b_global = shape.global_batch  # all microbatches per step
+    hd = cfg.head_dim_
+    n_chunks = max(1, s // cfg.attn_chunk)
+    missing_frac = (n_chunks - 1) / n_chunks
+    # per layer fwd: QK^T + PV = 4 · B · H · Sq · Skv · hd (full rectangle —
+    # the chunked implementation does not skip masked chunks)
+    per_layer = 4.0 * b_global * cfg.n_heads * s * s * hd
+    n_attn = cfg.n_layers if cfg.layer_kind == "attn" else 0
+    if cfg.shared_attn_every > 0:
+        n_attn += cfg.n_layers // cfg.shared_attn_every
+    mult = 4.0 if shape.kind == "train" else 1.0   # fwd+remat+bwd
+    return per_layer * n_attn * mult * missing_frac / CHIPS
+
+
+def _mamba_correction(cfg, shape) -> float:
+    if cfg.layer_kind != "mamba1":
+        return 0.0
+    if shape.kind == "decode":
+        return 0.0
+    tokens = shape.global_batch * shape.seq_len
+    per_layer = 9.0 * tokens * cfg.d_inner_ * cfg.ssm_state
+    mult = 4.0 if shape.kind == "train" else 1.0
+    return per_layer * cfg.n_layers * mult / CHIPS
+
+
+def model_flops_per_device(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for train;
+    2·N(_active)·D for serving passes; per device."""
+    n = cfg.n_active_params() if cfg.is_moe else cfg.n_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / CHIPS
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / CHIPS
+    tokens = shape.global_batch            # one token per sequence
+    return 2.0 * n * tokens / CHIPS
+
+
+def analyse(dirpath: str, mesh: str = "single") -> list[dict]:
+    rows = []
+    for arch in configs.ARCHS:
+        cfg = configs.get(arch)
+        for fname in sorted(os.listdir(dirpath)):
+            if not fname.startswith(f"{arch}__") or \
+                    not fname.endswith(f"__{mesh}.json"):
+                continue
+            cell = json.load(open(os.path.join(dirpath, fname)))
+            if "flops_per_device" not in cell:
+                continue
+            shape = SHAPES_BY_NAME[cell["shape"]]
+            corr = _attention_correction(cfg, shape) + \
+                _mamba_correction(cfg, shape)
+            flops = cell["flops_per_device"] + corr
+            hbm = cell["hbm_bytes_per_device"]
+            coll = cell["collective_bytes_per_device"]["total"]
+            t_c = flops / PEAK_FLOPS
+            t_m = hbm / HBM_BW
+            t_x = coll / LINK_BW
+            dom = max(("compute", t_c), ("memory", t_m),
+                      ("collective", t_x), key=lambda kv: kv[1])[0]
+            mf = model_flops_per_device(cfg, shape)
+            bound = max(t_c, t_m, t_x)
+            rows.append({
+                "arch": arch, "shape": cell["shape"],
+                "flops_per_dev": flops, "hbm_bytes": hbm, "coll_bytes": coll,
+                "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+                "dominant": dom,
+                "model_flops": mf,
+                "useful_ratio": mf / flops if flops else 0.0,
+                "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+                "peak_gib": cell["bytes_per_device"]["peak_estimate"] / 2**30,
+                "corrections": corr,
+            })
+    return rows
+
+
+def print_table(rows: list[dict]) -> None:
+    hdr = (f"{'arch':18s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'dom':>10s} {'useful':>7s} {'roofline':>9s} "
+           f"{'peakGiB':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:18s} {r['shape']:12s} "
+              f"{r['t_compute_s']:9.4f} {r['t_memory_s']:9.4f} "
+              f"{r['t_collective_s']:9.4f} {r['dominant']:>10s} "
+              f"{r['useful_ratio']:7.2f} {r['roofline_fraction']:9.3f} "
+              f"{r['peak_gib']:8.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = analyse(args.dir)
+    print_table(rows)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Architecture registry: one module per assigned architecture.
+
+Each module defines ``CONFIG`` (the exact published configuration) and
+``reduced()`` (a tiny same-family variant for CPU smoke tests).
+``get(name)`` / ``get_reduced(name)`` / ``ARCHS`` are the public API;
+the launcher's ``--arch <id>`` resolves through here.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from ..models.config import ModelConfig
+
+ARCHS = [
+    "gemma2-9b",
+    "stablelm-12b",
+    "qwen3-32b",
+    "yi-34b",
+    "qwen2-moe-a2.7b",
+    "mixtral-8x7b",
+    "zamba2-1.2b",
+    "internvl2-2b",
+    "falcon-mamba-7b",
+    "musicgen-medium",
+    # the paper's own workload (wordcount MapReduce) has no model config;
+    # its configs live in repro.core.job
+]
+
+_MODULES = {name: name.replace("-", "_").replace(".", "_") for name in ARCHS}
+
+
+def _load(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get(name: str) -> ModelConfig:
+    return _load(name).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return _load(name).reduced()
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {name: get(name) for name in ARCHS}

@@ -1,0 +1,31 @@
+"""Core — the paper's serverless MapReduce system.
+
+Host plane (paper-faithful components):
+  storage (S3), metadata (Redis), events (Kafka/CloudEvents),
+  autoscaler (Knative KPA), splitter, workers (Mapper/Reducer/Finalizer),
+  coordinator (job state machine), job (JSON config), client (Fig. 4 package).
+
+Device plane (the TPU-native realization):
+  shuffle (hash-partition all_to_all / reduce_scatter),
+  mapreduce (SPMD map→combine→shuffle→reduce→finalize).
+"""
+
+from .autoscaler import AutoscalerConfig, ServerlessPool
+from .client import Job, MapReduce
+from .coordinator import Coordinator, JobReport, JobState
+from .events import CloudEvent, EventBus
+from .job import JobConfig, make_wordcount_job
+from .mapreduce import DeviceJobConfig, mapreduce, segment_reduce
+from .metadata import MetadataStore
+from .splitter import ByteRange, split_object, split_prefix
+from .storage import FileStore, MemoryStore, ObjectStore
+from .workers import read_final_output, run_mapper, run_reducer
+
+__all__ = [
+    "AutoscalerConfig", "ServerlessPool", "Job", "MapReduce", "Coordinator",
+    "JobReport", "JobState", "CloudEvent", "EventBus", "JobConfig",
+    "make_wordcount_job", "DeviceJobConfig", "mapreduce", "segment_reduce",
+    "MetadataStore", "ByteRange", "split_object", "split_prefix", "FileStore",
+    "MemoryStore", "ObjectStore", "read_final_output", "run_mapper",
+    "run_reducer",
+]

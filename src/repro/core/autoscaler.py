@@ -1,0 +1,142 @@
+"""Scale-to-zero worker pool — the Knative stand-in.
+
+The paper's workers are Knative Services/JobSinks: zero replicas until an event
+arrives, then the autoscaler (KPA) brings instances up toward a concurrency
+target, and back down to zero after an idle window.  Cold starts are the reason
+the paper's Fig. 6 is flat at small inputs — activation latency dominates.
+
+This module reproduces those dynamics so the benchmarks can show the same
+curve: a ``ServerlessPool`` holds *deactivated* worker factories; incoming
+events activate instances (paying a configurable ``cold_start`` delay once per
+instance), a KPA-style loop sizes the pool as ``ceil(concurrency /
+target_concurrency)`` bounded by ``max_scale``, and instances retire to zero
+after ``scale_to_zero_grace`` of idleness.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+@dataclass
+class AutoscalerConfig:
+    target_concurrency: int = 1        # KPA default: 1 request per instance
+    max_scale: int = 64
+    min_scale: int = 0                 # scale-to-zero
+    cold_start: float = 0.0            # seconds to activate an instance
+    scale_to_zero_grace: float = 30.0  # idle seconds before retiring
+
+
+@dataclass
+class _Instance:
+    id: int
+    started: float
+    busy: bool = False
+    last_used: float = field(default_factory=time.time)
+
+
+class ServerlessPool:
+    """A pool of identical workers with scale-from-zero semantics.
+
+    ``submit(task)`` behaves like an event hitting a Knative service: if a warm
+    idle instance exists it runs immediately; otherwise a new instance is
+    activated (cold start) provided we are under ``max_scale``; otherwise the
+    task queues.  Execution is synchronous in the caller's thread (workers in
+    this framework are deterministic stage functions); the pool tracks *which*
+    instance ran it and the latency split (cold start vs execution) so
+    benchmarks can report the paper's phase numbers.
+    """
+
+    def __init__(self, name: str, config: AutoscalerConfig | None = None) -> None:
+        self.name = name
+        self.config = config or AutoscalerConfig()
+        self._instances: dict[int, _Instance] = {}
+        self._next_id = 0
+        self._lock = threading.Lock()
+        # instrumentation
+        self.cold_starts = 0
+        self.total_invocations = 0
+        self.cold_start_seconds = 0.0
+
+    # -- KPA sizing ----------------------------------------------------------
+    def desired_scale(self, concurrency: int) -> int:
+        c = self.config
+        want = math.ceil(concurrency / max(1, c.target_concurrency))
+        return max(c.min_scale, min(c.max_scale, want))
+
+    def replicas(self) -> int:
+        with self._lock:
+            return len(self._instances)
+
+    # -- instance lifecycle ----------------------------------------------------
+    def _acquire(self) -> tuple[_Instance, bool]:
+        """Returns (instance, was_cold)."""
+        with self._lock:
+            for inst in self._instances.values():
+                if not inst.busy:
+                    inst.busy = True
+                    inst.last_used = time.time()
+                    return inst, False
+            if len(self._instances) < self.config.max_scale:
+                inst = _Instance(id=self._next_id, started=time.time(), busy=True)
+                self._next_id += 1
+                self._instances[inst.id] = inst
+                return inst, True
+        # pool saturated: wait for an idle instance
+        while True:
+            time.sleep(0.001)
+            with self._lock:
+                for inst in self._instances.values():
+                    if not inst.busy:
+                        inst.busy = True
+                        inst.last_used = time.time()
+                        return inst, False
+
+    def _release(self, inst: _Instance) -> None:
+        with self._lock:
+            inst.busy = False
+            inst.last_used = time.time()
+
+    def reap_idle(self) -> int:
+        """Retire instances idle past the grace window (scale-to-zero)."""
+        now = time.time()
+        with self._lock:
+            dead = [i for i, inst in self._instances.items()
+                    if not inst.busy
+                    and now - inst.last_used > self.config.scale_to_zero_grace
+                    and len(self._instances) > self.config.min_scale]
+            for i in dead:
+                del self._instances[i]
+        return len(dead)
+
+    def scale_to_zero(self) -> None:
+        with self._lock:
+            self._instances = {i: inst for i, inst in self._instances.items()
+                               if inst.busy}
+
+    # -- invocation -------------------------------------------------------------
+    def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> Any:
+        inst, cold = self._acquire()
+        self.total_invocations += 1
+        if cold:
+            self.cold_starts += 1
+            if self.config.cold_start > 0:
+                time.sleep(self.config.cold_start)
+            self.cold_start_seconds += self.config.cold_start
+        try:
+            return fn(*args, **kwargs)
+        finally:
+            self._release(inst)
+
+    def stats(self) -> dict[str, Any]:
+        return {
+            "pool": self.name,
+            "replicas": self.replicas(),
+            "cold_starts": self.cold_starts,
+            "invocations": self.total_invocations,
+            "cold_start_seconds": round(self.cold_start_seconds, 6),
+        }

@@ -1,0 +1,128 @@
+"""Client package — submitting and monitoring jobs (§III-D, Fig. 3/4).
+
+The paper's users interact through a Python package that (1) extracts the
+source of user-defined map/reduce functions and appends it to the JSON
+payload, (2) submits each job to the Coordinator, (3) polls job progress from
+the Redis metadata, and (4) runs multiple jobs asynchronously.  A job with
+several map functions is executed as a *chain* of MapReduce jobs: each map
+stage consumes the previous stage's intermediate output; only the last stage
+runs the reducer — the client locates intermediate files between stages
+(§III-D, the two-mapper example).
+
+This module is that package against our in-process Coordinator.  ``Job`` and
+``MapReduce`` mirror the names in the paper's Fig. 4.
+"""
+
+from __future__ import annotations
+
+import asyncio
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from .coordinator import Coordinator, JobReport, JobState
+from .job import JobConfig
+from .metadata import job_state_key
+
+
+@dataclass
+class Job:
+    """A user-facing job: one or more map functions and an optional reducer,
+    exactly the Fig. 4 shape."""
+
+    payload: dict[str, Any] | JobConfig
+    mappers: list[Callable]
+    reducer: Callable | None = None
+    combiner: Callable | None = None
+    reports: list[JobReport] = field(default_factory=list)
+
+    def base_config(self) -> JobConfig:
+        if isinstance(self.payload, JobConfig):
+            return self.payload
+        return JobConfig.from_json(dict(self.payload))
+
+    def build_stages(self) -> list[JobConfig]:
+        """Compile the multi-map job into chained JobConfigs.
+
+        Stage i>0 reads stage i-1's output prefix; only the final stage gets
+        the reducer + finalizer.  Identity-reduce intermediate stages are
+        map-only workflows (the paper: 'the first executes the first map
+        function only').
+        """
+        if not self.mappers:
+            raise ValueError("need at least one mapper function")
+        base = self.base_config()
+        stages: list[JobConfig] = []
+        prev_output: str | None = None
+        n = len(self.mappers)
+        for i, map_fn in enumerate(self.mappers):
+            cfg = JobConfig.from_json(base.to_json())
+            cfg.job_id = f"{base.job_id}-s{i}"
+            if prev_output is not None:
+                cfg.input_prefix = prev_output
+            is_last = i == n - 1
+            if is_last:
+                cfg.with_functions(map_fn, self.reducer, self.combiner)
+                cfg.run_finalizer = base.run_finalizer and self.reducer is not None
+                if self.reducer is None:
+                    cfg.n_reducers = 0
+            else:
+                # intermediate stage: map-only; pass records through unreduced
+                cfg.with_functions(map_fn)
+                cfg.n_reducers = 0
+                cfg.run_finalizer = False
+                cfg.run_combiner = False
+            stages.append(cfg)
+            prev_output = f"{cfg.output_prefix.rstrip('/')}/{cfg.job_id}/" \
+                if is_last else f"jobs/{cfg.job_id}/intermediate/"
+        return stages
+
+
+class MapReduce:
+    """Async multi-job runner (Fig. 4): each job is an asyncio task; the run
+    returns the job IDs so users can locate results in storage."""
+
+    def __init__(self, coordinator: Coordinator, jobs: list[Job],
+                 logging: bool = False,
+                 poll_interval: float = 0.02) -> None:
+        self.coordinator = coordinator
+        self.jobs = jobs
+        self.logging = logging
+        self.poll_interval = poll_interval
+
+    # -- monitoring (Fig. 3: the package polls Redis metadata) ---------------
+    def job_status(self, job_id: str) -> str:
+        return self.coordinator.meta.get(job_state_key(job_id),
+                                         JobState.PENDING.value)
+
+    async def _run_job(self, job: Job) -> list[str]:
+        loop = asyncio.get_running_loop()
+        ids = []
+        for cfg in job.build_stages():
+            if self.logging:
+                print(f"[client] submitting {cfg.job_id} "
+                      f"({cfg.n_mappers} mappers / {cfg.n_reducers} reducers)")
+            # submit to the coordinator off-thread; poll metadata meanwhile
+            fut = loop.run_in_executor(None, self.coordinator.run_job, cfg)
+            while not fut.done():
+                await asyncio.sleep(self.poll_interval)
+                if self.logging:
+                    state = self.job_status(cfg.job_id)
+                    m = self.coordinator.stage_progress(cfg.job_id, "mapper")
+                    r = self.coordinator.stage_progress(cfg.job_id, "reducer")
+                    print(f"[client] {cfg.job_id}: {state} "
+                          f"(mappers done={m}, reducers done={r})")
+            report: JobReport = fut.result()
+            job.reports.append(report)
+            if report.state != JobState.DONE:
+                raise RuntimeError(
+                    f"job {cfg.job_id} failed: {report.error}")
+            ids.append(cfg.job_id)
+        return ids
+
+    async def run(self) -> list[list[str]]:
+        """Run all jobs concurrently; returns per-job lists of stage job IDs."""
+        return list(await asyncio.gather(
+            *(self._run_job(j) for j in self.jobs)))
+
+    def run_sync(self) -> list[list[str]]:
+        return asyncio.run(self.run())

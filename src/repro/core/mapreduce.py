@@ -1,0 +1,204 @@
+"""Device-parallel MapReduce — the paper's pipeline on a TPU mesh.
+
+``mapreduce()`` runs the full Coordinator workflow (split → map → combine →
+shuffle → reduce → finalize) as one SPMD program.  Workers are mesh devices;
+the Coordinator's synchronization is the collective schedule; spill traffic is
+ICI.  The host-side engine (`core.workers`) and this one implement the same
+semantics — ``tests/test_mapreduce.py`` holds them to the same answers.
+
+Two backends run identical worker code:
+
+  * ``backend="shard_map"`` — real SPMD over a mesh axis (production path,
+    multi-pod dry-run).
+  * ``backend="vmap"`` — the same collectives over a vmap axis, simulating W
+    workers on one device (CI path; this container has a single CPU device).
+
+Modes (see core.shuffle):
+
+  * ``mode="aggregate"`` — commutative/associative reduce (sum family):
+    local combine → ``reduce_scatter``.  The paper's combiner fused into the
+    collective.
+  * ``mode="group"`` — general reduce over each key's full value list:
+    fixed-capacity ``all_to_all`` + sort + segment reduce.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .shuffle import (ShuffleStats, shuffle_aggregate, shuffle_group,
+                      sort_and_group)
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+@dataclass(frozen=True)
+class DeviceJobConfig:
+    """Device-engine analogue of the paper's JSON job config (§III-C).
+
+    num_buckets    — key-id space size (aggregate mode's dense width)
+    n_workers      — mesh-axis size: the paper's n_mappers == n_reducers here,
+                     every device plays both roles (map, then own a partition)
+    capacity       — per-partition record capacity for the grouping exchange
+                     (the spill-file size bound)
+    run_combiner   — pre-reduce locally before shuffling (paper default: on)
+    """
+
+    num_buckets: int
+    n_workers: int
+    capacity: int = 0
+    axis_name: str = "workers"
+    run_combiner: bool = True
+
+
+# ---------------------------------------------------------------------------
+# Built-in segment reducers for grouping mode
+# ---------------------------------------------------------------------------
+
+def segment_reduce(kind: str, keys: jax.Array, values: jax.Array,
+                   starts: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Reduce a key-sorted, group-marked stream.
+
+    Returns dense (group_keys, group_values, group_valid) of the same length
+    as the input stream (padded with invalid groups) — static shapes, as TPU
+    requires.  ``kind`` ∈ {sum, max, min, count, mean}.
+    """
+    n = keys.shape[0]
+    valid = keys != INT32_MAX
+    seg = jnp.cumsum(starts) - 1
+    seg = jnp.where(valid, seg, n)  # park invalid records on overflow row
+    vshape = (n + 1,) + values.shape[1:]
+
+    if kind in ("sum", "mean", "count"):
+        sums = jax.ops.segment_sum(values, seg, num_segments=n + 1)
+        counts = jax.ops.segment_sum(jnp.ones((n,), values.dtype), seg,
+                                     num_segments=n + 1)
+        if kind == "sum":
+            out_v = sums
+        elif kind == "count":
+            out_v = counts.reshape((n + 1,) + (1,) * (values.ndim - 1)) \
+                if values.ndim > 1 else counts
+        else:
+            out_v = sums / jnp.maximum(
+                counts.reshape((-1,) + (1,) * (values.ndim - 1)), 1.0)
+    elif kind == "max":
+        out_v = jax.ops.segment_max(values, seg, num_segments=n + 1)
+    elif kind == "min":
+        out_v = jax.ops.segment_min(values, seg, num_segments=n + 1)
+    else:
+        raise ValueError(f"unknown segment reducer {kind!r}")
+
+    group_keys = jnp.full((n + 1,), -1, dtype=jnp.int32).at[seg].max(
+        jnp.where(valid, keys, -1))
+    group_valid = group_keys[:n] >= 0
+    out_v = out_v[:n]
+    out_v = jnp.where(
+        group_valid.reshape((-1,) + (1,) * (out_v.ndim - 1)),
+        out_v, jnp.zeros_like(out_v))
+    return group_keys[:n], out_v, group_valid
+
+
+# ---------------------------------------------------------------------------
+# The SPMD worker body — identical under shard_map and vmap
+# ---------------------------------------------------------------------------
+
+def _worker_body(shard, *, cfg: DeviceJobConfig, map_fn: Callable,
+                 mode: str, reduce_fn, combine_fn, finalize: bool):
+    keys, values, valid = map_fn(shard)
+    keys = keys.astype(jnp.int32)
+
+    if mode == "aggregate":
+        part = shuffle_aggregate(keys, values, cfg.axis_name, cfg.num_buckets,
+                                 valid=valid, combine_fn=combine_fn)
+        if finalize:
+            # Finalizer: concatenate every reducer's slice into one object —
+            # all_gather is the collective form of §III-A.5's stream-concat.
+            return jax.lax.all_gather(part, cfg.axis_name, tiled=True)
+        return part
+
+    if mode == "group":
+        if cfg.capacity <= 0:
+            raise ValueError("grouping mode needs a positive capacity")
+        out_k, out_v, starts, stats = shuffle_group(
+            keys, values, cfg.axis_name, cfg.n_workers, cfg.capacity,
+            valid=valid)
+        if isinstance(reduce_fn, str):
+            gk, gv, gvalid = segment_reduce(reduce_fn, out_k, out_v, starts)
+        else:
+            gk, gv, gvalid = reduce_fn(out_k, out_v, starts)
+        dropped = jax.lax.psum(stats.dropped, cfg.axis_name)
+        if finalize:
+            gather = partial(jax.lax.all_gather, axis_name=cfg.axis_name,
+                             tiled=True)
+            return gather(gk), gather(gv), gather(gvalid), dropped
+        return gk, gv, gvalid, dropped
+
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def mapreduce(map_fn: Callable, data, cfg: DeviceJobConfig, *,
+              mode: str = "aggregate", reduce_fn: str | Callable = "sum",
+              combine_fn: Callable | None = None, finalize: bool = True,
+              backend: str = "vmap", mesh: jax.sharding.Mesh | None = None,
+              data_spec=None, jit: bool = True):
+    """Run a MapReduce job across ``cfg.n_workers`` SPMD workers.
+
+    ``map_fn(shard) -> (keys, values, valid)`` is the user's map UDF over the
+    worker's data shard (already split — the Splitter's output).  ``data`` has
+    leading axis ``n_workers`` (vmap backend) or is a global array to be
+    sharded over the mesh axis (shard_map backend).
+    """
+    if not cfg.run_combiner and mode == "aggregate":
+        # without a combiner the aggregate path still works (segment-sum then
+        # reduce-scatter); the flag matters for the grouping path's volume
+        pass
+    body = partial(_worker_body, cfg=cfg, map_fn=map_fn, mode=mode,
+                   reduce_fn=reduce_fn, combine_fn=combine_fn,
+                   finalize=finalize)
+
+    if backend == "vmap":
+        # finalized outputs are all_gather/psum results — unbatched over the
+        # worker axis, so vmap returns a single copy (out_axes=None)
+        fn = jax.vmap(body, in_axes=0, out_axes=None if finalize else 0,
+                      axis_name=cfg.axis_name)
+        fn = jax.jit(fn) if jit else fn
+        return fn(data)
+
+    if backend == "shard_map":
+        if mesh is None:
+            raise ValueError("shard_map backend needs a mesh")
+        P = jax.sharding.PartitionSpec
+        in_spec = data_spec if data_spec is not None else P(cfg.axis_name)
+        if mode == "aggregate":
+            out_spec = P() if finalize else P(cfg.axis_name)
+        else:
+            gspec = P() if finalize else P(cfg.axis_name)
+            out_spec = (gspec, gspec, gspec, P())
+        # finalized outputs are all_gather/psum results — replicated by
+        # construction, which the static checker can't always prove
+        sm = jax.shard_map(body, mesh=mesh, in_specs=(in_spec,),
+                           out_specs=out_spec, check_vma=False)
+        sm = jax.jit(sm) if jit else sm
+        return sm(data)
+
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def wordcount_map_factory(num_buckets: int):
+    """Device word count map UDF: shard is a (records, 2) int32 array of
+    (token_id, 1) pairs with -1 padding — the data layer tokenizes text into
+    ids.  Mirrors the paper's Fig. 5 mapper."""
+
+    def map_fn(shard):
+        keys = shard[:, 0]
+        values = shard[:, 1].astype(jnp.float32)
+        valid = keys >= 0
+        keys = jnp.where(valid, keys, 0) % num_buckets
+        return keys, values, valid
+
+    return map_fn

@@ -1,0 +1,5 @@
+from .pipeline import PackedLMDataset, Prefetcher, synth_corpus
+from .tokenizer import HashTokenizer, build_vocab
+
+__all__ = ["PackedLMDataset", "Prefetcher", "synth_corpus", "HashTokenizer",
+           "build_vocab"]

@@ -1,0 +1,11 @@
+# Pallas TPU kernels for the compute hot-spots the paper optimizes.
+#
+# The paper's measured bottleneck is the Mapper's buffer sort + combiner
+# (Figs. 7-8) -> kernels/hash_combine re-expresses it as one-hot MXU matmul
+# bucket reduction (see DESIGN.md section 4.1).  flash_attention and mamba_scan
+# cover the serving/training hot-spots of the assigned architectures.
+#
+# Each kernel package: <name>/kernel.py (pl.pallas_call + explicit BlockSpec
+# VMEM tiling), <name>/ops.py (jit'd wrapper with interpret switch),
+# <name>/ref.py (pure-jnp oracle).  Validated on CPU via interpret=True;
+# compiled for TPU (Mosaic) on real hardware.

@@ -1,0 +1,257 @@
+"""Flash attention (fwd + split-K decode) as Pallas TPU kernels.
+
+Online-softmax tiling (Flash-Attention [arXiv:2205.14135], adapted to TPU per
+the jax pallas TPU ops): the (Sq × Skv) score matrix never leaves VMEM; the
+grid streams KV blocks while running max/sum/accumulator live in VMEM scratch.
+TPU adaptations:
+
+  * grid = (batch, q_head, q_block, kv_block) with the KV dimension innermost
+    — TPU grids execute sequentially, so scratch carries the online-softmax
+    state between kv steps (no atomics, unlike the CUDA formulation);
+  * m/l scratch kept (block_q, 128)-shaped, broadcast across lanes, matching
+    the fp32 (8, 128) VREG tile;
+  * GQA handled in the BlockSpec index map (q head h reads kv head
+    h // group) — no KV duplication in HBM or VMEM;
+  * causal/sliding-window blocks that are fully masked are skipped with
+    ``pl.when`` (the grid still visits them; the MXU work is gated off);
+  * optional logit softcap (Gemma-2): s ← c·tanh(s/c) before masking.
+
+Block defaults (128, 128) keep the working set ≈
+block_q·D + 2·block_k·D + block_q·block_k fp32 ≈ 0.3 MB ≪ VMEM, and both
+matmul shapes MXU-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                causal: bool, window: int | None, softcap: float | None,
+                scale: float, block_q: int, block_k: int, n_kv_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # visit the block only if any (q, k) pair in it is unmasked
+    block_live = jnp.bool_(True)
+    if causal:
+        block_live &= q_start + block_q - 1 >= k_start
+    if window is not None and window > 0:
+        # newest query in the block must reach back to this kv block
+        block_live &= q_start - (k_start + block_k - 1) < window
+
+    @pl.when(block_live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)           # (bk, d)
+
+        s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None and softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), dtype=jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None and window > 0:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, 0]                          # (bq,)
+        l_prev = l_scr[:, 0]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        l = l_scr[:, 0]
+        denom = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "scale",
+                              "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    softcap: float | None = None, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) → (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0, \
+        "pad sequence lengths to block multiples"
+    n_kv_blocks = skv // block_k
+
+    grid = (b, hq, sq // block_q, n_kv_blocks)
+    kernel = functools.partial(
+        _fwd_kernel, causal=causal, window=window, softcap=softcap,
+        scale=scale, block_q=block_q, block_k=block_k,
+        n_kv_blocks=n_kv_blocks)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, qi, ki, g=group: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, qi, ki, g=group: (b_, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Split-K decode: one query token against a long KV cache
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, window: int | None, softcap: float | None, scale: float,
+                   block_k: int, n_kv_blocks: int, group: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    k_start = ki * block_k
+    lo = (length - window) if (window is not None and window > 0) else 0
+    block_live = jnp.logical_and(k_start < length,
+                                 k_start + block_k > lo)
+
+    @pl.when(block_live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)      # (group, d) — q-head group
+        k = k_ref[0, 0].astype(jnp.float32)      # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+
+        s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None and softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (group, block_k), 1)
+        mask = k_pos < length
+        if window is not None and window > 0:
+            mask &= k_pos >= length - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, 0]
+        l_prev = l_scr[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        l = l_scr[:, 0]
+        denom = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "scale", "block_k",
+                              "interpret"))
+def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 lengths: jax.Array, *, window: int | None = None,
+                 softcap: float | None = None, scale: float | None = None,
+                 block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, D); caches: (B, Hkv, S, D); lengths: (B,) → (B, Hq, D).
+
+    Grid (B, Hkv, S/block_k): the q-head *group* sharing one kv head rides the
+    sublane dimension, so GQA decode is one (group × block_k) matmul per step
+    — the flash-decoding split-K layout with the group as the M dimension.
+    """
+    b, hq, d = q.shape
+    _, hkv, s_max, _ = k_cache.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    block_k = min(block_k, s_max)
+    assert s_max % block_k == 0, "pad cache length to block multiple"
+    n_kv_blocks = s_max // block_k
+
+    # (B, Hq, D) → (B, Hkv, group, D) so each grid step owns one kv head's group
+    qg = q.reshape(b, hkv, group, d)
+
+    grid = (b, hkv, n_kv_blocks)
+    kernel = functools.partial(
+        _decode_kernel, window=window, softcap=softcap, scale=scale,
+        block_k=block_k, n_kv_blocks=n_kv_blocks, group=group)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h, ki: (b_,)),
+            pl.BlockSpec((1, 1, group, d), lambda b_, h, ki: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, ki: (b_, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, ki: (b_, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d), lambda b_, h, ki: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, LANES), jnp.float32),
+            pltpu.VMEM((group, LANES), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,116 @@
+"""Public attention ops with kernel/XLA routing and a differentiable wrapper.
+
+``attention(...)`` / ``decode_attention(...)`` are what ``repro.models`` call.
+Routing:
+
+  * ``use_pallas=False`` (default here — CPU container, and the dry-run wants
+    the XLA graph for cost analysis): a *chunked* jnp implementation that, like
+    the kernel, never materializes the full score matrix (lax.scan over KV
+    chunks with online softmax) — same memory behaviour, XLA-visible FLOPs.
+  * ``use_pallas=True``: the Pallas kernel (interpret=True on CPU).
+
+Training differentiates through the chunked XLA path (flash backward on real
+TPU would be a custom_vjp pairing; the forward kernels here are the
+serving-critical surface the paper's workloads exercise).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention as _fa_pallas
+from .kernel import flash_decode as _fd_pallas
+from .ref import decode_ref, mha_ref
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "chunk", "q_offset"))
+def chunked_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                      scale=None, chunk=1024, q_offset=0):
+    """Flash-style online-softmax attention in pure jnp: lax.scan over KV
+    chunks.  O(Sq·chunk) live memory.  GQA via kv-head repeat at the einsum
+    (XLA fuses the broadcast; no HBM duplication)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    scale_ = scale if scale is not None else d ** -0.5
+    chunk = min(chunk, skv)
+    if skv % chunk:
+        pad = chunk - skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        skv_p = skv + pad
+    else:
+        skv_p = skv
+    n_chunks = skv_p // chunk
+
+    qf = q.astype(jnp.float32) * scale_
+    kf = k.astype(jnp.float32).reshape(b, hkv, n_chunks, chunk, d)
+    vf = v.astype(jnp.float32).reshape(b, hkv, n_chunks, chunk, d)
+    q_pos = jnp.arange(sq) + q_offset
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kc, vc, c_idx = inp                      # (b, hkv, chunk, d) ×2
+        kc = jnp.repeat(kc, group, axis=1)
+        vc = jnp.repeat(vc, group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kc)
+        if softcap is not None and softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        mask = (k_pos[None, :] < skv) & jnp.ones((sq, 1), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None and window > 0:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.where(mask[None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vc)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, hq, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hq, sq), jnp.float32),
+            jnp.zeros((b, hq, sq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(kf, 2, 0), jnp.moveaxis(vf, 2, 0),
+         jnp.arange(n_chunks)))
+    denom = jnp.where(l > 0, l, 1.0)
+    return (acc / denom[..., None]).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None, scale=None,
+              use_pallas=False, interpret=True, chunk=1024,
+              block_q=128, block_k=128, q_offset=0):
+    """(B, Hq, Sq, D) × (B, Hkv, Skv, D)² → (B, Hq, Sq, D)."""
+    if use_pallas and q_offset == 0:
+        return _fa_pallas(q, k, v, causal=causal, window=window,
+                          softcap=softcap, scale=scale, block_q=block_q,
+                          block_k=block_k, interpret=interpret)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale, chunk=chunk,
+                             q_offset=q_offset)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window=None,
+                     softcap=None, scale=None, use_pallas=False,
+                     interpret=True, block_k=512):
+    """(B, Hq, D) × (B, Hkv, S, D)² + lengths (B,) → (B, Hq, D)."""
+    if use_pallas:
+        return _fd_pallas(q, k_cache, v_cache, lengths, window=window,
+                          softcap=softcap, scale=scale, block_k=block_k,
+                          interpret=interpret)
+    return decode_ref(q, k_cache, v_cache, lengths, window=window,
+                      softcap=softcap, scale=scale)
+
+
+__all__ = ["attention", "decode_attention", "chunked_attention", "mha_ref",
+           "decode_ref"]

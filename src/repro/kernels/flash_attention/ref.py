@@ -1,0 +1,97 @@
+"""Pure-jnp oracle for flash attention (fwd + decode).
+
+Materializes the full score matrix — O(Sq·Skv) memory — so it is only usable
+at test scales, which is exactly its job.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(sq: int, skv: int, causal: bool, window: int | None,
+          q_offset: int) -> jax.Array:
+    """(sq, skv) boolean mask. ``q_offset`` positions query row 0 at absolute
+    position q_offset (decode: q_offset = cache_len - 1 for the single row)."""
+    q_pos = jnp.arange(sq)[:, None] + q_offset
+    k_pos = jnp.arange(skv)[None, :]
+    m = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        m &= q_pos >= k_pos
+    if window is not None and window > 0:
+        m &= q_pos - k_pos < window
+    return m
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool = True, window: int | None = None,
+            softcap: float | None = None, scale: float | None = None,
+            q_offset: int = 0) -> jax.Array:
+    """Grouped-query attention reference.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); Hq % Hkv == 0.
+    Returns (B, Hq, Sq, D) in q's dtype; softmax in fp32.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to match q heads
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if softcap is not None and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    m = _mask(sq, skv, causal, window, q_offset)
+    s = jnp.where(m[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows: softmax of all NEG_INF ≈ uniform; zero them instead
+    any_valid = m.any(axis=-1)
+    p = jnp.where(any_valid[None, None, :, None], p, 0.0)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return o.astype(q.dtype)
+
+
+def decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+               lengths: jax.Array, *, window: int | None = None,
+               softcap: float | None = None,
+               scale: float | None = None) -> jax.Array:
+    """Single-token decode reference.
+
+    q: (B, Hq, D) — the new token's query; caches: (B, Hkv, S, D);
+    lengths: (B,) int32 — valid cache entries per sequence (the new token is
+    at position lengths-1 and may attend to [0, lengths)).
+    Returns (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    _, hkv, s_max, _ = k_cache.shape
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    # grouped form: q-heads sharing a kv head ride a 'g' axis so the cache is
+    # contracted directly — no jnp.repeat, whose materialization forces an
+    # all-gather of seq-sharded caches under SPMD (EXPERIMENTS.md §Perf)
+    qg = (q.astype(jnp.float32) * scale).reshape(b, hkv, group, d)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, kf)
+    if softcap is not None and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = jnp.arange(s_max)[None, None, None, :]
+    valid = k_pos < lengths[:, None, None, None]
+    if window is not None and window > 0:
+        valid &= k_pos >= (lengths[:, None, None, None] - window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, vf)
+    return o.reshape(b, hq, d).astype(q.dtype)

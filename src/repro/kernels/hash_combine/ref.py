@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the hash-combine (Mapper combiner) kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hash_combine_ref(keys: jax.Array, values: jax.Array, num_buckets: int,
+                     valid: jax.Array | None = None) -> jax.Array:
+    """Dense bucket accumulation: ``out[b] = sum(values[keys == b])``.
+
+    keys   : (N,) int32 in [0, num_buckets)
+    values : (N,) or (N, D) float
+    valid  : (N,) bool, optional
+    returns: (num_buckets,) or (num_buckets, D), dtype of values
+    """
+    if valid is not None:
+        vmask = valid.reshape((-1,) + (1,) * (values.ndim - 1))
+        values = jnp.where(vmask, values, jnp.zeros_like(values))
+        keys = jnp.where(valid, keys, 0)
+    return jax.ops.segment_sum(values, keys.astype(jnp.int32),
+                               num_segments=num_buckets)

@@ -1,0 +1,107 @@
+"""Mamba-1 selective scan as a Pallas TPU kernel.
+
+The CUDA selective-scan (Mamba [arXiv:2312.00752]) parallelizes over threads
+with a work-efficient block scan in shared memory.  TPU has no warp shuffles;
+the TPU-native decomposition (DESIGN.md §4) is:
+
+  * channels are embarrassingly parallel → grid dimension over D blocks,
+  * time is sequential *within* the kernel, with the (block_d × N) state
+    resident in VMEM scratch — never touching HBM between steps,
+  * long sequences stream through the grid's innermost (sequential) dimension
+    in chunks of ``block_l``; the state scratch carries across chunks,
+    exactly like the flash-attention accumulator carries across KV blocks.
+
+Per time step the update is pure VPU element-wise work on (block_d, N) tiles
+(N = 16 for falcon-mamba) plus a (block_d, N)·(N,) contraction — the MXU is
+idle, which is intrinsic to Mamba-1's recurrence (Mamba-2/SSD exists to feed
+the matrix units; models/mamba.py implements that variant as chunked einsums).
+
+VMEM per step: state block_d·N + chunk slabs block_l·(2·block_d + 2·N) fp32.
+Defaults (block_d=256, block_l=256, N≤16) ≈ 0.7 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(u_ref, delta_ref, A_ref, B_ref, C_ref, y_ref, hout_ref, h_scr,
+                 *, block_l: int, n_l_blocks: int):
+    li = pl.program_id(2)
+
+    @pl.when(li == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    A = A_ref[...]                     # (block_d, N)
+
+    def step(t, h):
+        u_t = u_ref[0, t, :]           # (block_d,)
+        d_t = delta_ref[0, t, :]       # (block_d,)
+        b_t = B_ref[0, t, :]           # (N,)
+        c_t = C_ref[0, t, :]           # (N,)
+        dA = jnp.exp(d_t[:, None] * A)                   # (block_d, N)
+        dBu = (d_t * u_t)[:, None] * b_t[None, :]        # (block_d, N)
+        h = dA * h + dBu
+        y_ref[0, t, :] = jnp.sum(h * c_t[None, :], axis=1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_l, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(li == n_l_blocks - 1)
+    def _emit_state():
+        hout_ref[0] = h_scr[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_d", "block_l", "interpret"))
+def selective_scan(u: jax.Array, delta: jax.Array, A: jax.Array,
+                   B: jax.Array, C: jax.Array, D: jax.Array, *,
+                   block_d: int = 256, block_l: int = 256,
+                   interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """u, delta: (batch, L, D); A: (D, N); B, C: (batch, L, N); D: (D,).
+
+    Returns (y, h_final): (batch, L, D) and (batch, D, N).
+    The D·u skip is applied outside the kernel (one fused VPU multiply-add).
+    """
+    bsz, L, d = u.shape
+    n = A.shape[1]
+    block_d = min(block_d, d)
+    block_l = min(block_l, L)
+    assert d % block_d == 0, "pad channels to block_d"
+    assert L % block_l == 0, "pad sequence to block_l"
+    n_l_blocks = L // block_l
+
+    grid = (bsz, d // block_d, n_l_blocks)
+    kernel = functools.partial(_scan_kernel, block_l=block_l,
+                               n_l_blocks=n_l_blocks)
+
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_l, block_d), lambda b, di, li: (b, li, di)),
+            pl.BlockSpec((1, block_l, block_d), lambda b, di, li: (b, li, di)),
+            pl.BlockSpec((block_d, n), lambda b, di, li: (di, 0)),
+            pl.BlockSpec((1, block_l, n), lambda b, di, li: (b, li, 0)),
+            pl.BlockSpec((1, block_l, n), lambda b, di, li: (b, li, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_l, block_d), lambda b, di, li: (b, li, di)),
+            pl.BlockSpec((1, block_d, n), lambda b, di, li: (b, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, L, d), u.dtype),
+            jax.ShapeDtypeStruct((bsz, d, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(u, delta, A, B, C)
+    y = y + u * D.astype(u.dtype)[None, None]
+    return y, h_final

@@ -1,0 +1,42 @@
+"""Public selective-scan op with kernel/XLA routing.
+
+``scan(...)`` is what ``repro.models.mamba`` calls.  Routing mirrors the other
+kernels: XLA path (``jax.lax.scan`` reference — also the differentiable
+training path) by default on CPU/dry-run, Pallas kernel on TPU
+(``interpret=True`` validates the kernel body on CPU).
+
+``decode_step`` is the O(1) single-token state update used by serve_step /
+the long_500k shape — no kernel needed, it is a handful of VPU ops.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import selective_scan as _scan_pallas
+from .ref import selective_scan_ref
+
+
+def scan(u, delta, A, B, C, D, *, use_pallas=False, interpret=True,
+         block_d=256, block_l=256):
+    if use_pallas:
+        return _scan_pallas(u, delta, A, B, C, D, block_d=block_d,
+                            block_l=block_l, interpret=interpret)
+    return selective_scan_ref(u, delta, A, B, C, D)
+
+
+def decode_step(h, u_t, delta_t, A, B_t, C_t, D):
+    """One recurrence step for decoding.
+
+    h: (batch, D, N) carried state; u_t, delta_t: (batch, D);
+    B_t, C_t: (batch, N).  Returns (y_t, h_new): (batch, D), (batch, D, N).
+    """
+    dA = jnp.exp(delta_t[..., None] * A[None].astype(jnp.float32))
+    dBu = (delta_t * u_t)[..., None] * B_t[:, None, :]
+    h_new = dA * h + dBu
+    y = jnp.einsum("bdn,bn->bd", h_new, C_t) + u_t * D[None]
+    return y.astype(u_t.dtype), h_new
+
+
+__all__ = ["scan", "decode_step", "selective_scan_ref"]

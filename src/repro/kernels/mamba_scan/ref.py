@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(u: jax.Array, delta: jax.Array, A: jax.Array,
+                       B: jax.Array, C: jax.Array, D: jax.Array,
+                       h0: jax.Array | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Sequential-in-time reference.
+
+    u, delta : (batch, L, D)      (delta already softplus'd + bias'd)
+    A        : (D, N)             (the real-valued log-spaced S4D-style A)
+    B, C     : (batch, L, N)      (input-dependent projections)
+    D        : (D,)               (skip)
+    h0       : (batch, D, N) initial state (None = zeros)
+
+    h_t = exp(Δ_t ⊙ A) ⊙ h_{t-1} + (Δ_t u_t) ⊗ B_t ;  y_t = ⟨h_t, C_t⟩ + D u_t
+    Returns (y, h_final): (batch, L, D), (batch, D, N).
+    """
+    bsz, L, d = u.shape
+    n = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d, n), jnp.float32)
+
+    uf = u.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    def step(h, inp):
+        u_t, d_t, b_t, c_t = inp          # (batch,d),(batch,d),(batch,n),(batch,n)
+        dA = jnp.exp(d_t[..., None] * Af[None])            # (batch, d, n)
+        dBu = (d_t * u_t)[..., None] * b_t[:, None, :]     # (batch, d, n)
+        h = dA * h + dBu
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    inputs = (jnp.moveaxis(uf, 1, 0), jnp.moveaxis(df, 1, 0),
+              jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, inputs)
+    y = jnp.moveaxis(ys, 0, 1) + uf * D.astype(jnp.float32)[None, None]
+    return y.astype(u.dtype), h_final

@@ -1,0 +1,392 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init).  For each cell this driver:
+
+  1. builds the production mesh (single-pod 16×16 or multi-pod 2×16×16),
+  2. resolves the arch config and the step function the shape dictates
+     (train_4k → train_step; prefill_32k → prefill_forward;
+      decode_32k / long_500k → decode_step),
+  3. constructs ShapeDtypeStruct stand-ins for every input (no allocation),
+  4. jit-lowers with the Planner's in/out shardings and **compiles**,
+  5. records memory_analysis / cost_analysis / per-collective bytes parsed
+     from the optimized HLO → EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --sweep --out results/dryrun     # all cells
+"""
+
+import argparse
+import json
+import re
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import (ModelConfig, SHAPES_BY_NAME, ShapeConfig,
+                          decode_step, init_cache, init_params, loss_fn,
+                          prefill_forward, shapes_for)
+from repro.optim import AdamW
+from repro.runtime.train_step import init_train_state, make_train_step
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import Planner
+
+# microbatch counts for train_4k: global batch 256 → 8 microbatches of 32
+TRAIN_MICROBATCHES = 8
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+                "s16": 2, "u16": 2}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum per-device result bytes of every collective op in optimized HLO.
+
+    Lines look like:  %all-reduce.1 = f32[128,4096]{1,0} all-reduce(...)
+    (tuple-shaped collectives contribute each tuple element).
+    """
+    out: dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+    out["count"] = 0
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(\(?[^=]*?)\s*(all-gather|all-reduce|"
+                      r"reduce-scatter|all-to-all|collective-permute)\(",
+                      line)
+        if not m:
+            continue
+        kind = m.group(2)
+        shapes_part = line.split("=", 1)[1].split(kind + "(")[0]
+        nbytes = 0
+        for dt, dims in shape_re.findall(shapes_part):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] += nbytes
+        out["count"] += 1
+    out["total"] = sum(out[c] for c in COLLECTIVES)
+    return out
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell —
+    weak-type-correct, shardable, zero allocation."""
+    cfg = configs.get(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    emb = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    if shape.kind == "train":
+        mb = TRAIN_MICROBATCHES
+        bm = b // mb
+        if cfg.input_mode == "embeddings":
+            inputs = jax.ShapeDtypeStruct((mb, bm, s, cfg.d_model),
+                                          jnp.bfloat16)
+        else:
+            inputs = jax.ShapeDtypeStruct((mb, bm, s), jnp.int32)
+        return {"inputs": inputs,
+                "labels": jax.ShapeDtypeStruct((mb, bm, s), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"inputs": emb if cfg.input_mode == "embeddings" else tok}
+    # decode: one new token against a cache of length seq_len
+    if cfg.input_mode == "embeddings":
+        return {"token": jax.ShapeDtypeStruct((b, 1, cfg.d_model),
+                                              jnp.bfloat16)}
+    return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def build_cell(arch: str, shape_name: str, mesh,
+               cfg: ModelConfig | None = None, mode: str = "deploy",
+               opts: dict | None = None):
+    """→ (fn, example_args (ShapeDtypeStructs), in_shardings, out_shardings).
+
+    mode="deploy": the production program (layer scan + remat + microbatch
+    accumulation) — this is the compile proof and the memory_analysis source.
+    mode="account": XLA's cost model counts while-loop bodies once, so the
+    accounting variant unrolls the layer scan, widens attention chunks to the
+    full sequence, and (for train) lowers ONE microbatch — run_cell scales
+    its numbers back to a full step (×TRAIN_MICROBATCHES; exact, since
+    microbatches are identical programs).
+    """
+    cfg = cfg or configs.get(arch)
+    opts = opts or {}
+    shape = SHAPES_BY_NAME[shape_name]
+    planner = Planner(mesh, cfg, opts)
+    b, s = shape.global_batch, shape.seq_len
+    ins = input_specs(arch, shape_name)
+
+    if shape.kind == "train":
+        opt = AdamW(lr=1e-4)
+        state_shape = jax.eval_shape(
+            partial(init_train_state, cfg=cfg, opt=opt),
+            jax.random.PRNGKey(0))
+        state_specs = planner.state_specs(state_shape)
+        grad_specs = planner.grad_specs(state_shape.params) \
+            if opts.get("zero2") else None
+        if mode == "account":
+            # one microbatch, flat batch axis
+            mb_b = b // TRAIN_MICROBATCHES
+            if cfg.input_mode == "embeddings":
+                ins = {"inputs": jax.ShapeDtypeStruct(
+                    (mb_b, s, cfg.d_model), jnp.bfloat16),
+                    "labels": jax.ShapeDtypeStruct((mb_b, s), jnp.int32)}
+            else:
+                ins = {"inputs": jax.ShapeDtypeStruct((mb_b, s), jnp.int32),
+                       "labels": jax.ShapeDtypeStruct((mb_b, s), jnp.int32)}
+            batch_specs = planner.batch_spec(microbatched=False)
+            fn = make_train_step(cfg, opt, microbatches=1,
+                                 grad_specs=grad_specs)
+        else:
+            batch_specs = planner.batch_spec(microbatched=True)
+            fn = make_train_step(cfg, opt, microbatches=TRAIN_MICROBATCHES,
+                                 grad_specs=grad_specs)
+        args = (state_shape, ins)
+        in_sh = (planner.to_shardings(state_specs),
+                 planner.to_shardings(batch_specs))
+        out_sh = (planner.to_shardings(state_specs), None)
+        return fn, args, in_sh, out_sh
+
+    params_shape = jax.eval_shape(partial(init_params, cfg=cfg),
+                                  jax.random.PRNGKey(0))
+    param_specs = planner.param_specs(params_shape)
+
+    if shape.kind == "prefill":
+        P = jax.sharding.PartitionSpec
+        cache_shape = jax.eval_shape(partial(init_cache, cfg, b, s))
+        cache_specs = planner.cache_specs(cache_shape, b)
+        fn = partial(prefill_forward, cfg=cfg, max_len=s)
+        args = (params_shape, ins["inputs"])
+        in_sh = (planner.to_shardings(param_specs),
+                 planner.shard(planner.token_spec(b)))
+        out_sh = (None, planner.to_shardings(cache_specs))
+        return fn, args, in_sh, out_sh
+
+    # decode
+    cache_shape = jax.eval_shape(partial(init_cache, cfg, b, s))
+    cache_specs = planner.cache_specs(cache_shape, b)
+    fn = partial(decode_step, cfg=cfg)
+    args = (params_shape, cache_shape, ins["token"])
+    in_sh = (planner.to_shardings(param_specs),
+             planner.to_shardings(cache_specs),
+             planner.shard(planner.token_spec(b)))
+    out_sh = (None, planner.to_shardings(cache_specs))
+    return fn, args, in_sh, out_sh
+
+
+def _compile_variant(arch: str, shape_name: str, mesh, cfg, mode: str,
+                     opts: dict | None = None):
+    from repro.models.shardctx import activation_sharding
+    from repro.launch.mesh import data_axes
+
+    opts = opts or {}
+    t0 = time.time()
+    fn, args, in_sh, out_sh = build_cell(arch, shape_name, mesh, cfg, mode,
+                                         opts)
+    mcfg = cfg or configs.get(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    dp = data_axes(mesh)
+    import numpy as np
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    # per-microbatch batch for train cells; full batch otherwise
+    eff_batch = (shape.global_batch // TRAIN_MICROBATCHES
+                 if shape.kind == "train" else shape.global_batch)
+    batch_axes = dp if eff_batch % dp_size == 0 else (
+        "data" if eff_batch % mesh.shape["data"] == 0 else None)
+    donate = ()
+    if shape.kind == "train":
+        donate = (0,)            # state buffers reused across steps
+    elif shape.kind == "decode":
+        donate = (1,)            # cache updated in place
+    seq_axis = "model" if opts.get("act") == "sp" else None
+    tp_for_act = None if opts.get("act") in ("sp", "rep") else "model"
+    from repro.models.layers import matmul_reduce_dtype
+    import contextlib as _cl
+    red = (matmul_reduce_dtype(jnp.bfloat16) if opts.get("bf16_reduce")
+           else _cl.nullcontext())
+    dp_for_moe = dp_size if (batch_axes is not None
+                             and eff_batch % dp_size == 0) else 1
+    with jax.set_mesh(mesh), red, activation_sharding(
+            batch_axes, tp_for_act, mesh.shape["model"], eff_batch,
+            mcfg.d_model, mcfg.vocab, seq_axis=seq_axis,
+            dp_size=dp_for_moe):
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return lowered, compiled, round(t_lower, 1), round(t_compile, 1)
+
+
+def _layer_period(cfg: ModelConfig) -> int:
+    """Smallest repeating structural unit of the layer stack."""
+    if cfg.shared_attn_every > 0:
+        return cfg.shared_attn_every        # zamba2: 6 mamba + 1 shared attn
+    if cfg.window_pattern == "alternate":
+        return 2                             # gemma2: local/global pair
+    return 1
+
+
+def account_costs(arch: str, shape_name: str, mesh,
+                  cfg: ModelConfig | None = None,
+                  opts: dict | None = None) -> dict:
+    """Exact per-step FLOPs / HBM / collective bytes via two-point
+    extrapolation.
+
+    XLA's cost model counts while-loop bodies once, so the deploy program's
+    numbers are useless.  Unrolling the full stack compiles in ~10 min/cell
+    on this 1-core box; instead we exploit homogeneity: lower the *unrolled*
+    stack at L = period and L = 2·period (seconds each).  Layers are
+    structurally identical across periods, so
+
+        cost(L) = fixed + (L / period) · per_period
+        per_period = cost(2p) − cost(p);  fixed = cost(p) − per_period
+
+    is exact for FLOPs/bytes up to XLA's local fusion decisions (validated:
+    see EXPERIMENTS.md §Dry-run methodology).  Train cells lower one
+    microbatch (flat batch) and scale ×TRAIN_MICROBATCHES — microbatches are
+    identical programs.  Residual undercounts that live inside *data* loops
+    (attention chunk scan, mamba time scan) are corrected analytically in
+    benchmarks/roofline.py.
+    """
+    base = cfg or configs.get(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    p = _layer_period(base)
+    t0 = time.time()
+
+    def costs_at(n_layers: int):
+        c = base.replace(n_layers=n_layers, unroll_layers=True)
+        _, compiled, _, _ = _compile_variant(arch, shape_name, mesh, c,
+                                             "account", opts)
+        cost = compiled.cost_analysis()
+        coll = parse_collective_bytes(compiled.as_text())
+        return {"flops": cost.get("flops", 0.0),
+                "hbm": cost.get("bytes accessed", 0.0),
+                **{f"coll_{k}": v for k, v in coll.items()}}
+
+    c1, c2 = costs_at(p), costs_at(2 * p)
+    periods = base.n_layers / p
+    scale = TRAIN_MICROBATCHES if shape.kind == "train" else 1
+
+    def extrapolate(key):
+        per = max(0.0, c2[key] - c1[key])   # clamp fusion-noise negatives
+        fixed = max(0.0, c1[key] - per)
+        return (fixed + periods * per) * scale
+
+    coll_keys = [k for k in c1 if k.startswith("coll_")]
+    return {
+        "account_compile_s": round(time.time() - t0, 1),
+        "account_period": p,
+        "step_scale": scale,
+        "flops_per_device": extrapolate("flops"),
+        "hbm_bytes_per_device": extrapolate("hbm"),
+        "collective_bytes_per_device": {
+            k[5:]: extrapolate(k) for k in coll_keys},
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             cfg: ModelConfig | None = None, verbose: bool = True,
+             account: bool = True, opts: dict | None = None) -> dict:
+    """Compile the deploy variant (proof + memory) and, when ``account``,
+    the unrolled accounting variant (exact FLOPs/collectives)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = SHAPES_BY_NAME[shape_name]
+
+    _, compiled, t_lower, t_compile = _compile_variant(
+        arch, shape_name, mesh, cfg, "deploy", opts)
+    mem = compiled.memory_analysis()
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "devices": mesh.size,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        # memory_analysis is per-device on the SPMD module
+        "bytes_per_device": {
+            "arguments": mem.argument_size_in_bytes,
+            "outputs": mem.output_size_in_bytes,
+            "temps": mem.temp_size_in_bytes,
+            "aliased": mem.alias_size_in_bytes,
+            "peak_estimate": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+    }
+
+    if account:
+        result.update(account_costs(arch, shape_name, mesh, cfg, opts))
+    if verbose:
+        gb = result["bytes_per_device"]["peak_estimate"] / 2**30
+        extra = ""
+        if account:
+            extra = (f", {result['flops_per_device']/1e12:.2f} TFLOP/dev, "
+                     f"coll {result['collective_bytes_per_device']['total']/2**30:.2f} GiB/dev")
+        print(f"[dryrun] {arch} × {shape_name} × "
+              f"{'multi' if multi_pod else 'single'}: compile OK "
+              f"({t_compile}s, peak ≈ {gb:.2f} GiB/dev{extra})")
+    return result
+
+
+def sweep_cells() -> list[tuple[str, str]]:
+    cells = []
+    for arch in configs.ARCHS:
+        cfg = configs.get(arch)
+        for shape in shapes_for(cfg):
+            cells.append((arch, shape.name))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = sweep_cells() if args.sweep else [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = []
+    for arch, shape in cells:
+        for multi in meshes:
+            tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[dryrun] {tag}: cached")
+                continue
+            try:
+                # roofline accounting is single-pod only (§Roofline);
+                # the multi-pod pass is the sharding/compile proof
+                res = run_cell(arch, shape, multi, account=not multi)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+            except Exception as exc:
+                failures.append((tag, str(exc)))
+                print(f"[dryrun] {tag}: FAILED — {exc}")
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: "
+                         + ", ".join(t for t, _ in failures))
+    print("[dryrun] all cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production meshes (TPU v5e pods).
+
+Functions, not module constants — importing this module must never touch jax
+device state (the dry-run sets XLA_FLAGS before any jax initialization).
+
+  single-pod : (data=16, model=16)            = 256 chips
+  multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+Axis roles: ``data`` carries batch DP + FSDP parameter sharding; ``model``
+carries TP (hidden/heads/vocab) and sequence sharding for long KV caches;
+``pod`` is pure DP across pods (DCN-ish boundary — gradient reduction only).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n_devices: int | None = None,
+                   axis_name: str = "data") -> jax.sharding.Mesh:
+    """Small local mesh over whatever devices exist (tests/examples)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), (axis_name,),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """The batch axes of a mesh: ('pod', 'data') or ('data',)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,228 @@
+"""Sharding planner: ModelConfig + mesh → PartitionSpec trees.
+
+Strategy (DESIGN.md §6):
+  * ``model`` axis — tensor parallelism: shard d_ff / fused-head / vocab
+    columns, contract row-parallel back (plus sequence sharding for KV
+    caches at serving time);
+  * ``data`` axis — batch DP and FSDP: parameters store their *other* big
+    dim sharded over ``data`` and are all-gathered at use (GSPMD inserts the
+    gathers; gradients come back as reduce-scatter) — fully-sharded optimizer
+    state falls out because moments mirror params;
+  * ``pod`` axis — pure DP: params replicated across pods, batch split,
+    gradient all-reduce crosses the pod boundary once per step.
+
+Every rule checks divisibility and falls back to replication on that dim —
+non-divisible cases (56 heads, 60 experts, odd vocab) compile correctly and
+show up in the roofline as the padding/replication cost they are.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import ModelConfig, ShapeConfig
+from .mesh import data_axes
+
+
+def _axis_size(mesh: jax.sharding.Mesh, name: str | tuple) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+class Planner:
+    """opts (hillclimb knobs, see EXPERIMENTS.md §Perf):
+      zero2        — params replicated over data (one gather per step at the
+                     update instead of per-microbatch); moments stay sharded
+      cache_shard  — 'seq' (default) or 'headdim': which KV-cache dim rides
+                     the model axis at decode time
+    """
+
+    def __init__(self, mesh: jax.sharding.Mesh, cfg: ModelConfig,
+                 opts: dict | None = None) -> None:
+        self.mesh = mesh
+        self.cfg = cfg
+        self.opts = opts or {}
+        self.dp = data_axes(mesh)            # ('pod','data') or ('data',)
+        self.fsdp = "data"                   # param sharding axis
+        self.tp = "model"
+        self._params_fsdp = not self.opts.get("zero2", False)
+
+    # -- helpers ----------------------------------------------------------
+    def _div(self, n: int, axis) -> Any:
+        """axis if the dim divides the axis size, else None (replicate)."""
+        if axis is None:
+            return None
+        return axis if n % _axis_size(self.mesh, axis) == 0 else None
+
+    def shard(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # -- parameters -------------------------------------------------------
+    def param_spec(self, path: tuple, leaf, fsdp_on: bool = True) -> P:
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = keys[-1]
+        shape = leaf.shape
+        fsdp = self.fsdp if (fsdp_on and self._params_fsdp_local) else None
+        stacked = "layers" in keys            # leading L axis from the scan
+        off = 1 if stacked else 0
+        dims = shape[off:]
+        lead = (None,) * off
+
+        def spec(*axes):
+            return P(*lead, *axes)
+
+        if name in ("embed",):
+            v, d = dims
+            return spec(self._div(v, self.tp), self._div(d, fsdp))
+        if name == "lm_head":
+            d, v = dims
+            return spec(self._div(d, fsdp), self._div(v, self.tp))
+        if len(dims) <= 1:
+            return spec(*(None,) * len(dims))  # norms/biases/scalars: replicate
+        if name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "x_proj",
+                    "dt_proj"):
+            if len(dims) == 3:                 # MoE stacked experts (E, d, f)
+                e, d, f = dims
+                # E (8/60) does not divide the 16-way model axis → experts
+                # replicated, TP inside each expert (see EXPERIMENTS.md §Perf
+                # for the EP hillclimb)
+                return spec(None, self._div(d, fsdp),
+                            self._div(f, self.tp))
+            d_in, d_out = dims
+            return spec(self._div(d_in, fsdp), self._div(d_out, self.tp))
+        if name in ("wo", "w_down", "out_proj"):
+            if len(dims) == 3:                 # (E, f, d)
+                e, f, d = dims
+                return spec(None, self._div(f, self.tp),
+                            self._div(d, fsdp))
+            d_in, d_out = dims
+            return spec(self._div(d_in, self.tp), self._div(d_out, fsdp))
+        if name == "router":
+            d, e = dims
+            return spec(self._div(d, fsdp), None)
+        if name == "conv_w":
+            k, ch = dims
+            return spec(None, self._div(ch, self.tp))
+        if name == "A_log" and len(dims) == 2:
+            di, n = dims
+            return spec(self._div(di, self.tp), None)
+        # default 2D: FSDP on the larger dim
+        if len(dims) == 2:
+            a, b = dims
+            if a >= b:
+                return spec(self._div(a, fsdp), None)
+            return spec(None, self._div(b, fsdp))
+        return spec(*(None,) * len(dims))
+
+    @property
+    def _params_fsdp_local(self):
+        return getattr(self, "_fsdp_override", self._params_fsdp)
+
+    def param_specs(self, params_shape: Any) -> Any:
+        return jax.tree_util.tree_map_with_path(self.param_spec, params_shape)
+
+    def state_specs(self, state_shape: Any) -> Any:
+        """TrainState: AdamW moments always FSDP-sharded; under zero2 the
+        *parameters* are replicated over data (gathered once per step at the
+        optimizer update) while moments/grad-accumulators stay sharded."""
+
+        def spec(path, leaf):
+            if leaf.ndim == 0:
+                return P()
+            keys = [str(getattr(k, "key", getattr(k, "name", k)))
+                    for k in path]
+            is_param = keys and keys[0] == "params"
+            self._fsdp_override = self._params_fsdp or not is_param
+            try:
+                return self.param_spec(self._strip(path), leaf)
+            finally:
+                del self._fsdp_override
+
+        return jax.tree_util.tree_map_with_path(spec, state_shape)
+
+    def grad_specs(self, params_shape: Any) -> Any:
+        """Gradient-accumulator specs: always FSDP over data (ZeRO-2's
+        reduce-scattered gradients), regardless of the param layout."""
+        self._fsdp_override = True
+        try:
+            return jax.tree_util.tree_map_with_path(self.param_spec,
+                                                    params_shape)
+        finally:
+            del self._fsdp_override
+
+    @staticmethod
+    def _strip(path: tuple) -> tuple:
+        """Drop the TrainState/OptState prefixes so moment leaves match the
+        same rules as their parameters."""
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        drop = {"params", "opt_state", "m", "v", "0", "1", "2"}
+        kept = [p for p, k in zip(path, keys) if str(k) not in drop]
+        return tuple(kept) if kept else path
+
+    # -- batches ------------------------------------------------------------
+    def batch_spec(self, microbatched: bool) -> Any:
+        lead = (None,) if microbatched else ()
+        return {
+            "inputs": P(*lead, self.dp, None) if self.cfg.input_mode != "embeddings"
+            else P(*lead, self.dp, None, None),
+            "labels": P(*lead, self.dp, None),
+        }
+
+    def token_spec(self, batch: int | None = None) -> P:
+        ax = self.dp
+        if batch is not None and batch % _axis_size(self.mesh, self.dp) != 0:
+            ax = None            # long_500k: batch=1 stays replicated
+        if self.cfg.input_mode == "embeddings":
+            return P(ax, None, None)
+        return P(ax, None)
+
+    # -- serving cache ---------------------------------------------------------
+    def cache_specs(self, cache_shape: Any, batch: int) -> Any:
+        """KV caches: batch→data when divisible, sequence→model (and →data
+        too when batch can't shard, e.g. long_500k's batch=1)."""
+        bdiv = batch % _axis_size(self.mesh, self.dp) == 0
+        batch_ax = self.dp if bdiv else None
+        seq_ax = self.tp if bdiv else (self.dp + (self.tp,)
+                                       if isinstance(self.dp, tuple)
+                                       else ("data", "model"))
+        mode = self.opts.get("cache_shard", "seq")
+
+        def spec(path, leaf):
+            keys = [getattr(k, "key", getattr(k, "name", str(k)))
+                    for k in path]
+            name = keys[-1] if keys else ""
+            if name in ("k", "v", "sa_k", "sa_v"):
+                L, b, h, s, hd = leaf.shape
+                if mode == "headdim" and hd % _axis_size(self.mesh,
+                                                         self.tp) == 0:
+                    # head_dim over TP: cache writes stay local (no gather
+                    # at the dynamic_update_slice), contractions psum small
+                    s_ax = None if bdiv else self._div(s, "data")
+                    return P(None, batch_ax, None, s_ax,
+                             self._div(hd, self.tp))
+                s_ok = s % _axis_size(self.mesh, seq_ax) == 0
+                return P(None, batch_ax, None, seq_ax if s_ok else None, None)
+            if name == "lengths":
+                return P(None)
+            if name == "conv":   # (L, B, K-1, ch)
+                ch = leaf.shape[-1]
+                return P(None, batch_ax, None, self._div(ch, self.tp))
+            if name == "ssm":
+                if leaf.ndim == 4:      # mamba1 (L, B, di, n)
+                    return P(None, batch_ax, self._div(leaf.shape[2], self.tp),
+                             None)
+                return P(None, batch_ax,  # mamba2 (L, B, nh, n, hd)
+                         self._div(leaf.shape[2], self.tp), None, None)
+            return P(*(None,) * leaf.ndim)
+
+        return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+    # -- convenience: NamedSharding trees ------------------------------------
+    def to_shardings(self, spec_tree: Any) -> Any:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))

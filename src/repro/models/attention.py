@@ -1,0 +1,214 @@
+"""Attention blocks: GQA with RoPE, qk-norm, sliding windows, softcaps.
+
+Supports the whole assigned-pool attention zoo:
+  gemma2   — alternating local/global windows, attn softcap, sandwich norms
+  qwen3    — per-head-dim RMS qk-norm
+  stablelm — partial rotary (rope_pct), layernorm
+  mixtral  — SWA on all layers
+  yi/qwen3/stablelm/musicgen/internvl2 — plain GQA/MHA variants
+
+Window handling under the layer scan: the per-layer window is a *traced*
+int32 scalar (0 = global) so a single scanned program serves alternating
+patterns; the mask math treats window<=0 as no window.  The Pallas kernels
+take static windows and are used on the unrolled/serving paths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention.ops import chunked_attention, decode_ref
+from .config import ModelConfig
+from .layers import Params, dense_init, linear, rmsnorm, rope
+
+NEG_INF = -1e30
+
+
+def attn_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim_
+    dt = cfg.param_dtype_
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dt),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dt),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dt),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dt,
+                         scale=(cfg.n_heads * hd) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _project_qkv(p: Params, x: jax.Array, cfg: ModelConfig,
+                 positions: jax.Array):
+    """x: (B, S, d) → q (B, Hq, S, hd), k/v (B, Hkv, S, hd) with norm+rope."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    cd = cfg.compute_dtype_
+    q = linear(p["wq"], x, cd).reshape(b, s, cfg.n_heads, hd)
+    k = linear(p["wk"], x, cd).reshape(b, s, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], x, cd).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = q.transpose(0, 2, 1, 3)   # (B, H, S, hd)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    if cfg.rope_pct > 0:
+        r = int(hd * cfg.rope_pct)
+        r -= r % 2
+        pos = positions[:, None, :]   # (B, 1, S) broadcast over heads
+        q = q.at[..., :r].set(rope(q[..., :r], pos, cfg.rope_theta)) \
+            if r < hd else rope(q, pos, cfg.rope_theta)
+        k = k.at[..., :r].set(rope(k[..., :r], pos, cfg.rope_theta)) \
+            if r < hd else rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def _masked_attention(q, k, v, *, window, softcap, scale, q_offset=0,
+                      chunk=1024):
+    """chunked_attention wrapper accepting a traced window (0 = global)."""
+    if isinstance(window, (int, type(None))):
+        w = window if (window or 0) > 0 else None
+        return chunked_attention(q, k, v, causal=True, window=w,
+                                 softcap=softcap, scale=scale, chunk=chunk,
+                                 q_offset=q_offset)
+    # traced window: inline online-softmax with dynamic mask
+    return _traced_window_attention(q, k, v, window=window, softcap=softcap,
+                                    scale=scale, q_offset=q_offset,
+                                    chunk=chunk)
+
+
+def _traced_window_attention(q, k, v, *, window, softcap, scale, q_offset,
+                             chunk):
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    scale_ = scale if scale is not None else d ** -0.5
+    chunk = min(chunk, skv)
+    assert skv % chunk == 0
+    n_chunks = skv // chunk
+    qf = q.astype(jnp.float32) * scale_
+    kf = k.astype(jnp.float32).reshape(b, hkv, n_chunks, chunk, d)
+    vf = v.astype(jnp.float32).reshape(b, hkv, n_chunks, chunk, d)
+    q_pos = jnp.arange(sq) + q_offset
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kc, vc, c_idx = inp
+        kc = jnp.repeat(kc, group, axis=1)
+        vc = jnp.repeat(vc, group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kc)
+        if softcap is not None and softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        win_ok = (window <= 0) | (q_pos[:, None] - k_pos[None, :] < window)
+        mask &= win_ok
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p_ = jnp.where(mask[None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p_, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p_, vc)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, hq, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hq, sq), jnp.float32),
+            jnp.zeros((b, hq, sq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        step, init, (jnp.moveaxis(kf, 2, 0), jnp.moveaxis(vf, 2, 0),
+                     jnp.arange(n_chunks)))
+    denom = jnp.where(l > 0, l, 1.0)
+    return (acc / denom[..., None]).astype(q.dtype)
+
+
+def attn_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                 window, positions: jax.Array | None = None,
+                 return_kv: bool = False):
+    """Full-sequence causal attention (train / prefill).
+
+    window: static int/None or traced int32 scalar (0 = global).
+    Returns y (B, S, d) and optionally the (k, v) tensors for cache fill.
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = _masked_attention(q, k, v, window=window, softcap=cfg.attn_softcap,
+                          scale=None, chunk=cfg.attn_chunk)
+    y = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim_)
+    y = linear(p["wo"], y, cfg.compute_dtype_)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attn_decode(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                window, k_cache: jax.Array, v_cache: jax.Array,
+                lengths: jax.Array):
+    """One-token decode: x (B, 1, d); caches (B, Hkv, S, hd); lengths (B,).
+
+    Writes the new token's k/v at position ``lengths`` and attends over
+    [0, lengths].  Returns (y (B, 1, d), k_cache, v_cache).
+    """
+    b = x.shape[0]
+    positions = lengths[:, None]           # the new token's position
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    # scatter the new kv into the cache at per-sequence positions
+    def write(cache, new):
+        def one(c, n, i):
+            return jax.lax.dynamic_update_slice(c, n, (0, i, 0))
+        return jax.vmap(one)(cache, new, lengths)
+    k_cache = write(k_cache, k)            # k: (B, Hkv, 1, hd)
+    v_cache = write(v_cache, v)
+    new_len = lengths + 1
+    if isinstance(window, (int, type(None))):
+        w = window if (window or 0) > 0 else None
+        o = decode_ref(q[:, :, 0], k_cache, v_cache, new_len, window=w,
+                       softcap=cfg.attn_softcap)
+    else:
+        o = _traced_window_decode(q[:, :, 0], k_cache, v_cache, new_len,
+                                  window=window, softcap=cfg.attn_softcap)
+    y = o.reshape(b, 1, cfg.n_heads * cfg.head_dim_)
+    y = linear(p["wo"], y, cfg.compute_dtype_)
+    return y, k_cache, v_cache
+
+
+def _traced_window_decode(q, k_cache, v_cache, lengths, *, window, softcap):
+    b, hq, d = q.shape
+    _, hkv, s_max, _ = k_cache.shape
+    group = hq // hkv
+    # grouped (repeat-free) form — see kernels/flash_attention/ref.decode_ref
+    qg = (q.astype(jnp.float32) * d ** -0.5).reshape(b, hkv, group, d)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, kf)
+    if softcap is not None and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = jnp.arange(s_max)[None, None, None, :]
+    valid = k_pos < lengths[:, None, None, None]
+    valid &= (window <= 0) | (k_pos >= lengths[:, None, None, None] - window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, vf)
+    return o.reshape(b, hq, d).astype(q.dtype)
+
+
+def window_schedule(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer window sizes as an (L,) int32 array (0 = global attention).
+
+    gemma2 'alternate': even layers local (SWA), odd layers global.
+    mixtral 'all': every layer windowed.
+    """
+    w = cfg.sliding_window or 0
+    if cfg.window_pattern == "all":
+        arr = [w] * cfg.n_layers
+    elif cfg.window_pattern == "alternate":
+        arr = [w if i % 2 == 0 else 0 for i in range(cfg.n_layers)]
+    else:
+        arr = [0] * cfg.n_layers
+    return jnp.asarray(arr, jnp.int32)

@@ -1,0 +1,164 @@
+"""Primitive layers — functional style: explicit param pytrees, pure applies.
+
+Conventions:
+  * params are nested dicts of jax.Arrays; leading ``L`` axis when stacked
+    for ``lax.scan`` over layers;
+  * weights stored in ``param_dtype``; matmuls run in ``compute_dtype``
+    (bf16 on TPU) with fp32 accumulation (``preferred_element_type``);
+    norms/softmax/rope always fp32;
+  * Linear weights are (d_in, d_out) so TP column/row parallelism maps to
+    sharding the last/first axis respectively (launch/shardings.py).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+# Cross-shard partial-sum dtype for TP contractions (see ModelConfig.
+# matmul_reduce).  A contextvar so the launcher flips it without threading a
+# parameter through every block; default fp32.
+_REDUCE_DTYPE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_matmul_reduce", default=jnp.float32)
+
+
+@contextlib.contextmanager
+def matmul_reduce_dtype(dtype):
+    token = _REDUCE_DTYPE.set(dtype)
+    try:
+        yield
+    finally:
+        _REDUCE_DTYPE.reset(token)
+
+
+# -- init ---------------------------------------------------------------------
+
+def dense_init(key: jax.Array, d_in: int, d_out: int,
+               dtype=jnp.float32, scale: float | None = None) -> jax.Array:
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int,
+               dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# -- linear / embedding -------------------------------------------------------
+
+def linear(w: jax.Array, x: jax.Array,
+           compute_dtype=jnp.bfloat16,
+           reduce_dtype=None) -> jax.Array:
+    """x: (..., d_in) @ w: (d_in, d_out).  In-shard accumulation is always
+    fp32 on the MXU; ``reduce_dtype`` (default from the matmul_reduce_dtype
+    context, fp32) sets the *partial-sum* dtype that crosses shards under TP
+    (bf16 halves that wire traffic)."""
+    y = jax.lax.dot_general(
+        x.astype(compute_dtype), w.astype(compute_dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=reduce_dtype or _REDUCE_DTYPE.get())
+    return y.astype(compute_dtype)
+
+
+def embed(table: jax.Array, ids: jax.Array, scale: float | None = None,
+          compute_dtype=jnp.bfloat16) -> jax.Array:
+    x = jnp.take(table, ids, axis=0).astype(compute_dtype)
+    if scale is not None:
+        x = x * jnp.asarray(scale, compute_dtype)
+    return x
+
+
+def unembed(table_or_head: jax.Array, x: jax.Array, *, tied: bool,
+            softcap: float | None = None) -> jax.Array:
+    """Project to vocab logits (fp32).  ``tied=True`` uses the embedding
+    table transposed; otherwise a (d, vocab) head."""
+    xf = x.astype(jnp.float32)
+    w = table_or_head.astype(jnp.float32)
+    logits = xf @ (w.T if tied else w)
+    if softcap is not None and softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# -- norms ---------------------------------------------------------------------
+
+def rmsnorm(w: jax.Array, x: jax.Array, eps: float = 1e-6,
+            weight_offset: float = 0.0) -> jax.Array:
+    """RMSNorm in fp32.  ``weight_offset=1.0`` gives the Gemma convention
+    (stored weights are centred at zero, applied as (1 + w))."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    return (xf * (w.astype(jnp.float32) + weight_offset)).astype(x.dtype)
+
+
+def layernorm(w: jax.Array, b: jax.Array, x: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# -- rotary embeddings -----------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Apply rotary position embeddings.
+
+    x: (..., S, D) with D even; positions: broadcastable to (..., S).
+    Uses the split-halves convention (LLaMA / most OSS checkpoints).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- activations / MLPs -----------------------------------------------------------
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+def glu_mlp_init(key: jax.Array, d_model: int, d_ff: int,
+                 dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype,
+                             scale=d_ff ** -0.5),
+    }
+
+
+def glu_mlp(p: Params, x: jax.Array, activation: str = "silu",
+            compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Gated-linear-unit MLP (SwiGLU/GeGLU per ``activation``)."""
+    g = _act(activation, linear(p["w_gate"], x, compute_dtype))
+    u = linear(p["w_up"], x, compute_dtype)
+    return linear(p["w_down"], g * u, compute_dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None or cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)

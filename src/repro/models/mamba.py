@@ -1,0 +1,270 @@
+"""Mamba blocks: Mamba-1 (falcon-mamba) and Mamba-2/SSD (zamba2).
+
+Mamba-1 runs through ``kernels/mamba_scan`` (XLA scan ref by default, Pallas
+on TPU).  Mamba-2 uses the chunked SSD matrix form (Mamba-2 [arXiv:2405.21060]
+§6) — block-diagonal attention-like intra-chunk matmuls + inter-chunk state
+recurrence — which is MXU-shaped by construction, so it stays in jnp/XLA
+(DESIGN.md §4: the SSD reformulation *is* the TPU adaptation of the scan).
+
+Both provide O(1)-state decode steps for the long_500k serving shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.mamba_scan import ops as scan_ops
+from .config import ModelConfig
+from .layers import Params, dense_init, rmsnorm, linear
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba-7b)
+# ---------------------------------------------------------------------------
+
+def mamba1_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, di, n = cfg.d_model, cfg.d_inner_, cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    dt_ = cfg.param_dtype_
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dt_),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, di), jnp.float32)
+                   * (cfg.conv_kernel * di) ** -0.5).astype(dt_),
+        "conv_b": jnp.zeros((di,), dt_),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * n, dt_),
+        "dt_proj": dense_init(ks[3], dt_rank, di, dt_),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        # S4D-real init: A = -(1..N) per channel
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, n))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d, dt_, scale=di ** -0.5),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv1d.  x: (B, L, D); w: (K, D); state: (B, K-1, D)
+    carries the last K-1 inputs for decode.  Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)              # (B, K-1+L, D)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else state
+    return y + b[None, None], new_state
+
+
+def mamba1_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                   use_pallas: bool = False, return_state: bool = False):
+    """x: (B, L, d) → (B, L, d) [, final cache state for prefill]."""
+    cd = cfg.compute_dtype_
+    d, di, n = cfg.d_model, cfg.d_inner_, cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    xz = linear(p["in_proj"], x, cd)
+    xi_raw, z = jnp.split(xz, 2, axis=-1)                 # (B, L, di) ×2
+    xi, conv_state = _causal_conv(xi_raw, p["conv_w"].astype(cd),
+                                  p["conv_b"].astype(cd))
+    xi = jax.nn.silu(xi)
+    dbc = linear(p["x_proj"], xi, cd)
+    dt, B, C = jnp.split(dbc, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(
+        linear(p["dt_proj"], dt, cd).astype(jnp.float32)
+        + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    y, h_final = scan_ops.scan(xi.astype(jnp.float32), delta, A,
+                               B.astype(jnp.float32), C.astype(jnp.float32),
+                               p["D"], use_pallas=use_pallas)
+    y = y.astype(cd) * jax.nn.silu(z)
+    out = linear(p["out_proj"], y, cd)
+    if return_state:
+        return out, {"conv": conv_state, "ssm": h_final}
+    return out
+
+
+def mamba1_init_cache(cfg: ModelConfig, batch: int):
+    di, n = cfg.d_inner_, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, di), cfg.compute_dtype_),
+        "ssm": jnp.zeros((batch, di, n), jnp.float32),
+    }
+
+
+def mamba1_decode(p: Params, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """x: (B, 1, d) one token; cache: {conv (B,K-1,di), ssm (B,di,N)}."""
+    cd = cfg.compute_dtype_
+    d, di, n = cfg.d_model, cfg.d_inner_, cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    xz = linear(p["in_proj"], x, cd)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = _causal_conv(xi, p["conv_w"].astype(cd),
+                                  p["conv_b"].astype(cd), cache["conv"])
+    xi = jax.nn.silu(xi)
+    dbc = linear(p["x_proj"], xi, cd)
+    dt, B, C = jnp.split(dbc, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(
+        linear(p["dt_proj"], dt, cd).astype(jnp.float32)
+        + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    y_t, h = scan_ops.decode_step(
+        cache["ssm"], xi[:, 0].astype(jnp.float32), delta[:, 0], A,
+        B[:, 0].astype(jnp.float32), C[:, 0].astype(jnp.float32), p["D"])
+    y = (y_t[:, None].astype(cd)) * jax.nn.silu(z)
+    return linear(p["out_proj"], y, cd), {"conv": conv_state, "ssm": h}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2)
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, di, n = cfg.d_model, cfg.d_inner_, cfg.ssm_state
+    nh = di // cfg.mamba_head_dim
+    dt_ = cfg.param_dtype_
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj emits [x (di), z (di), B (n), C (n), dt (nh)]
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * n + nh, dt_),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, di + 2 * n),
+                                     jnp.float32)
+                   * (cfg.conv_kernel * di) ** -0.5).astype(dt_),
+        "conv_b": jnp.zeros((di + 2 * n,), dt_),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dt_),
+        "out_proj": dense_init(ks[2], di, d, dt_, scale=di ** -0.5),
+    }
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD (Mamba-2 'matrix transformer' form), fp32.
+
+    x: (b, l, h, p); dt: (b, l, h); A: (h,) negative; B, C: (b, l, n).
+    Returns y: (b, l, h, p).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0
+    nc = l // chunk
+    x = x.reshape(b, nc, chunk, h, p)
+    dt = dt.reshape(b, nc, chunk, h)
+    B_ = B.reshape(b, nc, chunk, n)
+    C_ = C.reshape(b, nc, chunk, n)
+
+    dA = dt * A[None, None, None]                       # (b, nc, c, h) ≤ 0
+    dA_cum = jnp.cumsum(dA, axis=2)
+    # intra-chunk: L[i,j] = exp(dA_cum[i] - dA_cum[j]) for i ≥ j
+    seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]  # (b,nc,c,c,h)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bzin,bzjn->bzij", C_, B_)      # (b, nc, c, c)
+    y_diag = jnp.einsum("bzij,bzijh,bzjh,bzjhp->bzihp",
+                        scores, Lmat, dt, x)
+
+    # chunk-final states: S_z = Σ_j exp(dA_cum[last]-dA_cum[j])·dt_j·B_j⊗x_j
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # (b, nc, c, h)
+    S = jnp.einsum("bzjh,bzjh,bzjn,bzjhp->bzhnp",
+                   decay_to_end, dt, B_, x)                 # per-chunk state
+
+    # inter-chunk recurrence over nc (sequential scan over chunks)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])              # (b, nc, h)
+
+    def step(carry, inp):
+        s_prev = carry                                      # (b, h, n, p)
+        s_z, decay_z = inp                                  # (b,h,n,p),(b,h)
+        s_new = decay_z[..., None, None] * s_prev + s_z
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, n, p), jnp.float32)
+    s_final, states_in = jax.lax.scan(
+        step, s0, (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)               # (b, nc, h, n, p)
+
+    # contribution of the carried state within each chunk
+    decay_from_start = jnp.exp(dA_cum)                      # (b, nc, c, h)
+    y_off = jnp.einsum("bzin,bzih,bzhnp->bzihp",
+                       C_, decay_from_start, states_in)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, s_final
+
+
+def mamba2_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                   chunk: int = 64, return_state: bool = False):
+    cd = cfg.compute_dtype_
+    di, n = cfg.d_inner_, cfg.ssm_state
+    hd = cfg.mamba_head_dim
+    nh = di // hd
+    b, l, _ = x.shape
+    proj = linear(p["in_proj"], x, cd)
+    xi, z, B, C, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    xbc = jnp.concatenate([xi, B, C], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"].astype(cd),
+                                   p["conv_b"].astype(cd))
+    xbc = jax.nn.silu(xbc)
+    xi, B, C = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    if l % chunk:
+        pad = chunk - l % chunk
+        xi_p = jnp.pad(xi, ((0, 0), (0, pad), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_p = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C_p = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xi_p, dt_p, B_p, C_p = xi, dt, B, C
+    y, s_final = _ssd_chunked(
+        xi_p.astype(jnp.float32).reshape(b, -1, nh, hd), dt_p, A,
+        B_p.astype(jnp.float32), C_p.astype(jnp.float32), chunk)
+    y = y[:, :l] + xi.astype(jnp.float32).reshape(b, l, nh, hd) \
+        * p["D"][None, None, :, None]
+    y = y.reshape(b, l, di).astype(cd) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = linear(p["out_proj"], y, cd)
+    if return_state:
+        return out, {"conv": conv_state, "ssm": s_final}
+    return out
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int):
+    di, n = cfg.d_inner_, cfg.ssm_state
+    nh = di // cfg.mamba_head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, di + 2 * n),
+                          cfg.compute_dtype_),
+        "ssm": jnp.zeros((batch, nh, n, cfg.mamba_head_dim), jnp.float32),
+    }
+
+
+def mamba2_decode(p: Params, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """One-token SSD recurrence: h ← exp(dtA)·h + dt·B⊗x ; y = C·h."""
+    cd = cfg.compute_dtype_
+    di, n = cfg.d_inner_, cfg.ssm_state
+    hd = cfg.mamba_head_dim
+    nh = di // hd
+    b = x.shape[0]
+    proj = linear(p["in_proj"], x, cd)
+    xi, z, B, C, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    xbc = jnp.concatenate([xi, B, C], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"].astype(cd),
+                                   p["conv_b"].astype(cd), cache["conv"])
+    xbc = jax.nn.silu(xbc)
+    xi, B, C = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    xh = xi[:, 0].astype(jnp.float32).reshape(b, nh, hd)
+    dt0 = dt[:, 0]                                       # (b, nh)
+    decay = jnp.exp(dt0 * A[None])                       # (b, nh)
+    dBx = jnp.einsum("bh,bn,bhp->bhnp", dt0, B[:, 0].astype(jnp.float32), xh)
+    h = decay[..., None, None] * cache["ssm"] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", C[:, 0].astype(jnp.float32), h)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, 1, di).astype(cd) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return linear(p["out_proj"], y, cd), {"conv": conv_state, "ssm": h}

@@ -1,0 +1,175 @@
+"""Mixture-of-Experts with MapReduce-shuffle dispatch.
+
+The paper's shuffle (§III-A.3/4) is ``hash(key) % R`` → pack records into
+per-reducer spill buffers → exchange → merge.  MoE dispatch is the same
+pipeline with ``route(token) → expert`` as the partition function
+(DESIGN.md §5): tokens are sorted by expert id, packed into fixed-capacity
+per-expert buffers (the spill files — static shapes, as TPU requires), run
+through batched expert GEMMs, and combined back with the gate weights
+(the weighted 'reduce').  Over an expert-parallel mesh axis the exchange is
+the same ``all_to_all`` the data shuffle uses.
+
+Token dropping on capacity overflow matches both the paper's bounded spill
+buffers and standard TPU MoE practice (GShard/Switch); capacity_factor
+controls the slack.  Aux losses: Switch load-balance + router z-loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Params, _act, dense_init, linear
+from .shardctx import shard_act
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    dt = cfg.param_dtype_
+    ks = jax.random.split(key, 8)
+    e, f = cfg.n_experts, cfg.expert_d_ff
+    p: Params = {
+        "router": dense_init(ks[0], d, e, jnp.float32, scale=d ** -0.5),
+        # expert weights stacked: (E, d, f) / (E, f, d) — shardable over E
+        "w_gate": dense_init(ks[1], d, e * f, dt).reshape(d, e, f)
+                  .transpose(1, 0, 2),
+        "w_up": dense_init(ks[2], d, e * f, dt).reshape(d, e, f)
+                .transpose(1, 0, 2),
+        "w_down": dense_init(ks[3], f, e * d, dt, scale=f ** -0.5)
+                  .reshape(f, e, d).transpose(1, 0, 2),
+    }
+    if cfg.n_shared_experts > 0:
+        sf = cfg.shared_expert_d_ff * cfg.n_shared_experts
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], d, sf, dt),
+            "w_up": dense_init(ks[5], d, sf, dt),
+            "w_down": dense_init(ks[6], sf, d, dt, scale=sf ** -0.5),
+        }
+        p["shared_gate"] = dense_init(ks[7], d, 1, jnp.float32)
+    return p
+
+
+def _route(router_w: jax.Array, x_flat: jax.Array, cfg: ModelConfig):
+    """Router logits → (weights (T,k), experts (T,k), aux losses)."""
+    logits = (x_flat.astype(jnp.float32) @ router_w)        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, cfg.top_k)      # (T, k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # Switch load-balance loss: E · Σ_e f_e · P_e
+    t = x_flat.shape[0]
+    onehot = jax.nn.one_hot(experts[:, 0], cfg.n_experts)   # top-1 fraction
+    f_e = jnp.mean(onehot, axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = cfg.n_experts * jnp.sum(f_e * p_e)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return weights, experts, cfg.router_aux_weight * aux + \
+        cfg.router_z_weight * z
+
+
+def expert_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    """Per-expert buffer size — the 'spill file' bound, MXU-aligned."""
+    c = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def _pack_one_shard(x_flat, weights, experts, e: int, cap: int):
+    """Spill-buffer packing for one token shard (cf.
+    core.shuffle.build_send_buffers): sort by expert, position-in-group via
+    offsets, scatter into (E, cap, d).  Returns (xb, buf_tok, buf_valid,
+    buf_w) with buffer rows local to this shard's tokens."""
+    t, d = x_flat.shape
+    k = weights.shape[-1]
+    flat_expert = experts.reshape(t * k)                  # the partition key
+    flat_token = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_w = weights.reshape(t * k)
+    order = jnp.argsort(flat_expert, stable=True)         # sort by key
+    se = flat_expert[order]
+    st = flat_token[order]
+    sw = flat_w[order]
+    counts = jnp.bincount(se, length=e)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    pos = jnp.arange(t * k, dtype=jnp.int32) - offsets[se]
+    in_cap = pos < cap                                    # overflow → dropped
+    slot = jnp.where(in_cap, se * cap + pos, e * cap)
+
+    buf_tok = jnp.full((e * cap + 1,), 0, jnp.int32).at[slot].set(
+        jnp.where(in_cap, st, 0))
+    buf_valid = jnp.zeros((e * cap + 1,), bool).at[slot].set(in_cap)
+    buf_w = jnp.zeros((e * cap + 1,), jnp.float32).at[slot].set(
+        jnp.where(in_cap, sw, 0.0))
+    xb = jnp.take(x_flat, buf_tok[:-1], axis=0)           # (E*cap, d)
+    xb = jnp.where(buf_valid[:-1, None], xb, jnp.zeros_like(xb))
+    return (xb.reshape(e, cap, d), buf_tok[:-1], buf_valid[:-1], buf_w[:-1])
+
+
+def moe_forward(p: Params, x: jax.Array, cfg: ModelConfig
+                ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) → (y, aux_loss).
+
+    Dispatch = the MapReduce spill packing, performed *per data shard* (the
+    paper's mapper-local combine, DESIGN.md §4): tokens are grouped into
+    ``dp_size`` contiguous shards matching the batch sharding, each shard
+    sorts/packs its own (E, cap_local, d) spill buffer with zero cross-shard
+    traffic, and only the expert GEMMs see the concatenated buffers.
+    Single-device / test runs have dp_size=1 → identical global behaviour.
+    """
+    from .shardctx import dp_shards
+    b, s, d = x.shape
+    cd = cfg.compute_dtype_
+    x_flat = x.reshape(b * s, d)
+    t = b * s
+    e = cfg.n_experts
+    ns = dp_shards()
+    if t % ns:
+        ns = 1
+    t_loc = t // ns
+    cap = expert_capacity(cfg, t_loc)
+
+    weights, experts, aux = _route(p["router"], x_flat, cfg)
+
+    # ---- per-shard spill packing (vmapped; batch axis rides the dp axes) ----
+    xb, buf_tok, buf_valid, buf_w = jax.vmap(
+        lambda xs, ws, es: _pack_one_shard(xs, ws, es, e, cap))(
+        x_flat.reshape(ns, t_loc, d),
+        weights.reshape(ns, t_loc, cfg.top_k),
+        experts.reshape(ns, t_loc, cfg.top_k))
+    # (ns, E, cap, d) → (E, ns·cap, d): the global expert buffers, capacity
+    # rows still owned by their shard
+    xb = shard_act(jnp.transpose(xb, (1, 0, 2, 3)).reshape(e, ns * cap, d),
+                   "moe_buf")
+
+    # ---- per-expert GEMMs: (E, C, d) × (E, d, f) — MoE as batched matmul ----
+    g = jnp.einsum("ecd,edf->ecf", xb.astype(cd), p["w_gate"].astype(cd),
+                   preferred_element_type=jnp.float32).astype(cd)
+    u = jnp.einsum("ecd,edf->ecf", xb.astype(cd), p["w_up"].astype(cd),
+                   preferred_element_type=jnp.float32).astype(cd)
+    h = _act(cfg.activation, g) * u
+    yb = shard_act(jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(cd),
+                              preferred_element_type=jnp.float32),
+                   "moe_buf")                             # (E, C, d) fp32
+
+    # ---- combine: per-shard weighted scatter-add back (the 'reduce') ----
+    yb = jnp.transpose(yb.reshape(e, ns, cap, d), (1, 0, 2, 3)) \
+        .reshape(ns, e * cap, d)
+
+    def _combine_one(yb_s, tok_s, valid_s, w_s):
+        yb_s = yb_s * w_s[:, None]
+        seg = jnp.where(valid_s, tok_s, t_loc)
+        return jax.ops.segment_sum(yb_s, seg, num_segments=t_loc + 1)[:t_loc]
+
+    y = jax.vmap(_combine_one)(
+        yb, buf_tok, buf_valid,
+        buf_w).reshape(t, d)
+
+    if cfg.n_shared_experts > 0:
+        sp = p["shared"]
+        sg = _act(cfg.activation, linear(sp["w_gate"], x_flat, cd))
+        su = linear(sp["w_up"], x_flat, cd)
+        sy = linear(sp["w_down"], sg * su, cd).astype(jnp.float32)
+        gate = jax.nn.sigmoid(x_flat.astype(jnp.float32) @ p["shared_gate"])
+        y = y + gate * sy
+
+    return y.reshape(b, s, d).astype(cd), aux

@@ -1,0 +1,74 @@
+"""Activation-sharding context.
+
+Models are pure functions; distribution policy belongs to the launcher.  The
+launcher opens ``activation_sharding(...)`` around lowering, and the model
+calls ``shard_act(x, kind)`` at block boundaries — a no-op when no context is
+set (tests, single-device runs), a ``with_sharding_constraint`` under the
+production mesh.  This pins the two tensors GSPMD otherwise leaves fat:
+per-layer residuals (B, S, d) and the fp32 logits (B, S, vocab).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "repro_act_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(batch_axes, tp_axis: str, tp_size: int,
+                        batch_size: int, d_model: int, vocab: int,
+                        seq_axis: str | None = None, dp_size: int = 1):
+    """batch_axes: axis (or tuple) for the batch dim (None when the batch
+    cannot shard, e.g. long_500k's batch=1); tp_axis for hidden/vocab.
+    Divisibility decided here, once."""
+    ctx = {
+        "batch": batch_axes,
+        "tp": (tp_axis if d_model % tp_size == 0 else None) if tp_axis
+        else None,
+        "tp_vocab": (tp_axis if vocab % tp_size == 0 else None) if tp_axis
+        else None,
+        "seq": seq_axis,
+        "dp_size": dp_size if batch_axes is not None else 1,
+    }
+    token = _CTX.set(ctx)
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def dp_shards() -> int:
+    """Number of data shards for locality-aware token dispatch (MoE).
+    1 when no sharding context is active (tests / single device)."""
+    ctx = _CTX.get()
+    return int(ctx.get("dp_size", 1)) if ctx else 1
+
+
+def shard_act(x: jax.Array, kind: str = "act") -> jax.Array:
+    """kind: 'act' (B, S, d) | 'logits' (B, S, V) or (B, V)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    try:
+        if kind == "act" and x.ndim == 3:
+            spec = P(ctx["batch"], ctx["seq"], ctx["tp"])
+        elif kind == "logits" and x.ndim == 3:
+            spec = P(ctx["batch"], ctx["seq"], ctx["tp_vocab"])
+        elif kind == "logits" and x.ndim == 2:
+            spec = P(ctx["batch"], ctx["tp_vocab"])
+        elif kind == "moe_buf" and x.ndim == 3:
+            # (E, C, d) dispatch buffer: capacity rows over the batch axes;
+            # hidden dim replicated so the expert GEMM contracts locally
+            # (sharding d forced a gather of the buffer per einsum — §Perf)
+            spec = P(None, ctx["batch"], None)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x  # no mesh in scope → leave unconstrained

@@ -1,0 +1,436 @@
+"""Model assembly: init / forward / loss / prefill / decode for every family.
+
+Layer stacks are homogeneous per architecture (dense-attn, moe-attn, mamba1,
+mamba2), stored with a leading L axis and executed with ``jax.lax.scan``
+(+ optional remat) — small HLO, long pipelines, the standard big-model shape.
+zamba2's shared attention block (one param set, invoked every
+``shared_attn_every`` layers) runs *between* scanned segments, so sharing is
+literal (same tensors) and the mamba stack still scans.
+
+Serving state (KV caches / SSM states / lengths) is a pytree with leading L
+axes, carried through the same scan.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attn_decode, attn_forward, attn_init, window_schedule)
+from .config import ModelConfig
+from .layers import (Params, embed, embed_init, glu_mlp, glu_mlp_init,
+                     layernorm, rmsnorm, unembed)
+from .mamba import (mamba1_decode, mamba1_forward, mamba1_init,
+                    mamba1_init_cache, mamba2_decode, mamba2_forward,
+                    mamba2_init, mamba2_init_cache)
+from .moe import moe_forward, moe_init
+from .shardctx import shard_act
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((cfg.d_model,), cfg.param_dtype_),
+                "b": jnp.zeros((cfg.d_model,), cfg.param_dtype_)}
+    base = jnp.zeros if cfg.norm_offset else jnp.ones
+    return {"w": base((cfg.d_model,), cfg.param_dtype_)}
+
+
+def _apply_norm(p, x, cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return layernorm(p["w"], p["b"], x, cfg.norm_eps)
+    return rmsnorm(p["w"], x, cfg.norm_eps, cfg.norm_offset)
+
+
+def _layer_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": _norm_init(cfg)}
+    if cfg.layer_kind == "attn":
+        p["attn"] = attn_init(ks[0], cfg)
+        p["norm2"] = _norm_init(cfg)
+        p["ffn"] = moe_init(ks[1], cfg) if cfg.is_moe else \
+            glu_mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.param_dtype_)
+        if cfg.post_block_norm:
+            p["post_norm1"] = _norm_init(cfg)
+            p["post_norm2"] = _norm_init(cfg)
+    elif cfg.layer_kind == "mamba1":
+        p["mixer"] = mamba1_init(ks[0], cfg)
+    elif cfg.layer_kind == "mamba2":
+        p["mixer"] = mamba2_init(ks[0], cfg)
+    else:
+        raise ValueError(cfg.layer_kind)
+    return p
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    k_emb, k_layers, k_shared, k_head = jax.random.split(key, 4)
+    p: Params = {
+        "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, cfg.param_dtype_),
+        "final_norm": _norm_init(cfg),
+    }
+    # stacked layers: vmap init over layer keys → leading L axis on every leaf
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    p["layers"] = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    if not cfg.tie_embeddings:
+        # (d_model, vocab) projection head
+        p["lm_head"] = jnp.transpose(
+            embed_init(k_head, cfg.vocab, cfg.d_model, cfg.param_dtype_))
+    if cfg.shared_attn_every > 0:
+        sa_cfg = cfg.replace(layer_kind="attn", n_experts=0)
+        p["shared_attn"] = {
+            "norm1": _norm_init(cfg),
+            "attn": attn_init(jax.random.split(k_shared)[0], sa_cfg),
+            "norm2": _norm_init(cfg),
+            "ffn": glu_mlp_init(jax.random.split(k_shared)[1], cfg.d_model,
+                                cfg.d_ff, cfg.param_dtype_),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _attn_block(lp: Params, x, cfg: ModelConfig, *, window,
+                positions=None) -> tuple[jax.Array, jax.Array]:
+    h = _apply_norm(lp["norm1"], x, cfg)
+    a = attn_forward(lp["attn"], h, cfg, window=window, positions=positions)
+    if cfg.post_block_norm:
+        a = _apply_norm(lp["post_norm1"], a, cfg)
+    x = x + a
+    h = _apply_norm(lp["norm2"], x, cfg)
+    aux = jnp.float32(0.0)
+    if cfg.is_moe:
+        f, aux = moe_forward(lp["ffn"], h, cfg)
+    else:
+        f = glu_mlp(lp["ffn"], h, cfg.activation, cfg.compute_dtype_)
+    if cfg.post_block_norm:
+        f = _apply_norm(lp["post_norm2"], f, cfg)
+    return x + f, aux
+
+
+def _mamba_block(lp: Params, x, cfg: ModelConfig) -> jax.Array:
+    h = _apply_norm(lp["norm1"], x, cfg)
+    if cfg.layer_kind == "mamba1":
+        return x + mamba1_forward(lp["mixer"], h, cfg)
+    return x + mamba2_forward(lp["mixer"], h, cfg)
+
+
+def _shared_attn_positions(cfg: ModelConfig) -> list[int]:
+    """zamba2: layers after which the shared attention block runs."""
+    if cfg.shared_attn_every <= 0:
+        return []
+    return list(range(cfg.shared_attn_every - 1, cfg.n_layers,
+                      cfg.shared_attn_every))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, inputs: jax.Array, cfg: ModelConfig,
+            *, return_hidden: bool = False):
+    """inputs: (B, S) int32 token ids, or (B, S, d) embeddings when
+    ``cfg.input_mode == 'embeddings'`` (VLM/audio frontend stubs).
+    Returns (logits (B, S, vocab) fp32, aux_loss)."""
+    if cfg.input_mode == "embeddings":
+        x = inputs.astype(cfg.compute_dtype_)
+    else:
+        scale = cfg.d_model ** 0.5 if cfg.embed_scale else None
+        x = embed(params["embed"], inputs, scale, cfg.compute_dtype_)
+    x = shard_act(x)
+
+    windows = window_schedule(cfg) if cfg.layer_kind == "attn" else None
+
+    def layer_fn(carry, inp):
+        x, aux = carry
+        lp, w = inp
+        if cfg.layer_kind == "attn":
+            x, a = _attn_block(lp, x, cfg, window=w)
+            aux = aux + a
+        else:
+            x = _mamba_block(lp, x, cfg)
+        return (shard_act(x), aux), None
+
+    scan_fn = jax.checkpoint(layer_fn) if cfg.remat else layer_fn
+
+    aux0 = jnp.float32(0.0)
+    sa_pos = _shared_attn_positions(cfg)
+    if not sa_pos:
+        xs = (params["layers"], windows) if windows is not None \
+            else (params["layers"], jnp.zeros((cfg.n_layers,), jnp.int32))
+        (x, aux), _ = jax.lax.scan(scan_fn, (x, aux0), xs,
+                                   unroll=cfg.n_layers if cfg.unroll_layers
+                                   else 1)
+    else:
+        # zamba2: scan mamba segments, run the shared attn block between them
+        bounds = [0] + [i + 1 for i in sa_pos]
+        if bounds[-1] != cfg.n_layers:
+            bounds.append(cfg.n_layers)
+        aux = aux0
+        sa_cfg = cfg.replace(layer_kind="attn", n_experts=0)
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            seg = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+            zw = jnp.zeros((hi - lo,), jnp.int32)
+            (x, aux), _ = jax.lax.scan(scan_fn, (x, aux), (seg, zw),
+                                       unroll=(hi - lo) if cfg.unroll_layers
+                                       else 1)
+            if hi - 1 in sa_pos:  # shared attention after this segment
+                x, _ = _attn_block(params["shared_attn"], x, sa_cfg, window=0)
+
+    x = _apply_norm(params["final_norm"], x, cfg)
+    if return_hidden:
+        return x
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = shard_act(unembed(table, x, tied=cfg.tie_embeddings,
+                               softcap=cfg.final_softcap), "logits")
+    return logits, aux
+
+
+def loss_fn(params: Params, batch: dict[str, jax.Array], cfg: ModelConfig):
+    """batch: {'inputs': (B,S)[,d], 'labels': (B,S)} — labels < 0 ignored.
+    Returns (loss, metrics)."""
+    logits, aux = forward(params, batch["inputs"], cfg)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels_safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll * mask) / denom
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux,
+                  "tokens": jnp.sum(mask)}
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict[str, Any]:
+    """Serving state pytree.  Attention KV caches have leading L axis for the
+    layer scan; zamba2's shared block gets one cache per invocation."""
+    cache: dict[str, Any] = {"lengths": jnp.zeros((batch,), jnp.int32)}
+    hd = cfg.head_dim_
+    if cfg.layer_kind == "attn":
+        shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, hd)
+        cache["k"] = jnp.zeros(shape, cfg.compute_dtype_)
+        cache["v"] = jnp.zeros(shape, cfg.compute_dtype_)
+    else:
+        one = (mamba1_init_cache(cfg, batch) if cfg.layer_kind == "mamba1"
+               else mamba2_init_cache(cfg, batch))
+        cache["mamba"] = jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one)
+    n_sa = len(_shared_attn_positions(cfg))
+    if n_sa:
+        shape = (n_sa, batch, cfg.n_kv_heads, max_len, hd)
+        cache["sa_k"] = jnp.zeros(shape, cfg.compute_dtype_)
+        cache["sa_v"] = jnp.zeros(shape, cfg.compute_dtype_)
+    return cache
+
+
+def decode_step(params: Params, cache: dict[str, Any], token: jax.Array,
+                cfg: ModelConfig):
+    """One serving step: token (B, 1) int32 (or (B, 1, d) embeddings) →
+    (logits (B, vocab), new_cache)."""
+    if cfg.input_mode == "embeddings" and token.ndim == 3:
+        x = token.astype(cfg.compute_dtype_)
+    else:
+        scale = cfg.d_model ** 0.5 if cfg.embed_scale else None
+        x = embed(params["embed"], token, scale, cfg.compute_dtype_)
+    lengths = cache["lengths"]
+    windows = window_schedule(cfg) if cfg.layer_kind == "attn" else None
+
+    if cfg.layer_kind == "attn":
+        def layer_fn(x, inp):
+            lp, w, kc, vc = inp
+            h = _apply_norm(lp["norm1"], x, cfg)
+            a, kc, vc = attn_decode(lp["attn"], h, cfg, window=w,
+                                    k_cache=kc, v_cache=vc, lengths=lengths)
+            if cfg.post_block_norm:
+                a = _apply_norm(lp["post_norm1"], a, cfg)
+            x = x + a
+            h = _apply_norm(lp["norm2"], x, cfg)
+            if cfg.is_moe:
+                f, _ = moe_forward(lp["ffn"], h, cfg)
+            else:
+                f = glu_mlp(lp["ffn"], h, cfg.activation, cfg.compute_dtype_)
+            if cfg.post_block_norm:
+                f = _apply_norm(lp["post_norm2"], f, cfg)
+            return x + f, (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            layer_fn, x, (params["layers"], windows, cache["k"], cache["v"]),
+            unroll=cfg.n_layers if cfg.unroll_layers else 1)
+        cache = dict(cache, k=k_new, v=v_new)
+    else:
+        def layer_fn(x, inp):
+            lp, mc = inp
+            h = _apply_norm(lp["norm1"], x, cfg)
+            if cfg.layer_kind == "mamba1":
+                y, mc = mamba1_decode(lp["mixer"], h, mc, cfg)
+            else:
+                y, mc = mamba2_decode(lp["mixer"], h, mc, cfg)
+            return x + y, mc
+
+        sa_pos = _shared_attn_positions(cfg)
+        if not sa_pos:
+            x, mcache = jax.lax.scan(layer_fn, x,
+                                     (params["layers"], cache["mamba"]),
+                                     unroll=cfg.n_layers if cfg.unroll_layers
+                                     else 1)
+            cache = dict(cache, mamba=mcache)
+        else:
+            bounds = [0] + [i + 1 for i in sa_pos]
+            if bounds[-1] != cfg.n_layers:
+                bounds.append(cfg.n_layers)
+            sa_cfg = cfg.replace(layer_kind="attn", n_experts=0)
+            mparts = []
+            sak, sav = cache["sa_k"], cache["sa_v"]
+            for si, (lo, hi) in enumerate(zip(bounds[:-1], bounds[1:])):
+                seg = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+                mseg = jax.tree.map(lambda a: a[lo:hi], cache["mamba"])
+                x, mseg = jax.lax.scan(layer_fn, x, (seg, mseg),
+                                       unroll=(hi - lo) if cfg.unroll_layers
+                                       else 1)
+                mparts.append(mseg)
+                if si < len(sa_pos):
+                    sp = params["shared_attn"]
+                    h = _apply_norm(sp["norm1"], x, cfg)
+                    a, kc, vc = attn_decode(sp["attn"], h, sa_cfg, window=0,
+                                            k_cache=sak[si], v_cache=sav[si],
+                                            lengths=lengths)
+                    sak = sak.at[si].set(kc)
+                    sav = sav.at[si].set(vc)
+                    x = x + a
+                    h = _apply_norm(sp["norm2"], x, cfg)
+                    x = x + glu_mlp(sp["ffn"], h, cfg.activation,
+                                    cfg.compute_dtype_)
+            mcache = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                                  *mparts)
+            cache = dict(cache, mamba=mcache, sa_k=sak, sa_v=sav)
+
+    x = _apply_norm(params["final_norm"], x, cfg)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(table, x[:, 0], tied=cfg.tie_embeddings,
+                     softcap=cfg.final_softcap)
+    cache["lengths"] = lengths + 1
+    return logits, cache
+
+
+def prefill_forward(params: Params, inputs: jax.Array, cfg: ModelConfig,
+                    max_len: int):
+    """Fused full-sequence prefill: one forward pass over the prompt that
+    also emits the serving cache (KV tensors / SSM states).  This is what the
+    ``prefill_32k`` dry-run cells lower.
+
+    inputs: (B, S) tokens or (B, S, d) embeddings.  Returns
+    (last_logits (B, vocab), cache) with caches padded to ``max_len``.
+    """
+    b = inputs.shape[0]
+    s = inputs.shape[1]
+    if cfg.input_mode == "embeddings":
+        x = inputs.astype(cfg.compute_dtype_)
+    else:
+        scale = cfg.d_model ** 0.5 if cfg.embed_scale else None
+        x = embed(params["embed"], inputs, scale, cfg.compute_dtype_)
+
+    cache = init_cache(cfg, b, max_len)
+    pad = max_len - s
+
+    if cfg.layer_kind == "attn":
+        windows = window_schedule(cfg)
+
+        def layer_fn(x, inp):
+            lp, w = inp
+            h = _apply_norm(lp["norm1"], x, cfg)
+            a, (k, v) = attn_forward(lp["attn"], h, cfg, window=w,
+                                     return_kv=True)
+            if cfg.post_block_norm:
+                a = _apply_norm(lp["post_norm1"], a, cfg)
+            x = x + a
+            h = _apply_norm(lp["norm2"], x, cfg)
+            if cfg.is_moe:
+                f, _ = moe_forward(lp["ffn"], h, cfg)
+            else:
+                f = glu_mlp(lp["ffn"], h, cfg.activation, cfg.compute_dtype_)
+            if cfg.post_block_norm:
+                f = _apply_norm(lp["post_norm2"], f, cfg)
+            return shard_act(x + f), (k, v)
+
+        fn = jax.checkpoint(layer_fn) if cfg.remat else layer_fn
+        x, (ks, vs) = jax.lax.scan(fn, x, (params["layers"], windows),
+                                   unroll=cfg.n_layers if cfg.unroll_layers
+                                   else 1)
+        # (L, B, Hkv, S, hd) → pad the sequence axis to max_len
+        cache["k"] = jnp.pad(ks, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        cache["v"] = jnp.pad(vs, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    else:
+        def layer_fn(x, lp):
+            h = _apply_norm(lp["norm1"], x, cfg)
+            if cfg.layer_kind == "mamba1":
+                y, st = mamba1_forward(lp["mixer"], h, cfg, return_state=True)
+            else:
+                y, st = mamba2_forward(lp["mixer"], h, cfg, return_state=True)
+            return shard_act(x + y), st
+
+        fn = jax.checkpoint(layer_fn) if cfg.remat else layer_fn
+        sa_pos = _shared_attn_positions(cfg)
+        if not sa_pos:
+            x, states = jax.lax.scan(fn, x, params["layers"],
+                                     unroll=cfg.n_layers if cfg.unroll_layers
+                                     else 1)
+            cache["mamba"] = states
+        else:
+            bounds = [0] + [i + 1 for i in sa_pos]
+            if bounds[-1] != cfg.n_layers:
+                bounds.append(cfg.n_layers)
+            sa_cfg = cfg.replace(layer_kind="attn", n_experts=0)
+            parts, si = [], 0
+            for lo, hi in zip(bounds[:-1], bounds[1:]):
+                seg = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+                x, st = jax.lax.scan(fn, x, seg,
+                                     unroll=(hi - lo) if cfg.unroll_layers
+                                     else 1)
+                parts.append(st)
+                if hi - 1 in sa_pos:
+                    sp = params["shared_attn"]
+                    h = _apply_norm(sp["norm1"], x, sa_cfg)
+                    a, (k, v) = attn_forward(sp["attn"], h, sa_cfg, window=0,
+                                             return_kv=True)
+                    cache["sa_k"] = cache["sa_k"].at[si, :, :, :s].set(k)
+                    cache["sa_v"] = cache["sa_v"].at[si, :, :, :s].set(v)
+                    si += 1
+                    x = x + a
+                    h = _apply_norm(sp["norm2"], x, sa_cfg)
+                    x = x + glu_mlp(sp["ffn"], h, cfg.activation,
+                                    cfg.compute_dtype_)
+            cache["mamba"] = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+
+    x = _apply_norm(params["final_norm"], x, cfg)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(table, x[:, -1], tied=cfg.tie_embeddings,
+                     softcap=cfg.final_softcap)
+    cache["lengths"] = jnp.full((b,), s, jnp.int32)
+    return logits, cache
+
+
+def prefill(params: Params, cache: dict[str, Any], tokens: jax.Array,
+            cfg: ModelConfig):
+    """Fill the cache by running decode_step over the prompt via lax.scan.
+    tokens: (B, S).  Returns (last_logits, cache).  (A fused full-sequence
+    prefill exists on the dry-run path; this one is the simple serving API.)
+    """
+    def step(cache, tok):
+        logits, cache = decode_step(params, cache, tok[:, None], cfg)
+        return cache, logits
+
+    cache, logits = jax.lax.scan(step, cache, tokens.T)
+    return logits[-1], cache

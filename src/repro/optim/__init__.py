@@ -1,0 +1,7 @@
+from .adamw import AdamW, OptState, TrainState, apply_updates
+from .compression import compress_int8, decompress_int8, compressed_psum
+from .schedule import cosine_schedule, linear_warmup
+
+__all__ = ["AdamW", "OptState", "TrainState", "apply_updates",
+           "compress_int8", "decompress_int8", "compressed_psum",
+           "cosine_schedule", "linear_warmup"]

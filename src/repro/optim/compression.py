@@ -1,0 +1,69 @@
+"""Gradient compression — smaller 'spill files' for the gradient shuffle.
+
+The paper's combiner exists to cut shuffle *volume* before it hits the
+network.  The gradient analogue at pod scale is lossy compression of the
+gradient all-reduce: int8 quantization with per-tensor scales and **error
+feedback** (residual carried to the next step, which keeps SGD convergence —
+1-bit Adam / EF-SGD lineage).  ~4× less ICI traffic on the collective term.
+
+``compressed_psum`` composes with ``shard_map``: quantize → psum the int32
+accumulations → dequantize; exact for the scale handling because scales are
+psum-maxed first (shared scale across workers).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """→ (int8 values, fp32 scale).  Symmetric per-tensor quantization."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_psum(grads: Any, axis_name: str) -> Any:
+    """All-reduce a gradient pytree in int8 over a mesh axis.
+
+    Per leaf: share one scale (max over workers), quantize, psum the int32
+    sums (exact — no overflow for ≤ 2^23 workers), dequantize, average.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def leaf(g):
+        gf = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        scale = jax.lax.pmax(scale, axis_name)
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int32)
+        s = jax.lax.psum(q, axis_name)
+        return (s.astype(jnp.float32) * scale / n).astype(g.dtype)
+
+    return jax.tree.map(leaf, grads)
+
+
+def ef_compress_update(grads: Any, residual: Any) -> tuple[Any, Any]:
+    """Error-feedback step for host-side compression paths: quantize
+    (grad + residual), return (quantized-dequantized grads, new residual)."""
+    def leaf(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, scale = compress_int8(gf)
+        deq = decompress_int8(q, scale)
+        return deq.astype(g.dtype), gf - deq
+
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                                grads)
+    out = jax.tree.map(leaf, grads, residual)
+    new_g = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_r

@@ -1,0 +1,25 @@
+"""Learning-rate schedules as pure functions of the step counter."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(peak_lr: float, warmup_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return peak_lr * jnp.minimum(1.0, s / max(1, warmup_steps))
+    return fn
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    """Linear warmup → cosine decay to ``final_frac · peak``."""
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(1, warmup_steps)
+        prog = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(s < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,5 @@
+from .train_step import init_train_state, make_eval_step, make_train_step
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["init_train_state", "make_eval_step", "make_train_step", "Trainer",
+           "TrainerConfig"]

@@ -1,0 +1,122 @@
+"""Trainer — the fault-tolerant training driver.
+
+The Coordinator pattern (paper §III-A.1) applied to training: all durable
+state (model/optimizer checkpoint, step counter, data cursor) lives in the
+storage + metadata layers; the Trainer process itself is stateless and
+restartable.  Mechanisms:
+
+  * **checkpoint/restart** — async sharded checkpoints every
+    ``checkpoint_every``; on construction the Trainer resumes from the
+    newest manifest (commit-point semantics, see checkpoint.py);
+  * **preemption simulation** — ``run(..., preempt_at=k)`` raises after k
+    steps; tests restart a fresh Trainer and verify bit-identical
+    continuation;
+  * **fault injection** — a hook called every step can raise transient
+    worker errors; the step is retried (idempotent: the step function is
+    pure and the batch is re-used), mirroring the Coordinator's task retry;
+  * **straggler mitigation** — at the MapReduce layer (speculative twins,
+    coordinator.py); within a jit step XLA is bulk-synchronous, so the
+    trainer-level lever is the *elastic re-mesh*: restore onto fewer/more
+    hosts (tests/test_fault_tolerance.py::test_elastic_remesh).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from ..core.metadata import MetadataStore
+from ..core.storage import NoSuchKey, ObjectStore
+from ..models import ModelConfig
+from ..optim import AdamW, TrainState
+from .train_step import init_train_state, make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    checkpoint_every: int = 50
+    checkpoint_prefix: str = "ckpt"
+    n_ckpt_shards: int = 4
+    max_step_retries: int = 2
+    microbatches: int = 1
+    log_every: int = 10
+
+
+class PreemptionError(RuntimeError):
+    pass
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, opt: AdamW, store: ObjectStore,
+                 meta: MetadataStore | None = None,
+                 tcfg: TrainerConfig | None = None, seed: int = 0,
+                 fault_hook: Callable[[int], None] | None = None) -> None:
+        self.cfg = cfg
+        self.opt = opt
+        self.store = store
+        self.meta = meta or MetadataStore()
+        self.tcfg = tcfg or TrainerConfig()
+        self.fault_hook = fault_hook
+        self._step_fn = jax.jit(
+            make_train_step(cfg, opt, self.tcfg.microbatches))
+        self.ckpt = AsyncCheckpointer(store, self.tcfg.checkpoint_prefix,
+                                      self.tcfg.n_ckpt_shards)
+        # restore-or-init (the restart path)
+        key = jax.random.PRNGKey(seed)
+        self.state = init_train_state(key, cfg, opt)
+        self.start_step = 0
+        last = latest_step(store, self.tcfg.checkpoint_prefix)
+        if last is not None:
+            self.state, _ = restore_checkpoint(
+                store, self.tcfg.checkpoint_prefix, self.state, last)
+            self.state = jax.tree.map(jnp.asarray, self.state)
+            self.start_step = int(self.state.step)
+        self.metrics_log: list[dict[str, float]] = []
+
+    # -- the loop -------------------------------------------------------------
+    def run(self, batches: Iterator[dict[str, np.ndarray]], num_steps: int,
+            preempt_at: int | None = None) -> TrainState:
+        it = iter(batches)
+        step = self.start_step
+        t0 = time.perf_counter()
+        while step < num_steps:
+            batch = next(it)
+            if preempt_at is not None and step >= preempt_at:
+                self.ckpt.save(step, self.state)
+                self.ckpt.wait()
+                raise PreemptionError(f"preempted at step {step}")
+            # task retry loop (transient worker failure → re-run, idempotent)
+            attempt = 0
+            while True:
+                try:
+                    if self.fault_hook is not None:
+                        self.fault_hook(step)
+                    new_state, metrics = self._step_fn(self.state, batch)
+                    break
+                except PreemptionError:
+                    raise
+                except Exception:
+                    attempt += 1
+                    if attempt > self.tcfg.max_step_retries:
+                        raise
+            self.state = new_state
+            step += 1
+            if step % self.tcfg.log_every == 0 or step == num_steps:
+                m = {k: float(v) for k, v in jax.device_get(metrics).items()}
+                m["step"] = step
+                m["steps_per_s"] = (step - self.start_step) / max(
+                    1e-9, time.perf_counter() - t0)
+                self.metrics_log.append(m)
+                self.meta.set(f"train:step", step)
+                self.meta.set(f"train:loss", m.get("loss"))
+            if step % self.tcfg.checkpoint_every == 0:
+                self.ckpt.save(step, self.state)
+        self.ckpt.save(step, self.state)
+        self.ckpt.wait()
+        return self.state

@@ -1,0 +1,152 @@
+"""Coordinator reliability (retries, speculation, restart) and the client
+package (Fig. 4: async multi-job, chained map stages)."""
+
+import threading
+import time
+from collections import Counter
+
+import pytest
+
+from repro.core import (Coordinator, Job, JobState, MapReduce, MemoryStore,
+                        MetadataStore, make_wordcount_job, read_final_output)
+from repro.core.job import JobConfig
+from repro.data.pipeline import synth_corpus
+
+CORPUS = synth_corpus(15_000, vocab_words=100, seed=1)
+EXPECTED = dict(Counter(CORPUS.split()))
+
+
+def _stack():
+    store = MemoryStore()
+    store.put("input/corpus.txt", CORPUS.encode())
+    return store, MetadataStore()
+
+
+def test_retry_on_transient_mapper_failure():
+    store, meta = _stack()
+    failures = {("mapper", 1, 0), ("mapper", 2, 0)}   # fail first attempts
+
+    def inject(role, wid, attempt):
+        if (role, wid, attempt) in failures:
+            failures.discard((role, wid, attempt))
+            raise RuntimeError("simulated container crash")
+
+    coord = Coordinator(store, meta, fault_injector=inject,
+                        max_task_retries=2)
+    cfg = make_wordcount_job(n_mappers=4, n_reducers=2)
+    report = coord.run_job(cfg)
+    assert report.state == JobState.DONE
+    assert report.retries == 2
+    assert read_final_output(cfg, store) == EXPECTED
+
+
+def test_job_fails_after_retry_budget():
+    store, meta = _stack()
+
+    def always_fail(role, wid, attempt):
+        if role == "reducer" and wid == 0:
+            raise RuntimeError("permanent failure")
+
+    coord = Coordinator(store, meta, fault_injector=always_fail,
+                        max_task_retries=1)
+    cfg = make_wordcount_job(n_mappers=2, n_reducers=2)
+    report = coord.run_job(cfg)
+    assert report.state == JobState.FAILED
+    assert "permanent failure" in (report.error or "") or report.error
+
+
+def test_speculative_execution_on_straggler():
+    store, meta = _stack()
+    slow_once = {0}
+
+    def inject(role, wid, attempt):
+        if role == "mapper" and wid in slow_once:
+            slow_once.discard(wid)
+            time.sleep(1.2)        # straggle far beyond the median
+
+    coord = Coordinator(store, meta, fault_injector=inject,
+                        straggler_factor=3.0, straggler_min_seconds=0.2,
+                        speculative_execution=True)
+    cfg = make_wordcount_job(n_mappers=4, n_reducers=2)
+    report = coord.run_job(cfg)
+    assert report.state == JobState.DONE
+    assert report.speculative_launches >= 1
+    assert read_final_output(cfg, store) == EXPECTED
+
+
+def test_coordinator_restart_resumes_job(tmp_path):
+    """Stateless coordinator: a new instance resumes from metadata."""
+    store, _ = _stack()
+    meta = MetadataStore(persist_path=str(tmp_path / "meta.json"))
+    coord = Coordinator(store, meta)
+    cfg = make_wordcount_job(n_mappers=3, n_reducers=2)
+    # simulate a crash mid-MAPPING by setting state then abandoning
+    coord.meta.set(f"job:{cfg.job_id}:config", cfg.to_json())
+    coord._set_state(cfg.job_id, JobState.MAPPING)
+
+    meta2 = MetadataStore(persist_path=str(tmp_path / "meta.json"))
+    coord2 = Coordinator(store, meta2)
+    report = coord2.resume_job(cfg.job_id)
+    assert report.state == JobState.DONE
+    assert read_final_output(cfg, store) == EXPECTED
+
+
+# -- client package (Fig. 4) ---------------------------------------------------
+
+def upper_mapper(key, chunk):
+    for word in chunk.split():
+        yield word.upper(), 1
+
+
+def count_mapper(key, chunk):
+    import json
+    for line in chunk.splitlines():
+        if line.strip():
+            k, v = json.loads(line)
+            yield k, v
+
+
+def sum_reducer(key, values):
+    return key, sum(values)
+
+
+def test_client_single_job():
+    store, meta = _stack()
+    coord = Coordinator(store, meta)
+    job = Job(payload=JobConfig(n_mappers=2, n_reducers=2),
+              mappers=[upper_mapper], reducer=sum_reducer)
+    mr = MapReduce(coord, [job])
+    ids = mr.run_sync()
+    assert len(ids) == 1 and len(ids[0]) == 1
+    out = read_final_output(job.build_stages()[-1], store)
+    assert out == {k.upper(): v for k, v in EXPECTED.items()}
+
+
+def test_client_chained_map_stages():
+    """Two map functions + reducer = two chained jobs (paper §III-D)."""
+    store, meta = _stack()
+    coord = Coordinator(store, meta)
+    job = Job(payload=JobConfig(n_mappers=2, n_reducers=2),
+              mappers=[upper_mapper, count_mapper], reducer=sum_reducer)
+    stages = job.build_stages()
+    assert len(stages) == 2
+    assert stages[0].n_reducers == 0          # map-only first stage
+    mr = MapReduce(coord, [Job(payload=JobConfig(n_mappers=2, n_reducers=2),
+                               mappers=[upper_mapper, count_mapper],
+                               reducer=sum_reducer)])
+    ids = mr.run_sync()
+    assert len(ids[0]) == 2
+
+
+def test_client_parallel_jobs():
+    store, meta = _stack()
+    coord = Coordinator(store, meta)
+    jobs = [Job(payload=JobConfig(n_mappers=2, n_reducers=1),
+                mappers=[upper_mapper], reducer=sum_reducer)
+            for _ in range(3)]
+    mr = MapReduce(coord, jobs)
+    ids = mr.run_sync()
+    assert len(ids) == 3
+    for job in jobs:
+        out = read_final_output(job.build_stages()[-1], store)
+        assert out == {k.upper(): v for k, v in EXPECTED.items()}

@@ -1,0 +1,85 @@
+"""Event bus (Kafka stand-in) and autoscaler (Knative KPA stand-in)."""
+
+import time
+
+from repro.core.autoscaler import AutoscalerConfig, ServerlessPool
+from repro.core.events import CloudEvent, EventBus, trigger_event
+
+
+def test_produce_poll_roundtrip():
+    bus = EventBus()
+    ev = trigger_event("mapper", "j1", 0, {"attempt": 0})
+    bus.produce("t", ev, key="j1/0")
+    recs = bus.poll("g", "t", timeout=0.5)
+    assert len(recs) == 1
+    assert recs[0].value.data["job_id"] == "j1"
+
+
+def test_consumer_groups_are_independent():
+    bus = EventBus()
+    bus.produce("t", CloudEvent("x", "s", {}), key="a")
+    assert len(bus.poll("g1", "t", timeout=0.2)) == 1
+    assert len(bus.poll("g2", "t", timeout=0.2)) == 1   # own offsets
+    assert len(bus.poll("g1", "t", timeout=0.05)) == 0  # consumed
+
+
+def test_key_partitioning_is_stable():
+    bus = EventBus()
+    t = bus.create_topic("t", n_partitions=4)
+    p1 = t.partition_for("job-1/3")
+    p2 = t.partition_for("job-1/3")
+    assert p1 == p2
+
+
+def test_seek_replays_after_failure():
+    bus = EventBus()
+    for i in range(5):
+        bus.produce("t", CloudEvent("x", "s", {"i": i}))
+    first = bus.poll("g", "t", timeout=0.2, max_records=10)
+    assert len(first) == 5
+    bus.seek("g", "t", partition=first[0].partition, offset=0)
+    replay = bus.poll("g", "t", timeout=0.2, max_records=10)
+    assert [r.value.data["i"] for r in replay if r.partition ==
+            first[0].partition] == [r.value.data["i"] for r in first
+                                    if r.partition == first[0].partition]
+
+
+def test_lag_signal():
+    bus = EventBus()
+    for _ in range(3):
+        bus.produce("t", CloudEvent("x", "s", {}))
+    assert bus.lag("g", "t") == 3
+    bus.poll("g", "t", timeout=0.2, max_records=10)
+    assert bus.lag("g", "t") == 0
+
+
+# -- autoscaler ---------------------------------------------------------------
+
+def test_scale_from_zero_and_cold_start_accounting():
+    pool = ServerlessPool("mapper", AutoscalerConfig(cold_start=0.01,
+                                                     max_scale=4))
+    assert pool.replicas() == 0              # scale-to-zero initial state
+    out = pool.submit(lambda x: x * 2, 21)
+    assert out == 42
+    assert pool.replicas() == 1
+    assert pool.cold_starts == 1
+    pool.submit(lambda: None)
+    assert pool.cold_starts == 1             # warm reuse
+
+
+def test_kpa_desired_scale():
+    pool = ServerlessPool("x", AutoscalerConfig(target_concurrency=2,
+                                                max_scale=10, min_scale=0))
+    assert pool.desired_scale(0) == 0
+    assert pool.desired_scale(1) == 1
+    assert pool.desired_scale(7) == 4
+    assert pool.desired_scale(100) == 10
+
+
+def test_scale_to_zero_after_grace():
+    pool = ServerlessPool("x", AutoscalerConfig(scale_to_zero_grace=0.02))
+    pool.submit(lambda: None)
+    assert pool.replicas() == 1
+    time.sleep(0.05)
+    pool.reap_idle()
+    assert pool.replicas() == 0

@@ -1,0 +1,133 @@
+"""Device-plane MapReduce: shuffle invariants (hypothesis) + engine modes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mapreduce import DeviceJobConfig, mapreduce, segment_reduce
+from repro.core.shuffle import (build_send_buffers, hash_partition,
+                                local_combine_dense, sort_and_group)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+keys_vals = st.integers(2, 64).flatmap(
+    lambda n: st.tuples(
+        st.lists(st.integers(0, 31), min_size=n, max_size=n),
+        st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                 min_size=n, max_size=n)))
+
+
+@given(keys_vals)
+def test_local_combine_matches_oracle(kv):
+    ks, vs = kv
+    keys = jnp.asarray(ks, jnp.int32)
+    vals = jnp.asarray(vs, jnp.float32)
+    got = np.asarray(local_combine_dense(keys, vals, 32))
+    want = np.zeros(32, np.float32)
+    for k, v in zip(ks, vs):
+        want[k] += np.float32(v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(keys_vals, st.integers(1, 8))
+def test_send_buffers_partition_and_conserve(kv, n_part):
+    """Spill-buffer packing: every kept record lands in hash(key) % R's
+    buffer; records are only lost to capacity overflow, and the overflow
+    count is exact."""
+    ks, vs = kv
+    keys = jnp.asarray(ks, jnp.int32)
+    vals = jnp.asarray(vs, jnp.float32)
+    cap = 8
+    sk, sv, svalid, stats = build_send_buffers(keys, vals, n_part, cap)
+    sk, sv, svalid = map(np.asarray, (sk, sv, svalid))
+    dests = np.asarray(hash_partition(keys, n_part))
+    kept = int(svalid.sum())
+    assert kept + int(stats.dropped) == len(ks)
+    for p in range(n_part):
+        got = sorted(sk[p][svalid[p]].tolist())
+        want = sorted(np.asarray(ks)[dests == p].tolist())[:None]
+        # kept records must be a sub-multiset of the records routed to p
+        for g in got:
+            assert g in want
+            want.remove(g)
+        assert len(got) == min((dests == p).sum(), cap)
+
+
+@given(keys_vals)
+def test_sort_and_group_marks_groups(kv):
+    ks, vs = kv
+    keys = jnp.asarray(ks, jnp.int32)
+    vals = jnp.asarray(vs, jnp.float32)
+    sk, sv, starts = sort_and_group(keys, vals)
+    sk, starts = np.asarray(sk), np.asarray(starts)
+    assert (np.diff(sk) >= 0).all()
+    n_groups = int(starts.sum())
+    assert n_groups == len(set(ks))
+
+
+def test_segment_reduce_kinds():
+    keys = jnp.asarray([1, 1, 2, 5, 5, 5], jnp.int32)
+    vals = jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0, 6.0], jnp.float32)
+    sk, sv, starts = sort_and_group(keys, vals)
+    for kind, expect in [("sum", {1: 3.0, 2: 3.0, 5: 15.0}),
+                         ("max", {1: 2.0, 2: 3.0, 5: 6.0}),
+                         ("min", {1: 1.0, 2: 3.0, 5: 4.0}),
+                         ("mean", {1: 1.5, 2: 3.0, 5: 5.0})]:
+        gk, gv, gvalid = segment_reduce(kind, sk, sv, starts)
+        got = {int(k): float(v) for k, v, ok in
+               zip(np.asarray(gk), np.asarray(gv), np.asarray(gvalid)) if ok}
+        assert got == expect, kind
+
+
+def _make_shards(n_workers, n_per, n_keys, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, n_keys, (n_workers, n_per), dtype=np.int32)
+    vals = rng.integers(1, 5, (n_workers, n_per), dtype=np.int32)
+    return np.stack([keys, vals], axis=-1)
+
+
+def test_aggregate_vs_group_modes_agree():
+    W, n_keys = 4, 32
+    shard = _make_shards(W, 500, n_keys, 3)
+    cfg_a = DeviceJobConfig(num_buckets=n_keys, n_workers=W)
+    map_fn = lambda s: (s[:, 0], s[:, 1].astype(jnp.float32),
+                        jnp.ones(s.shape[0], bool))
+    agg = np.asarray(mapreduce(map_fn, shard, cfg_a, mode="aggregate",
+                               backend="vmap"))
+    cfg_g = DeviceJobConfig(num_buckets=n_keys, n_workers=W, capacity=4096)
+    gk, gv, gvalid, dropped = mapreduce(map_fn, shard, cfg_g, mode="group",
+                                        reduce_fn="sum", backend="vmap")
+    assert int(dropped) == 0
+    got = {int(k): float(v) for k, v, ok in
+           zip(np.asarray(gk), np.asarray(gv), np.asarray(gvalid)) if ok}
+    for k in range(n_keys):
+        assert got.get(k, 0.0) == agg[k]
+
+
+def test_group_mode_capacity_drops_are_reported():
+    W = 2
+    shard = _make_shards(W, 512, 4, 0)
+    cfg = DeviceJobConfig(num_buckets=4, n_workers=W, capacity=16)
+    *_, dropped = mapreduce(
+        lambda s: (s[:, 0], s[:, 1].astype(jnp.float32),
+                   jnp.ones(s.shape[0], bool)),
+        shard, cfg, mode="group", reduce_fn="sum", backend="vmap")
+    assert int(dropped) > 0
+
+
+def test_pallas_combiner_in_engine():
+    """The hash_combine kernel slots into the aggregating shuffle."""
+    from repro.kernels.hash_combine.ops import make_combine_fn
+    W, n_keys = 4, 64
+    shard = _make_shards(W, 256, n_keys, 5)
+    cfg = DeviceJobConfig(num_buckets=n_keys, n_workers=W)
+    map_fn = lambda s: (s[:, 0], s[:, 1].astype(jnp.float32),
+                        jnp.ones(s.shape[0], bool))
+    ref = np.asarray(mapreduce(map_fn, shard, cfg, mode="aggregate",
+                               backend="vmap"))
+    got = np.asarray(mapreduce(map_fn, shard, cfg, mode="aggregate",
+                               backend="vmap",
+                               combine_fn=make_combine_fn(use_pallas=True)))
+    np.testing.assert_allclose(got, ref, rtol=1e-5)

@@ -1,0 +1,82 @@
+"""Splitter invariants — including the paper's record-boundary extension —
+as hypothesis property tests."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.splitter import split_object, split_prefix
+from repro.core.storage import MemoryStore
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+def _store_with(data: bytes) -> MemoryStore:
+    s = MemoryStore()
+    s.put("obj", data)
+    return s
+
+
+words = st.lists(st.text(alphabet="abcdef", min_size=1, max_size=8),
+                 min_size=1, max_size=300)
+
+
+@given(words, st.integers(1, 10))
+def test_text_split_covers_everything_without_cutting_records(ws, n):
+    data = ("\n".join(ws) + "\n").encode()
+    store = _store_with(data)
+    ranges = split_object(store, "obj", n, binary=False, sep=b"\n")
+    # coverage: contiguous, disjoint, complete
+    assert ranges[0].lo == 0 and ranges[-1].hi == len(data)
+    for a, b in zip(ranges[:-1], ranges[1:]):
+        assert a.hi == b.lo
+    # record integrity: every range starts at a record boundary
+    for r in ranges:
+        if r.lo > 0:
+            assert data[r.lo - 1:r.lo] == b"\n", "range must start after sep"
+    # reassembling the per-range records gives the original records
+    rec = []
+    for r in ranges:
+        rec.extend(data[r.lo:r.hi].decode().split("\n"))
+    assert [w for w in rec if w] == ws
+
+
+@given(st.binary(min_size=1, max_size=5000), st.integers(1, 7))
+def test_binary_split_exact_offsets(data, n):
+    store = _store_with(data)
+    ranges = split_object(store, "obj", n, binary=True)
+    assert ranges[0].lo == 0 and ranges[-1].hi == len(data)
+    assert b"".join(data[r.lo:r.hi] for r in ranges) == data
+
+
+@given(st.lists(st.integers(0, 5000), min_size=1, max_size=8),
+       st.integers(1, 6))
+def test_prefix_split_balances_bytes(sizes, n_mappers):
+    store = MemoryStore()
+    rng = np.random.default_rng(0)
+    total = 0
+    for i, size in enumerate(sizes):
+        body = bytes(rng.integers(97, 105, size, dtype=np.uint8))
+        store.put(f"in/{i}", body)
+        total += size
+    assignments = split_prefix(store, "in/", n_mappers, binary=True)
+    assert len(assignments) == n_mappers
+    got = sum(r.size for a in assignments for r in a)
+    assert got == total
+    # balance: no mapper holds more than ~2× the fair share (greedy bound)
+    if total > 0 and n_mappers > 1:
+        fair = total / n_mappers
+        biggest = max(sum(r.size for r in a) for a in assignments)
+        biggest_obj = max(sizes)
+        assert biggest <= max(2 * fair, biggest_obj) + 1
+
+
+def test_long_record_spanning_splits():
+    """One record longer than a whole split must not be cut."""
+    data = b"short\n" + b"x" * 1000 + b"\nend\n"
+    store = _store_with(data)
+    ranges = split_object(store, "obj", 5, binary=False)
+    rec = []
+    for r in ranges:
+        rec.extend(data[r.lo:r.hi].split(b"\n"))
+    assert b"x" * 1000 in rec

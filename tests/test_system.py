@@ -1,0 +1,90 @@
+"""End-to-end behaviour: the paper's word-count workflow (Fig. 5) through the
+full Coordinator pipeline, host and device engines agreeing with the oracle
+and with each other."""
+
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core import (Coordinator, JobState, MemoryStore, MetadataStore,
+                        make_wordcount_job, read_final_output)
+from repro.core.mapreduce import (DeviceJobConfig, mapreduce,
+                                  wordcount_map_factory)
+from repro.data.pipeline import synth_corpus
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return synth_corpus(30_000, vocab_words=200, seed=7)
+
+
+@pytest.fixture()
+def stack(corpus):
+    store = MemoryStore()
+    store.put("input/corpus.txt", corpus.encode())
+    meta = MetadataStore()
+    coord = Coordinator(store, meta)
+    return store, meta, coord
+
+
+def test_wordcount_end_to_end(stack, corpus):
+    store, meta, coord = stack
+    cfg = make_wordcount_job(n_mappers=4, n_reducers=2)
+    report = coord.run_job(cfg)
+    assert report.state == JobState.DONE, report.error
+    out = read_final_output(cfg, store)
+    assert out == dict(Counter(corpus.split()))
+
+
+def test_wordcount_many_workers(stack, corpus):
+    store, meta, coord = stack
+    cfg = make_wordcount_job(n_mappers=7, n_reducers=3)
+    report = coord.run_job(cfg)
+    assert report.state == JobState.DONE
+    assert read_final_output(cfg, store) == dict(Counter(corpus.split()))
+
+
+def test_map_only_workflow(stack, corpus):
+    """§III-B: Reducer and Finalizer are optional."""
+    store, meta, coord = stack
+    cfg = make_wordcount_job(n_mappers=3, n_reducers=0, run_finalizer=False)
+    report = coord.run_job(cfg)
+    assert report.state == JobState.DONE
+    spills = store.list_objects(f"jobs/{cfg.job_id}/intermediate/")
+    assert spills, "map-only workflow must leave intermediate spills"
+
+
+def test_combiner_equivalence(stack, corpus):
+    """Combiner on/off must not change results, only spill volume."""
+    store, meta, coord = stack
+    cfg_on = make_wordcount_job(n_mappers=4, n_reducers=2, run_combiner=True)
+    cfg_off = make_wordcount_job(n_mappers=4, n_reducers=2, run_combiner=False)
+    r_on = coord.run_job(cfg_on)
+    r_off = coord.run_job(cfg_off)
+    assert r_on.state == r_off.state == JobState.DONE
+    assert read_final_output(cfg_on, store) == read_final_output(cfg_off, store)
+    bytes_on = sum(t.times.bytes_out for t in r_on.task_results
+                   if t.role == "mapper")
+    bytes_off = sum(t.times.bytes_out for t in r_off.task_results
+                    if t.role == "mapper")
+    assert bytes_on < bytes_off, "combiner must reduce spill volume"
+
+
+def test_host_vs_device_engine(corpus):
+    """The TPU-plane engine and the container-plane engine agree."""
+    words = corpus.split()
+    expected = Counter(words)
+    vocab = {w: i for i, w in enumerate(sorted(expected))}
+    tok = np.array([vocab[w] for w in words], dtype=np.int32)
+    W = 8
+    n = (len(tok) + W - 1) // W * W
+    toks = np.concatenate([tok, np.full(n - len(tok), -1, np.int32)])
+    shard = np.stack([toks.reshape(W, -1),
+                      np.ones((W, n // W), np.int32)], axis=-1)
+    nb = 256
+    cfg = DeviceJobConfig(num_buckets=nb, n_workers=W)
+    res = np.asarray(mapreduce(wordcount_map_factory(nb), shard, cfg,
+                               mode="aggregate", backend="vmap"))
+    for w, c in expected.items():
+        assert res[vocab[w]] == c
