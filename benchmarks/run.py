@@ -6,12 +6,14 @@ import sys
 
 def main() -> None:
     from . import (bench_fig6_end_to_end, bench_fig7_components,
-                   bench_fig8_phases, bench_kernels, bench_scaling)
+                   bench_fig8_phases, bench_kernels, bench_scaling,
+                   bench_streaming)
 
     print("name,us_per_call,derived")
     failures = []
     for mod in (bench_fig6_end_to_end, bench_fig7_components,
-                bench_fig8_phases, bench_kernels, bench_scaling):
+                bench_fig8_phases, bench_kernels, bench_scaling,
+                bench_streaming):
         try:
             mod.run(print_rows=True)
         except Exception as exc:  # keep the harness going; report at the end

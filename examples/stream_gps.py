@@ -1,0 +1,99 @@
+"""Streaming logistics: windowed per-region GPS aggregates, end to end.
+
+The paper's motivating workload — continuous GPS/IoT event streams from a
+logistics fleet — run through the streaming micro-batch engine: a replayable
+event log ("Kafka topic") in the object store, tumbling event-time windows,
+one fused incremental map→shuffle→reduce round per micro-batch on the device
+engine, watermark-driven window finalization, and lag-driven pool scaling.
+The emitted windows are then checked against a one-shot batch computation
+over the same records.
+
+    PYTHONPATH=src python examples/stream_gps.py
+"""
+
+from collections import defaultdict
+
+import numpy as np
+
+from repro.core import MemoryStore, MetadataStore
+from repro.core.events import EventBus, TOPIC_STREAM_WINDOW
+from repro.streaming import (StreamSource, StreamingConfig,
+                             StreamingCoordinator, write_event_log)
+
+REGIONS = ["north", "south", "east", "west", "centre", "port", "depot", "hub"]
+WINDOW = 60.0          # 1-minute tumbling windows
+RATE = 40.0            # events per second of event time
+DURATION = 600.0       # 10 minutes of fleet telemetry
+
+
+def synth_gps_events(seed: int = 0):
+    """A fleet's GPS pings: (event_time, region, speed_kmh), mildly
+    out-of-order like real device uploads."""
+    rng = np.random.default_rng(seed)
+    n = int(RATE * DURATION)
+    ts = np.sort(rng.uniform(0, DURATION, n))
+    ts = ts + rng.normal(0, 0.5, n)          # upload jitter → out-of-order
+    ts = np.clip(ts, 0, None)
+    regions = rng.integers(0, len(REGIONS), n)
+    speeds = rng.integers(5, 110, n).astype(float)
+    return [(float(t), REGIONS[r], float(s))
+            for t, r, s in zip(ts, regions, speeds)]
+
+
+def main() -> None:
+    events = synth_gps_events()
+
+    # 1. producers append to the replayable event log (the Kafka stand-in)
+    store = MemoryStore()
+    n = write_event_log(store, "streams/gps", events, segment_records=4096)
+    print(f"event log: {n} GPS pings, "
+          f"{len(store.list_objects('streams/gps'))} segments")
+
+    # 2. continuous job: mean speed per region per 1-minute window
+    bus = EventBus()
+    cfg = StreamingConfig(num_buckets=8, n_workers=4, window_size=WINDOW,
+                          allowed_lateness=5.0, batch_records=2048,
+                          aggregation="mean", job_id="gps-fleet")
+    coord = StreamingCoordinator(store, MetadataStore(), cfg, bus=bus)
+    source = StreamSource(store=store, prefix="streams/gps",
+                          batch_records=2048)
+    report = coord.run_stream(source)
+
+    print(f"stream {cfg.job_id}: {report.batches} micro-batches, "
+          f"{report.records_in} records in {report.wall_time:.3f}s "
+          f"({report.records_per_sec:,.0f} rec/s)")
+    print(f"  windows emitted: {report.windows_emitted}, "
+          f"late dropped: {report.late_dropped}, "
+          f"mean batch latency: {report.mean_batch_latency * 1e3:.2f} ms")
+    print(f"  backpressure: max lag {report.max_lag}, "
+          f"{report.scale_events} scale events → pool {coord.pool_stats()}")
+
+    # 3. downstream consumers see finalized windows as CloudEvents
+    recs = bus.poll("dashboard", TOPIC_STREAM_WINDOW, timeout=0.1,
+                    max_records=64)
+    print(f"  {len(recs)} window-finalized events on the bus; first: "
+          f"{recs[0].value.data['output_key']}")
+
+    # 4. agreement with a one-shot batch computation over the same log
+    batch: dict[int, dict[str, list[float]]] = defaultdict(
+        lambda: defaultdict(list))
+    for ts, region, speed in events:
+        batch[int(ts // WINDOW)][region].append(speed)
+    worst = 0.0
+    checked = 0
+    import json
+    for widx, per_region in batch.items():
+        key = (f"stream-output/gps-fleet/"
+               f"window-{widx * WINDOW:.3f}-{(widx + 1) * WINDOW:.3f}")
+        got = dict(json.loads(line) for line in store.get(key).splitlines())
+        for region, speeds in per_region.items():
+            want = sum(speeds) / len(speeds)
+            worst = max(worst, abs(got[region] - want))
+            checked += 1
+    assert worst < 1e-3, worst
+    print(f"  incremental == one-shot batch on {checked} (window, region) "
+          f"aggregates (max |Δ| = {worst:.2e}) ✓")
+
+
+if __name__ == "__main__":
+    main()

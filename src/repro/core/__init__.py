@@ -15,7 +15,9 @@ from .client import Job, MapReduce
 from .coordinator import Coordinator, JobReport, JobState
 from .events import CloudEvent, EventBus
 from .job import JobConfig, make_wordcount_job
-from .mapreduce import DeviceJobConfig, mapreduce, segment_reduce
+from .mapreduce import (DeviceJobConfig, clear_window_slot, init_window_carry,
+                        make_incremental_step, mapreduce, read_window_slot,
+                        segment_reduce)
 from .metadata import MetadataStore
 from .splitter import ByteRange, split_object, split_prefix
 from .storage import FileStore, MemoryStore, ObjectStore
@@ -25,6 +27,8 @@ __all__ = [
     "AutoscalerConfig", "ServerlessPool", "Job", "MapReduce", "Coordinator",
     "JobReport", "JobState", "CloudEvent", "EventBus", "JobConfig",
     "make_wordcount_job", "DeviceJobConfig", "mapreduce", "segment_reduce",
+    "make_incremental_step", "init_window_carry", "read_window_slot",
+    "clear_window_slot",
     "MetadataStore", "ByteRange", "split_object", "split_prefix", "FileStore",
     "MemoryStore", "ObjectStore", "read_final_output", "run_mapper",
     "run_reducer",

@@ -62,11 +62,41 @@ class ServerlessPool:
         self.total_invocations = 0
         self.cold_start_seconds = 0.0
 
-    # -- KPA sizing ----------------------------------------------------------
-    def desired_scale(self, concurrency: int) -> int:
+    # -- KPA / KEDA sizing ----------------------------------------------------
+    def _clamped_scale(self, demand: int, per_replica: int) -> int:
         c = self.config
-        want = math.ceil(concurrency / max(1, c.target_concurrency))
+        want = math.ceil(demand / max(1, per_replica))
         return max(c.min_scale, min(c.max_scale, want))
+
+    def desired_scale(self, concurrency: int) -> int:
+        """KPA sizing: in-flight requests over the concurrency target."""
+        return self._clamped_scale(concurrency, self.config.target_concurrency)
+
+    def desired_scale_from_backlog(self, backlog: int,
+                                   per_replica: int = 1) -> int:
+        """KEDA-style sizing from queue depth: unconsumed events (consumer
+        lag) divided by the per-replica drain rate.  The streaming
+        coordinator feeds it ``bus.lag(...)`` so the pool tracks
+        backpressure instead of a fixed split count."""
+        return self._clamped_scale(backlog, per_replica)
+
+    def ensure_scale(self, n: int) -> int:
+        """Pre-activate instances up to ``n`` (paying cold starts now, not on
+        the critical path of the next batch).  Returns replicas added."""
+        n = min(n, self.config.max_scale)
+        added = 0
+        with self._lock:
+            while len(self._instances) < n:
+                inst = _Instance(id=self._next_id, started=time.time())
+                self._next_id += 1
+                self._instances[inst.id] = inst
+                self.cold_starts += 1
+                self.cold_start_seconds += self.config.cold_start
+                added += 1
+        if added and self.config.cold_start > 0:
+            # concurrent activations: one cold-start wait, not ``added``
+            time.sleep(self.config.cold_start)
+        return added
 
     def replicas(self) -> int:
         with self._lock:
@@ -102,13 +132,15 @@ class ServerlessPool:
             inst.last_used = time.time()
 
     def reap_idle(self) -> int:
-        """Retire instances idle past the grace window (scale-to-zero)."""
+        """Retire instances idle past the grace window (scale-to-zero),
+        never shrinking below ``min_scale``."""
         now = time.time()
         with self._lock:
-            dead = [i for i, inst in self._instances.items()
+            idle = [i for i, inst in self._instances.items()
                     if not inst.busy
-                    and now - inst.last_used > self.config.scale_to_zero_grace
-                    and len(self._instances) > self.config.min_scale]
+                    and now - inst.last_used > self.config.scale_to_zero_grace]
+            allowed = max(0, len(self._instances) - self.config.min_scale)
+            dead = idle[:allowed]
             for i in dead:
                 del self._instances[i]
         return len(dead)

@@ -159,6 +159,13 @@ TOPIC_REDUCER = "repro.reducer"
 TOPIC_FINALIZER = "repro.finalizer"
 TOPIC_STATUS = "repro.status"      # worker → coordinator completion callbacks
 
+# Streaming topics: the source announces each micro-batch on STREAM_BATCH
+# (the trigger the streaming loop consumes; its consumer lag is the
+# backpressure/scaling signal), and the coordinator publishes every finalized
+# window on STREAM_WINDOW for downstream consumers.
+TOPIC_STREAM_BATCH = "repro.stream.batch"
+TOPIC_STREAM_WINDOW = "repro.stream.window"
+
 _event_counter = itertools.count()
 
 
@@ -169,6 +176,33 @@ def trigger_event(role: str, job_id: str, worker_id: int,
         source="coordinator",
         subject=f"{job_id}/{role}-{worker_id}",
         data={"job_id": job_id, "worker_id": worker_id, **payload},
+    )
+
+
+def batch_event(job_id: str, batch_index: int, n_records: int,
+                max_event_time: float | None = None) -> CloudEvent:
+    """Micro-batch announcement — one per batch on TOPIC_STREAM_BATCH.
+    ``max_event_time`` is None when the producer announced from record
+    counts without parsing payloads."""
+    return CloudEvent(
+        type="repro.stream.batch.available",
+        source="stream-source",
+        subject=f"{job_id}/batch-{batch_index}",
+        data={"job_id": job_id, "batch_index": batch_index,
+              "n_records": n_records, "max_event_time": max_event_time},
+    )
+
+
+def window_event(job_id: str, window_start: float, window_end: float,
+                 n_keys: int, output_key: str) -> CloudEvent:
+    """Finalized-window emission notice on TOPIC_STREAM_WINDOW."""
+    return CloudEvent(
+        type="repro.stream.window.finalized",
+        source="streaming-coordinator",
+        subject=f"{job_id}/window-{window_start}",
+        data={"job_id": job_id, "window_start": window_start,
+              "window_end": window_end, "n_keys": n_keys,
+              "output_key": output_key},
     )
 
 

@@ -30,11 +30,26 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .shuffle import (ShuffleStats, shuffle_aggregate, shuffle_group,
-                      sort_and_group)
+from .shuffle import (shuffle_aggregate, shuffle_aggregate_windowed,
+                      shuffle_group)
 
 INT32_MAX = jnp.iinfo(jnp.int32).max
+
+# jax >= 0.5 exposes shard_map at top level with check_vma; older releases
+# (this container ships 0.4.x) keep it in experimental with check_rep
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SM_CHECK_KW = "check_vma"
+else:  # pragma: no cover - exercised on jax 0.4.x only
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_CHECK_KW = "check_rep"
+
+
+def _make_shard_map(body, mesh, in_specs, out_specs):
+    return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_SM_CHECK_KW: False})
 
 
 @dataclass(frozen=True)
@@ -113,7 +128,11 @@ def _worker_body(shard, *, cfg: DeviceJobConfig, map_fn: Callable,
     keys = keys.astype(jnp.int32)
 
     if mode == "aggregate":
-        part = shuffle_aggregate(keys, values, cfg.axis_name, cfg.num_buckets,
+        # pad the bucket space to a multiple of the axis size so the tiled
+        # reduce_scatter divides evenly; callers index ids < num_buckets and
+        # the pad rows stay zero
+        padded = -(-cfg.num_buckets // cfg.n_workers) * cfg.n_workers
+        part = shuffle_aggregate(keys, values, cfg.axis_name, padded,
                                  valid=valid, combine_fn=combine_fn)
         if finalize:
             # Finalizer: concatenate every reducer's slice into one object —
@@ -181,12 +200,110 @@ def mapreduce(map_fn: Callable, data, cfg: DeviceJobConfig, *,
             out_spec = (gspec, gspec, gspec, P())
         # finalized outputs are all_gather/psum results — replicated by
         # construction, which the static checker can't always prove
-        sm = jax.shard_map(body, mesh=mesh, in_specs=(in_spec,),
-                           out_specs=out_spec, check_vma=False)
+        sm = _make_shard_map(body, mesh, (in_spec,), out_spec)
         sm = jax.jit(sm) if jit else sm
         return sm(data)
 
     raise ValueError(f"unknown backend {backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# Streaming: incremental windowed aggregation (one fused collective per batch)
+# ---------------------------------------------------------------------------
+
+def streaming_record_map(shard):
+    """Default map UDF for the streaming engine: shard is a (records, 4)
+    float32 array of [window_slot, key_id, value, valid] rows (the
+    StreamingCoordinator's wire format).  Emits (sum, count) value channels so
+    count / sum / mean all come out of one carried state."""
+    slots = shard[:, 0].astype(jnp.int32)
+    keys = shard[:, 1].astype(jnp.int32)
+    valid = shard[:, 3] > 0
+    values = jnp.stack([shard[:, 2], jnp.ones_like(shard[:, 2])], axis=-1)
+    return slots, keys, values, valid
+
+
+def make_incremental_step(cfg: DeviceJobConfig, n_slots: int, *,
+                          map_fn: Callable = streaming_record_map,
+                          combine_fn: Callable | None = None,
+                          backend: str = "vmap",
+                          mesh: jax.sharding.Mesh | None = None,
+                          jit: bool = True) -> Callable:
+    """Build the streaming hot-path: ``step(batch, carry) -> carry``.
+
+    ``carry`` is the in-flight window state in *scattered* layout — each of
+    the ``cfg.n_workers`` devices owns a contiguous
+    ``n_slots * num_buckets / n_workers`` slice of the flattened
+    (window_slot, bucket) space, exactly the layout ``psum_scatter`` emits.
+    One call folds one micro-batch into the carry with a single fused
+    reduce_scatter; no gather happens until a window finalizes
+    (``read_window_slot``).  Built once per stream so XLA compiles one program
+    for every batch.
+    """
+    if (n_slots * cfg.num_buckets) % cfg.n_workers != 0:
+        raise ValueError("n_slots * num_buckets must divide by n_workers")
+
+    def body(shard, carry_slice):
+        slots, keys, values, valid = map_fn(shard)
+        part = shuffle_aggregate_windowed(
+            slots, keys, values, cfg.axis_name, n_slots, cfg.num_buckets,
+            valid=valid, combine_fn=combine_fn)
+        return carry_slice + part
+
+    if backend == "vmap":
+        fn = jax.vmap(body, in_axes=(0, 0), out_axes=0,
+                      axis_name=cfg.axis_name)
+        return jax.jit(fn) if jit else fn
+    if backend == "shard_map":
+        if mesh is None:
+            raise ValueError("shard_map backend needs a mesh")
+        P = jax.sharding.PartitionSpec
+        sm = _make_shard_map(body, mesh,
+                             (P(cfg.axis_name), P(cfg.axis_name)),
+                             P(cfg.axis_name))
+        return jax.jit(sm) if jit else sm
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def init_window_carry(cfg: DeviceJobConfig, n_slots: int,
+                      n_channels: int = 2, backend: str = "vmap",
+                      dtype=jnp.float32) -> jax.Array:
+    """Zeroed carried window state in the scattered layout ``step`` expects."""
+    per_worker = (n_slots * cfg.num_buckets) // cfg.n_workers
+    if backend == "vmap":
+        return jnp.zeros((cfg.n_workers, per_worker, n_channels), dtype)
+    return jnp.zeros((n_slots * cfg.num_buckets, n_channels), dtype)
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _gather_flat_slot(flat: jax.Array, slot, num_buckets: int) -> jax.Array:
+    start = (slot * num_buckets,) + (0,) * (flat.ndim - 1)
+    return jax.lax.dynamic_slice(flat, start,
+                                 (num_buckets,) + flat.shape[1:])
+
+
+def read_window_slot(carry: jax.Array, slot: int, num_buckets: int):
+    """Gather one finalized window's dense (num_buckets, channels) aggregate
+    from the scattered carry.  Slices on device so only the window's rows —
+    not the whole carry — cross to the host."""
+    flat = carry.reshape((-1,) + carry.shape[2:]) if carry.ndim == 3 else carry
+    return np.asarray(_gather_flat_slot(flat, jnp.int32(slot), num_buckets))
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _clear_flat_slot(flat: jax.Array, slot, num_buckets: int) -> jax.Array:
+    zeros = jnp.zeros((num_buckets,) + flat.shape[1:], flat.dtype)
+    start = (slot * num_buckets,) + (0,) * (flat.ndim - 1)
+    return jax.lax.dynamic_update_slice(flat, zeros, start)
+
+
+def clear_window_slot(carry: jax.Array, slot: int,
+                      num_buckets: int) -> jax.Array:
+    """Zero a finalized window's slice so its ring slot can be reused."""
+    shape = carry.shape
+    flat = carry.reshape((-1,) + shape[2:]) if carry.ndim == 3 else carry
+    flat = _clear_flat_slot(flat, jnp.int32(slot), num_buckets)
+    return flat.reshape(shape)
 
 
 def wordcount_map_factory(num_buckets: int):

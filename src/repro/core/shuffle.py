@@ -73,7 +73,8 @@ def local_combine_dense(keys: jax.Array, values: jax.Array, num_buckets: int,
     (see kernels/hash_combine).  Output is 'born sorted' by bucket id.
     """
     if valid is not None:
-        values = jnp.where(valid, values, jnp.zeros_like(values))
+        vmask = valid.reshape((-1,) + (1,) * (values.ndim - 1))
+        values = jnp.where(vmask, values, jnp.zeros_like(values))
         keys = jnp.where(valid, keys, 0)
     seg = jax.ops.segment_sum(values, keys.astype(jnp.int32),
                               num_segments=num_buckets)
@@ -210,8 +211,32 @@ def shuffle_aggregate(keys: jax.Array, values: jax.Array, axis_name: str,
                                 tiled=True)
 
 
+def shuffle_aggregate_windowed(window_slots: jax.Array, keys: jax.Array,
+                               values: jax.Array, axis_name: str,
+                               n_slots: int, num_buckets: int,
+                               valid: jax.Array | None = None,
+                               combine_fn=None) -> jax.Array:
+    """Windowed aggregating shuffle for the streaming engine.
+
+    Records carry a *window slot* (a bounded ring index for an in-flight
+    window) in addition to the bucket key.  The (slot, bucket) pair flattens
+    into one dense id space of ``n_slots * num_buckets`` so the whole
+    micro-batch still folds through a single fused ``reduce_scatter`` — the
+    batch engine's combiner-in-the-collective, carried across batches.
+
+    Each device returns its contiguous slice of the flattened
+    ``(n_slots * num_buckets,) + values.shape[1:]`` update vector; the caller
+    adds it to the carried window state (same layout).  Requires
+    ``(n_slots * num_buckets) %`` axis size ``== 0``.
+    """
+    flat = window_slots.astype(jnp.int32) * num_buckets + keys.astype(jnp.int32)
+    return shuffle_aggregate(flat, values, axis_name, n_slots * num_buckets,
+                             valid=valid, combine_fn=combine_fn)
+
+
 def bucket_owner(num_buckets: int, n_partitions: int) -> np.ndarray:
     """Host helper: which partition owns each bucket id under the aggregating
-    shuffle's tiled scatter (contiguous ranges)."""
-    per = num_buckets // n_partitions
+    shuffle's tiled scatter (contiguous ranges over the padded bucket
+    space — see core.mapreduce's aggregate padding)."""
+    per = -(-num_buckets // n_partitions)
     return np.minimum(np.arange(num_buckets) // per, n_partitions - 1)

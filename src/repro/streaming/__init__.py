@@ -1,0 +1,39 @@
+"""Streaming micro-batch engine — continuous MapReduce over event streams.
+
+The paper's headline workload is *event-driven, real-time* processing of
+continuous logistics streams (GPS/IoT events through Kafka + Knative
+scale-to-zero), but the batch engine runs one-shot jobs: split a static
+input, map, shuffle, reduce, terminate.  This package closes that gap with a
+long-lived incremental dataflow:
+
+  * ``StreamSource`` — a replayable event-log reader (object-store segments
+    as the Kafka-topic stand-in) that chunks a continuous record stream into
+    bounded micro-batches;
+  * ``TumblingWindows`` / ``SlidingWindows`` — event-time window assignment;
+  * ``WindowTracker`` — watermark bookkeeping: in-flight windows live in a
+    bounded ring of carry slots, finalize in event-time order once the
+    watermark passes their end, and late events are counted and dropped;
+  * ``StreamingCoordinator`` — one map→shuffle→reduce round per micro-batch
+    through the device engine's incremental entry point
+    (``core.mapreduce.make_incremental_step``): per-window partial bucket
+    vectors are merged across batches by a single fused ``reduce_scatter``
+    per batch, and finalized windows are emitted to the object store.
+
+Backpressure: the source produces one CloudEvent per micro-batch on
+``TOPIC_STREAM_BATCH``; the coordinator consumes them as a consumer group and
+scales its mapper pool from the queue depth (consumer lag), the KEDA-style
+signal, instead of a fixed split count.
+"""
+
+from .coordinator import (StreamingConfig, StreamingCoordinator, StreamReport,
+                          window_output_key)
+from .source import MicroBatch, StreamSource, write_event_log
+from .state import LateEventError, WindowTracker
+from .windows import SlidingWindows, TumblingWindows, Window, WindowAssigner
+
+__all__ = [
+    "StreamingConfig", "StreamingCoordinator", "StreamReport",
+    "window_output_key", "MicroBatch", "StreamSource", "write_event_log",
+    "LateEventError", "WindowTracker", "SlidingWindows", "TumblingWindows",
+    "Window", "WindowAssigner",
+]

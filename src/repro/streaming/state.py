@@ -1,0 +1,106 @@
+"""Watermark bookkeeping and the in-flight window ring.
+
+The device engine carries per-window partial aggregates in a bounded ring of
+``n_slots`` carry slots (``core.mapreduce.init_window_carry``).  This module
+owns the host-side view of that ring: which window index lives in which slot,
+where the watermark stands, which windows are ripe for finalization, and
+which events are too late to admit.
+
+Watermark = max event time observed − allowed lateness.  A window finalizes
+once the watermark reaches its end; finalization happens in window-start
+order so downstream consumers see an ordered stream of closed windows.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .windows import WindowAssigner
+
+
+class LateEventError(Exception):
+    """An event arrived for a window that already finalized."""
+
+
+@dataclass
+class WindowTracker:
+    """Tracks in-flight windows, their ring slots, and the watermark."""
+
+    assigner: WindowAssigner
+    n_slots: int
+    allowed_lateness: float = 0.0
+    watermark: float = float("-inf")
+    active: dict[int, int] = field(default_factory=dict)   # window idx → slot
+    finalized: int = 0
+    late_dropped: int = 0
+    _free: list[int] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if self.n_slots < 1:
+            raise ValueError("need at least one window slot")
+        self._free = list(range(self.n_slots - 1, -1, -1))
+
+    # -- admission -----------------------------------------------------------
+    def is_late(self, window_index: int) -> bool:
+        """True when the window already closed (watermark passed its end)."""
+        return self.assigner.window(window_index).end <= self.watermark
+
+    def slot_for(self, window_index: int) -> int | None:
+        """Ring slot carrying this window, allocating on first sight.
+
+        Returns ``None`` for a late window (the event must be dropped — its
+        aggregate was already emitted).  Raises ``LateEventError`` if the ring
+        is full, which means ``n_slots`` is too small for the configured
+        window span + lateness: admitting the event would corrupt a
+        still-active window's carry slice.
+        """
+        if window_index in self.active:
+            return self.active[window_index]
+        if self.is_late(window_index):
+            self.late_dropped += 1
+            return None
+        if not self._free:
+            raise LateEventError(
+                f"window ring full ({self.n_slots} slots, "
+                f"{len(self.active)} active windows); raise n_slots or "
+                f"reduce allowed_lateness / window overlap")
+        slot = self._free.pop()
+        self.active[window_index] = slot
+        return slot
+
+    # -- watermark ------------------------------------------------------------
+    def observe(self, max_event_time: float) -> float:
+        """Advance the watermark (monotone) past a batch's max event time."""
+        wm = max_event_time - self.allowed_lateness
+        if wm > self.watermark:
+            self.watermark = wm
+        return self.watermark
+
+    def ripe(self) -> list[tuple[int, int]]:
+        """(window_index, slot) pairs whose end the watermark has passed,
+        in window-start order — the finalization schedule."""
+        done = [(w, s) for w, s in self.active.items()
+                if self.assigner.window(w).end <= self.watermark]
+        return sorted(done, key=lambda ws: self.assigner.window(ws[0]).start)
+
+    def release(self, window_index: int) -> None:
+        """Return a finalized window's slot to the ring."""
+        slot = self.active.pop(window_index)
+        self._free.append(slot)
+        self.finalized += 1
+
+    # -- checkpointing ---------------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-serializable snapshot for the coordinator's checkpoint."""
+        return {"watermark": self.watermark,
+                "active": {str(w): s for w, s in self.active.items()},
+                "free": list(self._free),
+                "finalized": self.finalized,
+                "late_dropped": self.late_dropped}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.watermark = float(d["watermark"])
+        self.active = {int(w): int(s) for w, s in d["active"].items()}
+        self._free = [int(s) for s in d["free"]]
+        self.finalized = int(d["finalized"])
+        self.late_dropped = int(d["late_dropped"])

@@ -1,0 +1,128 @@
+"""Minimal stand-in for the ``hypothesis`` API surface these tests use.
+
+The property tests prefer real hypothesis (declared in the ``test`` extra and
+installed in CI, where shrinking and edge-case search matter).  In
+environments without it — like the hermetic container the tier-1 suite runs
+in — this shim keeps the same tests executable as seeded random sampling:
+``@given`` draws ``max_examples`` pseudo-random examples per test from a
+deterministic RNG, so collection never fails and the invariants still get
+exercised.
+
+Only the strategies the suite actually uses are implemented: text, integers,
+floats, binary, lists, tuples, and ``.flatmap``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import string
+import struct
+from typing import Any, Callable
+
+
+class Strategy:
+    """A draw function ``rng -> value`` with hypothesis's combinator API."""
+
+    def __init__(self, draw: Callable[[random.Random], Any]) -> None:
+        self._draw = draw
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def flatmap(self, fn: "Callable[[Any], Strategy]") -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)).example(rng))
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 1 << 16) -> Strategy:
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0,
+               allow_nan: bool = False, width: int = 64) -> Strategy:
+        def draw(rng: random.Random) -> float:
+            x = rng.uniform(min_value, max_value)
+            if width == 32:  # round-trip through float32 like hypothesis does
+                x = struct.unpack("f", struct.pack("f", x))[0]
+                x = min(max(x, min_value), max_value)
+            return x
+        return Strategy(draw)
+
+    @staticmethod
+    def text(alphabet: str | None = None, min_size: int = 0,
+             max_size: int | None = None) -> Strategy:
+        chars = alphabet or (string.ascii_letters + string.digits +
+                             " .,;:!?\n\t'\"-_/\\()[]{}éüλ中")
+        hi = max_size if max_size is not None else min_size + 40
+        return Strategy(lambda rng: "".join(
+            rng.choice(chars) for _ in range(rng.randint(min_size, hi))))
+
+    @staticmethod
+    def binary(min_size: int = 0, max_size: int | None = None) -> Strategy:
+        hi = max_size if max_size is not None else min_size + 64
+        return Strategy(lambda rng: bytes(
+            rng.getrandbits(8) for _ in range(rng.randint(min_size, hi))))
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0,
+              max_size: int | None = None) -> Strategy:
+        hi = max_size if max_size is not None else min_size + 16
+        return Strategy(lambda rng: [
+            elements.example(rng)
+            for _ in range(rng.randint(min_size, hi))])
+
+    @staticmethod
+    def tuples(*strats: Strategy) -> Strategy:
+        return Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+
+class settings:
+    """Profile registry — only max_examples matters to the shim."""
+
+    _profiles: dict[str, dict[str, Any]] = {"default": {"max_examples": 25}}
+    _current: dict[str, Any] = _profiles["default"]
+
+    def __init__(self, **kwargs: Any) -> None:  # used as a decorator arg bag
+        self.kwargs = kwargs
+
+    def __call__(self, fn: Callable) -> Callable:
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, **kwargs: Any) -> None:
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name: str) -> None:
+        cls._current = cls._profiles[name]
+
+    @classmethod
+    def max_examples(cls) -> int:
+        return int(cls._current.get("max_examples") or 25)
+
+
+def given(*strats: Strategy) -> Callable:
+    """Run the test once per drawn example, deterministically seeded."""
+
+    def deco(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper(*args: Any, **kwargs: Any) -> None:
+            rng = random.Random(f"repro:{fn.__module__}.{fn.__qualname__}")
+            for _ in range(settings.max_examples()):
+                drawn = tuple(s.example(rng) for s in strats)
+                fn(*args, *drawn, **kwargs)
+        # hide the drawn parameters from pytest's fixture resolution,
+        # like hypothesis's own wrapper does
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco

@@ -1,0 +1,20 @@
+"""Shared test configuration: deterministic seeding for every test.
+
+Property tests draw from seeded strategies already; this fixture pins the
+global numpy/python RNGs too, so tests that use ``np.random`` directly are
+reproducible regardless of execution order.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+DEFAULT_SEED = 0
+
+
+@pytest.fixture(autouse=True)
+def _deterministic_seed():
+    random.seed(DEFAULT_SEED)
+    np.random.seed(DEFAULT_SEED)
+    yield

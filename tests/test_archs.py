@@ -15,6 +15,10 @@ from repro.runtime.train_step import init_train_state, make_train_step
 B, S = 2, 16
 KEY = jax.random.PRNGKey(0)
 
+# per-arch forward/train/decode sweeps are the bulk of the suite's runtime;
+# the fast CI gate skips them, the non-blocking slow job runs them
+pytestmark = pytest.mark.slow
+
 
 def _inputs(cfg, key=KEY, b=B, s=S):
     if cfg.input_mode == "embeddings":

@@ -4,7 +4,11 @@ vocab-built-by-MapReduce loop."""
 from collections import Counter
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic container: seeded-sampling shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (Coordinator, MemoryStore, MetadataStore,
                         make_wordcount_job, read_final_output)

@@ -28,6 +28,7 @@ def _batches(seed=0):
     return iter(ds)
 
 
+@pytest.mark.slow
 def test_preempt_restore_bitexact_continuation():
     opt = AdamW(lr=1e-3)
     store = MemoryStore()

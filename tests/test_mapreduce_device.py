@@ -3,7 +3,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic container: seeded-sampling shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.mapreduce import DeviceJobConfig, mapreduce, segment_reduce
 from repro.core.shuffle import (build_send_buffers, hash_partition,

@@ -1,13 +1,11 @@
 """Sharding planner rules (on the abstract production mesh) and true
 multi-device SPMD semantics (8 host devices in a subprocess)."""
 
-import json
 import os
 import subprocess
 import sys
 
 import jax
-import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro import configs
@@ -16,7 +14,12 @@ from repro.models import init_params
 from repro.optim import AdamW
 from repro.runtime.train_step import init_train_state
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
+try:
+    # jax >= 0.5: AbstractMesh(axis_sizes, axis_names)
+    MESH = AbstractMesh((16, 16), ("data", "model"))
+except TypeError:
+    # jax 0.4.x: AbstractMesh(((name, size), ...)) pair form
+    MESH = AbstractMesh((("data", 16), ("model", 16)))
 
 
 def _specs(arch):
@@ -90,8 +93,7 @@ keys = rng.integers(0, n_keys, (W, n_per)).astype(np.int32)
 vals = np.ones_like(keys)
 shard = np.stack([keys, vals], -1).reshape(W * n_per, 2)
 
-mesh = jax.make_mesh((8,), ("workers",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((8,), ("workers",))
 cfg = DeviceJobConfig(num_buckets=n_keys, n_workers=8, capacity=2048,
                       axis_name="workers")
 map_fn = wordcount_map_factory(n_keys)

@@ -2,7 +2,11 @@
 as hypothesis property tests."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic container: seeded-sampling shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.splitter import split_object, split_prefix
 from repro.core.storage import MemoryStore

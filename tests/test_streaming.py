@@ -1,0 +1,462 @@
+"""Streaming layer: window-assignment boundaries, watermark finalization
+order, ring-slot reuse, replayable sources, backpressure scaling, and
+agreement of incremental per-window aggregates with a one-shot batch run."""
+
+import json
+from collections import defaultdict
+
+import numpy as np
+import pytest
+
+from repro.core import (AutoscalerConfig, MemoryStore, MetadataStore,
+                        ServerlessPool)
+from repro.core.events import EventBus, TOPIC_STREAM_WINDOW
+from repro.core.mapreduce import (DeviceJobConfig, clear_window_slot,
+                                  init_window_carry, make_incremental_step,
+                                  read_window_slot)
+from repro.streaming import (LateEventError, SlidingWindows, StreamSource,
+                             StreamingConfig, StreamingCoordinator,
+                             TumblingWindows, WindowTracker,
+                             window_output_key, write_event_log)
+
+
+# ---------------------------------------------------------------------------
+# Window assignment
+# ---------------------------------------------------------------------------
+
+def test_tumbling_boundaries_half_open():
+    w = TumblingWindows(60.0)
+    # an event exactly on a window edge belongs to the window starting there
+    assert w.assign(0.0) == [0]
+    assert w.assign(59.999) == [0]
+    assert w.assign(60.0) == [1]
+    assert w.assign(-0.001) == [-1]
+    win = w.window(1)
+    assert (win.start, win.end) == (60.0, 120.0)
+    assert 60.0 in win and 120.0 not in win
+
+
+def test_sliding_membership_and_edges():
+    w = SlidingWindows(size=4.0, slide=2.0)
+    # ts=4.0 sits in [2,6) and [4,8) but NOT [0,4) — half-open edge
+    assert w.assign(4.0) == [1, 2]
+    assert w.assign(3.9) == [0, 1]
+    assert w.max_windows_per_event() == 2
+    for ts in np.linspace(0, 20, 101):
+        wins = w.assign(float(ts))
+        assert all(ts in w.window(i) for i in wins)
+        assert len(wins) <= w.max_windows_per_event()
+
+
+def test_sliding_nondivisible_fanout():
+    w = SlidingWindows(size=5.0, slide=2.0)
+    assert w.max_windows_per_event() == 3
+    assert len(w.assign(4.5)) == 3
+
+
+def test_sliding_rejects_gappy_config():
+    with pytest.raises(ValueError):
+        SlidingWindows(size=1.0, slide=2.0)
+
+
+# ---------------------------------------------------------------------------
+# Watermark + window ring
+# ---------------------------------------------------------------------------
+
+def test_watermark_finalization_order():
+    t = WindowTracker(TumblingWindows(10.0), n_slots=4)
+    # windows arrive out of order
+    for widx in (2, 0, 1):
+        assert t.slot_for(widx) is not None
+    t.observe(25.0)  # watermark passes windows 0 [0,10) and 1 [10,20)
+    ripe = t.ripe()
+    assert [w for w, _ in ripe] == [0, 1]  # start order, not arrival order
+    for w, _ in ripe:
+        t.release(w)
+    assert list(t.active) == [2]
+    t.observe(35.0)
+    assert [w for w, _ in t.ripe()] == [2]
+
+
+def test_late_events_dropped_after_finalization():
+    t = WindowTracker(TumblingWindows(10.0), n_slots=4, allowed_lateness=5.0)
+    assert t.slot_for(0) is not None
+    t.observe(12.0)                 # watermark 7 < 10: window 0 still open
+    assert not t.is_late(0)
+    t.observe(16.0)                 # watermark 11 >= 10: window 0 closes
+    for w, _ in t.ripe():
+        t.release(w)
+    assert t.slot_for(0) is None    # late event → dropped, counted
+    assert t.late_dropped == 1
+
+
+def test_slot_reuse_and_ring_overflow():
+    t = WindowTracker(TumblingWindows(10.0), n_slots=2)
+    s0 = t.slot_for(0)
+    t.slot_for(1)
+    with pytest.raises(LateEventError):
+        t.slot_for(2)               # ring full, window 2 not late
+    t.observe(10.0)
+    for w, _ in t.ripe():
+        t.release(w)
+    assert t.slot_for(2) == s0      # freed slot recycled
+
+
+# ---------------------------------------------------------------------------
+# Device-engine incremental fold
+# ---------------------------------------------------------------------------
+
+def test_incremental_step_matches_oracle_and_clear():
+    rng = np.random.default_rng(1)
+    cfg = DeviceJobConfig(num_buckets=8, n_workers=4)
+    n_slots = 4
+    step = make_incremental_step(cfg, n_slots)
+    carry = init_window_carry(cfg, n_slots)
+    want = np.zeros((n_slots, 8, 2), np.float32)
+    for _ in range(3):  # several batches fold into the same carry
+        rows = np.zeros((4, 16, 4), np.float32)
+        for w in range(4):
+            for i in range(16):
+                slot, key = rng.integers(0, n_slots), rng.integers(0, 8)
+                val = float(rng.integers(0, 10))
+                rows[w, i] = (slot, key, val, 1.0)
+                want[slot, key] += (val, 1.0)
+        carry = step(rows, carry)
+    for slot in range(n_slots):
+        got = read_window_slot(carry, slot, 8)
+        assert np.array_equal(got, want[slot])
+    carry = clear_window_slot(carry, 1, 8)
+    assert np.all(read_window_slot(carry, 1, 8) == 0)
+    assert np.array_equal(read_window_slot(carry, 0, 8), want[0])
+
+
+def test_invalid_rows_do_not_contribute():
+    cfg = DeviceJobConfig(num_buckets=4, n_workers=2)
+    step = make_incremental_step(cfg, 2)
+    carry = init_window_carry(cfg, 2)
+    rows = np.zeros((2, 4, 4), np.float32)
+    rows[0, 0] = (0, 1, 5.0, 1.0)
+    rows[1, 0] = (0, 0, 7.0, 0.0)   # invalid: must be ignored
+    carry = step(rows, carry)
+    agg = read_window_slot(carry, 0, 4)
+    assert agg[1, 0] == 5.0 and agg[1, 1] == 1.0
+    assert agg[0, 0] == 0.0 and agg[0, 1] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# StreamSource
+# ---------------------------------------------------------------------------
+
+def test_source_replay_is_deterministic_and_bounded():
+    store = MemoryStore()
+    events = [(float(i), i % 5, float(i)) for i in range(250)]
+    assert write_event_log(store, "s/log", events, segment_records=64) == 250
+    src = StreamSource(store=store, prefix="s/log", batch_records=32)
+    b1 = list(src.batches())
+    b2 = list(src.batches())        # replay: same batches, same order
+    assert [b.records for b in b1] == [b.records for b in b2]
+    assert all(len(b) <= 32 for b in b1)
+    assert sum(len(b) for b in b1) == 250
+    assert [b.index for b in b1] == list(range(len(b1)))
+    # resume skips processed records (record-addressed, not batch-addressed)
+    tail = list(src.batches(start_record=5 * 32))
+    assert [b.records for b in tail] == [b.records for b in b1[5:]]
+
+
+def test_event_log_appends_new_segments():
+    store = MemoryStore()
+    write_event_log(store, "s/log", [(0.0, "a", 1.0)])
+    write_event_log(store, "s/log", [(1.0, "b", 2.0)])
+    src = StreamSource(store=store, prefix="s/log", batch_records=10)
+    assert [k for _, k, _ in src.events()] == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# End to end: incremental == one-shot batch, bit for bit
+# ---------------------------------------------------------------------------
+
+def _synth_events(n=4000, n_keys=12, seed=3):
+    rng = np.random.default_rng(seed)
+    ts = np.sort(rng.uniform(0, 200.0, n))
+    keys = rng.integers(0, n_keys, n)
+    vals = rng.integers(0, 50, n).astype(float)  # integer-valued → exact fp32
+    return [(float(t), f"k{k}", float(v))
+            for t, k, v in zip(ts, keys, vals)]
+
+
+def _run(events, batch_records, aggregation="sum", job_id="j"):
+    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=50.0,
+                          batch_records=batch_records,
+                          aggregation=aggregation, job_id=job_id)
+    store = MemoryStore()
+    coord = StreamingCoordinator(store, MetadataStore(), cfg)
+    report = coord.run_stream(
+        StreamSource.from_records(events, batch_records=batch_records))
+    out = {}
+    for m in store.list_objects(f"stream-output/{job_id}/"):
+        win = m.key.rsplit("/", 1)[1]
+        out[win] = dict(json.loads(line)
+                        for line in store.get(m.key).splitlines())
+    return out, report
+
+
+@pytest.mark.parametrize("aggregation", ["count", "sum", "mean"])
+def test_incremental_matches_one_shot_batch(aggregation):
+    events = _synth_events()
+    # incremental: many small micro-batches; one-shot: a single batch
+    inc, rep_inc = _run(events, 256, aggregation, "inc")
+    one, rep_one = _run(events, len(events), aggregation, "one")
+    assert rep_one.batches == 1 and rep_inc.batches > 10
+    assert inc.keys() == one.keys()
+    for win in inc:
+        assert inc[win] == one[win], win   # bit-for-bit (ints exact in fp32)
+    # and both agree with a host-side oracle
+    oracle = defaultdict(lambda: defaultdict(list))
+    for ts, k, v in events:
+        oracle[int(ts // 50.0)][k].append(v)
+    assert len(inc) == len(oracle)
+    for widx, per_key in oracle.items():
+        win = f"window-{widx * 50.0:.3f}-{(widx + 1) * 50.0:.3f}"
+        for k, vs in per_key.items():
+            want = {"count": len(vs), "sum": sum(vs),
+                    "mean": sum(vs) / len(vs)}[aggregation]
+            assert inc[win][k] == pytest.approx(want, abs=1e-5)
+
+
+def test_sliding_windows_end_to_end():
+    events = _synth_events(n=1000)
+    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=50.0,
+                          window_slide=25.0, n_slots=8,
+                          batch_records=128, aggregation="count",
+                          job_id="slide")
+    store = MemoryStore()
+    coord = StreamingCoordinator(store, MetadataStore(), cfg)
+    report = coord.run_stream(
+        StreamSource.from_records(events, batch_records=128))
+    # every event lands in exactly two overlapping windows
+    assert report.records_expanded == 2 * report.records_in
+    oracle = defaultdict(int)
+    for ts, _k, _v in events:
+        for widx in SlidingWindows(50.0, 25.0).assign(ts):
+            oracle[widx] += 1
+    for widx, n in oracle.items():
+        key = window_output_key(cfg, cfg.assigner().window(widx))
+        got = dict(json.loads(line)
+                   for line in store.get(key).splitlines())
+        assert sum(got.values()) == n
+
+
+def test_watermark_emission_order_and_bus_events():
+    events = _synth_events(n=2000)
+    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=20.0,
+                          batch_records=100, job_id="order")
+    bus = EventBus()
+    coord = StreamingCoordinator(MemoryStore(), MetadataStore(), cfg, bus=bus)
+    coord.run_stream(StreamSource.from_records(events, batch_records=100))
+    recs = bus.poll("sub", TOPIC_STREAM_WINDOW, timeout=0.1, max_records=100)
+    per_part = defaultdict(list)
+    for r in recs:
+        per_part[r.partition].append(r.value.data["window_start"])
+    # per partition (Kafka's ordering unit) windows arrive in time order
+    assert all(starts == sorted(starts) for starts in per_part.values())
+    all_starts = sorted(s for ss in per_part.values() for s in ss)
+    assert all_starts == [i * 20.0 for i in range(len(all_starts))]
+
+
+def test_crash_resume_is_exact():
+    """A coordinator restarted mid-stream restores carry + watermark +
+    key dictionary from the checkpoint and produces bit-identical windows
+    to an uninterrupted run — including windows straddling the crash."""
+    events = _synth_events(n=1000, seed=9)
+
+    def make(store, meta):
+        cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=50.0,
+                              batch_records=100, aggregation="sum",
+                              job_id="crash")
+        return StreamingCoordinator(store, meta, cfg)
+
+    # uninterrupted reference run
+    ref_store = MemoryStore()
+    make(ref_store, MetadataStore()).run_stream(
+        StreamSource.from_records(events, batch_records=100))
+
+    # crashed run: first coordinator sees only the first 5 batches, then a
+    # fresh coordinator resumes over the full log
+    store, meta = MemoryStore(), MetadataStore()
+    make(store, meta).run_stream(
+        StreamSource.from_records(events[:500], batch_records=100),
+        flush=False)
+    report = make(store, meta).run_stream(
+        StreamSource.from_records(events, batch_records=100))
+    assert report.batches == 5            # only the unprocessed tail
+    assert report.max_lag <= 5            # no phantom lag from replayed triggers
+
+    ref = {m.key: ref_store.get(m.key)
+           for m in ref_store.list_objects("stream-output/crash/")}
+    got = {m.key: store.get(m.key)
+           for m in store.list_objects("stream-output/crash/")}
+    assert ref and got == ref             # bit-for-bit, every window
+
+
+def test_sparse_checkpoint_resume_replays_tail():
+    """checkpoint_interval > 1: a crash between checkpoints replays the
+    uncheckpointed tail from the replayable log and still converges to the
+    uninterrupted result."""
+    events = _synth_events(n=1000, seed=11)
+
+    def make(store, meta):
+        cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=50.0,
+                              batch_records=100, aggregation="sum",
+                              checkpoint_interval=3, job_id="sparse")
+        return StreamingCoordinator(store, meta, cfg)
+
+    ref_store = MemoryStore()
+    make(ref_store, MetadataStore()).run_stream(
+        StreamSource.from_records(events, batch_records=100))
+
+    store, meta = MemoryStore(), MetadataStore()
+    make(store, meta).run_stream(
+        StreamSource.from_records(events[:500], batch_records=100),
+        flush=False)                       # 5 batches, checkpoint at 3
+    report = make(store, meta).run_stream(
+        StreamSource.from_records(events, batch_records=100))
+    assert report.batches == 7             # batches 3..9 replayed/processed
+    ref = {m.key: ref_store.get(m.key)
+           for m in ref_store.list_objects("stream-output/sparse/")}
+    got = {m.key: store.get(m.key)
+           for m in store.list_objects("stream-output/sparse/")}
+    assert ref and got == ref
+
+
+def test_checkpointed_offset_resume():
+    events = _synth_events(n=600)
+    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=1e9,
+                          batch_records=100, job_id="resume")
+    store, meta = MemoryStore(), MetadataStore()
+    coord = StreamingCoordinator(store, meta, cfg)
+    src = StreamSource.from_records(events, batch_records=100)
+    coord.run_stream(src, flush=False)
+    assert coord.checkpointed_offset() == 600   # records, not batches
+    # a restarted coordinator consumes nothing new
+    coord2 = StreamingCoordinator(store, meta, cfg)
+    report = coord2.run_stream(src, announce=False, flush=False)
+    assert report.batches == 0
+
+
+def test_resume_over_grown_log_after_flush():
+    """A flushed run must not poison the checkpoint with the +inf
+    end-of-stream watermark, and growth past a partial final batch must not
+    shift chunk boundaries: every appended event still lands in a window."""
+    store, meta = MemoryStore(), MetadataStore()
+    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=10.0,
+                          batch_records=20, aggregation="count",
+                          job_id="grow")
+    # first run ends on a partial batch (50 % 20 != 0) and flushes
+    write_event_log(store, "g/log", [(float(i), "k", 1.0) for i in range(50)])
+    src = StreamSource(store=store, prefix="g/log", batch_records=20)
+    StreamingCoordinator(store, meta, cfg).run_stream(src)
+    # the log grows; a fresh coordinator resumes and must see every new event
+    write_event_log(store, "g/log",
+                    [(float(i), "k", 1.0) for i in range(50, 100)])
+    r2 = StreamingCoordinator(store, meta, cfg).run_stream(src)
+    assert r2.records_in == 50 and r2.late_dropped == 0
+    total = 0
+    for m in store.list_objects("stream-output/grow/"):
+        total += sum(json.loads(line)[1]
+                     for line in store.get(m.key).splitlines())
+    assert total == 100                      # no event lost or double-counted
+
+
+def test_oversized_source_batch_raises():
+    """A source chunked larger than the coordinator's batch_records must
+    fail loudly, not overflow the pre-sized device arrays."""
+    events = [(float(i), "k", 1.0) for i in range(50)]
+    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=100.0,
+                          batch_records=10, job_id="mismatch")
+    coord = StreamingCoordinator(MemoryStore(), MetadataStore(), cfg)
+    with pytest.raises(ValueError, match="batch_records"):
+        coord.run_stream(StreamSource.from_records(events, batch_records=50))
+
+
+def test_batch_spanning_many_windows_folds_mid_batch():
+    """A low-rate stream whose single micro-batch spans more windows than
+    the ring holds must fold+finalize mid-batch, not abort."""
+    # 300 events at 1 event/s, 10s tumbling windows → 30 windows in one batch
+    events = [(float(i), "k", 1.0) for i in range(300)]
+    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=10.0,
+                          n_slots=4, batch_records=300, job_id="span")
+    store = MemoryStore()
+    report = StreamingCoordinator(store, MetadataStore(), cfg).run_stream(
+        StreamSource.from_records(events, batch_records=300))
+    assert report.error is None and report.late_dropped == 0
+    totals = {}
+    for m in store.list_objects("stream-output/span/"):
+        for line in store.get(m.key).splitlines():
+            k, v = json.loads(line)
+            totals[m.key] = totals.get(m.key, 0) + v
+    assert len(totals) == 30 and all(v == 10 for v in totals.values())
+
+
+def test_reap_idle_respects_min_scale():
+    pool = ServerlessPool("s", AutoscalerConfig(min_scale=2,
+                                                scale_to_zero_grace=0.0))
+    pool.ensure_scale(4)
+    import time
+    time.sleep(0.01)
+    assert pool.reap_idle() == 2          # only down to the floor
+    assert pool.replicas() == 2
+
+
+def test_ring_too_small_for_window_span_rejected_at_config():
+    """A sliding config whose per-instant open-window count exceeds n_slots
+    must fail at validate(), not on the first event."""
+    with pytest.raises(ValueError, match="n_slots"):
+        StreamingConfig(num_buckets=16, n_workers=4, window_size=50.0,
+                        window_slide=5.0, n_slots=8).validate()
+    # same span fits with a big enough ring
+    StreamingConfig(num_buckets=16, n_workers=4, window_size=50.0,
+                    window_slide=5.0, n_slots=11).validate()
+
+
+def test_key_space_overflow_raises():
+    events = [(float(i), f"key-{i}", 1.0) for i in range(20)]
+    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=100.0,
+                          batch_records=10, job_id="ovf")
+    coord = StreamingCoordinator(MemoryStore(), MetadataStore(), cfg)
+    with pytest.raises(ValueError, match="num_buckets"):
+        coord.run_stream(StreamSource.from_records(events, batch_records=10))
+
+
+# ---------------------------------------------------------------------------
+# Backpressure / autoscaling
+# ---------------------------------------------------------------------------
+
+def test_backlog_scaling_math():
+    pool = ServerlessPool("s", AutoscalerConfig(max_scale=8, min_scale=0))
+    assert pool.desired_scale_from_backlog(0) == 0
+    assert pool.desired_scale_from_backlog(3) == 3
+    assert pool.desired_scale_from_backlog(100) == 8
+    assert pool.desired_scale_from_backlog(10, per_replica=4) == 3
+
+
+def test_ensure_scale_prewarms():
+    pool = ServerlessPool("s", AutoscalerConfig(max_scale=4))
+    assert pool.ensure_scale(3) == 3
+    assert pool.replicas() == 3
+    assert pool.cold_starts == 3
+    assert pool.ensure_scale(2) == 0        # never scales down
+    assert pool.ensure_scale(99) == 1       # clamped to max_scale
+    assert pool.replicas() == 4
+
+
+def test_stream_scales_pool_from_lag():
+    events = _synth_events(n=3000)
+    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=50.0,
+                          batch_records=100, job_id="lag")
+    coord = StreamingCoordinator(MemoryStore(), MetadataStore(), cfg)
+    report = coord.run_stream(
+        StreamSource.from_records(events, batch_records=100))
+    # 30 announced batches → lag well above pool max at the start
+    assert report.max_lag >= 10
+    assert report.scale_events >= 1
+    assert coord.pool_stats()["replicas"] == 4   # clamped to n_workers
