@@ -7,7 +7,7 @@
 
 from __future__ import annotations
 
-from .common import COLD_START_S, INPUT_SIZES, fmt_csv, run_paper_job
+from .common import INPUT_SIZES, fmt_csv, run_paper_job
 
 
 def run(print_rows=True) -> list[str]:

@@ -57,7 +57,7 @@ def run(print_rows=True) -> list[str]:
     kc = jnp.asarray(rng.normal(size=(4, 2, 16384, 128)), jnp.float32)
     vc = jnp.asarray(rng.normal(size=(4, 2, 16384, 128)), jnp.float32)
     lens = jnp.full((4,), 16000, jnp.int32)
-    f = jax.jit(lambda a, b, c, l: decode_ref(a, b, c, l))
+    f = jax.jit(lambda a, b, c, ln: decode_ref(a, b, c, ln))
     us = _time(f, qd, kc, vc, lens)
     rows.append(fmt_csv("kernels/flash_decode/b4_h8_s16k", us,
                         f"bytes_touched={2*4*2*16384*128*4}"))

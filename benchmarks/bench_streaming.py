@@ -1,13 +1,23 @@
 """Streaming engine: sustained records/sec and per-batch latency vs
-micro-batch size — the throughput/latency trade the micro-batch knob buys.
+micro-batch size, plus host vs on-device sliding-window fan-out.
 
 Small batches → low per-window emission delay but per-batch overhead
 (dispatch, watermark bookkeeping, one collective per batch) dominates; large
-batches amortize it toward the device engine's aggregate throughput.  Also
-reports the backpressure path: pool scale chosen from consumer lag.
+batches amortize it toward the device engine's aggregate throughput.  The
+fan-out comparison isolates the execution-plan layer's win: with
+slide = size/4 every record belongs to 4 windows, and the host baseline
+writes 4 numpy rows per event where the device path ships one row and
+replicates on-chip (broadcast + iota).
+
+Each run appends its numbers to ``BENCH_streaming.json`` at the repo root,
+so throughput is tracked as a trajectory across PRs instead of discarded.
 """
 
 from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
 
 import numpy as np
 
@@ -21,6 +31,9 @@ N_EVENTS = 60_000
 N_KEYS = 64
 EVENT_RATE = 200.0           # events per second of event time
 BATCH_SIZES = [256, 1024, 4096, 16384]
+SLIDING_BATCH = 4096
+WINDOW_SIZE = 30.0           # sliding comparison: slide = size/4 → fan-out 4
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_streaming.json"
 
 
 def synth_stream(n: int = N_EVENTS, seed: int = 0):
@@ -31,24 +44,42 @@ def synth_stream(n: int = N_EVENTS, seed: int = 0):
     return [(float(t), int(k), float(v)) for t, k, v in zip(ts, keys, vals)]
 
 
-def run_stream_once(events, batch_records: int):
+def run_stream_once(events, batch_records: int, *, slide: float | None = None,
+                    fanout: str = "device", n_slots: int = 8,
+                    job_id: str = "bench"):
     cfg = StreamingConfig(num_buckets=N_KEYS, n_workers=8,
-                          window_size=30.0, batch_records=batch_records,
-                          aggregation="sum",
-                          job_id=f"bench-{batch_records}")
+                          window_size=WINDOW_SIZE, window_slide=slide,
+                          n_slots=n_slots, batch_records=batch_records,
+                          aggregation="sum", fanout=fanout, job_id=job_id)
     coord = StreamingCoordinator(MemoryStore(), MetadataStore(), cfg)
     source = StreamSource.from_records(events, batch_records=batch_records)
     report = coord.run_stream(source)
     return report, coord
 
 
-def run(print_rows: bool = True) -> list[str]:
+def _append_trajectory(entry: dict) -> None:
+    """Append this run to the cross-PR trajectory file (best effort)."""
+    try:
+        data = json.loads(BENCH_PATH.read_text())
+    except (FileNotFoundError, json.JSONDecodeError):
+        data = {"schema": 1, "runs": []}
+    data["runs"].append(entry)
+    BENCH_PATH.write_text(json.dumps(data, indent=1) + "\n")
+
+
+def run(print_rows: bool = True, write_json: bool = True) -> list[str]:
     events = synth_stream()
     rows = []
+    entry: dict = {"unix_time": round(time.time(), 1),
+                   "n_events": N_EVENTS,
+                   "tumbling_records_per_sec": {},
+                   "sliding_fanout_records_per_sec": {}}
     for bs in BATCH_SIZES:
         # warm the jit cache so rows measure the steady state, not compiles
-        run_stream_once(events[: 2 * bs], bs)
-        report, coord = run_stream_once(events, bs)
+        run_stream_once(events[: 2 * bs], bs, job_id=f"warm-{bs}")
+        report, coord = run_stream_once(events, bs, job_id=f"bench-{bs}")
+        entry["tumbling_records_per_sec"][str(bs)] = \
+            round(report.records_per_sec)
         lat_us = report.mean_batch_latency * 1e6
         rows.append(fmt_csv(
             f"streaming/batch_{bs}", lat_us,
@@ -57,6 +88,25 @@ def run(print_rows: bool = True) -> list[str]:
             f"windows={report.windows_emitted};"
             f"max_lag={report.max_lag};"
             f"pool_replicas={coord.pool_stats()['replicas']}"))
+    # sliding windows, slide = size/4: host event×window expansion vs the
+    # plan layer's on-chip fan-out (records cross host→device once)
+    slide = WINDOW_SIZE / 4.0
+    for fanout in ("host", "device"):
+        run_stream_once(events[: 2 * SLIDING_BATCH], SLIDING_BATCH,
+                        slide=slide, fanout=fanout,
+                        job_id=f"warm-{fanout}")
+        report, _ = run_stream_once(events, SLIDING_BATCH, slide=slide,
+                                    fanout=fanout, job_id=f"slide-{fanout}")
+        entry["sliding_fanout_records_per_sec"][fanout] = \
+            round(report.records_per_sec)
+        rows.append(fmt_csv(
+            f"streaming/sliding_fanout_{fanout}",
+            report.mean_batch_latency * 1e6,
+            f"records_per_s={report.records_per_sec:.0f};"
+            f"expanded={report.records_expanded};"
+            f"windows={report.windows_emitted}"))
+    if write_json:
+        _append_trajectory(entry)
     if print_rows:
         for r in rows:
             print(r)

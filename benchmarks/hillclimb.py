@@ -16,7 +16,7 @@ from repro.launch.mesh import make_production_mesh
 from repro import configs
 from repro.models import SHAPES_BY_NAME
 
-from .roofline import (CHIPS, HBM_BW, LINK_BW, PEAK_FLOPS,
+from .roofline import (HBM_BW, LINK_BW, PEAK_FLOPS,
                        _attention_correction, _mamba_correction,
                        model_flops_per_device)
 
@@ -95,7 +95,9 @@ def main() -> None:
             d = t[k] / bt[k] - 1 if bt[k] else 0.0
             print(f"  {k:20s} {bt[k]:10.4f} → {t[k]:10.4f}  ({d:+.1%})")
         if "peak_gib" in out:
-            print(f"  peak_gib             {base['bytes_per_device']['peak_estimate']/2**30:10.2f} → {out['peak_gib']:10.2f}")
+            peak0 = base["bytes_per_device"]["peak_estimate"] / 2 ** 30
+            print(f"  peak_gib             {peak0:10.2f} → "
+                  f"{out['peak_gib']:10.2f}")
     else:
         print(json.dumps(out, indent=1))
     if args.save:

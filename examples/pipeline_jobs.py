@@ -46,8 +46,9 @@ def main() -> None:
               synth_corpus(60_000, vocab_words=500, seed=1).encode())
     coordinator = Coordinator(store, MetadataStore())
 
-    build_containers = lambda: print("[build] container images built "
-                                     "(stand-in for the packaging step)")
+    def build_containers():
+        print("[build] container images built "
+              "(stand-in for the packaging step)")
     build_containers()
 
     config1 = JobConfig(n_mappers=4, n_reducers=2)

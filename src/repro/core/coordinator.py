@@ -27,7 +27,7 @@ import time
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, Callable
+from typing import Callable
 
 from .autoscaler import AutoscalerConfig, ServerlessPool
 from .events import (EventBus, TOPIC_STATUS, status_event, trigger_event)

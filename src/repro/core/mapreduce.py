@@ -1,55 +1,39 @@
-"""Device-parallel MapReduce — the paper's pipeline on a TPU mesh.
+"""Device-parallel MapReduce — compatibility façade over ``repro.engine``.
 
 ``mapreduce()`` runs the full Coordinator workflow (split → map → combine →
 shuffle → reduce → finalize) as one SPMD program.  Workers are mesh devices;
-the Coordinator's synchronization is the collective schedule; spill traffic is
-ICI.  The host-side engine (`core.workers`) and this one implement the same
-semantics — ``tests/test_mapreduce.py`` holds them to the same answers.
+the Coordinator's synchronization is the collective schedule; spill traffic
+is ICI.  The host-side engine (`core.workers`) and this one implement the
+same semantics — ``tests/test_mapreduce.py`` holds them to the same answers.
 
-Two backends run identical worker code:
-
-  * ``backend="shard_map"`` — real SPMD over a mesh axis (production path,
-    multi-pod dry-run).
-  * ``backend="vmap"`` — the same collectives over a vmap axis, simulating W
-    workers on one device (CI path; this container has a single CPU device).
-
-Modes (see core.shuffle):
-
-  * ``mode="aggregate"`` — commutative/associative reduce (sum family):
-    local combine → ``reduce_scatter``.  The paper's combiner fused into the
-    collective.
-  * ``mode="group"`` — general reduce over each key's full value list:
-    fixed-capacity ``all_to_all`` + sort + segment reduce.
+Since the execution-plan refactor the engine proper lives in
+``repro.engine``: batch one-shot, streaming incremental, aggregate, and
+group modes are all lowerings of one ``ExecutionPlan.compile()``
+(``KeySpace`` × ``WindowSpec`` × ``ReduceSpec`` → vmap/shard_map backend).
+This module keeps the original call signatures and maps them onto plans;
+new call sites should build an ``ExecutionPlan`` directly — it also exposes
+hashed open key domains and on-device sliding-window fan-out, which this
+façade does not.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .shuffle import (shuffle_aggregate, shuffle_aggregate_windowed,
-                      shuffle_group)
+from ..engine.plan import (ExecutionPlan, KeySpace, ReduceSpec, WindowSpec,
+                           clear_window_slot_carry, gather_window_slot,
+                           streaming_record_map)
+from ..engine.stages import INT32_MAX, segment_reduce
 
-INT32_MAX = jnp.iinfo(jnp.int32).max
-
-# jax >= 0.5 exposes shard_map at top level with check_vma; older releases
-# (this container ships 0.4.x) keep it in experimental with check_rep
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-    _SM_CHECK_KW = "check_vma"
-else:  # pragma: no cover - exercised on jax 0.4.x only
-    from jax.experimental.shard_map import shard_map as _shard_map
-    _SM_CHECK_KW = "check_rep"
-
-
-def _make_shard_map(body, mesh, in_specs, out_specs):
-    return _shard_map(body, mesh=mesh, in_specs=in_specs,
-                      out_specs=out_specs, **{_SM_CHECK_KW: False})
+__all__ = [
+    "DeviceJobConfig", "mapreduce", "segment_reduce", "streaming_record_map",
+    "make_incremental_step", "init_window_carry", "read_window_slot",
+    "clear_window_slot", "wordcount_map_factory", "INT32_MAX",
+]
 
 
 @dataclass(frozen=True)
@@ -71,157 +55,49 @@ class DeviceJobConfig:
     run_combiner: bool = True
 
 
-# ---------------------------------------------------------------------------
-# Built-in segment reducers for grouping mode
-# ---------------------------------------------------------------------------
-
-def segment_reduce(kind: str, keys: jax.Array, values: jax.Array,
-                   starts: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Reduce a key-sorted, group-marked stream.
-
-    Returns dense (group_keys, group_values, group_valid) of the same length
-    as the input stream (padded with invalid groups) — static shapes, as TPU
-    requires.  ``kind`` ∈ {sum, max, min, count, mean}.
-    """
-    n = keys.shape[0]
-    valid = keys != INT32_MAX
-    seg = jnp.cumsum(starts) - 1
-    seg = jnp.where(valid, seg, n)  # park invalid records on overflow row
-    vshape = (n + 1,) + values.shape[1:]
-
-    if kind in ("sum", "mean", "count"):
-        sums = jax.ops.segment_sum(values, seg, num_segments=n + 1)
-        counts = jax.ops.segment_sum(jnp.ones((n,), values.dtype), seg,
-                                     num_segments=n + 1)
-        if kind == "sum":
-            out_v = sums
-        elif kind == "count":
-            out_v = counts.reshape((n + 1,) + (1,) * (values.ndim - 1)) \
-                if values.ndim > 1 else counts
-        else:
-            out_v = sums / jnp.maximum(
-                counts.reshape((-1,) + (1,) * (values.ndim - 1)), 1.0)
-    elif kind == "max":
-        out_v = jax.ops.segment_max(values, seg, num_segments=n + 1)
-    elif kind == "min":
-        out_v = jax.ops.segment_min(values, seg, num_segments=n + 1)
-    else:
-        raise ValueError(f"unknown segment reducer {kind!r}")
-
-    group_keys = jnp.full((n + 1,), -1, dtype=jnp.int32).at[seg].max(
-        jnp.where(valid, keys, -1))
-    group_valid = group_keys[:n] >= 0
-    out_v = out_v[:n]
-    out_v = jnp.where(
-        group_valid.reshape((-1,) + (1,) * (out_v.ndim - 1)),
-        out_v, jnp.zeros_like(out_v))
-    return group_keys[:n], out_v, group_valid
-
-
-# ---------------------------------------------------------------------------
-# The SPMD worker body — identical under shard_map and vmap
-# ---------------------------------------------------------------------------
-
-def _worker_body(shard, *, cfg: DeviceJobConfig, map_fn: Callable,
-                 mode: str, reduce_fn, combine_fn, finalize: bool):
-    keys, values, valid = map_fn(shard)
-    keys = keys.astype(jnp.int32)
-
-    if mode == "aggregate":
-        # pad the bucket space to a multiple of the axis size so the tiled
-        # reduce_scatter divides evenly; callers index ids < num_buckets and
-        # the pad rows stay zero
-        padded = -(-cfg.num_buckets // cfg.n_workers) * cfg.n_workers
-        part = shuffle_aggregate(keys, values, cfg.axis_name, padded,
-                                 valid=valid, combine_fn=combine_fn)
-        if finalize:
-            # Finalizer: concatenate every reducer's slice into one object —
-            # all_gather is the collective form of §III-A.5's stream-concat.
-            return jax.lax.all_gather(part, cfg.axis_name, tiled=True)
-        return part
-
-    if mode == "group":
-        if cfg.capacity <= 0:
-            raise ValueError("grouping mode needs a positive capacity")
-        out_k, out_v, starts, stats = shuffle_group(
-            keys, values, cfg.axis_name, cfg.n_workers, cfg.capacity,
-            valid=valid)
-        if isinstance(reduce_fn, str):
-            gk, gv, gvalid = segment_reduce(reduce_fn, out_k, out_v, starts)
-        else:
-            gk, gv, gvalid = reduce_fn(out_k, out_v, starts)
-        dropped = jax.lax.psum(stats.dropped, cfg.axis_name)
-        if finalize:
-            gather = partial(jax.lax.all_gather, axis_name=cfg.axis_name,
-                             tiled=True)
-            return gather(gk), gather(gv), gather(gvalid), dropped
-        return gk, gv, gvalid, dropped
-
-    raise ValueError(f"unknown mode {mode!r}")
+def _plan_from_config(cfg: DeviceJobConfig, mode: str, reduce_fn,
+                      combine_fn, window: WindowSpec | None = None,
+                      key_space: KeySpace | None = None) -> ExecutionPlan:
+    return ExecutionPlan(
+        key_space=key_space or KeySpace.dense(cfg.num_buckets),
+        reduce=ReduceSpec(mode=mode, reduce_fn=reduce_fn,
+                          combine_fn=combine_fn, capacity=cfg.capacity),
+        n_workers=cfg.n_workers, window=window, axis_name=cfg.axis_name)
 
 
 def mapreduce(map_fn: Callable, data, cfg: DeviceJobConfig, *,
               mode: str = "aggregate", reduce_fn: str | Callable = "sum",
               combine_fn: Callable | None = None, finalize: bool = True,
               backend: str = "vmap", mesh: jax.sharding.Mesh | None = None,
-              data_spec=None, jit: bool = True):
+              data_spec=None, jit: bool = True,
+              key_space: KeySpace | None = None):
     """Run a MapReduce job across ``cfg.n_workers`` SPMD workers.
 
     ``map_fn(shard) -> (keys, values, valid)`` is the user's map UDF over the
     worker's data shard (already split — the Splitter's output).  ``data`` has
     leading axis ``n_workers`` (vmap backend) or is a global array to be
     sharded over the mesh axis (shard_map backend).
+
+    Return shapes are unchanged from the pre-plan engine: the aggregate
+    bucket vector, or ``(group_keys, group_values, group_valid, dropped)``.
+    Pass ``key_space=KeySpace.hashed(...)`` (or build an ``ExecutionPlan``)
+    to open the key domain; collision accounting then comes from
+    ``ExecutionPlan.compile(...).run``'s ``ShuffleStats``.
     """
-    if not cfg.run_combiner and mode == "aggregate":
-        # without a combiner the aggregate path still works (segment-sum then
-        # reduce-scatter); the flag matters for the grouping path's volume
-        pass
-    body = partial(_worker_body, cfg=cfg, map_fn=map_fn, mode=mode,
-                   reduce_fn=reduce_fn, combine_fn=combine_fn,
-                   finalize=finalize)
-
-    if backend == "vmap":
-        # finalized outputs are all_gather/psum results — unbatched over the
-        # worker axis, so vmap returns a single copy (out_axes=None)
-        fn = jax.vmap(body, in_axes=0, out_axes=None if finalize else 0,
-                      axis_name=cfg.axis_name)
-        fn = jax.jit(fn) if jit else fn
-        return fn(data)
-
-    if backend == "shard_map":
-        if mesh is None:
-            raise ValueError("shard_map backend needs a mesh")
-        P = jax.sharding.PartitionSpec
-        in_spec = data_spec if data_spec is not None else P(cfg.axis_name)
-        if mode == "aggregate":
-            out_spec = P() if finalize else P(cfg.axis_name)
-        else:
-            gspec = P() if finalize else P(cfg.axis_name)
-            out_spec = (gspec, gspec, gspec, P())
-        # finalized outputs are all_gather/psum results — replicated by
-        # construction, which the static checker can't always prove
-        sm = _make_shard_map(body, mesh, (in_spec,), out_spec)
-        sm = jax.jit(sm) if jit else sm
-        return sm(data)
-
-    raise ValueError(f"unknown backend {backend!r}")
+    plan = _plan_from_config(cfg, mode, reduce_fn, combine_fn,
+                             key_space=key_space)
+    compiled = plan.compile(map_fn, backend=backend, mesh=mesh,
+                            data_spec=data_spec, finalize=finalize, jit=jit)
+    out, stats = compiled.run(data)
+    if mode == "aggregate":
+        return out
+    gk, gv, gvalid = out
+    return gk, gv, gvalid, stats.dropped
 
 
 # ---------------------------------------------------------------------------
 # Streaming: incremental windowed aggregation (one fused collective per batch)
 # ---------------------------------------------------------------------------
-
-def streaming_record_map(shard):
-    """Default map UDF for the streaming engine: shard is a (records, 4)
-    float32 array of [window_slot, key_id, value, valid] rows (the
-    StreamingCoordinator's wire format).  Emits (sum, count) value channels so
-    count / sum / mean all come out of one carried state."""
-    slots = shard[:, 0].astype(jnp.int32)
-    keys = shard[:, 1].astype(jnp.int32)
-    valid = shard[:, 3] > 0
-    values = jnp.stack([shard[:, 2], jnp.ones_like(shard[:, 2])], axis=-1)
-    return slots, keys, values, valid
-
 
 def make_incremental_step(cfg: DeviceJobConfig, n_slots: int, *,
                           map_fn: Callable = streaming_record_map,
@@ -237,32 +113,25 @@ def make_incremental_step(cfg: DeviceJobConfig, n_slots: int, *,
     (window_slot, bucket) space, exactly the layout ``psum_scatter`` emits.
     One call folds one micro-batch into the carry with a single fused
     reduce_scatter; no gather happens until a window finalizes
-    (``read_window_slot``).  Built once per stream so XLA compiles one program
-    for every batch.
+    (``read_window_slot``).  Built once per stream so XLA compiles one
+    program for every batch.
+
+    This façade keeps the host-fan-out wire format (``map_fn`` decodes
+    pre-expanded [slot, key, value, valid] rows).  The streaming
+    coordinator now compiles its plan directly and defaults to on-device
+    fan-out; use ``ExecutionPlan`` with ``WindowSpec(fanout_on_device=True)``
+    for that path.
     """
-    if (n_slots * cfg.num_buckets) % cfg.n_workers != 0:
-        raise ValueError("n_slots * num_buckets must divide by n_workers")
+    window = WindowSpec(size=0.0, n_slots=n_slots, fanout_on_device=False)
+    plan = _plan_from_config(cfg, "aggregate", "sum", combine_fn,
+                             window=window)
+    compiled = plan.compile(map_fn, backend=backend, mesh=mesh, jit=jit)
 
-    def body(shard, carry_slice):
-        slots, keys, values, valid = map_fn(shard)
-        part = shuffle_aggregate_windowed(
-            slots, keys, values, cfg.axis_name, n_slots, cfg.num_buckets,
-            valid=valid, combine_fn=combine_fn)
-        return carry_slice + part
+    def step(batch, carry):
+        new_carry, _stats = compiled.step(batch, carry)
+        return new_carry
 
-    if backend == "vmap":
-        fn = jax.vmap(body, in_axes=(0, 0), out_axes=0,
-                      axis_name=cfg.axis_name)
-        return jax.jit(fn) if jit else fn
-    if backend == "shard_map":
-        if mesh is None:
-            raise ValueError("shard_map backend needs a mesh")
-        P = jax.sharding.PartitionSpec
-        sm = _make_shard_map(body, mesh,
-                             (P(cfg.axis_name), P(cfg.axis_name)),
-                             P(cfg.axis_name))
-        return jax.jit(sm) if jit else sm
-    raise ValueError(f"unknown backend {backend!r}")
+    return step
 
 
 def init_window_carry(cfg: DeviceJobConfig, n_slots: int,
@@ -275,35 +144,17 @@ def init_window_carry(cfg: DeviceJobConfig, n_slots: int,
     return jnp.zeros((n_slots * cfg.num_buckets, n_channels), dtype)
 
 
-@partial(jax.jit, static_argnums=(2,))
-def _gather_flat_slot(flat: jax.Array, slot, num_buckets: int) -> jax.Array:
-    start = (slot * num_buckets,) + (0,) * (flat.ndim - 1)
-    return jax.lax.dynamic_slice(flat, start,
-                                 (num_buckets,) + flat.shape[1:])
-
-
 def read_window_slot(carry: jax.Array, slot: int, num_buckets: int):
     """Gather one finalized window's dense (num_buckets, channels) aggregate
     from the scattered carry.  Slices on device so only the window's rows —
     not the whole carry — cross to the host."""
-    flat = carry.reshape((-1,) + carry.shape[2:]) if carry.ndim == 3 else carry
-    return np.asarray(_gather_flat_slot(flat, jnp.int32(slot), num_buckets))
-
-
-@partial(jax.jit, static_argnums=(2,))
-def _clear_flat_slot(flat: jax.Array, slot, num_buckets: int) -> jax.Array:
-    zeros = jnp.zeros((num_buckets,) + flat.shape[1:], flat.dtype)
-    start = (slot * num_buckets,) + (0,) * (flat.ndim - 1)
-    return jax.lax.dynamic_update_slice(flat, zeros, start)
+    return gather_window_slot(carry, slot, num_buckets)
 
 
 def clear_window_slot(carry: jax.Array, slot: int,
                       num_buckets: int) -> jax.Array:
     """Zero a finalized window's slice so its ring slot can be reused."""
-    shape = carry.shape
-    flat = carry.reshape((-1,) + shape[2:]) if carry.ndim == 3 else carry
-    flat = _clear_flat_slot(flat, jnp.int32(slot), num_buckets)
-    return flat.reshape(shape)
+    return clear_window_slot_carry(carry, slot, num_buckets)
 
 
 def wordcount_map_factory(num_buckets: int):

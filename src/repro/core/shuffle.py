@@ -1,242 +1,21 @@
-"""Device-side shuffle — the paper's hash-partition + sorted-spill + merge,
-re-expressed on a TPU mesh (DESIGN.md §2/§4).
+"""Device-side shuffle — compatibility façade over ``repro.engine.stages``.
 
-The paper's shuffle writes hash-partitioned, key-sorted spill files through S3
-because FaaS workers share no fabric.  A pod shares ICI, so:
-
-  * partition ``hash(key) % R``        →  the same hash, on int32 key ids
-  * spill upload + reducer download    →  one ``jax.lax.all_to_all``
-  * sorted spill runs + k-way merge    →  ``jax.lax.sort`` of the concatenated
-                                          runs (XLA's sort is a bitonic
-                                          network — the TPU-shaped merge)
-  * combiner before spill              →  local bucket pre-reduction
-                                          (``kernels/hash_combine`` on MXU)
-
-Two execution modes, chosen by the reduce function's algebra:
-
-  * **aggregating** (commutative+associative reduce, e.g. wordcount):
-    records combine into a dense per-bucket vector locally, then a single
-    ``reduce_scatter`` both shuffles *and* reduces — the combiner fused into
-    the collective.  This is the fast path and the paper's combiner insight
-    taken to its limit.
-  * **grouping** (general reduce over the full value list): records are
-    exchanged with ``all_to_all`` into fixed-capacity per-partition buffers,
-    then key-sorted and segment-grouped.
-
-All functions are pure and usable inside ``jax.shard_map`` or single-device.
-Keys are int32 ids in ``[0, num_buckets)`` (the data layer maps raw keys to
-ids); values are float32/int32 arrays with leading axis = records.
+The paper's hash-partition + sorted-spill + merge, re-expressed on a TPU
+mesh, lives in the execution-plan layer now (``engine/stages.py``); this
+module keeps the original import surface so the host engine, kernels, and
+tests are untouched.  See ``engine.stages`` for the stage bodies and
+``engine.plan`` for how they compose into execution plans.
 """
 
-from __future__ import annotations
+from ..engine.stages import (INVALID, ShuffleStats, bucket_owner,
+                             build_send_buffers, device_hash, exchange,
+                             hash_partition, local_combine_dense,
+                             shuffle_aggregate, shuffle_aggregate_windowed,
+                             shuffle_group, sort_and_group)
 
-from dataclasses import dataclass
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-INVALID = jnp.int32(-1)
-
-
-def device_hash(keys: jax.Array) -> jax.Array:
-    """murmur3 finalizer over int32 keys — stable, well-mixed, vectorized.
-
-    The device analogue of the FNV-1a the host workers use on strings.
-    """
-    h = keys.astype(jnp.uint32)
-    h = h ^ (h >> 16)
-    h = h * jnp.uint32(0x85EBCA6B)
-    h = h ^ (h >> 13)
-    h = h * jnp.uint32(0xC2B2AE35)
-    h = h ^ (h >> 16)
-    return h
-
-
-def hash_partition(keys: jax.Array, n_partitions: int) -> jax.Array:
-    """``hash(key) % R`` → destination partition (reducer) per record."""
-    return (device_hash(keys) % jnp.uint32(n_partitions)).astype(jnp.int32)
-
-
-# ---------------------------------------------------------------------------
-# Local combine (the Mapper's sort+combiner, §III-A.3)
-# ---------------------------------------------------------------------------
-
-def local_combine_dense(keys: jax.Array, values: jax.Array, num_buckets: int,
-                        valid: jax.Array | None = None) -> jax.Array:
-    """Combine records into a dense per-bucket sum vector.
-
-    TPU adaptation of the sorted spill + combiner: instead of comparison
-    sorting, bucket-accumulate.  XLA lowers segment-sum as scatter-add; the
-    Pallas ``hash_combine`` kernel does the same with one-hot MXU matmuls
-    (see kernels/hash_combine).  Output is 'born sorted' by bucket id.
-    """
-    if valid is not None:
-        vmask = valid.reshape((-1,) + (1,) * (values.ndim - 1))
-        values = jnp.where(vmask, values, jnp.zeros_like(values))
-        keys = jnp.where(valid, keys, 0)
-    seg = jax.ops.segment_sum(values, keys.astype(jnp.int32),
-                              num_segments=num_buckets)
-    return seg
-
-
-def sort_and_group(keys: jax.Array, values: jax.Array,
-                   valid: jax.Array | None = None
-                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Key-sort records (invalid to the end) — the merged, grouped stream the
-    Reducer consumes.  Returns (sorted_keys, sorted_values, group_starts) where
-    ``group_starts[i]`` is 1 when a new key group begins at i."""
-    if valid is None:
-        valid = jnp.ones_like(keys, dtype=bool)
-    sort_keys = jnp.where(valid, keys, jnp.iinfo(jnp.int32).max)
-    order = jnp.argsort(sort_keys, stable=True)
-    sk = sort_keys[order]
-    sv = jnp.take(values, order, axis=0)
-    starts = jnp.concatenate([
-        jnp.ones((1,), dtype=jnp.int32),
-        (sk[1:] != sk[:-1]).astype(jnp.int32),
-    ])
-    starts = jnp.where(sk == jnp.iinfo(jnp.int32).max, 0, starts)
-    return sk, sv, starts
-
-
-# ---------------------------------------------------------------------------
-# The exchange (spill upload + download → all_to_all)
-# ---------------------------------------------------------------------------
-
-@dataclass(frozen=True)
-class ShuffleStats:
-    """Per-device accounting, the analogue of the paper's bytes_in/bytes_out."""
-
-    sent: jax.Array       # records sent (valid, pre-exchange)
-    dropped: jax.Array    # records dropped by capacity overflow
-
-
-def build_send_buffers(keys: jax.Array, values: jax.Array, n_partitions: int,
-                       capacity: int, valid: jax.Array | None = None
-                       ) -> tuple[jax.Array, jax.Array, jax.Array, ShuffleStats]:
-    """Pack records into fixed (n_partitions, capacity) send buffers.
-
-    The device analogue of writing one spill file per reducer: records are
-    sorted by destination partition (so each partition's slice is contiguous
-    — a 'file'), padded/truncated to ``capacity``.  Returns (send_keys,
-    send_values, send_valid, stats).
-    """
-    n = keys.shape[0]
-    if valid is None:
-        valid = jnp.ones((n,), dtype=bool)
-    dest = jnp.where(valid, hash_partition(keys, n_partitions),
-                     jnp.int32(n_partitions))  # invalid → virtual partition R
-    order = jnp.argsort(dest, stable=True)
-    d_sorted = dest[order]
-    k_sorted = keys[order]
-    v_sorted = jnp.take(values, order, axis=0)
-    # position of each record within its destination group
-    counts = jnp.bincount(d_sorted, length=n_partitions + 1)
-    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                               jnp.cumsum(counts)[:-1].astype(jnp.int32)])
-    pos_in_group = jnp.arange(n, dtype=jnp.int32) - offsets[d_sorted]
-    in_cap = (pos_in_group < capacity) & (d_sorted < n_partitions)
-    slot = jnp.where(in_cap, d_sorted * capacity + pos_in_group, n_partitions * capacity)
-
-    send_keys = jnp.full((n_partitions * capacity + 1,), INVALID, dtype=keys.dtype)
-    send_keys = send_keys.at[slot].set(jnp.where(in_cap, k_sorted, INVALID))
-    val_shape = (n_partitions * capacity + 1,) + values.shape[1:]
-    send_vals = jnp.zeros(val_shape, dtype=values.dtype)
-    send_vals = send_vals.at[slot].set(
-        jnp.where(in_cap.reshape((-1,) + (1,) * (values.ndim - 1)),
-                  v_sorted, jnp.zeros_like(v_sorted)))
-    send_valid = jnp.zeros((n_partitions * capacity + 1,), dtype=bool)
-    send_valid = send_valid.at[slot].set(in_cap)
-
-    sent = jnp.sum(counts[:n_partitions].astype(jnp.int32))
-    kept = jnp.sum(send_valid[:-1].astype(jnp.int32))
-    stats = ShuffleStats(sent=sent, dropped=sent - kept)
-    return (send_keys[:-1].reshape(n_partitions, capacity),
-            send_vals[:-1].reshape((n_partitions, capacity) + values.shape[1:]),
-            send_valid[:-1].reshape(n_partitions, capacity),
-            stats)
-
-
-def exchange(send_keys: jax.Array, send_values: jax.Array,
-             send_valid: jax.Array, axis_name: str
-             ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """The shuffle proper: one tiled all_to_all per tensor over the mesh axis.
-
-    Row p of the send buffer goes to device p; row q of the result came from
-    device q — i.e. every reducer receives one 'spill file' from every mapper,
-    in a single ICI collective instead of 2·M·R object-store transfers.
-    """
-    a2a = partial(jax.lax.all_to_all, axis_name=axis_name,
-                  split_axis=0, concat_axis=0, tiled=True)
-    return a2a(send_keys), a2a(send_values), a2a(send_valid)
-
-
-# ---------------------------------------------------------------------------
-# Whole-shuffle compositions (used by core.mapreduce inside shard_map)
-# ---------------------------------------------------------------------------
-
-def shuffle_group(keys: jax.Array, values: jax.Array, axis_name: str,
-                  n_partitions: int, capacity: int,
-                  valid: jax.Array | None = None
-                  ) -> tuple[jax.Array, jax.Array, jax.Array, ShuffleStats]:
-    """Grouping shuffle: exchange + merge.  Per device returns the key-sorted,
-    group-marked record stream for this device's partition."""
-    sk, sv, svalid, stats = build_send_buffers(keys, values, n_partitions,
-                                               capacity, valid)
-    rk, rv, rvalid = exchange(sk, sv, svalid, axis_name)
-    rk = rk.reshape(-1)
-    rv = rv.reshape((-1,) + rv.shape[2:])
-    rvalid = rvalid.reshape(-1)
-    out_k, out_v, starts = sort_and_group(rk, rv, rvalid)
-    return out_k, out_v, starts, stats
-
-
-def shuffle_aggregate(keys: jax.Array, values: jax.Array, axis_name: str,
-                      num_buckets: int, valid: jax.Array | None = None,
-                      combine_fn=None) -> jax.Array:
-    """Aggregating shuffle: local combine (the combiner) + reduce_scatter.
-
-    Each device returns its contiguous ``num_buckets / P`` slice of the fully
-    reduced bucket vector — hash-partitioned ownership, exactly the paper's
-    reducer assignment, fused into one collective.
-    ``combine_fn(keys, values, num_buckets, valid)`` defaults to the dense jnp
-    combiner; the Pallas kernel slots in through this hook.
-    """
-    combine_fn = combine_fn or local_combine_dense
-    local = combine_fn(keys, values, num_buckets, valid)
-    # reduce_scatter: sum over devices, scatter bucket ranges
-    return jax.lax.psum_scatter(local, axis_name, scatter_dimension=0,
-                                tiled=True)
-
-
-def shuffle_aggregate_windowed(window_slots: jax.Array, keys: jax.Array,
-                               values: jax.Array, axis_name: str,
-                               n_slots: int, num_buckets: int,
-                               valid: jax.Array | None = None,
-                               combine_fn=None) -> jax.Array:
-    """Windowed aggregating shuffle for the streaming engine.
-
-    Records carry a *window slot* (a bounded ring index for an in-flight
-    window) in addition to the bucket key.  The (slot, bucket) pair flattens
-    into one dense id space of ``n_slots * num_buckets`` so the whole
-    micro-batch still folds through a single fused ``reduce_scatter`` — the
-    batch engine's combiner-in-the-collective, carried across batches.
-
-    Each device returns its contiguous slice of the flattened
-    ``(n_slots * num_buckets,) + values.shape[1:]`` update vector; the caller
-    adds it to the carried window state (same layout).  Requires
-    ``(n_slots * num_buckets) %`` axis size ``== 0``.
-    """
-    flat = window_slots.astype(jnp.int32) * num_buckets + keys.astype(jnp.int32)
-    return shuffle_aggregate(flat, values, axis_name, n_slots * num_buckets,
-                             valid=valid, combine_fn=combine_fn)
-
-
-def bucket_owner(num_buckets: int, n_partitions: int) -> np.ndarray:
-    """Host helper: which partition owns each bucket id under the aggregating
-    shuffle's tiled scatter (contiguous ranges over the padded bucket
-    space — see core.mapreduce's aggregate padding)."""
-    per = -(-num_buckets // n_partitions)
-    return np.minimum(np.arange(num_buckets) // per, n_partitions - 1)
+__all__ = [
+    "INVALID", "ShuffleStats", "bucket_owner", "build_send_buffers",
+    "device_hash", "exchange", "hash_partition", "local_combine_dense",
+    "shuffle_aggregate", "shuffle_aggregate_windowed", "shuffle_group",
+    "sort_and_group",
+]

@@ -21,12 +21,12 @@ import heapq
 import io
 import json
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Iterable, Iterator
 
 from .job import JobConfig, load_udf
 from .metadata import MetadataStore, stage_done_counter, task_status_key
-from .splitter import ByteRange, fetch_split
+from .splitter import fetch_split
 from .storage import MultipartWriter, ObjectStore, parse_spill_key, spill_key
 
 

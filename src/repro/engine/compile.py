@@ -1,0 +1,75 @@
+"""Backend lowering: one SPMD stage body, two execution substrates.
+
+Every ``ExecutionPlan`` variant bottoms out here.  A *body* is a pure
+function over per-worker arrays that may call collectives (``psum``,
+``all_to_all``, ``psum_scatter``, ...) on ``axis_name``; ``lower`` turns it
+into an executable either by vmapping the worker axis (simulating W workers
+on one device — the CI path) or by shard_mapping it over a mesh axis (real
+SPMD, the production path).  Placement is written once, as PartitionSpecs;
+the vmap backend derives its in/out axes from them (``P(axis)`` → batched
+at axis 0, ``P()`` → replicated), so both backends share one spec language
+and the stage bodies in ``stages.py`` never mention a backend.
+
+This module also owns the JAX version shim: jax >= 0.5 exposes
+``jax.shard_map`` at top level with ``check_vma``; older releases (the
+container ships 0.4.x) keep it in ``jax.experimental`` with ``check_rep``.
+Callers (``core.mapreduce``, ``runtime.train_step``) must route through
+``make_shard_map`` instead of touching ``jax.shard_map`` directly — drop
+the shim here, and only here, when the toolchain moves to jax >= 0.5.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SM_CHECK_KW = "check_vma"
+else:  # pragma: no cover - exercised on jax 0.4.x only
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_CHECK_KW = "check_rep"
+
+
+def make_shard_map(body: Callable, mesh: jax.sharding.Mesh, in_specs,
+                   out_specs) -> Callable:
+    """Version-portable ``shard_map`` with the replication checker off —
+    finalized outputs are all_gather/psum results, replicated by
+    construction, which the static checker can't always prove."""
+    return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_SM_CHECK_KW: False})
+
+
+def _vmap_axes(specs: Any, axis_name: str):
+    """PartitionSpec (tree) → vmap axes: sharded on ``axis_name`` ↦ axis 0,
+    replicated ↦ None.  Nested tuples mirror multi-output bodies; a single
+    spec acts as a prefix over a pytree output (both backends broadcast)."""
+    if isinstance(specs, jax.sharding.PartitionSpec):
+        return 0 if axis_name in tuple(specs) else None
+    if isinstance(specs, (tuple, list)):
+        return tuple(_vmap_axes(s, axis_name) for s in specs)
+    raise TypeError(f"expected PartitionSpec or tuple thereof, got {specs!r}")
+
+
+def lower(body: Callable, *, axis_name: str, in_specs, out_specs,
+          backend: str = "vmap", mesh: jax.sharding.Mesh | None = None,
+          jit: bool = True) -> Callable:
+    """Lower an SPMD stage body to an executable for ``backend``.
+
+    ``in_specs`` is a tuple with one PartitionSpec per body argument (a spec
+    applies uniformly to a pytree argument); ``out_specs`` mirrors the body's
+    output structure.  ``backend="vmap"`` needs no mesh; ``"shard_map"``
+    shards/replicates per the same specs over ``mesh``.
+    """
+    if backend == "vmap":
+        fn = jax.vmap(body, in_axes=_vmap_axes(tuple(in_specs), axis_name),
+                      out_axes=_vmap_axes(out_specs, axis_name),
+                      axis_name=axis_name)
+    elif backend == "shard_map":
+        if mesh is None:
+            raise ValueError("shard_map backend needs a mesh")
+        fn = make_shard_map(body, mesh, tuple(in_specs), out_specs)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return jax.jit(fn) if jit else fn

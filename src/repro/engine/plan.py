@@ -1,0 +1,476 @@
+"""Execution plans — one declarative layer over batch and streaming.
+
+A MapReduce job on the device plane is a point in a small product space:
+
+    ``KeySpace``  ×  ``WindowSpec``  ×  ``ReduceSpec``  →  backend lowering
+
+``KeySpace`` says how raw keys become bucket ids (dense pre-assigned ids, or
+hashed open domains with exact collision accounting).  ``WindowSpec`` says
+whether records carry event-time windows and whether the sliding-window
+fan-out happens on-device (broadcast + iota in ``stages.window_fanout``) or
+was already done by the host.  ``ReduceSpec`` says how values reduce: the
+*aggregate* mode (commutative/associative — combiner fused into one
+``reduce_scatter``) or the *group* mode (arbitrary ``reduce_fn`` over each
+key's full value list via the fixed-capacity ``all_to_all``).
+
+``ExecutionPlan.compile`` lowers one plan to one of two backends
+(``vmap`` — simulated workers on one device, ``shard_map`` — a real mesh
+axis) and returns a compiled object: ``run`` for one-shot batch jobs, or
+``init_carry`` / ``step`` / ``read_slot`` / ``finalize_slot`` /
+``clear_slot`` for streaming.  Batch one-shot, streaming incremental,
+aggregate, and group are all lowerings of this one layer — there is no
+second engine.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import stages
+from .compile import lower
+from .stages import ShuffleStats
+
+P = jax.sharding.PartitionSpec
+
+INT32_MIN = -(2 ** 31)
+INT32_MAX = 2 ** 31 - 1
+
+#: host→device wire formats for streaming micro-batch rows
+HOST_FANOUT_ROW = 4     # [window_slot, key, value, valid]
+DEVICE_FANOUT_ROW = 5   # [last_window_index, n_windows, key, value, valid]
+
+
+# ---------------------------------------------------------------------------
+# The plan vocabulary
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class KeySpace:
+    """How raw map keys become bucket ids in ``[0, num_buckets)``.
+
+    ``dense`` — keys already are bucket ids (the data layer assigned them);
+    exceeding ``num_buckets`` is a caller error.  ``hashed`` — keys come
+    from an open, unbounded domain and are folded in with ``device_hash``;
+    distinct keys may collide, and with ``track_collisions`` the engine
+    counts them exactly per bucket (``ShuffleStats.bucket_collisions``), so
+    unbounded key sets degrade gracefully instead of raising.
+    """
+
+    num_buckets: int
+    mode: str = "dense"             # "dense" | "hashed"
+    track_collisions: bool = True
+
+    @classmethod
+    def dense(cls, num_buckets: int) -> "KeySpace":
+        return cls(num_buckets, "dense")
+
+    @classmethod
+    def hashed(cls, num_buckets: int,
+               track_collisions: bool = True) -> "KeySpace":
+        return cls(num_buckets, "hashed", track_collisions)
+
+    @property
+    def is_hashed(self) -> bool:
+        return self.mode == "hashed"
+
+    def padded(self, n_workers: int) -> int:
+        """Bucket space padded to a multiple of the axis size so the tiled
+        reduce_scatter divides evenly; pad rows stay zero."""
+        return -(-self.num_buckets // n_workers) * n_workers
+
+
+@dataclass(frozen=True)
+class WindowSpec:
+    """Event-time windowing as the device engine sees it.
+
+    ``slide=None`` means tumbling (fan-out 1).  ``fanout_on_device=True``
+    ships one 5-column row per record and replicates it into its
+    ``ceil(size/slide)`` windows on-chip; ``False`` is the legacy host
+    fan-out wire format (one 4-column row per record × window).  Ring slots
+    are addressed modularly — window ``w`` lives in slot ``w % n_slots`` on
+    host and device alike.  Window *indices* on the wire are caller-rebased
+    (the coordinator subtracts a per-batch base that is a multiple of
+    ``n_slots``), so they stay exact in float32 regardless of absolute
+    event time; the fan-out stage only ever sees the rebased values.
+    """
+
+    size: float
+    slide: float | None = None
+    n_slots: int = 2
+    fanout_on_device: bool = True
+
+    @property
+    def fanout(self) -> int:
+        """Max windows per record — the on-chip replication factor."""
+        if self.slide is None:
+            return 1
+        return math.ceil(self.size / self.slide)
+
+
+@dataclass(frozen=True)
+class ReduceSpec:
+    """How values reduce within a (window ×) key group.
+
+    ``aggregate`` — commutative/associative; ``combine_fn(keys, values,
+    num_buckets, valid)`` pre-reduces locally (dense jnp combiner by
+    default, the Pallas kernel slots in here) and one ``reduce_scatter``
+    finishes.  ``group`` — arbitrary ``reduce_fn`` (a segment-reducer kind
+    name or a ``(keys, values, starts) -> (gk, gv, gvalid)`` callable) over
+    each key's full, exchanged value list; ``capacity`` bounds the
+    per-partition record buffers (the spill-file size bound).
+    """
+
+    mode: str = "aggregate"         # "aggregate" | "group"
+    reduce_fn: str | Callable = "sum"
+    combine_fn: Callable | None = None
+    capacity: int = 0
+
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    """One device MapReduce job, declaratively.  ``compile()`` lowers it."""
+
+    key_space: KeySpace
+    reduce: ReduceSpec
+    n_workers: int
+    window: WindowSpec | None = None
+    axis_name: str = "workers"
+
+    def compile(self, map_fn: Callable | None = None, *,
+                backend: str = "vmap",
+                mesh: jax.sharding.Mesh | None = None,
+                data_spec=None, finalize: bool = True, jit: bool = True):
+        """Lower to an executable.  Batch plans (``window=None``) return a
+        ``CompiledBatchPlan``; windowed plans return a streaming plan with a
+        carry (``CompiledStreamAggregate`` or ``CompiledStreamGroup``)."""
+        if self.reduce.mode not in ("aggregate", "group"):
+            raise ValueError(f"unknown reduce mode {self.reduce.mode!r}")
+        if self.reduce.mode == "group" and self.reduce.capacity <= 0:
+            raise ValueError("grouping mode needs a positive capacity")
+        if self.window is None:
+            if map_fn is None:
+                raise ValueError("batch plans need a map_fn")
+            return CompiledBatchPlan(self, map_fn, backend, mesh, data_spec,
+                                     finalize, jit)
+        if self.window.fanout_on_device and self.window.size <= 0:
+            raise ValueError("on-device fan-out needs a positive window size")
+        if self.reduce.mode == "group":
+            if self.window.fanout_on_device is False:
+                raise ValueError("windowed group mode runs with on-device "
+                                 "fan-out only")
+            return CompiledStreamGroup(self, backend, mesh, jit)
+        return CompiledStreamAggregate(self, map_fn, backend, mesh, jit)
+
+
+def streaming_record_map(shard):
+    """Host-fan-out wire decode: shard is a (records, 4) float32 array of
+    [window_slot, key, value, valid] rows.  Emits (sum, count) value
+    channels so count / sum / mean all come out of one carried state."""
+    slots = shard[:, 0].astype(jnp.int32)
+    keys = shard[:, 1].astype(jnp.int32)
+    valid = shard[:, 3] > 0
+    values = jnp.stack([shard[:, 2], jnp.ones_like(shard[:, 2])], axis=-1)
+    return slots, keys, values, valid
+
+
+def _decode_device_rows(rows):
+    """Device-fan-out wire decode: (records, 5) float32 rows of
+    [last_window_index, n_windows, key, value, valid]."""
+    return (rows[:, 0].astype(jnp.int32), rows[:, 1].astype(jnp.int32),
+            rows[:, 2].astype(jnp.int32), rows[:, 3], rows[:, 4] > 0)
+
+
+# ---------------------------------------------------------------------------
+# Batch lowering (one-shot jobs)
+# ---------------------------------------------------------------------------
+
+def _batch_body(shard, *, plan: ExecutionPlan, map_fn, finalize: bool):
+    ks, rs = plan.key_space, plan.reduce
+    keys, values, valid = map_fn(shard)
+    raw = keys.astype(jnp.int32)
+    buckets = stages.bucketize(raw, ks.num_buckets, hashed=ks.is_hashed)
+    if ks.is_hashed and ks.track_collisions:
+        distinct = stages.distinct_keys_per_bucket(
+            raw, valid, plan.axis_name, plan.n_workers, ks.num_buckets)
+        collisions = jnp.maximum(distinct - 1, 0)
+    else:
+        collisions = None
+
+    if rs.mode == "aggregate":
+        part = stages.shuffle_aggregate(
+            buckets, values, plan.axis_name, ks.padded(plan.n_workers),
+            valid=valid, combine_fn=rs.combine_fn)
+        sent = jax.lax.psum(jnp.sum(valid.astype(jnp.int32)), plan.axis_name)
+        stats = ShuffleStats(sent, jnp.zeros((), jnp.int32), collisions)
+        if finalize:
+            # Finalizer: concatenate every reducer's slice into one object —
+            # all_gather is the collective form of §III-A.5's stream-concat.
+            return jax.lax.all_gather(part, plan.axis_name, tiled=True), stats
+        return part, stats
+
+    out_k, out_v, starts, xstats = stages.shuffle_group(
+        buckets, values, plan.axis_name, plan.n_workers, rs.capacity,
+        valid=valid)
+    gk, gv, gvalid = stages.apply_reduce_fn(rs.reduce_fn, out_k, out_v, starts)
+    stats = ShuffleStats(jax.lax.psum(xstats.sent, plan.axis_name),
+                         jax.lax.psum(xstats.dropped, plan.axis_name),
+                         collisions)
+    if finalize:
+        gather = partial(jax.lax.all_gather, axis_name=plan.axis_name,
+                         tiled=True)
+        return (gather(gk), gather(gv), gather(gvalid)), stats
+    return (gk, gv, gvalid), stats
+
+
+class CompiledBatchPlan:
+    """One-shot lowering: ``run(data) -> (result, ShuffleStats)``.
+
+    Aggregate result is the (padded) dense bucket vector; group result is
+    the ``(group_keys, group_values, group_valid)`` triple.  ``finalize``
+    gathers every reducer's slice into one replicated object.
+    """
+
+    def __init__(self, plan, map_fn, backend, mesh, data_spec, finalize, jit):
+        self.plan = plan
+        body = partial(_batch_body, plan=plan, map_fn=map_fn,
+                       finalize=finalize)
+        axis = plan.axis_name
+        in_spec = data_spec if data_spec is not None else P(axis)
+        rspec = P() if finalize else P(axis)
+        if plan.reduce.mode == "aggregate":
+            out_specs = (rspec, P())
+        else:
+            out_specs = ((rspec, rspec, rspec), P())
+        self._fn = lower(body, axis_name=axis, in_specs=(in_spec,),
+                         out_specs=out_specs, backend=backend, mesh=mesh,
+                         jit=jit)
+
+    def run(self, data):
+        return self._fn(data)
+
+
+# ---------------------------------------------------------------------------
+# Streaming lowerings (carried window state, one fused collective per batch)
+# ---------------------------------------------------------------------------
+
+def _stream_agg_host_body(shard, carry_slice, *, plan: ExecutionPlan, map_fn):
+    """Legacy wire format: the host already expanded records into (slot,
+    key) rows; the device folds one micro-batch into the carry."""
+    ks = plan.key_space
+    slots, keys, values, valid = map_fn(shard)
+    buckets = stages.bucketize(keys, ks.num_buckets, hashed=ks.is_hashed)
+    part = stages.shuffle_aggregate_windowed(
+        slots, buckets, values, plan.axis_name, plan.window.n_slots,
+        ks.num_buckets, valid=valid, combine_fn=plan.reduce.combine_fn)
+    folded = jax.lax.psum(jnp.sum(valid.astype(jnp.int32)), plan.axis_name)
+    stats = jnp.stack([jnp.zeros((), jnp.int32), folded,
+                       jnp.zeros((), jnp.int32)])
+    return carry_slice + part, stats
+
+
+def _stream_agg_device_body(rows, carry_slice, min_window, *,
+                            plan: ExecutionPlan):
+    """Fan-out-on-device wire format: one row per record; the stage
+    replicates it into its windows on-chip and folds in the same fused
+    reduce_scatter."""
+    ks, ws = plan.key_space, plan.window
+    last, nw, keys, vals, valid = _decode_device_rows(rows)
+    buckets = stages.bucketize(keys, ks.num_buckets, hashed=ks.is_hashed)
+    values = jnp.stack([vals, jnp.ones_like(vals)], axis=-1)
+    slots, keys_f, vals_f, live, late, expanded = stages.window_fanout(
+        last, nw, buckets, values, valid, ws.fanout, ws.n_slots, min_window)
+    part = stages.shuffle_aggregate_windowed(
+        slots, keys_f, vals_f, plan.axis_name, ws.n_slots, ks.num_buckets,
+        valid=live, combine_fn=plan.reduce.combine_fn)
+    stats = jnp.stack([jax.lax.psum(late, plan.axis_name),
+                       jax.lax.psum(expanded, plan.axis_name),
+                       jnp.zeros((), jnp.int32)])
+    return carry_slice + part, stats
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _gather_flat_slot(flat: jax.Array, slot, num_buckets: int) -> jax.Array:
+    start = (slot * num_buckets,) + (0,) * (flat.ndim - 1)
+    return jax.lax.dynamic_slice(flat, start,
+                                 (num_buckets,) + flat.shape[1:])
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _clear_flat_slot(flat: jax.Array, slot, num_buckets: int) -> jax.Array:
+    zeros = jnp.zeros((num_buckets,) + flat.shape[1:], flat.dtype)
+    start = (slot * num_buckets,) + (0,) * (flat.ndim - 1)
+    return jax.lax.dynamic_update_slice(flat, zeros, start)
+
+
+def gather_window_slot(carry: jax.Array, slot: int,
+                       num_buckets: int) -> np.ndarray:
+    """Gather one finalized window's dense (num_buckets, channels) aggregate
+    from the scattered carry.  Slices on device so only the window's rows —
+    not the whole carry — cross to the host."""
+    flat = carry.reshape((-1,) + carry.shape[2:]) if carry.ndim == 3 else carry
+    return np.asarray(_gather_flat_slot(flat, jnp.int32(slot), num_buckets))
+
+
+def clear_window_slot_carry(carry: jax.Array, slot: int,
+                            num_buckets: int) -> jax.Array:
+    """Zero a finalized window's slice so its ring slot can be reused."""
+    shape = carry.shape
+    flat = carry.reshape((-1,) + shape[2:]) if carry.ndim == 3 else carry
+    flat = _clear_flat_slot(flat, jnp.int32(slot), num_buckets)
+    return flat.reshape(shape)
+
+
+class CompiledStreamAggregate:
+    """Streaming aggregate lowering: a scattered dense carry over the
+    flattened (window_slot, bucket) id space, folded once per micro-batch
+    by a single fused ``reduce_scatter``.
+
+    ``step(rows, carry[, min_window]) -> (carry, stats)`` where stats is an
+    int32 ``[late_pairs, folded_pairs, 0]`` vector (device-fan-out plans
+    mask+count late (record, window) pairs on-chip).  Built once per stream
+    so XLA compiles one program for every batch.
+    """
+
+    def __init__(self, plan, map_fn, backend, mesh, jit):
+        ks, ws = plan.key_space, plan.window
+        if (ws.n_slots * ks.num_buckets) % plan.n_workers != 0:
+            raise ValueError("n_slots * num_buckets must divide by n_workers")
+        self.plan = plan
+        self.backend = backend
+        self._per_worker = (ws.n_slots * ks.num_buckets) // plan.n_workers
+        axis = plan.axis_name
+        if ws.fanout_on_device:
+            body = partial(_stream_agg_device_body, plan=plan)
+            in_specs = (P(axis), P(axis), P())
+        else:
+            body = partial(_stream_agg_host_body, plan=plan,
+                           map_fn=map_fn or streaming_record_map)
+            in_specs = (P(axis), P(axis))
+        self._step = lower(body, axis_name=axis, in_specs=in_specs,
+                           out_specs=(P(axis), P()), backend=backend,
+                           mesh=mesh, jit=jit)
+
+    def init_carry(self, n_channels: int = 2, dtype=jnp.float32) -> jax.Array:
+        """Zeroed carried window state in the scattered layout ``step``
+        expects."""
+        plan = self.plan
+        if self.backend == "vmap":
+            return jnp.zeros((plan.n_workers, self._per_worker, n_channels),
+                             dtype)
+        return jnp.zeros(
+            (plan.window.n_slots * plan.key_space.num_buckets, n_channels),
+            dtype)
+
+    def step(self, rows, carry, min_window: int | None = None):
+        if self.plan.window.fanout_on_device:
+            return self._step(rows, carry, jnp.int32(min_window))
+        return self._step(rows, carry)
+
+    def read_slot(self, carry, slot: int) -> np.ndarray:
+        return gather_window_slot(carry, slot, self.plan.key_space.num_buckets)
+
+    def clear_slot(self, carry, slot: int) -> jax.Array:
+        return clear_window_slot_carry(carry, slot,
+                                       self.plan.key_space.num_buckets)
+
+
+def _stream_group_body(rows, carry, min_window, *, plan: ExecutionPlan):
+    """Windowed group-mode fold: fan out on-chip, exchange records to their
+    (slot, bucket) owner over the flattened id space, append into the
+    fixed-capacity per-slot buffers carried across batches."""
+    ks, ws, rs = plan.key_space, plan.window, plan.reduce
+    last, nw, keys, vals, valid = _decode_device_rows(rows)
+    buckets = stages.bucketize(keys, ks.num_buckets, hashed=ks.is_hashed)
+    slots, keys_f, vals_f, live, late, expanded = stages.window_fanout(
+        last, nw, buckets, vals, valid, ws.fanout, ws.n_slots, min_window)
+    flat = slots * ks.num_buckets + keys_f
+    # per-destination capacity = all expanded records: the exchange cannot
+    # drop; only the per-slot window buffers bound capacity
+    sk, sv, sok, _ = stages.build_send_buffers(
+        flat, vals_f, plan.n_workers, flat.shape[0], valid=live)
+    rk, rv, rok = stages.exchange(sk, sv, sok, plan.axis_name)
+    kb, vb, counts, dropped = stages.append_window_records(
+        carry["keys"], carry["vals"], carry["counts"], rk.reshape(-1),
+        jnp.where(rok.reshape(-1), rv.reshape(-1), 0.0), rok.reshape(-1),
+        ws.n_slots, rs.capacity, ks.num_buckets)
+    stats = jnp.stack([jax.lax.psum(late, plan.axis_name),
+                       jax.lax.psum(expanded, plan.axis_name),
+                       jax.lax.psum(dropped, plan.axis_name)])
+    return {"keys": kb, "vals": vb, "counts": counts}, stats
+
+
+def _stream_group_finalize_body(carry, slot, *, plan: ExecutionPlan):
+    return stages.gather_window_group(carry["keys"], carry["vals"], slot,
+                                      plan.axis_name, plan.reduce.reduce_fn)
+
+
+class CompiledStreamGroup:
+    """Streaming group-mode lowering: the carry is a fixed-capacity record
+    buffer per (worker, window slot); arbitrary ``reduce_fn`` runs over each
+    key's full value list at window finalization (``finalize_slot``), the
+    same contract as batch group mode.
+    """
+
+    def __init__(self, plan, backend, mesh, jit):
+        self.plan = plan
+        self.backend = backend
+        axis = plan.axis_name
+        self._step = lower(partial(_stream_group_body, plan=plan),
+                           axis_name=axis,
+                           in_specs=(P(axis), P(axis), P()),
+                           out_specs=(P(axis), P()), backend=backend,
+                           mesh=mesh, jit=jit)
+        self._finalize = lower(partial(_stream_group_finalize_body, plan=plan),
+                               axis_name=axis, in_specs=(P(axis), P()),
+                               out_specs=(P(), P(), P()), backend=backend,
+                               mesh=mesh, jit=jit)
+        self._clear = jax.jit(partial(self._clear_impl,
+                                      n_slots=plan.window.n_slots))
+
+    def init_carry(self, dtype=jnp.float32):
+        """Zeroed per-(worker, window slot) record buffers.  Like the
+        aggregate carry, the layout follows the backend: vmap batches the
+        worker axis, shard_map shards the flattened (worker, slot) rows so
+        each worker's slice matches what the stage body sees under vmap."""
+        plan = self.plan
+        n_slots, cap = plan.window.n_slots, plan.reduce.capacity
+        if self.backend == "vmap":
+            shape = (plan.n_workers, n_slots, cap)
+        else:
+            shape = (plan.n_workers * n_slots, cap)
+        return {"keys": jnp.full(shape, stages.INVALID, jnp.int32),
+                "vals": jnp.zeros(shape, dtype),
+                "counts": jnp.zeros(shape[:-1], jnp.int32)}
+
+    def step(self, rows, carry, min_window: int | None = None):
+        return self._step(rows, carry, jnp.int32(min_window))
+
+    def finalize_slot(self, carry, slot: int):
+        """Gather + merge + reduce one window's buffered records across all
+        workers.  Returns dense (group_keys, group_values, group_valid)."""
+        gk, gv, gvalid = self._finalize(carry, jnp.int32(slot))
+        return np.asarray(gk), np.asarray(gv), np.asarray(gvalid)
+
+    @staticmethod
+    def _clear_impl(carry, slot, *, n_slots):
+        cap = carry["keys"].shape[-1]
+        keys = carry["keys"].reshape(-1, n_slots, cap)
+        vals = carry["vals"].reshape(-1, n_slots, cap)
+        counts = carry["counts"].reshape(-1, n_slots)
+        onehot = (jnp.arange(n_slots, dtype=jnp.int32) == slot)
+        keys = jnp.where(onehot[None, :, None], stages.INVALID, keys)
+        vals = jnp.where(onehot[None, :, None], 0.0, vals)
+        counts = jnp.where(onehot[None, :], 0, counts)
+        return {"keys": keys.reshape(carry["keys"].shape),
+                "vals": vals.reshape(carry["vals"].shape),
+                "counts": counts.reshape(carry["counts"].shape)}
+
+    def clear_slot(self, carry, slot: int):
+        return self._clear(carry, jnp.int32(slot))

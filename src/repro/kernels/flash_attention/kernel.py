@@ -96,8 +96,8 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(ki == n_kv_blocks - 1)
     def _finish():
-        l = l_scr[:, 0]
-        denom = jnp.where(l > 0.0, l, 1.0)
+        lsum = l_scr[:, 0]
+        denom = jnp.where(lsum > 0.0, lsum, 1.0)
         o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
 
 
@@ -201,8 +201,8 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 
     @pl.when(ki == n_kv_blocks - 1)
     def _finish():
-        l = l_scr[:, 0]
-        denom = jnp.where(l > 0.0, l, 1.0)
+        lsum = l_scr[:, 0]
+        denom = jnp.where(lsum > 0.0, lsum, 1.0)
         o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
 
 

@@ -11,7 +11,6 @@ the long_500k shape — no kernel needed, it is a handful of VPU ops.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from .kernel import selective_scan as _scan_pallas

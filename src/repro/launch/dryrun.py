@@ -30,9 +30,9 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.models import (ModelConfig, SHAPES_BY_NAME, ShapeConfig,
-                          decode_step, init_cache, init_params, loss_fn,
-                          prefill_forward, shapes_for)
+from repro.models import (ModelConfig, SHAPES_BY_NAME, decode_step,
+                          init_cache, init_params, prefill_forward,
+                          shapes_for)
 from repro.optim import AdamW
 from repro.runtime.train_step import init_train_state, make_train_step
 from repro.launch.mesh import make_production_mesh
@@ -164,7 +164,6 @@ def build_cell(arch: str, shape_name: str, mesh,
     param_specs = planner.param_specs(params_shape)
 
     if shape.kind == "prefill":
-        P = jax.sharding.PartitionSpec
         cache_shape = jax.eval_shape(partial(init_cache, cfg, b, s))
         cache_specs = planner.cache_specs(cache_shape, b)
         fn = partial(prefill_forward, cfg=cfg, max_len=s)
@@ -304,7 +303,6 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     """Compile the deploy variant (proof + memory) and, when ``account``,
     the unrolled accounting variant (exact FLOPs/collectives)."""
     mesh = make_production_mesh(multi_pod=multi_pod)
-    shape = SHAPES_BY_NAME[shape_name]
 
     _, compiled, t_lower, t_compile = _compile_variant(
         arch, shape_name, mesh, cfg, "deploy", opts)

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.models import decode_step, init_cache, init_params, prefill_forward
+from repro.models import decode_step, init_cache, init_params
 
 
 @dataclass

@@ -24,7 +24,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..models import ModelConfig, ShapeConfig
+from ..models import ModelConfig
 from .mesh import data_axes
 
 

@@ -119,10 +119,10 @@ def _traced_window_attention(q, k, v, *, window, softcap, scale, q_offset,
     init = (jnp.full((b, hq, sq), NEG_INF, jnp.float32),
             jnp.zeros((b, hq, sq), jnp.float32),
             jnp.zeros((b, hq, sq, d), jnp.float32))
-    (m, l, acc), _ = jax.lax.scan(
+    (m, lsum, acc), _ = jax.lax.scan(
         step, init, (jnp.moveaxis(kf, 2, 0), jnp.moveaxis(vf, 2, 0),
                      jnp.arange(n_chunks)))
-    denom = jnp.where(l > 0, l, 1.0)
+    denom = jnp.where(lsum > 0, lsum, 1.0)
     return (acc / denom[..., None]).astype(q.dtype)
 
 

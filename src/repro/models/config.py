@@ -7,7 +7,7 @@ One instance per assigned architecture lives in ``repro/configs/<id>.py``;
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax.numpy as jnp
 

@@ -147,10 +147,10 @@ def _ssd_chunked(x, dt, A, B, C, chunk: int):
     x: (b, l, h, p); dt: (b, l, h); A: (h,) negative; B, C: (b, l, n).
     Returns y: (b, l, h, p).
     """
-    b, l, h, p = x.shape
+    b, slen, h, p = x.shape
     n = B.shape[-1]
-    assert l % chunk == 0
-    nc = l // chunk
+    assert slen % chunk == 0
+    nc = slen // chunk
     x = x.reshape(b, nc, chunk, h, p)
     dt = dt.reshape(b, nc, chunk, h)
     B_ = B.reshape(b, nc, chunk, n)
@@ -189,7 +189,7 @@ def _ssd_chunked(x, dt, A, B, C, chunk: int):
     decay_from_start = jnp.exp(dA_cum)                      # (b, nc, c, h)
     y_off = jnp.einsum("bzin,bzih,bzhnp->bzihp",
                        C_, decay_from_start, states_in)
-    y = (y_diag + y_off).reshape(b, l, h, p)
+    y = (y_diag + y_off).reshape(b, slen, h, p)
     return y, s_final
 
 
@@ -199,7 +199,7 @@ def mamba2_forward(p: Params, x: jax.Array, cfg: ModelConfig,
     di, n = cfg.d_inner_, cfg.ssm_state
     hd = cfg.mamba_head_dim
     nh = di // hd
-    b, l, _ = x.shape
+    b, slen, _ = x.shape
     proj = linear(p["in_proj"], x, cd)
     xi, z, B, C, dt = jnp.split(
         proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
@@ -210,8 +210,8 @@ def mamba2_forward(p: Params, x: jax.Array, cfg: ModelConfig,
     xi, B, C = jnp.split(xbc, [di, di + n], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
     A = -jnp.exp(p["A_log"])
-    if l % chunk:
-        pad = chunk - l % chunk
+    if slen % chunk:
+        pad = chunk - slen % chunk
         xi_p = jnp.pad(xi, ((0, 0), (0, pad), (0, 0)))
         dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         B_p = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
@@ -221,9 +221,9 @@ def mamba2_forward(p: Params, x: jax.Array, cfg: ModelConfig,
     y, s_final = _ssd_chunked(
         xi_p.astype(jnp.float32).reshape(b, -1, nh, hd), dt_p, A,
         B_p.astype(jnp.float32), C_p.astype(jnp.float32), chunk)
-    y = y[:, :l] + xi.astype(jnp.float32).reshape(b, l, nh, hd) \
+    y = y[:, :slen] + xi.astype(jnp.float32).reshape(b, slen, nh, hd) \
         * p["D"][None, None, :, None]
-    y = y.reshape(b, l, di).astype(cd) * jax.nn.silu(z)
+    y = y.reshape(b, slen, di).astype(cd) * jax.nn.silu(z)
     y = rmsnorm(p["norm"], y, cfg.norm_eps)
     out = linear(p["out_proj"], y, cd)
     if return_state:

@@ -58,7 +58,6 @@ def _route(router_w: jax.Array, x_flat: jax.Array, cfg: ModelConfig):
     weights = weights / jnp.maximum(
         jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
     # Switch load-balance loss: E · Σ_e f_e · P_e
-    t = x_flat.shape[0]
     onehot = jax.nn.one_hot(experts[:, 0], cfg.n_experts)   # top-1 fraction
     f_e = jnp.mean(onehot, axis=0)
     p_e = jnp.mean(probs, axis=0)

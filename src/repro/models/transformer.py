@@ -13,7 +13,6 @@ axes, carried through the same scan.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax

@@ -17,12 +17,12 @@ Both distribution styles are provided:
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
+from ..engine.compile import make_shard_map
 from ..models import ModelConfig, init_params, loss_fn
 from ..optim import AdamW, TrainState, apply_updates
 from ..optim.compression import compressed_psum
@@ -62,12 +62,12 @@ def make_train_step(cfg: ModelConfig, opt: AdamW, microbatches: int = 1,
 
     def train_step(state: TrainState, batch: dict[str, jax.Array]):
         if microbatches == 1:
-            (l, metrics), grads = grad_fn(state.params, batch, cfg)
+            (_loss, metrics), grads = grad_fn(state.params, batch, cfg)
             grads = _constrain(grads)
         else:
             def body(carry, mb):
                 acc = carry
-                (l, metrics), g = grad_fn(state.params, mb, cfg)
+                (_loss, metrics), g = grad_fn(state.params, mb, cfg)
                 acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
                                    acc, g)
                 return _constrain(acc), metrics
@@ -98,7 +98,7 @@ def make_shardmap_train_step(cfg: ModelConfig, opt: AdamW,
     P = jax.sharding.PartitionSpec
 
     def worker(state: TrainState, batch):
-        (l, metrics), grads = grad_fn(state.params, batch, cfg)
+        (_loss, metrics), grads = grad_fn(state.params, batch, cfg)
         if compress_grads:
             grads = compressed_psum(grads, axis_name)   # int8 on the wire
         else:
@@ -111,11 +111,13 @@ def make_shardmap_train_step(cfg: ModelConfig, opt: AdamW,
             {**metrics, **stats}
 
     def train_step(state, batch):
-        fn = jax.shard_map(
-            worker, mesh=mesh,
-            in_specs=(jax.tree.map(lambda _: P(), state),
-                      jax.tree.map(lambda _: P(axis_name), batch)),
-            out_specs=(jax.tree.map(lambda _: P(), state), P()))
+        # routed through the engine's version shim: jax 0.4.x has no
+        # top-level jax.shard_map (see engine/compile.py)
+        fn = make_shard_map(
+            worker, mesh,
+            (jax.tree.map(lambda _: P(), state),
+             jax.tree.map(lambda _: P(axis_name), batch)),
+            (jax.tree.map(lambda _: P(), state), P()))
         return fn(state, batch)
 
     return train_step

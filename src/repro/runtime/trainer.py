@@ -23,8 +23,8 @@ restartable.  Mechanisms:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Iterator
+from dataclasses import dataclass
+from typing import Callable, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +32,7 @@ import numpy as np
 
 from ..checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from ..core.metadata import MetadataStore
-from ..core.storage import NoSuchKey, ObjectStore
+from ..core.storage import ObjectStore
 from ..models import ModelConfig
 from ..optim import AdamW, TrainState
 from .train_step import init_train_state, make_train_step

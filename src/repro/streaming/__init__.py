@@ -14,10 +14,14 @@ long-lived incremental dataflow:
     bounded ring of carry slots, finalize in event-time order once the
     watermark passes their end, and late events are counted and dropped;
   * ``StreamingCoordinator`` — one map→shuffle→reduce round per micro-batch
-    through the device engine's incremental entry point
-    (``core.mapreduce.make_incremental_step``): per-window partial bucket
-    vectors are merged across batches by a single fused ``reduce_scatter``
-    per batch, and finalized windows are emitted to the object store.
+    through a compiled ``repro.engine.ExecutionPlan``: records ship to the
+    device once and fan out into their windows on-chip; aggregate-mode
+    per-window partials merge across batches by a single fused
+    ``reduce_scatter`` per batch, group-mode records buffer per (worker,
+    window slot) and reduce with an arbitrary ``reduce_fn`` at
+    finalization, and finalized windows are emitted to the object store.
+    ``key_space="hashed"`` opens the key domain (collisions counted, not
+    fatal).
 
 Backpressure: the source produces one CloudEvent per micro-batch on
 ``TOPIC_STREAM_BATCH``; the coordinator consumes them as a consumer group and

@@ -2,15 +2,33 @@
 
 Where ``core.coordinator.Coordinator`` drives a one-shot job to DONE and
 terminates, this coordinator runs a long-lived loop: consume the next
-micro-batch trigger, fold the batch through the device engine's incremental
-entry point (one fused ``reduce_scatter`` folding (window, key) partial
-aggregates into the carried state), advance the watermark, and finalize +
-emit every window the watermark has passed.  The full streaming state —
-consumed record offset, carried window aggregates, watermark/ring tracker,
-key dictionary — checkpoints at batch boundaries (metadata + object store),
-so a restarted coordinator resumes exactly where it stopped, even over a
-log that has grown since — the streaming analogue of
-``Coordinator.resume_job``.
+micro-batch trigger, fold the batch through the execution-plan layer
+(``repro.engine``), advance the watermark, and finalize + emit every window
+the watermark has passed.  The full streaming state — consumed record
+offset, carried window aggregates, watermark/ring tracker, key dictionary —
+checkpoints at batch boundaries (metadata + object store), so a restarted
+coordinator resumes exactly where it stopped, even over a log that has
+grown since — the streaming analogue of ``Coordinator.resume_job``.
+
+The plan space (``StreamingConfig`` → ``ExecutionPlan``):
+
+  * ``fanout="device"`` (default) — a record crosses host→device **once**
+    as a ``[last_window_index, n_windows, key, value, valid]`` row and the
+    fan-out stage replicates it into its ``ceil(size/slide)`` overlapping
+    windows on-chip (broadcast + iota); late (record, window) pairs are
+    masked and counted against the watermark bound the host ships per fold.
+    ``fanout="host"`` keeps the PR 1 event × window numpy expansion as a
+    measured baseline (``benchmarks/bench_streaming.py`` compares the two).
+  * ``mode="aggregate"`` — count/sum/mean folded by one fused
+    ``reduce_scatter`` per batch into a dense scattered carry.
+    ``mode="group"`` — arbitrary ``reduce_fn`` over each (window, key)'s
+    full value list: records exchange over the flattened (slot, bucket) id
+    space into fixed-capacity per-slot buffers and reduce at finalization.
+  * ``key_space="dense"`` — keys get dense ids from a bounded dictionary
+    (raises past ``num_buckets``).  ``key_space="hashed"`` — open domains:
+    keys fold to a 24-bit raw id (exact in the float32 wire) and hash into
+    buckets on-device; colliding keys share a bucket and are reported
+    (``StreamReport.hash_collisions``) instead of raising.
 
 Scaling is backpressure-driven: the source announces each batch on
 ``TOPIC_STREAM_BATCH``; the coordinator is a consumer group on that topic and
@@ -21,29 +39,32 @@ concurrency.
 
 from __future__ import annotations
 
+import io
 import math
 import time
 import uuid
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Callable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.autoscaler import AutoscalerConfig, ServerlessPool
 from ..core.events import (EventBus, TOPIC_STREAM_BATCH, TOPIC_STREAM_WINDOW,
                            batch_event, window_event)
-from ..core.mapreduce import (DeviceJobConfig, clear_window_slot,
-                              init_window_carry, make_incremental_step,
-                              read_window_slot)
 from ..core.metadata import MetadataStore
 from ..core.storage import ObjectStore
 from ..core.workers import _encode_records
+from ..engine.plan import ExecutionPlan, KeySpace, ReduceSpec, WindowSpec
+from ..engine.stages import SEGMENT_REDUCE_KINDS as GROUP_KINDS
 from .source import MicroBatch, StreamSource
 from .state import LateEventError, WindowTracker
 from .windows import SlidingWindows, TumblingWindows, Window, WindowAssigner
 
 AGGREGATIONS = ("count", "sum", "mean")
+_RAW_KEY_BITS = 24      # raw hashed-key ids must survive the float32 wire
+_MAX_WIRE_INT = 1 << 24  # largest int the float32 wire carries exactly
 
 
 @dataclass
@@ -57,18 +78,41 @@ class StreamingConfig:
     allowed_lateness: float = 0.0   # watermark slack for out-of-order events
     n_slots: int = 8                # in-flight window ring capacity
     batch_records: int = 1024       # micro-batch size bound
-    aggregation: str = "count"      # count | sum | mean (per window × key)
+    aggregation: str = "count"      # aggregate mode: count | sum | mean
+    mode: str = "aggregate"         # aggregate | group (arbitrary reduce_fn)
+    reduce_fn: str | Callable = "sum"   # group mode: kind name or callable
+    capacity: int = 0               # group mode: per-(worker, slot) records
+    key_space: str = "dense"        # dense | hashed (open key domains)
+    fanout: str = "device"          # device | host (legacy baseline)
     checkpoint_interval: int = 1    # save restart state every N batches
     output_prefix: str = "stream-output/"
     backend: str = "vmap"
     job_id: str = field(default_factory=lambda: "s" + uuid.uuid4().hex[:11])
 
     def validate(self) -> None:
-        if self.aggregation not in AGGREGATIONS:
-            raise ValueError(f"aggregation must be one of {AGGREGATIONS}")
-        if self.num_buckets % self.n_workers != 0:
-            raise ValueError("num_buckets must divide by n_workers so window "
-                             "slices stay aligned to the scattered carry")
+        if self.mode not in ("aggregate", "group"):
+            raise ValueError("mode must be 'aggregate' or 'group'")
+        if self.mode == "aggregate":
+            if self.aggregation not in AGGREGATIONS:
+                raise ValueError(f"aggregation must be one of {AGGREGATIONS}")
+            if self.num_buckets % self.n_workers != 0:
+                raise ValueError(
+                    "num_buckets must divide by n_workers so window "
+                    "slices stay aligned to the scattered carry")
+        else:
+            if self.capacity < 1:
+                raise ValueError("group mode needs capacity >= 1 (records "
+                                 "buffered per worker per window slot)")
+            if self.fanout != "device":
+                raise ValueError("group mode runs with fanout='device'")
+            if isinstance(self.reduce_fn, str) \
+                    and self.reduce_fn not in GROUP_KINDS:
+                raise ValueError(f"reduce_fn must be a callable or one of "
+                                 f"{GROUP_KINDS}")
+        if self.key_space not in ("dense", "hashed"):
+            raise ValueError("key_space must be 'dense' or 'hashed'")
+        if self.fanout not in ("device", "host"):
+            raise ValueError("fanout must be 'device' or 'host'")
         if self.n_slots < 2:
             raise ValueError("need >= 2 window slots (one closing, one open)")
         if self.checkpoint_interval < 1:
@@ -91,6 +135,20 @@ class StreamingConfig:
             return TumblingWindows(self.window_size)
         return SlidingWindows(self.window_size, self.window_slide)
 
+    def plan(self) -> ExecutionPlan:
+        """The streaming job as a point in the execution-plan space."""
+        if self.key_space == "hashed":
+            keys = KeySpace.hashed(self.num_buckets, track_collisions=False)
+        else:
+            keys = KeySpace.dense(self.num_buckets)
+        window = WindowSpec(size=self.window_size, slide=self.window_slide,
+                            n_slots=self.n_slots,
+                            fanout_on_device=self.fanout == "device")
+        reduce = ReduceSpec(mode=self.mode, reduce_fn=self.reduce_fn,
+                            capacity=self.capacity)
+        return ExecutionPlan(key_space=keys, reduce=reduce,
+                             n_workers=self.n_workers, window=window)
+
 
 @dataclass
 class StreamReport:
@@ -107,6 +165,8 @@ class StreamReport:
     batch_latencies: list[float] = field(default_factory=list)
     max_lag: int = 0                # worst backpressure observed
     scale_events: int = 0           # pool resizes driven by lag
+    hash_collisions: int = 0        # hashed key space: keys sharing a bucket
+    capacity_dropped: int = 0       # group mode: window-buffer overflow
     error: str | None = None
 
     @property
@@ -132,6 +192,27 @@ def _carry_key(job_id: str) -> str:
     return f"jobs/{job_id}/stream/carry"
 
 
+def _fnv24(key: Any) -> int:
+    """Stable key → 24-bit raw id (FNV-1a 64, xor-folded).  Small enough to
+    ride the float32 wire exactly; the device hashes it into buckets."""
+    h = 0xCBF29CE484222325
+    for b in str(key).encode():
+        h = ((h ^ b) * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return (h ^ (h >> 24) ^ (h >> 48)) & ((1 << _RAW_KEY_BITS) - 1)
+
+
+def _murmur_bucket(raw: int, num_buckets: int) -> int:
+    """Host mirror of ``engine.stages.device_hash`` % num_buckets, for
+    labeling hashed buckets with the keys that landed in them."""
+    h = raw & 0xFFFFFFFF
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & 0xFFFFFFFF
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & 0xFFFFFFFF
+    h ^= h >> 16
+    return h % num_buckets
+
+
 class StreamingCoordinator:
     """Long-lived coordinator: micro-batch rounds over a continuous stream."""
 
@@ -149,60 +230,118 @@ class StreamingCoordinator:
         self.pool = ServerlessPool(
             "stream-mapper", autoscaler or AutoscalerConfig(
                 max_scale=cfg.n_workers))
-        self.dev_cfg = DeviceJobConfig(num_buckets=cfg.num_buckets,
-                                       n_workers=cfg.n_workers)
-        # compiled once per stream: the per-batch fold (fused reduce_scatter)
-        self._step = make_incremental_step(self.dev_cfg, cfg.n_slots,
-                                           backend=cfg.backend)
-        self._carry = init_window_carry(self.dev_cfg, cfg.n_slots,
-                                        backend=cfg.backend)
+        # compiled once per stream: the per-batch fold (fused reduce_scatter
+        # for aggregates, fan-out + exchange + buffer-append for group mode)
+        self._compiled = cfg.plan().compile(backend=cfg.backend)
+        self._carry = self._compiled.init_carry()
         self.tracker = WindowTracker(self.assigner, cfg.n_slots,
                                      cfg.allowed_lateness)
         # bounded key→bucket-id dictionary (the data layer's vocab analogue)
         self._key_ids: dict[Any, int] = {}
         self._id_keys: list[Any] = []
+        # hashed key space: raw-id cache + bucket → first-seen keys (labels)
+        self._raw_ids: dict[Any, int] = {}
+        self._bucket_keys: dict[int, list] = {}
+        self._hash_collisions = 0
+        self._window_base = 0           # per-batch wire-index rebase
         self._records_consumed = 0      # checkpointed resume point (records)
-        # fixed per-batch array capacity so XLA compiles a single program
-        fanout = self.assigner.max_windows_per_event()
-        cap = cfg.batch_records * fanout
+        # fixed per-batch array capacity so XLA compiles a single program:
+        # device fan-out ships one row per record; host fan-out pre-expands
+        if cfg.fanout == "device":
+            cap, self._row_width = cfg.batch_records, 5
+        else:
+            fanout = self.assigner.max_windows_per_event()
+            cap, self._row_width = cfg.batch_records * fanout, 4
         self._per_worker = -(-cap // cfg.n_workers)
 
     # -- key dictionary --------------------------------------------------------
     def _key_id(self, key: Any) -> int:
+        if self.cfg.key_space == "hashed":
+            return self._raw_key_id(key)
         kid = self._key_ids.get(key)
         if kid is None:
             kid = len(self._id_keys)
             if kid >= self.cfg.num_buckets:
                 raise ValueError(
                     f"distinct key count exceeded num_buckets="
-                    f"{self.cfg.num_buckets}; raise it (keys seen: {kid})")
+                    f"{self.cfg.num_buckets}; raise it (keys seen: {kid}) "
+                    f"or open the domain with key_space='hashed'")
             self._key_ids[key] = kid
             self._id_keys.append(key)
         return kid
 
+    def _raw_key_id(self, key: Any) -> int:
+        """Open domain: fold the key to its raw wire id, remember which keys
+        landed in which bucket so emissions stay labeled and collisions are
+        counted instead of raising."""
+        raw = self._raw_ids.get(key)
+        if raw is None:
+            raw = _fnv24(key)
+            self._raw_ids[key] = raw
+            seen = self._bucket_keys.setdefault(
+                _murmur_bucket(raw, self.cfg.num_buckets), [])
+            if seen and key not in seen:
+                self._hash_collisions += 1
+            if key not in seen:
+                seen.append(key)
+        return raw
+
+    def _label(self, kid: int) -> str:
+        """Output key for bucket/key id ``kid``."""
+        if self.cfg.key_space == "dense":
+            return str(self._id_keys[kid])
+        seen = self._bucket_keys.get(kid)
+        if not seen:
+            return f"bucket-{kid}"
+        if len(seen) == 1:
+            return str(seen[0])
+        return f"bucket-{kid}[{'|'.join(sorted(str(k) for k in seen))}]"
+
     # -- batch ingestion -------------------------------------------------------
-    def _fold(self, rows: np.ndarray) -> None:
-        """Fold admitted [window_slot, key_id, value, valid] rows into the
-        carried state through the device step — inside the serverless pool
-        so scale-to-zero accounting matches the batch engine's."""
+    def _fold_device(self, rows: np.ndarray, report: StreamReport) -> None:
+        """Fold one-row-per-record [last_window, n_windows, key, value,
+        valid] rows through the plan's step; the device fans out, masks late
+        pairs against the watermark bound, and returns the accounting.
+        Window indices on the wire are rebased by the per-batch
+        ``_window_base`` (a multiple of ``n_slots``, so modular slots are
+        unchanged) to stay exact in float32 at any absolute event time."""
+        data = rows.reshape(self.cfg.n_workers, self._per_worker, 5)
+        bound = self.tracker.min_admissible() - self._window_base
+        bound = max(min(bound, 2 ** 31 - 1), -(2 ** 31))
+        self._carry, stats = self.pool.submit(
+            self._compiled.step, data, self._carry, bound)
+        late, expanded, dropped = (int(x) for x in np.asarray(stats))
+        self.tracker.note_late(late)
+        report.records_expanded += expanded
+        report.capacity_dropped += dropped
+
+    def _fold_host(self, rows: np.ndarray) -> None:
+        """Legacy host-fan-out fold: [window_slot, key, value, valid] rows,
+        already expanded event × window on the host."""
         data = rows.reshape(self.cfg.n_workers, self._per_worker, 4)
-        self._carry = self.pool.submit(self._step, data, self._carry)
+        self._carry, _ = self.pool.submit(self._compiled.step, data,
+                                          self._carry)
 
     # -- window finalization --------------------------------------------------
     def _emit_window(self, window_index: int, slot: int) -> None:
         cfg = self.cfg
         window = self.assigner.window(window_index)
-        agg = read_window_slot(self._carry, slot, cfg.num_buckets)
-        sums, counts = agg[:, 0], agg[:, 1]
         records: list[tuple[str, Any]] = []
-        for kid in np.nonzero(counts > 0)[0]:
-            if cfg.aggregation == "count":
-                val: Any = int(counts[kid])
-            elif cfg.aggregation == "sum":
-                val = float(sums[kid])
-            else:
-                val = float(sums[kid] / counts[kid])
-            records.append((str(self._id_keys[kid]), val))
+        if cfg.mode == "aggregate":
+            agg = self._compiled.read_slot(self._carry, slot)
+            sums, counts = agg[:, 0], agg[:, 1]
+            for kid in np.nonzero(counts > 0)[0]:
+                if cfg.aggregation == "count":
+                    val: Any = int(counts[kid])
+                elif cfg.aggregation == "sum":
+                    val = float(sums[kid])
+                else:
+                    val = float(sums[kid] / counts[kid])
+                records.append((self._label(int(kid)), val))
+        else:
+            gk, gv, gvalid = self._compiled.finalize_slot(self._carry, slot)
+            records = [(self._label(int(k)), float(v))
+                       for k, v, ok in zip(gk, gv, gvalid) if ok]
         records.sort(key=lambda kv: kv[0])
         out_key = window_output_key(cfg, window)
         self.store.put(out_key, _encode_records(records))
@@ -210,7 +349,7 @@ class StreamingCoordinator:
                          window_event(cfg.job_id, window.start, window.end,
                                       len(records), out_key),
                          key=f"{cfg.job_id}/{window.start}")
-        self._carry = clear_window_slot(self._carry, slot, cfg.num_buckets)
+        self._carry = self._compiled.clear_slot(self._carry, slot)
         self.tracker.release(window_index)
 
     def _finalize_ripe(self, report: StreamReport) -> None:
@@ -220,21 +359,27 @@ class StreamingCoordinator:
 
     # -- checkpoint / restore --------------------------------------------------
     def _save_state(self) -> None:
-        """Persist the full streaming state at a batch boundary: carry bytes
-        to the object store, tracker + key dictionary + the consumed *record*
-        offset to the metadata store.  Record addressing (not batch indices)
-        keeps resume correct when the log grows past a previously-partial
-        final batch.  A restarted coordinator re-folds at most the batches
-        since the last checkpoint; window emissions are idempotent (same
-        carry → same bytes), keeping restart effectively exactly-once."""
-        carry = np.asarray(self._carry)
-        self.store.put(_carry_key(self.cfg.job_id), carry.tobytes())
+        """Persist the full streaming state at a batch boundary: carry
+        leaves to the object store, tracker + key dictionary + the consumed
+        *record* offset to the metadata store.  Record addressing (not batch
+        indices) keeps resume correct when the log grows past a
+        previously-partial final batch.  A restarted coordinator re-folds at
+        most the batches since the last checkpoint; window emissions are
+        idempotent (same carry → same bytes), keeping restart effectively
+        exactly-once."""
+        leaves = [np.asarray(leaf)
+                  for leaf in jax.tree_util.tree_leaves(self._carry)]
+        buf = io.BytesIO()
+        np.savez(buf, **{f"leaf{i}": leaf for i, leaf in enumerate(leaves)})
+        self.store.put(_carry_key(self.cfg.job_id), buf.getvalue())
         self.meta.set(_state_key(self.cfg.job_id), {
             "offset": self._records_consumed,
-            "carry_shape": list(carry.shape),
-            "carry_dtype": str(carry.dtype),
+            "carry_shapes": [list(leaf.shape) for leaf in leaves],
             "tracker": self.tracker.state_dict(),
             "keys": list(self._id_keys),
+            "bucket_keys": [[kid, keys]
+                            for kid, keys in self._bucket_keys.items()],
+            "hash_collisions": self._hash_collisions,
         })
 
     def _restore_state(self) -> int:
@@ -244,18 +389,31 @@ class StreamingCoordinator:
         if state is None:
             self._records_consumed = 0
             return 0
-        shape = tuple(state["carry_shape"])
-        if shape != tuple(self._carry.shape):
+        if "carry_shapes" not in state:
             raise ValueError(
-                f"checkpointed carry shape {shape} does not match this "
-                f"coordinator's {tuple(self._carry.shape)}; the streaming "
-                f"config changed under job {self.cfg.job_id}")
+                f"checkpoint for job {self.cfg.job_id} predates the "
+                f"execution-plan carry format (PR 2); restart the stream "
+                f"under a fresh job_id or replay it from the log")
+        leaves, treedef = jax.tree_util.tree_flatten(self._carry)
+        shapes = [tuple(s) for s in state["carry_shapes"]]
+        if shapes != [leaf.shape for leaf in leaves]:
+            raise ValueError(
+                f"checkpointed carry shapes {shapes} do not match this "
+                f"coordinator's {[leaf.shape for leaf in leaves]}; the "
+                f"streaming config changed under job {self.cfg.job_id}")
         blob = self.store.get(_carry_key(self.cfg.job_id))
-        carry = np.frombuffer(blob, dtype=np.dtype(state["carry_dtype"]))
-        self._carry = jnp.asarray(carry.reshape(shape))
+        with np.load(io.BytesIO(blob)) as loaded:
+            restored = [jnp.asarray(loaded[f"leaf{i}"])
+                        for i in range(len(leaves))]
+        self._carry = jax.tree_util.tree_unflatten(treedef, restored)
         self.tracker.load_state_dict(state["tracker"])
         self._id_keys = list(state["keys"])
         self._key_ids = {k: i for i, k in enumerate(self._id_keys)}
+        self._bucket_keys = {int(kid): list(keys)
+                             for kid, keys in state.get("bucket_keys", [])}
+        self._raw_ids = {k: _fnv24(k)
+                         for keys in self._bucket_keys.values() for k in keys}
+        self._hash_collisions = int(state.get("hash_collisions", 0))
         self._records_consumed = int(state["offset"])
         return self._records_consumed
 
@@ -289,6 +447,112 @@ class StreamingCoordinator:
             n += 1
         return n
 
+    def _ingest_device(self, batch: MicroBatch,
+                       report: StreamReport) -> None:
+        """Device fan-out ingestion: one 5-column row per record; window
+        *indices* are assigned host-side in float64 (bit-identical to the
+        host-fan-out assigner) but the event × window expansion happens
+        on-chip.  A batch that spans more windows than the ring holds folds
+        and finalizes mid-batch instead of aborting — splitting the
+        triggering record's coverage so pairs admitted before the mid-batch
+        watermark advance still land, exactly like the host path."""
+        cfg = self.cfg
+        w0 = self.assigner.window(0)
+        step = self.assigner.window(1).start - w0.start
+        ts = np.array([r[0] for r in batch.records], np.float64)
+        rel = ts - w0.start
+        last = np.floor(rel / step).astype(np.int64)
+        if cfg.window_slide is None:
+            first = last
+        else:
+            first = np.floor((rel - w0.size) / step).astype(np.int64) + 1
+        # rebase wire indices so they stay exact in float32 at any absolute
+        # event time; a multiple of n_slots keeps w % n_slots unchanged
+        base = (int(first.min()) // cfg.n_slots) * cfg.n_slots
+        if int(last.max()) - base >= _MAX_WIRE_INT:
+            raise ValueError(
+                f"micro-batch {batch.index} spans "
+                f"{int(last.max()) - base} windows, beyond the float32 "
+                f"wire's exact-integer range; reduce batch_records or "
+                f"raise the window slide")
+        self._window_base = base
+        rows = np.zeros((cfg.n_workers * self._per_worker, 5), np.float32)
+        n = 0
+        seen = float("-inf")        # stream position within this batch
+        for i, (tsi, key, value) in enumerate(batch.records):
+            report.records_in += 1
+            seen = tsi if tsi > seen else seen
+            kid = self._key_id(key)
+            lo, hi = int(first[i]), int(last[i])
+            start = lo
+            for widx in range(lo, hi + 1):
+                if widx in self.tracker.active or self.tracker.is_late(widx):
+                    continue        # device masks + counts the late pairs
+                try:
+                    self.tracker.slot_for(widx)
+                except LateEventError:
+                    # ring full mid-batch: ship this record's already-safe
+                    # window span, fold what we have, advance the watermark
+                    # to the position reached, finalize ripe windows, then
+                    # retry (a second failure is a genuine capacity error
+                    # and propagates)
+                    if widx > start:
+                        rows[n] = (widx - 1 - base, widx - start, kid,
+                                   value, 1.0)
+                        n += 1
+                        start = widx
+                    if n:
+                        self._fold_device(rows, report)
+                        # the dispatched fold may zero-copy-alias the numpy
+                        # buffer; a fresh buffer avoids racing the in-flight
+                        # computation with our next writes
+                        rows = np.zeros_like(rows)
+                        n = 0
+                    self.tracker.observe(seen)
+                    self._finalize_ripe(report)
+                    if not self.tracker.is_late(widx):
+                        self.tracker.slot_for(widx)
+                    # else: the watermark advance closed widx; the device
+                    # masks + counts the pair (slot_for would double-count)
+            if hi >= start:
+                rows[n] = (hi - base, hi - start + 1, kid, value, 1.0)
+                n += 1
+        self._fold_device(rows, report)
+        self.tracker.observe(batch.max_event_time)
+        self._finalize_ripe(report)
+
+    def _ingest_host(self, batch: MicroBatch, report: StreamReport) -> None:
+        """Legacy host fan-out: expand every record into one row per
+        containing window on the host (numpy), the PR 1 baseline the
+        device path is benchmarked against."""
+        cfg = self.cfg
+        rows = np.zeros((cfg.n_workers * self._per_worker, 4), np.float32)
+        n = 0
+        seen = float("-inf")
+        for ts, key, value in batch.records:
+            report.records_in += 1
+            seen = ts if ts > seen else seen
+            for widx in self.assigner.assign(ts):
+                try:
+                    slot = self.tracker.slot_for(widx)
+                except LateEventError:
+                    if n:
+                        self._fold_host(rows)
+                        report.records_expanded += n
+                        rows = np.zeros_like(rows)
+                        n = 0
+                    self.tracker.observe(seen)
+                    self._finalize_ripe(report)
+                    slot = self.tracker.slot_for(widx)
+                if slot is None:        # late: window already emitted
+                    continue
+                rows[n] = (slot, self._key_id(key), value, 1.0)
+                n += 1
+        report.records_expanded += n
+        self._fold_host(rows)
+        self.tracker.observe(batch.max_event_time)
+        self._finalize_ripe(report)
+
     def process_batch(self, batch: MicroBatch,
                       report: StreamReport) -> None:
         """One micro-batch round: admit → fold (device) → watermark →
@@ -307,40 +571,12 @@ class StreamingCoordinator:
                       timeout=0.01, max_records=1)
         self._autoscale(report)
         late_before = self.tracker.late_dropped
-        rows = np.zeros((cfg.n_workers * self._per_worker, 4), np.float32)
-        n = 0
-        seen = float("-inf")        # stream position within this batch
-        for ts, key, value in batch.records:
-            report.records_in += 1
-            seen = ts if ts > seen else seen
-            for widx in self.assigner.assign(ts):
-                try:
-                    slot = self.tracker.slot_for(widx)
-                except LateEventError:
-                    # ring full mid-batch: fold what we have, advance the
-                    # watermark to the position reached, finalize ripe
-                    # windows, then retry (a second failure is a genuine
-                    # capacity error and propagates)
-                    if n:
-                        self._fold(rows)
-                        report.records_expanded += n
-                        # the dispatched fold may zero-copy-alias the numpy
-                        # buffer; a fresh buffer avoids racing the in-flight
-                        # computation with our next writes
-                        rows = np.zeros_like(rows)
-                        n = 0
-                    self.tracker.observe(seen)
-                    self._finalize_ripe(report)
-                    slot = self.tracker.slot_for(widx)
-                if slot is None:        # late: window already emitted
-                    continue
-                rows[n] = (slot, self._key_id(key), value, 1.0)
-                n += 1
+        if cfg.fanout == "device":
+            self._ingest_device(batch, report)
+        else:
+            self._ingest_host(batch, report)
         report.late_dropped += self.tracker.late_dropped - late_before
-        report.records_expanded += n
-        self._fold(rows)
-        self.tracker.observe(batch.max_event_time)
-        self._finalize_ripe(report)
+        report.hash_collisions = self._hash_collisions
         report.batches += 1
         self._records_consumed += len(batch.records)
         # sparser checkpoints trade restart replay (the log is replayable

@@ -1,10 +1,16 @@
 """Watermark bookkeeping and the in-flight window ring.
 
 The device engine carries per-window partial aggregates in a bounded ring of
-``n_slots`` carry slots (``core.mapreduce.init_window_carry``).  This module
+``n_slots`` carry slots (``engine.plan``'s streaming carries).  This module
 owns the host-side view of that ring: which window index lives in which slot,
 where the watermark stands, which windows are ripe for finalization, and
 which events are too late to admit.
+
+Slot addressing is *modular*: window ``w`` always lives in slot
+``w % n_slots``.  The on-device fan-out stage computes the same expression
+(``engine.stages.window_fanout``), so no slot table ever crosses the
+host→device boundary — the tracker only validates that the slot is free and
+remembers the assignment for finalization.
 
 Watermark = max event time observed − allowed lateness.  A window finalizes
 once the watermark reaches its end; finalization happens in window-start
@@ -33,40 +39,54 @@ class WindowTracker:
     active: dict[int, int] = field(default_factory=dict)   # window idx → slot
     finalized: int = 0
     late_dropped: int = 0
-    _free: list[int] = field(default_factory=list)
+    _slots: dict[int, int] = field(default_factory=dict)   # slot → window idx
 
     def __post_init__(self) -> None:
         if self.n_slots < 1:
             raise ValueError("need at least one window slot")
-        self._free = list(range(self.n_slots - 1, -1, -1))
+        self._slots = {s: w for w, s in self.active.items()}
 
     # -- admission -----------------------------------------------------------
     def is_late(self, window_index: int) -> bool:
         """True when the window already closed (watermark passed its end)."""
         return self.assigner.window(window_index).end <= self.watermark
 
+    def min_admissible(self) -> int:
+        """Smallest non-late window index at the current watermark — shipped
+        to the device fan-out stage as its late-masking bound."""
+        return self.assigner.min_live_index(self.watermark)
+
     def slot_for(self, window_index: int) -> int | None:
-        """Ring slot carrying this window, allocating on first sight.
+        """Ring slot carrying this window (``window_index % n_slots``),
+        claiming it on first sight.
 
         Returns ``None`` for a late window (the event must be dropped — its
-        aggregate was already emitted).  Raises ``LateEventError`` if the ring
-        is full, which means ``n_slots`` is too small for the configured
-        window span + lateness: admitting the event would corrupt a
-        still-active window's carry slice.
+        aggregate was already emitted).  Raises ``LateEventError`` if the
+        window's modular slot still carries an older active window, which
+        means ``n_slots`` is too small for the configured window span +
+        lateness: admitting the event would corrupt that window's carry
+        slice.
         """
         if window_index in self.active:
             return self.active[window_index]
         if self.is_late(window_index):
             self.late_dropped += 1
             return None
-        if not self._free:
+        slot = window_index % self.n_slots
+        owner = self._slots.get(slot)
+        if owner is not None:
             raise LateEventError(
-                f"window ring full ({self.n_slots} slots, "
-                f"{len(self.active)} active windows); raise n_slots or "
-                f"reduce allowed_lateness / window overlap")
-        slot = self._free.pop()
+                f"window ring full: slot {slot} of {self.n_slots} still "
+                f"carries active window {owner} ({len(self.active)} active); "
+                f"raise n_slots or reduce allowed_lateness / window overlap")
         self.active[window_index] = slot
+        self._slots[slot] = window_index
         return slot
+
+    def note_late(self, n: int) -> None:
+        """Account (event, window) pairs the device fan-out masked as late —
+        the on-chip counterpart of ``slot_for`` returning ``None``."""
+        self.late_dropped += int(n)
 
     # -- watermark ------------------------------------------------------------
     def observe(self, max_event_time: float) -> float:
@@ -86,7 +106,7 @@ class WindowTracker:
     def release(self, window_index: int) -> None:
         """Return a finalized window's slot to the ring."""
         slot = self.active.pop(window_index)
-        self._free.append(slot)
+        del self._slots[slot]
         self.finalized += 1
 
     # -- checkpointing ---------------------------------------------------------
@@ -94,13 +114,14 @@ class WindowTracker:
         """JSON-serializable snapshot for the coordinator's checkpoint."""
         return {"watermark": self.watermark,
                 "active": {str(w): s for w, s in self.active.items()},
-                "free": list(self._free),
+                "free": [s for s in range(self.n_slots)
+                         if s not in self._slots],
                 "finalized": self.finalized,
                 "late_dropped": self.late_dropped}
 
     def load_state_dict(self, d: dict) -> None:
         self.watermark = float(d["watermark"])
         self.active = {int(w): int(s) for w, s in d["active"].items()}
-        self._free = [int(s) for s in d["free"]]
+        self._slots = {s: w for w, s in self.active.items()}
         self.finalized = int(d["finalized"])
         self.late_dropped = int(d["late_dropped"])

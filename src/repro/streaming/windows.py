@@ -40,6 +40,29 @@ class WindowAssigner:
     def max_windows_per_event(self) -> int:
         raise NotImplementedError
 
+    def min_live_index(self, watermark: float) -> int:
+        """Smallest window index the watermark has not yet closed — the
+        device fan-out's late-masking bound (``engine.stages.window_fanout``
+        drops copies below it).
+
+        Seeds a float64 guess, then corrects with the *same*
+        ``window(i).end <= watermark`` predicate ``WindowTracker.is_late``
+        uses, so host admission and device masking agree exactly even when
+        the watermark sits on a window boundary.
+        """
+        if watermark == float("-inf"):
+            return -(2 ** 31)
+        if watermark == float("inf"):
+            return 2 ** 31 - 1
+        w0 = self.window(0)
+        step = self.window(1).start - w0.start
+        cand = math.floor((watermark - w0.size - w0.start) / step) + 1
+        while self.window(cand).end <= watermark:
+            cand += 1
+        while self.window(cand - 1).end > watermark:
+            cand -= 1
+        return cand
+
 
 @dataclass(frozen=True)
 class TumblingWindows(WindowAssigner):

@@ -8,7 +8,7 @@ import pytest
 
 from repro import configs
 from repro.models import (decode_step, forward, init_cache, init_params,
-                          loss_fn, prefill_forward)
+                          prefill_forward)
 from repro.optim import AdamW
 from repro.runtime.train_step import init_train_state, make_train_step
 

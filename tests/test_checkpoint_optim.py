@@ -82,7 +82,8 @@ def test_adamw_converges_on_quadratic():
     opt = AdamW(lr=0.1, weight_decay=0.0, clip_norm=None)
     params = {"x": jnp.asarray([5.0, -3.0])}
     state = opt.init(params)
-    loss = lambda p: jnp.sum(p["x"] ** 2)
+    def loss(p):
+        return jnp.sum(p["x"] ** 2)
     for _ in range(150):
         g = jax.grad(loss)(params)
         upd, state, _ = opt.update(g, state, params)

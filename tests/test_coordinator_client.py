@@ -1,11 +1,9 @@
 """Coordinator reliability (retries, speculation, restart) and the client
 package (Fig. 4: async multi-job, chained map stages)."""
 
-import threading
 import time
 from collections import Counter
 
-import pytest
 
 from repro.core import (Coordinator, Job, JobState, MapReduce, MemoryStore,
                         MetadataStore, make_wordcount_job, read_final_output)

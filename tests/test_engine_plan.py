@@ -1,0 +1,408 @@
+"""Execution-plan layer: hashed open key domains (exact collision
+accounting, dense-equivalence), on-device window fan-out vs the host
+baseline (bit-for-bit), and windowed group-mode reducers — all through the
+same ``ExecutionPlan`` entry point the batch engine uses."""
+
+import json
+from collections import defaultdict
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic container: seeded-sampling shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import MemoryStore, MetadataStore
+from repro.engine import ExecutionPlan, KeySpace, ReduceSpec, WindowSpec
+from repro.engine.stages import INT32_MAX, device_hash
+from repro.streaming import (SlidingWindows, StreamSource, StreamingConfig,
+                             StreamingCoordinator, TumblingWindows)
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+W = 4  # workers in every plan below
+
+
+def _map_fn(shard):
+    return (shard[:, 0].astype(jnp.int32), shard[:, 1], shard[:, 2] > 0)
+
+
+def _shards(keys, vals):
+    n = -(-len(keys) // W) * W
+    rows = np.zeros((n, 3), np.float32)    # [key, value, valid]; pad invalid
+    rows[:len(keys), 0] = keys
+    rows[:len(keys), 1] = vals
+    rows[:len(keys), 2] = 1.0
+    return rows.reshape(W, n // W, 3)
+
+
+def _run_hashed(keys, vals, num_buckets):
+    plan = ExecutionPlan(KeySpace.hashed(num_buckets), ReduceSpec("aggregate"),
+                         n_workers=W)
+    out, stats = plan.compile(_map_fn).run(_shards(keys, vals))
+    return np.asarray(out), stats
+
+
+def _bucket_of(keys, num_buckets):
+    return np.asarray(device_hash(jnp.asarray(keys, jnp.int32))
+                      % np.uint32(num_buckets)).astype(int)
+
+
+# ---------------------------------------------------------------------------
+# Hashed key space: collision accounting is exact
+# ---------------------------------------------------------------------------
+
+keys_vals = st.integers(8, 80).flatmap(
+    lambda n: st.tuples(
+        st.lists(st.integers(0, 1 << 20), min_size=n, max_size=n),
+        st.lists(st.integers(1, 9), min_size=n, max_size=n)))
+
+
+@given(keys_vals, st.integers(4, 64))
+def test_hashed_collision_accounting_is_exact(kv, num_buckets):
+    keys, vals = kv
+    out, stats = _run_hashed(keys, vals, num_buckets)
+    buckets = _bucket_of(keys, num_buckets)
+    per_bucket_distinct = np.zeros(num_buckets, int)
+    for b in set(buckets.tolist()):
+        per_bucket_distinct[b] = len(
+            {k for k, kb in zip(keys, buckets) if kb == b})
+    want = np.maximum(per_bucket_distinct - 1, 0)
+    got = np.asarray(stats.bucket_collisions)
+    assert np.array_equal(got, want)
+    assert int(np.asarray(stats.collisions)) == int(want.sum())
+    # mass conservation: hashing never loses records, only key identity
+    assert out[:num_buckets].sum() == float(sum(vals))
+
+
+@given(keys_vals, st.integers(4, 64))
+def test_hashed_equals_dense_when_domain_fits(kv, num_buckets):
+    """With keys already in [0, num_buckets) a dense plan is exact; the
+    hashed plan must agree bucket-for-bucket whenever no two present keys
+    collide (and always in total mass)."""
+    keys, vals = kv
+    keys = [k % num_buckets for k in keys]
+    dense_plan = ExecutionPlan(KeySpace.dense(num_buckets),
+                               ReduceSpec("aggregate"), n_workers=W)
+    dense, _ = dense_plan.compile(_map_fn).run(_shards(keys, vals))
+    dense = np.asarray(dense)
+    hashed, stats = _run_hashed(keys, vals, num_buckets)
+    assert hashed[:num_buckets].sum() == dense[:num_buckets].sum()
+    if int(np.asarray(stats.collisions)) == 0:
+        buckets = _bucket_of(keys, num_buckets)
+        for k in set(keys):
+            b = buckets[keys.index(k)]
+            assert hashed[b] == dense[k], (k, b)
+
+
+def test_hashed_group_mode_end_to_end():
+    """Open key domains compose with the grouping shuffle: keys hash into
+    buckets before the fixed-capacity exchange."""
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 1 << 20, 200).tolist()
+    vals = rng.integers(1, 5, 200).tolist()
+    plan = ExecutionPlan(KeySpace.hashed(32),
+                         ReduceSpec("group", reduce_fn="sum", capacity=512),
+                         n_workers=W)
+    (gk, gv, gvalid), stats = plan.compile(_map_fn).run(_shards(keys, vals))
+    got = {int(k): float(v) for k, v, ok in
+           zip(np.asarray(gk), np.asarray(gv), np.asarray(gvalid)) if ok}
+    buckets = _bucket_of(keys, 32)
+    want = defaultdict(float)
+    for b, v in zip(buckets, vals):
+        want[int(b)] += v
+    assert got == dict(want)
+    assert int(np.asarray(stats.dropped)) == 0
+    assert int(np.asarray(stats.collisions)) > 0   # 200 keys into 32 buckets
+
+
+# ---------------------------------------------------------------------------
+# On-device window fan-out == host fan-out, bit for bit
+# ---------------------------------------------------------------------------
+
+def _synth_events(n=3000, n_keys=12, span=300.0, seed=3):
+    rng = np.random.default_rng(seed)
+    ts = np.sort(rng.uniform(0, span, n))
+    keys = rng.integers(0, n_keys, n)
+    vals = rng.integers(0, 50, n).astype(float)
+    return [(float(t), f"k{k}", float(v))
+            for t, k, v in zip(ts, keys, vals)]
+
+
+def _run_stream(events, job_id, **overrides):
+    overrides.setdefault("num_buckets", 16)
+    cfg = StreamingConfig(n_workers=W, batch_records=256,
+                          job_id=job_id, **overrides)
+    store = MemoryStore()
+    coord = StreamingCoordinator(store, MetadataStore(), cfg)
+    report = coord.run_stream(
+        StreamSource.from_records(events, batch_records=256))
+    out = {}
+    for m in store.list_objects(f"stream-output/{job_id}/"):
+        out[m.key.rsplit("/", 1)[1]] = store.get(m.key)
+    return out, report
+
+
+def test_device_fanout_matches_host_fanout_bitwise():
+    """slide = size/4 → every record replicates into 4 windows.  The
+    device path ships each record once and fans out on-chip; outputs must
+    be byte-identical to the PR 1 host event × window expansion."""
+    events = _synth_events()
+    win = dict(window_size=50.0, window_slide=12.5, n_slots=8,
+               aggregation="sum")
+    host, rh = _run_stream(events, "h", fanout="host", **win)
+    dev, rd = _run_stream(events, "d", fanout="device", **win)
+    assert host and host == dev               # bit-for-bit, every window
+    assert rh.records_expanded == rd.records_expanded == 4 * len(events)
+    assert rh.late_dropped == rd.late_dropped
+    assert rh.windows_emitted == rd.windows_emitted
+
+
+def test_device_fanout_counts_late_pairs_like_host():
+    """Out-of-order events past the watermark are masked on-chip and
+    counted identically to the host path's per-pair drops."""
+    rng = np.random.default_rng(11)
+    events = [(float(t), "k", 1.0) for t in rng.uniform(0, 400.0, 2000)]
+    win = dict(window_size=40.0, window_slide=10.0, n_slots=8,
+               aggregation="count")
+    host, rh = _run_stream(events, "lh", fanout="host", **win)
+    dev, rd = _run_stream(events, "ld", fanout="device", **win)
+    assert rh.late_dropped == rd.late_dropped > 0
+    assert host == dev
+
+
+def test_device_fanout_epoch_timestamps_match_host():
+    """Unix-epoch event times put absolute window indices (~1.1e8) far past
+    float32's exact-integer range; the per-batch rebase must keep the wire
+    exact and bit-identical to the host path."""
+    rng = np.random.default_rng(23)
+    t0 = 1.7e9
+    events = [(float(t0 + t), f"k{int(k)}", float(v)) for t, k, v in
+              zip(np.sort(rng.uniform(0, 600.0, 1500)),
+                  rng.integers(0, 8, 1500), rng.integers(0, 30, 1500))]
+    win = dict(window_size=60.0, window_slide=15.0, n_slots=8,
+               aggregation="sum")
+    host, rh = _run_stream(events, "eh", fanout="host", **win)
+    dev, rd = _run_stream(events, "ed", fanout="device", **win)
+    assert host and host == dev
+    assert rh.records_expanded == rd.records_expanded == 4 * len(events)
+    assert rh.late_dropped == rd.late_dropped
+
+
+def test_device_fanout_mid_batch_ring_full_matches_host():
+    """A low-rate sliding batch spanning more windows than the ring holds
+    forces mid-batch folds; the device path must split the triggering
+    record's window coverage around the fold and still match the host
+    baseline byte for byte."""
+    events = [(float(i), f"k{i % 3}", 1.0) for i in range(100)]
+    win = dict(window_size=4.0, window_slide=2.0, n_slots=4,
+               aggregation="count")
+    host, rh = _run_stream(events, "mh", fanout="host", **win)
+    dev, rd = _run_stream(events, "md", fanout="device", **win)
+    assert len(host) == 51 and host == dev
+    assert rh.records_expanded == rd.records_expanded == 2 * len(events)
+    assert rh.late_dropped == rd.late_dropped == 0
+
+
+@given(st.floats(5.0, 500.0, allow_nan=False),
+       st.integers(1, 4), st.floats(0.0, 50.0, allow_nan=False))
+def test_min_live_index_agrees_with_is_late(size, divisor, watermark):
+    """The device late-masking bound and the host's is_late predicate must
+    agree exactly, including on window boundaries."""
+    for assigner in (TumblingWindows(size),
+                     SlidingWindows(size, size / divisor)):
+        lo = assigner.min_live_index(watermark)
+        assert assigner.window(lo).end > watermark
+        assert assigner.window(lo - 1).end <= watermark
+
+
+def test_min_live_index_exact_on_boundary():
+    a = TumblingWindows(10.0)
+    # watermark exactly at window 0's end: window 0 is late, window 1 live
+    assert a.min_live_index(10.0) == 1
+    assert a.min_live_index(10.0 - 1e-9) == 0
+    assert a.min_live_index(float("-inf")) == -(2 ** 31)
+
+
+# ---------------------------------------------------------------------------
+# Windowed group mode: arbitrary reduce_fn through the plan layer
+# ---------------------------------------------------------------------------
+
+def _median_reduce(keys, values, starts):
+    """A genuinely non-algebraic reducer: per-group median over the full
+    value list (the reduce the combiner/reduce_scatter path cannot fuse)."""
+    n = keys.shape[0]
+    valid = keys != INT32_MAX
+    seg = jnp.cumsum(starts) - 1
+    seg = jnp.where(valid, seg, n)
+    order = jnp.lexsort((values, seg))
+    v = values[order]
+    s = seg[order]
+    counts = jnp.zeros((n + 1,), jnp.int32).at[s].add(1)[:n]
+    offsets = jnp.cumsum(counts) - counts
+    lo = jnp.clip(offsets + (counts - 1) // 2, 0, n - 1)
+    hi = jnp.clip(offsets + counts // 2, 0, n - 1)
+    med = (v[lo] + v[hi]) / 2.0
+    group_keys = jnp.full((n + 1,), -1, jnp.int32).at[s].max(
+        jnp.where(valid, keys, -1))[:n]
+    group_valid = (group_keys >= 0) & (counts > 0)
+    return group_keys, jnp.where(group_valid, med, 0.0), group_valid
+
+
+def test_streaming_group_mode_median_end_to_end():
+    """A streaming job with a non-algebraic reduce_fn runs through the same
+    ExecutionPlan entry point as batch mapreduce: records buffer on-device
+    per (worker, window slot) across micro-batches and reduce over each
+    key's full value list at finalization."""
+    events = _synth_events(n=2000, n_keys=6, span=200.0, seed=5)
+    out, report = _run_stream(events, "med", window_size=50.0, mode="group",
+                              reduce_fn=_median_reduce, capacity=1024,
+                              n_slots=4)
+    assert report.error is None and report.capacity_dropped == 0
+    oracle = defaultdict(lambda: defaultdict(list))
+    for ts, k, v in events:
+        oracle[int(ts // 50.0)][k].append(v)
+    assert len(out) == len(oracle)
+    for widx, per_key in oracle.items():
+        got = dict(json.loads(line) for line in
+                   out[f"window-{widx * 50.0:.3f}-{(widx + 1) * 50.0:.3f}"]
+                   .splitlines())
+        want = {k: float(np.median(vs)) for k, vs in per_key.items()}
+        assert got == pytest.approx(want)
+
+
+def test_streaming_group_mode_builtin_kind_sliding():
+    """Built-in segment kinds work too, across overlapping windows."""
+    events = _synth_events(n=1500, n_keys=5, span=150.0, seed=7)
+    out, report = _run_stream(events, "gmax", window_size=40.0,
+                              window_slide=20.0, mode="group",
+                              reduce_fn="max", capacity=1024, n_slots=6)
+    assert report.error is None
+    assert report.records_expanded == 2 * len(events)
+    oracle = defaultdict(lambda: defaultdict(float))
+    assigner = SlidingWindows(40.0, 20.0)
+    for ts, k, v in events:
+        for widx in assigner.assign(ts):
+            oracle[widx][k] = max(oracle[widx][k], v)
+    for widx, per_key in oracle.items():
+        w = assigner.window(widx)
+        got = dict(json.loads(line) for line in
+                   out[f"window-{w.start:.3f}-{w.end:.3f}"].splitlines())
+        assert got == pytest.approx(dict(per_key))
+
+
+def test_streaming_group_capacity_overflow_is_counted():
+    events = [(float(i) % 10.0, f"k{i % 3}", 1.0) for i in range(600)]
+    out, report = _run_stream(events, "ovf", window_size=100.0, mode="group",
+                              reduce_fn="count", capacity=8, n_slots=2)
+    assert report.capacity_dropped > 0
+    total = sum(json.loads(line)[1]
+                for blob in out.values() for line in blob.splitlines())
+    assert total + report.capacity_dropped == len(events)
+
+
+# ---------------------------------------------------------------------------
+# Hashed open key domains, streaming end to end
+# ---------------------------------------------------------------------------
+
+def test_streaming_hashed_open_domain_does_not_raise():
+    """More distinct keys than num_buckets: the dense dictionary would
+    raise; the hashed key space degrades into shared buckets with the
+    collisions reported."""
+    events = [(float(i) / 10.0, f"key-{i % 64}", 1.0) for i in range(640)]
+    out, report = _run_stream(events, "open", window_size=100.0,
+                              num_buckets=16, key_space="hashed",
+                              aggregation="count")
+    assert report.error is None
+    assert report.hash_collisions > 0           # 64 keys into 16 buckets
+    total = sum(json.loads(line)[1]
+                for blob in out.values() for line in blob.splitlines())
+    assert total == len(events)                 # no record lost to hashing
+
+
+def test_streaming_hashed_matches_dense_when_no_collisions():
+    """A hashed stream whose keys happen not to collide produces the same
+    per-key aggregates as the dense dictionary run (labels are the real
+    keys because each bucket holds one key)."""
+    rng = np.random.default_rng(13)
+    # probe for a collision-free key set under the 24-bit fold + murmur
+    keys, buckets, k = [], set(), 0
+    from repro.streaming.coordinator import _fnv24, _murmur_bucket
+    while len(keys) < 8:
+        name = f"s{k}"
+        b = _murmur_bucket(_fnv24(name), 64)
+        if b not in buckets:
+            buckets.add(b)
+            keys.append(name)
+        k += 1
+    events = [(float(t), keys[int(i)], float(v)) for t, i, v in
+              zip(np.sort(rng.uniform(0, 100.0, 800)),
+                  rng.integers(0, len(keys), 800),
+                  rng.integers(0, 20, 800))]
+    dense, rd = _run_stream(events, "dn", window_size=25.0,
+                            num_buckets=64, aggregation="sum")
+    hashed, rh = _run_stream(events, "hs", window_size=25.0,
+                             num_buckets=64, key_space="hashed",
+                             aggregation="sum")
+    assert rh.hash_collisions == 0
+    assert {k: dict(json.loads(ln) for ln in v.splitlines())
+            for k, v in dense.items()} == \
+           {k: dict(json.loads(ln) for ln in v.splitlines())
+            for k, v in hashed.items()}
+
+
+def test_streaming_hashed_crash_resume_restores_labels():
+    """Checkpoint + resume carries the bucket→key label table, so a
+    restarted hashed stream emits identical bytes."""
+    events = [(float(i) / 4.0, f"key-{i % 40}", 1.0) for i in range(800)]
+
+    def make(store, meta):
+        cfg = StreamingConfig(num_buckets=16, n_workers=W, window_size=50.0,
+                              batch_records=100, key_space="hashed",
+                              aggregation="count", job_id="hres")
+        return StreamingCoordinator(store, meta, cfg)
+
+    ref_store = MemoryStore()
+    make(ref_store, MetadataStore()).run_stream(
+        StreamSource.from_records(events, batch_records=100))
+    store, meta = MemoryStore(), MetadataStore()
+    make(store, meta).run_stream(
+        StreamSource.from_records(events[:400], batch_records=100),
+        flush=False)
+    make(store, meta).run_stream(
+        StreamSource.from_records(events, batch_records=100))
+    ref = {m.key: ref_store.get(m.key)
+           for m in ref_store.list_objects("stream-output/hres/")}
+    got = {m.key: store.get(m.key)
+           for m in store.list_objects("stream-output/hres/")}
+    assert ref and got == ref
+
+
+# ---------------------------------------------------------------------------
+# One plan space: the batch façade and the streaming coordinator agree
+# ---------------------------------------------------------------------------
+
+def test_batch_and_streaming_share_the_plan_layer():
+    """Folding a stream into a single huge window equals the batch
+    aggregate over the same records — one engine, two lowerings."""
+    rng = np.random.default_rng(17)
+    keys = rng.integers(0, 16, 400).tolist()
+    vals = rng.integers(0, 9, 400).tolist()
+    batch_plan = ExecutionPlan(KeySpace.dense(16), ReduceSpec("aggregate"),
+                               n_workers=W)
+    batch, _ = batch_plan.compile(_map_fn).run(_shards(keys, vals))
+    stream_plan = ExecutionPlan(
+        KeySpace.dense(16), ReduceSpec("aggregate"), n_workers=W,
+        window=WindowSpec(size=1e9, n_slots=4))
+    compiled = stream_plan.compile()
+    carry = compiled.init_carry()
+    rows = np.zeros((400, 5), np.float32)
+    for i, (k, v) in enumerate(zip(keys, vals)):
+        rows[i] = (0, 1, k, v, 1.0)         # every record in window 0
+    carry, _ = compiled.step(rows.reshape(W, 100, 5), carry, -(2 ** 31))
+    window0 = compiled.read_slot(carry, 0)
+    assert np.array_equal(window0[:, 0], np.asarray(batch)[:16])

@@ -3,7 +3,6 @@ fault retries, elastic re-mesh (checkpoint written by N savers restored onto
 M), and data-pipeline determinism across restarts."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,7 +1,6 @@
 """Per-kernel correctness: shape/dtype sweeps, Pallas (interpret=True) vs the
 pure-jnp oracle in each kernel's ref.py."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -141,19 +140,19 @@ def test_scan_decode_step_matches_full_scan():
 def test_ssd_chunked_matches_recurrence():
     """Mamba-2 SSD chunked form vs the naive recurrence."""
     from repro.models.mamba import _ssd_chunked
-    b, l, h, p, n, chunk = 1, 64, 4, 8, 16, 16
-    x = t((b, l, h, p))
-    dt = jnp.asarray(np.abs(RNG.normal(size=(b, l, h))) * 0.1 + 0.01,
+    b, slen, h, p, n, chunk = 1, 64, 4, 8, 16, 16
+    x = t((b, slen, h, p))
+    dt = jnp.asarray(np.abs(RNG.normal(size=(b, slen, h))) * 0.1 + 0.01,
                      jnp.float32)
     A = -jnp.asarray(np.abs(RNG.normal(size=(h,))) + 0.3, jnp.float32)
-    B, C = t((b, l, n)), t((b, l, n))
+    B, C = t((b, slen, n)), t((b, slen, n))
     y, s_final = _ssd_chunked(x, dt, A, B, C, chunk)
     # naive
     s = np.zeros((b, h, n, p), np.float32)
-    ys = np.zeros((b, l, h, p), np.float32)
+    ys = np.zeros((b, slen, h, p), np.float32)
     xn, dtn, Bn, Cn = map(np.asarray, (x, dt, B, C))
     An = np.asarray(A)
-    for i in range(l):
+    for i in range(slen):
         decay = np.exp(dtn[:, i] * An[None])                     # (b, h)
         dBx = np.einsum("bh,bn,bhp->bhnp", dtn[:, i], Bn[:, i], xn[:, i])
         s = decay[..., None, None] * s + dBx

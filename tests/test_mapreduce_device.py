@@ -1,6 +1,5 @@
 """Device-plane MapReduce: shuffle invariants (hypothesis) + engine modes."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -96,8 +95,11 @@ def test_aggregate_vs_group_modes_agree():
     W, n_keys = 4, 32
     shard = _make_shards(W, 500, n_keys, 3)
     cfg_a = DeviceJobConfig(num_buckets=n_keys, n_workers=W)
-    map_fn = lambda s: (s[:, 0], s[:, 1].astype(jnp.float32),
-                        jnp.ones(s.shape[0], bool))
+
+    def map_fn(s):
+        return (s[:, 0], s[:, 1].astype(jnp.float32),
+                jnp.ones(s.shape[0], bool))
+
     agg = np.asarray(mapreduce(map_fn, shard, cfg_a, mode="aggregate",
                                backend="vmap"))
     cfg_g = DeviceJobConfig(num_buckets=n_keys, n_workers=W, capacity=4096)
@@ -127,8 +129,11 @@ def test_pallas_combiner_in_engine():
     W, n_keys = 4, 64
     shard = _make_shards(W, 256, n_keys, 5)
     cfg = DeviceJobConfig(num_buckets=n_keys, n_workers=W)
-    map_fn = lambda s: (s[:, 0], s[:, 1].astype(jnp.float32),
-                        jnp.ones(s.shape[0], bool))
+
+    def map_fn(s):
+        return (s[:, 0], s[:, 1].astype(jnp.float32),
+                jnp.ones(s.shape[0], bool))
+
     ref = np.asarray(mapreduce(map_fn, shard, cfg, mode="aggregate",
                                backend="vmap"))
     got = np.asarray(mapreduce(map_fn, shard, cfg, mode="aggregate",

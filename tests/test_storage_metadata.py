@@ -1,6 +1,5 @@
 """Storage (S3 stand-in) and metadata (Redis stand-in) layer semantics."""
 
-import os
 
 import pytest
 
