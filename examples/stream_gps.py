@@ -1,29 +1,35 @@
-"""Streaming logistics: windowed per-region GPS aggregates, end to end.
+"""Streaming logistics on the Pipeline API: windowed per-region GPS
+aggregates, end to end — one declarative definition, flipped between
+streaming and batch execution.
 
 The paper's motivating workload — continuous GPS/IoT event streams from a
-logistics fleet — run through the streaming micro-batch engine: a replayable
-event log ("Kafka topic") in the object store, tumbling event-time windows,
-one fused incremental map→shuffle→reduce round per micro-batch on the device
-engine, watermark-driven window finalization, and lag-driven pool scaling.
-The emitted windows are then checked against a one-shot batch computation
-over the same records.
+logistics fleet — authored once as a dataflow graph: event log → key_by
+region → 1-minute tumbling windows → mean speed.  The same built pipeline
+then runs (1) continuously through the streaming micro-batch engine
+(replayable event log, watermark finalization, lag-driven pool scaling)
+and (2) as a one-shot batch drive over the same prefix, and the emitted
+windows are asserted byte-identical.  A second graph sessionizes each
+vehicle's pings into trips (``Windowing.session``) — the data-dependent
+window variant.
 
     PYTHONPATH=src python examples/stream_gps.py
+    STREAM_GPS_DURATION=120 PYTHONPATH=src python examples/stream_gps.py  # CI cap
 """
 
+import os
 from collections import defaultdict
 
 import numpy as np
 
 from repro.core import MemoryStore, MetadataStore
 from repro.core.events import EventBus, TOPIC_STREAM_WINDOW
-from repro.streaming import (StreamSource, StreamingConfig,
-                             StreamingCoordinator, write_event_log)
+from repro.pipeline import Pipeline, Windowing
+from repro.streaming import write_event_log
 
 REGIONS = ["north", "south", "east", "west", "centre", "port", "depot", "hub"]
 WINDOW = 60.0          # 1-minute tumbling windows
 RATE = 40.0            # events per second of event time
-DURATION = 600.0       # 10 minutes of fleet telemetry
+DURATION = float(os.environ.get("STREAM_GPS_DURATION", 600.0))
 
 
 def synth_gps_events(seed: int = 0):
@@ -49,24 +55,37 @@ def main() -> None:
     print(f"event log: {n} GPS pings, "
           f"{len(store.list_objects('streams/gps'))} segments")
 
-    # 2. continuous job: mean speed per region per 1-minute window
-    bus = EventBus()
-    cfg = StreamingConfig(num_buckets=8, n_workers=4, window_size=WINDOW,
-                          allowed_lateness=5.0, batch_records=2048,
-                          aggregation="mean", job_id="gps-fleet")
-    coord = StreamingCoordinator(store, MetadataStore(), cfg, bus=bus)
-    source = StreamSource(store=store, prefix="streams/gps",
-                          batch_records=2048)
-    report = coord.run_stream(source)
+    # 2. ONE definition: mean speed per region per 1-minute window
+    pipe = (Pipeline.from_source(prefix="streams/gps", batch_records=2048)
+            .key_by(lambda r: r[1])
+            .window(Windowing.tumbling(WINDOW))
+            .reduce("mean")
+            .sink("stream-output/"))
+    built = pipe.build(num_buckets=8, n_workers=4, allowed_lateness=5.0,
+                      job_id="gps-fleet")
 
-    print(f"stream {cfg.job_id}: {report.batches} micro-batches, "
+    # 2a. streaming mode: continuous micro-batches, watermarks, scaling
+    bus = EventBus()
+    report = built.run_streaming(store, MetadataStore(), bus=bus)
+    print(f"stream {built.job_id}: {report.batches} micro-batches, "
           f"{report.records_in} records in {report.wall_time:.3f}s "
           f"({report.records_per_sec:,.0f} rec/s)")
     print(f"  windows emitted: {report.windows_emitted}, "
           f"late dropped: {report.late_dropped}, "
           f"mean batch latency: {report.mean_batch_latency * 1e3:.2f} ms")
     print(f"  backpressure: max lag {report.max_lag}, "
-          f"{report.scale_events} scale events → pool {coord.pool_stats()}")
+          f"{report.scale_events} scale events")
+
+    # 2b. batch mode: the SAME built pipeline, one drive over the prefix
+    batch_store = MemoryStore()
+    for m in store.list_objects("streams/gps"):
+        batch_store.put(m.key, store.get(m.key))
+    batch_out, _ = built.run_batch(batch_store)
+    stream_out = {m.key: store.get(m.key)
+                  for m in store.list_objects("stream-output/gps-fleet/")}
+    assert stream_out and stream_out == batch_out
+    print(f"  batch flip: {len(batch_out)} windows, byte-identical to the "
+          f"streaming run ✓")
 
     # 3. downstream consumers see finalized windows as CloudEvents
     recs = bus.poll("dashboard", TOPIC_STREAM_WINDOW, timeout=0.1,
@@ -74,7 +93,7 @@ def main() -> None:
     print(f"  {len(recs)} window-finalized events on the bus; first: "
           f"{recs[0].value.data['output_key']}")
 
-    # 4. agreement with a one-shot batch computation over the same log
+    # 4. agreement with a host-side oracle over the same log
     batch: dict[int, dict[str, list[float]]] = defaultdict(
         lambda: defaultdict(list))
     for ts, region, speed in events:
@@ -91,8 +110,30 @@ def main() -> None:
             worst = max(worst, abs(got[region] - want))
             checked += 1
     assert worst < 1e-3, worst
-    print(f"  incremental == one-shot batch on {checked} (window, region) "
+    print(f"  incremental == oracle on {checked} (window, region) "
           f"aggregates (max |Δ| = {worst:.2e}) ✓")
+
+    # 5. sessionized GPS traces: each vehicle's pings split into trips by
+    # a 30s inactivity gap — the data-dependent window variant
+    rng = np.random.default_rng(1)
+    trips = []
+    for v in range(6):
+        t = float(rng.uniform(0, 30.0))
+        while t < DURATION:
+            for _ in range(int(rng.integers(5, 20))):    # one trip's pings
+                trips.append((t, f"vehicle-{v}", float(rng.integers(5, 110))))
+                t += float(rng.uniform(0.5, 8.0))
+            t += float(rng.uniform(60.0, 180.0))         # parked > gap
+    trips.sort()
+    sess = (Pipeline.from_source(records=trips, batch_records=512)
+            .key_by()
+            .window(Windowing.session(gap=30.0))
+            .reduce("mean"))
+    outs, srep = sess.build(num_buckets=8, n_workers=4, n_slots=4,
+                            job_id="gps-trips").run_batch(store)
+    print(f"  sessionized trips: {srep.windows_emitted} trips from "
+          f"{len(trips)} pings across 6 vehicles "
+          f"(e.g. {sorted(outs)[0].rsplit('/', 1)[1]})")
 
 
 if __name__ == "__main__":

@@ -78,17 +78,28 @@ def mapreduce(map_fn: Callable, data, cfg: DeviceJobConfig, *,
     leading axis ``n_workers`` (vmap backend) or is a global array to be
     sharded over the mesh axis (shard_map backend).
 
-    Return shapes are unchanged from the pre-plan engine: the aggregate
-    bucket vector, or ``(group_keys, group_values, group_valid, dropped)``.
-    Pass ``key_space=KeySpace.hashed(...)`` (or build an ``ExecutionPlan``)
-    to open the key domain; collision accounting then comes from
-    ``ExecutionPlan.compile(...).run``'s ``ShuffleStats``.
+    Since the Pipeline redesign this façade is literally a two-node
+    pipeline — ``Pipeline.from_source(shards=...).map(map_fn).reduce(...)``
+    — lowered and run in batch mode.  Return shapes are unchanged from the
+    pre-plan engine: the aggregate bucket vector, or ``(group_keys,
+    group_values, group_valid, dropped)``.  Pass
+    ``key_space=KeySpace.hashed(...)`` (or build a ``Pipeline`` /
+    ``ExecutionPlan``) to open the key domain; collision accounting then
+    comes from ``ExecutionPlan.compile(...).run``'s ``ShuffleStats``.
     """
-    plan = _plan_from_config(cfg, mode, reduce_fn, combine_fn,
-                             key_space=key_space)
-    compiled = plan.compile(map_fn, backend=backend, mesh=mesh,
-                            data_spec=data_spec, finalize=finalize, jit=jit)
-    out, stats = compiled.run(data)
+    from ..pipeline import Pipeline   # lazy: core is imported by pipeline
+    p = Pipeline.from_source(shards=data).map(map_fn)
+    if mode == "group":
+        p = p.reduce(reduce_fn, mode="group", capacity=cfg.capacity)
+    else:
+        p = p.reduce("sum")           # aggregate: the fold sums map values
+    built = p.build(num_buckets=cfg.num_buckets, n_workers=cfg.n_workers,
+                    key_space=key_space if key_space is not None
+                    else "dense",
+                    backend=backend, mesh=mesh, data_spec=data_spec,
+                    finalize=finalize, jit=jit, combine_fn=combine_fn,
+                    axis_name=cfg.axis_name)
+    out, stats = built.run_batch(data=data)
     if mode == "aggregate":
         return out
     gk, gv, gvalid = out

@@ -15,11 +15,13 @@ from .compile import lower, make_shard_map
 from .plan import (CompiledBatchPlan, CompiledStreamAggregate,
                    CompiledStreamGroup, ExecutionPlan, KeySpace, ReduceSpec,
                    WindowSpec, streaming_record_map)
-from .stages import ShuffleStats, device_hash, segment_reduce
+from .stages import (ShuffleStats, device_hash, fold_key24, host_bucket,
+                     segment_reduce, top_k_buckets)
 
 __all__ = [
     "ExecutionPlan", "KeySpace", "ReduceSpec", "WindowSpec",
     "CompiledBatchPlan", "CompiledStreamAggregate", "CompiledStreamGroup",
     "streaming_record_map", "lower", "make_shard_map", "ShuffleStats",
-    "device_hash", "segment_reduce",
+    "device_hash", "fold_key24", "host_bucket", "segment_reduce",
+    "top_k_buckets",
 ]

@@ -90,21 +90,44 @@ class KeySpace:
 class WindowSpec:
     """Event-time windowing as the device engine sees it.
 
-    ``slide=None`` means tumbling (fan-out 1).  ``fanout_on_device=True``
-    ships one 5-column row per record and replicates it into its
-    ``ceil(size/slide)`` windows on-chip; ``False`` is the legacy host
-    fan-out wire format (one 4-column row per record × window).  Ring slots
-    are addressed modularly — window ``w`` lives in slot ``w % n_slots`` on
-    host and device alike.  Window *indices* on the wire are caller-rebased
-    (the coordinator subtracts a per-batch base that is a multiple of
-    ``n_slots``), so they stay exact in float32 regardless of absolute
-    event time; the fan-out stage only ever sees the rebased values.
+    ``kind="fixed"`` (tumbling/sliding): ``slide=None`` means tumbling
+    (fan-out 1).  ``fanout_on_device=True`` ships one 5-column row per
+    record and replicates it into its ``ceil(size/slide)`` windows on-chip;
+    ``False`` is the legacy host fan-out wire format (one 4-column row per
+    record × window).  Ring slots are addressed modularly — window ``w``
+    lives in slot ``w % n_slots`` on host and device alike.  Window
+    *indices* on the wire are caller-rebased (the coordinator subtracts a
+    per-batch base that is a multiple of ``n_slots``), so they stay exact
+    in float32 regardless of absolute event time; the fan-out stage only
+    ever sees the rebased values.
+
+    ``kind="session"``: data-dependent gap windows.  Session boundaries are
+    inherently host-side (they depend on the observed event times per key),
+    so session plans use the host wire format with fan-out 1; the host maps
+    each open session to a carry *cell* — a (ring slot, bucket) pair — and
+    merges bridged sessions with the cell ops on the compiled plan
+    (``merge_cell`` / ``clear_cell``).  ``gap`` is the inactivity gap that
+    closes a session.
     """
 
     size: float
     slide: float | None = None
     n_slots: int = 2
     fanout_on_device: bool = True
+    kind: str = "fixed"             # "fixed" | "session"
+    gap: float = 0.0
+
+    @classmethod
+    def session(cls, gap: float, n_slots: int = 8) -> "WindowSpec":
+        """Gap-based session windows — a new plan variant, not a new
+        engine: the aggregate fold and carry are unchanged, only cell
+        addressing and finalization differ."""
+        return cls(size=0.0, slide=None, n_slots=n_slots,
+                   fanout_on_device=False, kind="session", gap=gap)
+
+    @property
+    def is_session(self) -> bool:
+        return self.kind == "session"
 
     @property
     def fanout(self) -> int:
@@ -124,13 +147,35 @@ class ReduceSpec:
     finishes.  ``group`` — arbitrary ``reduce_fn`` (a segment-reducer kind
     name or a ``(keys, values, starts) -> (gk, gv, gvalid)`` callable) over
     each key's full, exchanged value list; ``capacity`` bounds the
-    per-partition record buffers (the spill-file size bound).
+    per-partition record buffers (the spill-file size bound).  ``top_k`` —
+    the aggregate fold plus a fixed-capacity heavy-hitters selection at
+    finalization (``stages.top_k_buckets``); ``k`` bounds the output.
+
+    ``channels`` / ``channel_base`` let several plans share one aggregate
+    carry: each plan folds its ``[value, 1]`` pair into channels
+    ``[channel_base, channel_base + 1]`` of a ``channels``-wide carry and
+    leaves the rest untouched — the windowed-join wiring, where the left
+    and right stream are two compiled plans over disjoint channel pairs of
+    the same carry.
     """
 
-    mode: str = "aggregate"         # "aggregate" | "group"
+    mode: str = "aggregate"         # "aggregate" | "group" | "top_k"
     reduce_fn: str | Callable = "sum"
     combine_fn: Callable | None = None
     capacity: int = 0
+    k: int = 0                      # top_k mode: selection capacity
+    channels: int = 2               # carry width (2 per resident plan)
+    channel_base: int = 0           # this plan's [sum, count] offset
+
+    @classmethod
+    def top_k(cls, k: int) -> "ReduceSpec":
+        return cls(mode="top_k", k=k)
+
+    @property
+    def folds_as_aggregate(self) -> bool:
+        """top_k folds with the aggregate machinery; only finalization
+        differs."""
+        return self.mode in ("aggregate", "top_k")
 
 
 @dataclass(frozen=True)
@@ -150,18 +195,37 @@ class ExecutionPlan:
         """Lower to an executable.  Batch plans (``window=None``) return a
         ``CompiledBatchPlan``; windowed plans return a streaming plan with a
         carry (``CompiledStreamAggregate`` or ``CompiledStreamGroup``)."""
-        if self.reduce.mode not in ("aggregate", "group"):
-            raise ValueError(f"unknown reduce mode {self.reduce.mode!r}")
-        if self.reduce.mode == "group" and self.reduce.capacity <= 0:
+        rs = self.reduce
+        if rs.mode not in ("aggregate", "group", "top_k"):
+            raise ValueError(f"unknown reduce mode {rs.mode!r}")
+        if rs.mode == "group" and rs.capacity <= 0:
             raise ValueError("grouping mode needs a positive capacity")
+        if rs.mode == "top_k" and rs.k < 1:
+            raise ValueError("top_k mode needs k >= 1")
+        if rs.mode == "top_k" and rs.channel_base != 0:
+            raise ValueError("top_k ranks channels [0, 2) — it cannot "
+                             "share a carry at a nonzero channel_base")
+        if rs.channels < 2 or rs.channel_base + 2 > rs.channels:
+            raise ValueError("channel window [base, base+2) must fit the "
+                             "carry's channel count")
+        if self.window is not None and self.window.is_session:
+            if self.window.gap <= 0:
+                raise ValueError("session windows need a positive gap")
+            if self.window.fanout_on_device or rs.mode != "aggregate":
+                raise ValueError("session windows lower to the host-wire "
+                                 "aggregate fold (fan-out 1) only")
         if self.window is None:
             if map_fn is None:
                 raise ValueError("batch plans need a map_fn")
+            if rs.mode == "top_k" and not finalize:
+                raise ValueError("batch top_k selects over the finalized "
+                                 "bucket vector; finalize=False is "
+                                 "contradictory")
             return CompiledBatchPlan(self, map_fn, backend, mesh, data_spec,
                                      finalize, jit)
         if self.window.fanout_on_device and self.window.size <= 0:
             raise ValueError("on-device fan-out needs a positive window size")
-        if self.reduce.mode == "group":
+        if rs.mode == "group":
             if self.window.fanout_on_device is False:
                 raise ValueError("windowed group mode runs with on-device "
                                  "fan-out only")
@@ -203,7 +267,7 @@ def _batch_body(shard, *, plan: ExecutionPlan, map_fn, finalize: bool):
     else:
         collisions = None
 
-    if rs.mode == "aggregate":
+    if rs.folds_as_aggregate:
         part = stages.shuffle_aggregate(
             buckets, values, plan.axis_name, ks.padded(plan.n_workers),
             valid=valid, combine_fn=rs.combine_fn)
@@ -244,7 +308,7 @@ class CompiledBatchPlan:
         axis = plan.axis_name
         in_spec = data_spec if data_spec is not None else P(axis)
         rspec = P() if finalize else P(axis)
-        if plan.reduce.mode == "aggregate":
+        if plan.reduce.folds_as_aggregate:
             out_specs = (rspec, P())
         else:
             out_specs = ((rspec, rspec, rspec), P())
@@ -253,7 +317,14 @@ class CompiledBatchPlan:
                          jit=jit)
 
     def run(self, data):
-        return self._fn(data)
+        out, stats = self._fn(data)
+        if self.plan.reduce.mode == "top_k":
+            # the heavy-hitters selection over the (unpadded) bucket vector
+            rank_kind = self.plan.reduce.reduce_fn \
+                if isinstance(self.plan.reduce.reduce_fn, str) else "sum"
+            out = _select_top_k(out, self.plan.key_space.num_buckets,
+                                self.plan.reduce.k, rank_kind)
+        return out, stats
 
 
 # ---------------------------------------------------------------------------
@@ -275,6 +346,17 @@ def _stream_agg_host_body(shard, carry_slice, *, plan: ExecutionPlan, map_fn):
     return carry_slice + part, stats
 
 
+def _embed_channels(vals: jax.Array, n_channels: int,
+                    base: int) -> jax.Array:
+    """Place a record's ``[value, 1]`` pair at channels ``[base, base+1]``
+    of an ``n_channels``-wide value vector, zero elsewhere — how plans
+    sharing a carry (windowed joins) stay out of each other's channels."""
+    cols = [jnp.zeros_like(vals)] * n_channels
+    cols[base] = vals
+    cols[base + 1] = jnp.ones_like(vals)
+    return jnp.stack(cols, axis=-1)
+
+
 def _stream_agg_device_body(rows, carry_slice, min_window, *,
                             plan: ExecutionPlan):
     """Fan-out-on-device wire format: one row per record; the stage
@@ -283,7 +365,8 @@ def _stream_agg_device_body(rows, carry_slice, min_window, *,
     ks, ws = plan.key_space, plan.window
     last, nw, keys, vals, valid = _decode_device_rows(rows)
     buckets = stages.bucketize(keys, ks.num_buckets, hashed=ks.is_hashed)
-    values = jnp.stack([vals, jnp.ones_like(vals)], axis=-1)
+    values = _embed_channels(vals, plan.reduce.channels,
+                             plan.reduce.channel_base)
     slots, keys_f, vals_f, live, late, expanded = stages.window_fanout(
         last, nw, buckets, values, valid, ws.fanout, ws.n_slots, min_window)
     part = stages.shuffle_aggregate_windowed(
@@ -309,21 +392,90 @@ def _clear_flat_slot(flat: jax.Array, slot, num_buckets: int) -> jax.Array:
     return jax.lax.dynamic_update_slice(flat, zeros, start)
 
 
+@partial(jax.jit, static_argnums=(3,))
+def _gather_flat_cell(flat: jax.Array, slot, bucket,
+                      num_buckets: int) -> jax.Array:
+    start = (slot * num_buckets + bucket,) + (0,) * (flat.ndim - 1)
+    return jax.lax.dynamic_slice(flat, start, (1,) + flat.shape[1:])[0]
+
+
+@partial(jax.jit, static_argnums=(4,))
+def _merge_flat_cell(flat: jax.Array, src_slot, dst_slot, bucket,
+                     num_buckets: int) -> jax.Array:
+    src = (src_slot * num_buckets + bucket,) + (0,) * (flat.ndim - 1)
+    dst = (dst_slot * num_buckets + bucket,) + (0,) * (flat.ndim - 1)
+    row_shape = (1,) + flat.shape[1:]
+    src_row = jax.lax.dynamic_slice(flat, src, row_shape)
+    dst_row = jax.lax.dynamic_slice(flat, dst, row_shape)
+    flat = jax.lax.dynamic_update_slice(flat, src_row + dst_row, dst)
+    return jax.lax.dynamic_update_slice(
+        flat, jnp.zeros(row_shape, flat.dtype), src)
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _clear_flat_cell(flat: jax.Array, slot, bucket,
+                     num_buckets: int) -> jax.Array:
+    start = (slot * num_buckets + bucket,) + (0,) * (flat.ndim - 1)
+    return jax.lax.dynamic_update_slice(
+        flat, jnp.zeros((1,) + flat.shape[1:], flat.dtype), start)
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3))
+def _select_top_k(agg: jax.Array, num_buckets: int, k: int, kind: str):
+    return stages.top_k_buckets(agg[:num_buckets], k, kind)
+
+
+def _flat_carry(carry: jax.Array) -> tuple[jax.Array, tuple]:
+    """View a (possibly vmap-batched) aggregate carry as its flattened
+    (n_slots * num_buckets, channels) id space."""
+    shape = carry.shape
+    flat = carry.reshape((-1,) + shape[2:]) if carry.ndim == 3 else carry
+    return flat, shape
+
+
 def gather_window_slot(carry: jax.Array, slot: int,
                        num_buckets: int) -> np.ndarray:
     """Gather one finalized window's dense (num_buckets, channels) aggregate
     from the scattered carry.  Slices on device so only the window's rows —
     not the whole carry — cross to the host."""
-    flat = carry.reshape((-1,) + carry.shape[2:]) if carry.ndim == 3 else carry
+    flat, _ = _flat_carry(carry)
     return np.asarray(_gather_flat_slot(flat, jnp.int32(slot), num_buckets))
 
 
 def clear_window_slot_carry(carry: jax.Array, slot: int,
                             num_buckets: int) -> jax.Array:
     """Zero a finalized window's slice so its ring slot can be reused."""
-    shape = carry.shape
-    flat = carry.reshape((-1,) + shape[2:]) if carry.ndim == 3 else carry
+    flat, shape = _flat_carry(carry)
     flat = _clear_flat_slot(flat, jnp.int32(slot), num_buckets)
+    return flat.reshape(shape)
+
+
+def read_window_cell(carry: jax.Array, slot: int, bucket: int,
+                     num_buckets: int) -> np.ndarray:
+    """Read one (slot, bucket) cell's (channels,) aggregate — a finalized
+    session's entire state, since a session holds exactly one key."""
+    flat, _ = _flat_carry(carry)
+    return np.asarray(_gather_flat_cell(flat, jnp.int32(slot),
+                                        jnp.int32(bucket), num_buckets))
+
+
+def merge_window_cell_carry(carry: jax.Array, src_slot: int, dst_slot: int,
+                            bucket: int, num_buckets: int) -> jax.Array:
+    """Fold one cell's aggregate into another and zero the source — how a
+    bridging event merges two open sessions of the same key without the
+    carry ever leaving the device."""
+    flat, shape = _flat_carry(carry)
+    flat = _merge_flat_cell(flat, jnp.int32(src_slot), jnp.int32(dst_slot),
+                            jnp.int32(bucket), num_buckets)
+    return flat.reshape(shape)
+
+
+def clear_window_cell_carry(carry: jax.Array, slot: int, bucket: int,
+                            num_buckets: int) -> jax.Array:
+    """Zero one (slot, bucket) cell so a finalized session's cell frees."""
+    flat, shape = _flat_carry(carry)
+    flat = _clear_flat_cell(flat, jnp.int32(slot), jnp.int32(bucket),
+                            num_buckets)
     return flat.reshape(shape)
 
 
@@ -357,10 +509,14 @@ class CompiledStreamAggregate:
                            out_specs=(P(axis), P()), backend=backend,
                            mesh=mesh, jit=jit)
 
-    def init_carry(self, n_channels: int = 2, dtype=jnp.float32) -> jax.Array:
+    def init_carry(self, n_channels: int | None = None,
+                   dtype=jnp.float32) -> jax.Array:
         """Zeroed carried window state in the scattered layout ``step``
-        expects."""
+        expects.  Defaults to the plan's channel width, so plans sharing a
+        carry (joins) and single-plan streams use the same call."""
         plan = self.plan
+        if n_channels is None:
+            n_channels = plan.reduce.channels
         if self.backend == "vmap":
             return jnp.zeros((plan.n_workers, self._per_worker, n_channels),
                              dtype)
@@ -379,6 +535,40 @@ class CompiledStreamAggregate:
     def clear_slot(self, carry, slot: int) -> jax.Array:
         return clear_window_slot_carry(carry, slot,
                                        self.plan.key_space.num_buckets)
+
+    # -- cell ops (session windows: one key per window) ----------------------
+    def read_cell(self, carry, slot: int, bucket: int) -> np.ndarray:
+        return read_window_cell(carry, slot, bucket,
+                                self.plan.key_space.num_buckets)
+
+    def merge_cell(self, carry, src_slot: int, dst_slot: int,
+                   bucket: int) -> jax.Array:
+        return merge_window_cell_carry(carry, src_slot, dst_slot, bucket,
+                                       self.plan.key_space.num_buckets)
+
+    def clear_cell(self, carry, slot: int, bucket: int) -> jax.Array:
+        return clear_window_cell_carry(carry, slot, bucket,
+                                       self.plan.key_space.num_buckets)
+
+    # -- fixed-capacity heavy hitters ----------------------------------------
+    def top_k_slot(self, carry, slot: int, kind: str | None = None
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Select the plan's top-k buckets of one finalized window on
+        device: gather the slot's dense aggregate, rank per ``kind``
+        (default: the plan's ``reduce_fn`` kind), and keep the k largest.
+        Returns ``(bucket_ids, values, valid)`` of length ``plan.reduce.k``.
+        """
+        rs = self.plan.reduce
+        if rs.k < 1:
+            raise ValueError("plan has no top-k capacity (reduce.k < 1)")
+        if kind is None:
+            kind = rs.reduce_fn if isinstance(rs.reduce_fn, str) else "sum"
+        flat, _ = _flat_carry(carry)
+        agg = _gather_flat_slot(flat, jnp.int32(slot),
+                                self.plan.key_space.num_buckets)
+        ids, vals, valid = _select_top_k(agg, self.plan.key_space.num_buckets,
+                                         rs.k, kind)
+        return np.asarray(ids), np.asarray(vals), np.asarray(valid)
 
 
 def _stream_group_body(rows, carry, min_window, *, plan: ExecutionPlan):

@@ -38,6 +38,10 @@ INVALID = jnp.int32(-1)
 INT32_MAX = jnp.iinfo(jnp.int32).max
 
 
+#: raw hashed-key ids must survive the float32 wire exactly
+RAW_KEY_BITS = 24
+
+
 def device_hash(keys: jax.Array) -> jax.Array:
     """murmur3 finalizer over int32 keys — stable, well-mixed, vectorized.
 
@@ -50,6 +54,34 @@ def device_hash(keys: jax.Array) -> jax.Array:
     h = h * jnp.uint32(0xC2B2AE35)
     h = h ^ (h >> 16)
     return h
+
+
+def fold_key24(key) -> int:
+    """Stable host-side key → 24-bit raw id (FNV-1a 64, xor-folded).
+
+    Small enough to ride the float32 wire exactly; the device hashes the
+    raw id into buckets with ``device_hash``.  This is the single host
+    entry point for open key domains — the streaming coordinator and any
+    pipeline front end must fold keys here so labels and device buckets
+    can never drift.
+    """
+    h = 0xCBF29CE484222325
+    for b in str(key).encode():
+        h = ((h ^ b) * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return (h ^ (h >> 24) ^ (h >> 48)) & ((1 << RAW_KEY_BITS) - 1)
+
+
+def host_bucket(raw: int, num_buckets: int) -> int:
+    """Host mirror of ``device_hash(raw) % num_buckets`` — bit-exact, so
+    host-side bookkeeping (bucket labels, session cells) addresses the same
+    bucket the device folds the record into."""
+    h = raw & 0xFFFFFFFF
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & 0xFFFFFFFF
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & 0xFFFFFFFF
+    h ^= h >> 16
+    return h % num_buckets
 
 
 def hash_partition(keys: jax.Array, n_partitions: int) -> jax.Array:
@@ -381,6 +413,48 @@ def apply_reduce_fn(reduce_fn, keys: jax.Array, values: jax.Array,
     if isinstance(reduce_fn, str):
         return segment_reduce(reduce_fn, keys, values, starts)
     return reduce_fn(keys, values, starts)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-capacity top-k / heavy hitters over a dense aggregate
+# ---------------------------------------------------------------------------
+
+def bucket_rank_values(agg: jax.Array, kind: str) -> jax.Array:
+    """Per-bucket ranking value from a ``(buckets, >=2)`` [sum, count]
+    aggregate (or a 1-D sum vector): the quantity ``top_k_buckets`` orders
+    by.  ``kind`` ∈ count | sum | mean (1-D input ranks by the vector)."""
+    if agg.ndim == 1:
+        return agg
+    sums, counts = agg[..., 0], agg[..., 1]
+    if kind == "count":
+        return counts
+    if kind == "sum":
+        return sums
+    if kind == "mean":
+        return sums / jnp.maximum(counts, 1.0)
+    raise ValueError(f"unknown top-k ranking kind {kind!r}")
+
+
+def top_k_buckets(agg: jax.Array, k: int, kind: str = "sum"
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Exact top-k over a dense per-bucket aggregate — the heavy-hitters
+    reduce as a fixed-capacity selection instead of a full sort + truncate.
+
+    On closed (dense) key domains this is exact; on hashed domains it ranks
+    buckets, i.e. heavy hitters up to collision merging.  Empty buckets
+    (count 0, or value 0 for 1-D aggregates) never outrank occupied ones and
+    come back invalid.  Ties break toward the lower bucket id
+    (``jax.lax.top_k`` order), deterministically.
+
+    Returns ``(bucket_ids, values, valid)`` of length ``k``.
+    """
+    values = bucket_rank_values(agg, kind)
+    occupied = (agg[..., 1] > 0) if agg.ndim > 1 else (values != 0)
+    masked = jnp.where(occupied, values, -jnp.inf)
+    top_vals, top_ids = jax.lax.top_k(masked, k)
+    valid = top_vals > -jnp.inf
+    return (top_ids.astype(jnp.int32),
+            jnp.where(valid, top_vals, 0.0), valid)
 
 
 # ---------------------------------------------------------------------------

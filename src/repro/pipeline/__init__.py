@@ -1,0 +1,27 @@
+"""Declarative pipeline dataflow — the one front door for batch + streaming.
+
+``Pipeline.from_source(...).map(fn).key_by(...).window(...).reduce(...)
+.top_k(k).join(other).sink(prefix).build(...)`` declares a dataflow graph;
+``build()`` validates it and lowers every stage chain to ``repro.engine``
+execution plans (fusing adjacent maps, compiling a windowed join as two
+plans sharing one carry); the built program then runs in batch mode (one
+drive over an object-store prefix) or streaming mode (micro-batches via
+the ``StreamingCoordinator``) with bit-identical per-window results.
+
+The older entry points are thin shims over this package: ``mapreduce()``
+builds a two-node array pipeline, and ``StreamingConfig`` lowers to a
+single-chain record pipeline.
+
+Layout: ``graph`` (the chainable node vocabulary), ``lower`` (validation +
+plan lowering → ``BuiltPipeline``), ``runtime`` (the batch and streaming
+drivers plus the two-log ``JoinSource``).
+"""
+
+from .graph import Pipeline, PipelineError, Windowing
+from .lower import BuiltPipeline, EmitSpec, SidePlan, SourceSpec
+from .runtime import JoinSource, resolve_source
+
+__all__ = [
+    "Pipeline", "PipelineError", "Windowing", "BuiltPipeline", "EmitSpec",
+    "SidePlan", "SourceSpec", "JoinSource", "resolve_source",
+]

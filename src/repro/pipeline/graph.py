@@ -1,0 +1,186 @@
+"""The declarative dataflow graph — the one front door for batch + streaming.
+
+A ``Pipeline`` is an immutable chain of nodes::
+
+    Pipeline.from_source(prefix="streams/gps")
+        .map(fn)                       # host record transform (fused)
+        .key_by(lambda r: r[1])
+        .window(Windowing.tumbling(60.0))
+        .reduce("mean")
+        .top_k(8)                      # optional: heavy hitters per window
+        .sink("stream-output/")
+        .build(num_buckets=64, n_workers=8)
+
+Each method returns a *new* pipeline (graphs are values, shareable and
+re-buildable), following the declarative-chain style of Bauplan-like FaaS
+pipelines rather than per-invocation job configs.  ``build()`` validates
+the graph and lowers every stage chain to ``repro.engine`` execution plans
+(``repro.pipeline.lower``); the built artifact then runs the *same* graph
+in batch mode (one drive over an object-store prefix) or streaming mode
+(micro-batches through the ``StreamingCoordinator``) with bit-identical
+per-window results.
+
+Two source families share the grammar:
+
+* **record pipelines** — events ``(event_time, key, value)`` from an
+  object-store event log (``prefix=``) or memory (``records=``); maps are
+  host record transforms (return a record, ``None`` to filter, or an
+  iterable to flat-map) and adjacent maps fuse into one stage; ``window``
+  is required before ``reduce``.
+* **array pipelines** — device shards (``shards=``); the single ``map`` is
+  the device UDF ``shard -> (keys, values, valid)`` and the chain lowers
+  to one batch ``ExecutionPlan`` (no window) — ``core.mapreduce`` is now a
+  two-node pipeline of this family.
+
+``a.join(b, on=...)`` makes a two-input node: both sides must be windowed
+identically and reduced with aggregate kinds; the join lowers to two plans
+sharing one carry (disjoint channel pairs) and emits, per window, every
+key present on both sides with ``[left_aggregate, right_aggregate]``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable
+
+__all__ = ["Pipeline", "Windowing", "PipelineError"]
+
+
+class PipelineError(ValueError):
+    """A malformed pipeline graph, rejected at ``build()``."""
+
+
+@dataclass(frozen=True)
+class Windowing:
+    """Declarative window description — the graph-level twin of the
+    engine's ``WindowSpec``."""
+
+    kind: str                      # "tumbling" | "sliding" | "session"
+    size: float = 0.0
+    slide: float | None = None
+    gap: float = 0.0
+
+    @classmethod
+    def tumbling(cls, size: float) -> "Windowing":
+        return cls("tumbling", size=size)
+
+    @classmethod
+    def sliding(cls, size: float, slide: float) -> "Windowing":
+        return cls("sliding", size=size, slide=slide)
+
+    @classmethod
+    def session(cls, gap: float) -> "Windowing":
+        return cls("session", gap=gap)
+
+    @property
+    def is_session(self) -> bool:
+        return self.kind == "session"
+
+
+@dataclass(frozen=True)
+class Node:
+    """One graph node.  ``right`` holds the other input of a join."""
+
+    op: str
+    params: dict = field(default_factory=dict)
+    right: "Pipeline | None" = None
+
+
+@dataclass(frozen=True)
+class Pipeline:
+    """An immutable dataflow graph under construction."""
+
+    nodes: tuple[Node, ...] = ()
+
+    # -- sources ---------------------------------------------------------------
+    @classmethod
+    def from_source(cls, *, prefix: str | None = None,
+                    records: Iterable | None = None,
+                    shards: Any = None,
+                    batch_records: int = 1024) -> "Pipeline":
+        """Root a pipeline at a source: an event-log ``prefix`` in the
+        object store, in-memory ``records``, device ``shards`` (array
+        pipelines), or nothing — an *unbound* source whose data arrives at
+        run time (how the deprecated ``StreamingConfig`` shim lowers)."""
+        given = [x is not None for x in (prefix, records, shards)]
+        if sum(given) > 1:
+            raise PipelineError("pass at most one of prefix/records/shards")
+        if batch_records < 1:
+            raise PipelineError("batch_records must be >= 1")
+        kind = ("log" if prefix is not None else
+                "records" if records is not None else
+                "array" if shards is not None else "unbound")
+        params = {"kind": kind, "prefix": prefix, "shards": shards,
+                  "records": list(records) if records is not None else None,
+                  "batch_records": batch_records}
+        return cls((Node("source", params),))
+
+    # -- chaining --------------------------------------------------------------
+    def _append(self, node: Node) -> "Pipeline":
+        return Pipeline(self.nodes + (node,))
+
+    def _has(self, op: str) -> bool:
+        return any(n.op == op for n in self.nodes)
+
+    def map(self, fn: Callable) -> "Pipeline":
+        """Record pipelines: ``fn(record) -> record | None | iterable`` —
+        a transform, filter, or flat-map over ``(ts, key, value)`` tuples;
+        adjacent maps fuse into one stage at build.  Array pipelines: the
+        device UDF ``shard -> (keys, values, valid)``."""
+        return self._append(Node("map", {"fn": fn}))
+
+    def key_by(self, fn: Callable | None = None) -> "Pipeline":
+        """Declare the shuffle key: ``fn(record) -> raw key`` (default:
+        the record's second field)."""
+        return self._append(Node("key_by", {"fn": fn}))
+
+    def window(self, w: "Windowing | float") -> "Pipeline":
+        """Event-time windows; a bare float means tumbling windows of that
+        size."""
+        if not isinstance(w, Windowing):
+            w = Windowing.tumbling(float(w))
+        return self._append(Node("window", {"windowing": w}))
+
+    def reduce(self, spec: str | Callable = "count", *, mode: str | None = None,
+               capacity: int = 0) -> "Pipeline":
+        """How each (window ×) key group reduces.
+
+        ``spec`` is an aggregate kind (``count | sum | mean``), a group
+        segment-reducer kind name, or a callable group reducer (the
+        ``(keys, values, starts) -> (gk, gv, gvalid)`` contract).  A
+        callable implies ``mode="group"``; group mode needs ``capacity``
+        (records buffered per worker per window slot)."""
+        if mode is None:
+            mode = "group" if callable(spec) else "aggregate"
+        return self._append(Node("reduce", {"spec": spec, "mode": mode,
+                                            "capacity": capacity}))
+
+    def top_k(self, k: int, by: str | None = None) -> "Pipeline":
+        """Keep only the k heaviest keys per window, ranked ``by`` an
+        aggregate kind (default: the reduce node's kind) — exact on closed
+        (dense) key domains, heavy-hitters-up-to-collisions on hashed."""
+        if k < 1:
+            raise PipelineError("top_k needs k >= 1")
+        return self._append(Node("top_k", {"k": k, "by": by}))
+
+    def join(self, other: "Pipeline", on: Callable | None = None
+             ) -> "Pipeline":
+        """Windowed equi-join: per window, emit every key present on both
+        sides with both sides' aggregates.  Both sides must be reduced
+        record pipelines over the same window.  ``on`` overrides both
+        sides' ``key_by``."""
+        if not isinstance(other, Pipeline):
+            raise PipelineError("join expects another Pipeline")
+        return self._append(Node("join", {"on": on}, right=other))
+
+    def sink(self, prefix: str) -> "Pipeline":
+        """Where finalized windows land in the object store."""
+        return self._append(Node("sink", {"prefix": prefix}))
+
+    # -- building --------------------------------------------------------------
+    def build(self, **opts):
+        """Validate the graph and lower it to execution plans.  Returns a
+        ``BuiltPipeline`` that runs in batch or streaming mode — see
+        ``repro.pipeline.lower.build_pipeline`` for the options."""
+        from .lower import build_pipeline
+        return build_pipeline(self, **opts)

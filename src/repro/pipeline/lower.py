@@ -1,0 +1,541 @@
+"""Graph validation and lowering — pipeline nodes → execution plans.
+
+``build_pipeline`` walks a ``Pipeline`` graph, validates the stage grammar
+(one source; maps fuse; ``window`` before ``reduce``; ``top_k`` only over
+aggregate reduces; joins windowed and reduced on both sides), and lowers
+each stage chain onto ``repro.engine``:
+
+* record chains → one ``ExecutionPlan`` per side, compiled once; adjacent
+  ``map`` nodes fuse into a single host transform (one stage, not N);
+* a windowed join → **two plans sharing one carry**: each side's plan folds
+  its ``[value, 1]`` pair into a disjoint channel pair
+  (``ReduceSpec.channel_base``) of the same scattered aggregate carry;
+* ``Windowing.session(gap)`` → the engine's ``WindowSpec.session`` variant
+  (host-wire fold, cell-addressed carry);
+* ``top_k(k)`` → ``ReduceSpec(mode="top_k")`` — the aggregate fold plus the
+  fixed-capacity heavy-hitters selection at finalization;
+* array chains → one batch ``ExecutionPlan`` (no window), the lowering
+  ``core.mapreduce`` rides on.
+
+The result is a ``BuiltPipeline`` — the compiled program the
+``StreamingCoordinator`` drives (streaming mode) and the batch runner
+drives once over a store prefix (batch mode), with bit-identical
+per-window output bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import uuid
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from ..engine.plan import ExecutionPlan, KeySpace, ReduceSpec, WindowSpec
+from ..engine.stages import SEGMENT_REDUCE_KINDS
+from ..streaming.sessions import SessionTracker
+from ..streaming.state import WindowTracker
+from ..streaming.windows import SlidingWindows, TumblingWindows
+from .graph import Pipeline, PipelineError, Windowing
+
+AGGREGATE_KINDS = ("count", "sum", "mean")
+
+#: canonical stage order within one chain (source implicit at rank 0)
+_STAGE_RANK = {"source": 0, "map": 1, "key_by": 2, "window": 3,
+               "reduce": 4, "top_k": 5, "join": 6, "sink": 7}
+
+
+def _default_key(rec) -> Any:
+    return rec[1]
+
+
+def _default_value(rec) -> float:
+    return float(rec[2])
+
+
+def fuse_maps(fns: list[Callable]) -> Callable | None:
+    """Fuse adjacent record maps into one stage: apply in order, treating
+    ``None`` as filter and an iterable of records as flat-map."""
+    if not fns:
+        return None
+    if len(fns) == 1:
+        return fns[0]
+
+    def fused(rec):
+        pending = [rec]
+        for fn in fns:
+            nxt = []
+            for r in pending:
+                out = fn(r)
+                if out is None:
+                    continue
+                if isinstance(out, tuple):
+                    nxt.append(out)
+                else:
+                    nxt.extend(out)
+            pending = nxt
+        return pending
+
+    return fused
+
+
+@dataclass(frozen=True)
+class SourceSpec:
+    """Where one side's records come from (bound at build or at run)."""
+
+    kind: str                       # "log" | "records" | "array" | "unbound"
+    prefix: str | None = None
+    records: list | None = None
+    shards: Any = None
+    batch_records: int = 1024
+
+
+@dataclass(frozen=True)
+class _Chain:
+    """One parsed linear chain (a join has two)."""
+
+    source: SourceSpec
+    transform: Callable | None
+    key_fn: Callable
+    value_fn: Callable
+    windowing: Windowing | None
+    reduce_spec: str | Callable
+    reduce_mode: str
+    capacity: int
+
+
+@dataclass(frozen=True)
+class SidePlan:
+    """One side's lowered stage chain: the fused host transform plus the
+    compiled execution plan folding into its channel pair of the carry."""
+
+    name: str
+    source: SourceSpec
+    transform: Callable | None
+    key_fn: Callable
+    value_fn: Callable
+    compiled: Any
+    channel_base: int
+
+
+@dataclass(frozen=True)
+class EmitSpec:
+    """How a finalized window turns into output records."""
+
+    kind: str                       # "aggregate" | "group" | "top_k" | "join"
+    aggregation: str = "count"      # aggregate / session emission kind
+    reduce_fn: str | Callable = "sum"
+    k: int = 0
+    rank_by: str = "sum"            # top_k ranking kind
+    join_aggs: tuple = ("sum", "sum")
+
+
+@dataclass
+class BuiltPipeline:
+    """A validated, lowered pipeline — the compiled program both execution
+    modes drive.  ``run_streaming`` hands it to the ``StreamingCoordinator``;
+    ``run_batch`` drives the same program once over the full input."""
+
+    sides: tuple[SidePlan, ...]
+    emit: EmitSpec
+    window: Windowing | None        # None → array (pure batch) pipeline
+    mode: str                       # fold machinery: "aggregate" | "group"
+    num_buckets: int
+    n_workers: int
+    n_slots: int
+    batch_records: int
+    key_space: str
+    fanout: str
+    allowed_lateness: float
+    checkpoint_interval: int
+    backend: str
+    output_prefix: str
+    job_id: str
+    capacity: int
+    batch_plan: Any = None          # array pipelines: CompiledBatchPlan
+
+    @property
+    def is_array(self) -> bool:
+        return self.window is None
+
+    @property
+    def is_join(self) -> bool:
+        return len(self.sides) == 2
+
+    def assigner(self):
+        """Fixed-window assigner (None for session windows)."""
+        w = self.window
+        if w is None or w.is_session:
+            return None
+        if w.kind == "tumbling":
+            return TumblingWindows(w.size)
+        return SlidingWindows(w.size, w.slide)
+
+    def make_tracker(self):
+        if self.window.is_session:
+            return SessionTracker(self.window.gap, self.n_slots,
+                                  self.allowed_lateness)
+        return WindowTracker(self.assigner(), self.n_slots,
+                             self.allowed_lateness)
+
+    def one_shot(self, total_records: int) -> "BuiltPipeline":
+        """The same program re-sized to fold the whole input as one batch
+        with checkpointing off — how ``run_batch`` drives it."""
+        return dataclasses.replace(self, batch_records=max(total_records, 1),
+                                   checkpoint_interval=0)
+
+    # -- execution -------------------------------------------------------------
+    def run_streaming(self, store, meta, *, source=None, sources=None,
+                      bus=None, autoscaler=None, announce: bool = True,
+                      flush: bool = True):
+        """Drive the program continuously over micro-batches.  Sources
+        default to the graph's (``prefix=``/``records=``); joins take
+        ``sources=(left, right)`` overrides.  Returns a ``StreamReport``."""
+        from .runtime import run_streaming
+        return run_streaming(self, store, meta, source=source,
+                             sources=sources, bus=bus, autoscaler=autoscaler,
+                             announce=announce, flush=flush)
+
+    def run_batch(self, store=None, *, data=None, source=None, sources=None):
+        """Drive the same program once over the full input (batch mode):
+        array pipelines run the batch plan over ``data``; windowed
+        pipelines fold everything in one pass and flush — emitting
+        bit-identical window bytes to the streaming mode.  Returns
+        ``(outputs, report)`` for windowed pipelines (outputs keyed by
+        object-store key) or ``(result, stats)`` for array pipelines."""
+        from .runtime import run_batch
+        return run_batch(self, store, data=data, source=source,
+                         sources=sources)
+
+
+# ---------------------------------------------------------------------------
+# Parsing + validation
+# ---------------------------------------------------------------------------
+
+def _parse_chain(p: Pipeline, *, side: str, allow_join: bool,
+                 on: Callable | None = None):
+    """Walk one pipeline's nodes; returns (chain, join_node, sink_prefix,
+    top_node)."""
+    if not p.nodes or p.nodes[0].op != "source":
+        raise PipelineError(f"{side}: a pipeline starts at "
+                            f"Pipeline.from_source(...)")
+    rank = 0
+    maps: list[Callable] = []
+    key_fn = None
+    windowing = None
+    reduce_node = None
+    top_node = None
+    join_node = None
+    sink_prefix = None
+    src = p.nodes[0].params
+    for node in p.nodes[1:]:
+        r = _STAGE_RANK.get(node.op)
+        if r is None:
+            raise PipelineError(f"unknown node op {node.op!r}")
+        if node.op == "source":
+            raise PipelineError(f"{side}: more than one source")
+        if r < rank or (r == rank and node.op != "map"):
+            raise PipelineError(
+                f"{side}: {node.op!r} cannot follow a "
+                f"{[k for k, v in _STAGE_RANK.items() if v == rank][0]!r} "
+                f"node — stage order is source → map* → key_by → window → "
+                f"reduce → top_k → join → sink")
+        rank = r
+        if node.op == "map":
+            maps.append(node.params["fn"])
+        elif node.op == "key_by":
+            key_fn = node.params["fn"]
+        elif node.op == "window":
+            windowing = node.params["windowing"]
+        elif node.op == "reduce":
+            reduce_node = node.params
+        elif node.op == "top_k":
+            top_node = node.params
+        elif node.op == "join":
+            if not allow_join:
+                raise PipelineError(f"{side}: nested joins are not "
+                                    f"supported")
+            join_node = node
+        elif node.op == "sink":
+            sink_prefix = node.params["prefix"]
+    if reduce_node is None:
+        raise PipelineError(f"{side}: a pipeline needs a reduce node")
+    if top_node is not None and join_node is not None:
+        raise PipelineError("top_k and join cannot combine (rank the join "
+                            "output downstream instead)")
+    chain = _Chain(
+        source=SourceSpec(kind=src["kind"], prefix=src["prefix"],
+                          records=src["records"], shards=src["shards"],
+                          batch_records=src["batch_records"]),
+        transform=fuse_maps(maps),
+        key_fn=on or key_fn or _default_key,
+        value_fn=_default_value,
+        windowing=windowing,
+        reduce_spec=reduce_node["spec"],
+        reduce_mode=reduce_node["mode"],
+        capacity=reduce_node["capacity"])
+    return chain, (join_node if allow_join else None), sink_prefix, top_node
+
+
+def _check_windowing(w: Windowing, n_slots: int, lateness: float) -> None:
+    if w.kind == "tumbling":
+        if w.size <= 0:
+            raise PipelineError("tumbling windows need a positive size")
+    elif w.kind == "sliding":
+        if w.size <= 0 or not w.slide or w.slide <= 0:
+            raise PipelineError("sliding windows need positive size and "
+                                "slide")
+        if w.slide > w.size:
+            raise PipelineError("slide > size leaves event-time gaps")
+    elif w.kind == "session":
+        if w.gap <= 0:
+            raise PipelineError("session windows need a positive gap")
+        return
+    else:
+        raise PipelineError(f"unknown windowing kind {w.kind!r}")
+    # the ring must hold every window open at one instant
+    step = w.slide or w.size
+    need = math.ceil((w.size + lateness) / step) + 1
+    if need > n_slots:
+        raise PipelineError(
+            f"n_slots={n_slots} cannot hold the window span; need >= "
+            f"{need} for size={w.size}, slide={step}, lateness={lateness}")
+
+
+def _check_reduce(chain: _Chain, *, in_join: bool) -> None:
+    spec, mode = chain.reduce_spec, chain.reduce_mode
+    if mode == "aggregate":
+        if not isinstance(spec, str) or spec not in AGGREGATE_KINDS:
+            raise PipelineError(f"aggregate reduce must be one of "
+                                f"{AGGREGATE_KINDS}, got {spec!r}")
+    elif mode == "group":
+        if in_join:
+            raise PipelineError("join sides must reduce in aggregate mode")
+        if chain.capacity < 1:
+            raise PipelineError("group mode needs capacity >= 1")
+        if isinstance(spec, str) and spec not in SEGMENT_REDUCE_KINDS:
+            raise PipelineError(f"group reduce kind must be a callable or "
+                                f"one of {SEGMENT_REDUCE_KINDS}")
+    else:
+        raise PipelineError(f"unknown reduce mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def _key_space_obj(key_space, num_buckets: int,
+                   track_collisions: bool) -> KeySpace:
+    """Normalize the build option: a ``KeySpace`` instance passes through
+    verbatim (callers control collision tracking); a kind string builds
+    one."""
+    if isinstance(key_space, KeySpace):
+        return key_space
+    if key_space == "hashed":
+        return KeySpace.hashed(num_buckets,
+                               track_collisions=track_collisions)
+    return KeySpace.dense(num_buckets)
+
+
+def _lower_side(chain: _Chain, name: str, *, num_buckets: int,
+                n_workers: int, n_slots: int, key_space, fanout: str,
+                backend: str, mesh, jit: bool, combine_fn,
+                axis_name: str, channels: int, channel_base: int,
+                top_k: int = 0, rank_by: str = "sum") -> SidePlan:
+    # streaming sides default collision tracking off: the coordinator's
+    # host-side label table already reports collisions exactly
+    ks = _key_space_obj(key_space, num_buckets, track_collisions=False)
+    w = chain.windowing
+    if w.is_session:
+        window = WindowSpec.session(w.gap, n_slots=n_slots)
+    else:
+        window = WindowSpec(size=w.size, slide=w.slide, n_slots=n_slots,
+                            fanout_on_device=fanout == "device")
+    if chain.reduce_mode == "group":
+        reduce = ReduceSpec("group", reduce_fn=chain.reduce_spec,
+                            capacity=chain.capacity)
+    elif top_k:
+        reduce = ReduceSpec(mode="top_k", reduce_fn=rank_by, k=top_k,
+                            combine_fn=combine_fn, channels=channels,
+                            channel_base=channel_base)
+    else:
+        reduce = ReduceSpec("aggregate", combine_fn=combine_fn,
+                            channels=channels, channel_base=channel_base)
+    plan = ExecutionPlan(key_space=ks, reduce=reduce, n_workers=n_workers,
+                         window=window, axis_name=axis_name)
+    compiled = plan.compile(backend=backend, mesh=mesh, jit=jit)
+    return SidePlan(name=name, source=chain.source,
+                    transform=chain.transform, key_fn=chain.key_fn,
+                    value_fn=chain.value_fn, compiled=compiled,
+                    channel_base=channel_base)
+
+
+def _lower_array(chain: _Chain, top_node, *, num_buckets: int, n_workers: int,
+                 key_space, backend: str, mesh, data_spec, finalize: bool,
+                 jit: bool, combine_fn, axis_name: str) -> tuple[Any, EmitSpec]:
+    if chain.transform is None:
+        raise PipelineError("array pipelines need exactly one map node "
+                            "(the device UDF)")
+    ks = _key_space_obj(key_space, num_buckets, track_collisions=True)
+    if top_node is not None:
+        k = top_node["k"]
+        reduce = ReduceSpec(mode="top_k", reduce_fn=top_node["by"] or "sum",
+                            k=k, combine_fn=combine_fn)
+        emit = EmitSpec("top_k", k=k, rank_by=top_node["by"] or "sum")
+    elif chain.reduce_mode == "group":
+        reduce = ReduceSpec("group", reduce_fn=chain.reduce_spec,
+                            capacity=chain.capacity)
+        emit = EmitSpec("group", reduce_fn=chain.reduce_spec)
+    else:
+        reduce = ReduceSpec("aggregate", combine_fn=combine_fn)
+        emit = EmitSpec("aggregate", aggregation=chain.reduce_spec)
+    plan = ExecutionPlan(key_space=ks, reduce=reduce, n_workers=n_workers,
+                         axis_name=axis_name)
+    compiled = plan.compile(chain.transform, backend=backend, mesh=mesh,
+                            data_spec=data_spec, finalize=finalize, jit=jit)
+    return compiled, emit
+
+
+def build_pipeline(p: Pipeline, *, num_buckets: int = 128, n_workers: int = 8,
+                   n_slots: int = 8,
+                   key_space: "str | KeySpace" = "dense",
+                   fanout: str = "device", allowed_lateness: float = 0.0,
+                   backend: str = "vmap", checkpoint_interval: int = 1,
+                   batch_records: int | None = None, job_id: str | None = None,
+                   output_prefix: str | None = None, mesh=None, data_spec=None,
+                   finalize: bool = True, jit: bool = True, combine_fn=None,
+                   axis_name: str = "workers") -> BuiltPipeline:
+    """Validate ``p`` and lower it to a runnable ``BuiltPipeline``.
+    ``key_space`` is ``"dense"`` / ``"hashed"`` or a ``KeySpace`` instance
+    (passed to the plans verbatim, e.g. to control collision tracking)."""
+    if isinstance(key_space, KeySpace):
+        num_buckets = key_space.num_buckets
+        key_space_str = key_space.mode
+    elif key_space in ("dense", "hashed"):
+        key_space_str = key_space
+    else:
+        raise PipelineError("key_space must be 'dense', 'hashed', or a "
+                            "KeySpace")
+    if fanout not in ("device", "host"):
+        raise PipelineError("fanout must be 'device' or 'host'")
+    if checkpoint_interval < 1:
+        raise PipelineError("checkpoint_interval must be >= 1")
+    chain, join_node, sink_prefix, top_node = _parse_chain(
+        p, side="pipeline", allow_join=True)
+    job_id = job_id or "p" + uuid.uuid4().hex[:11]
+    output_prefix = output_prefix or sink_prefix or "stream-output/"
+    batch_records = batch_records or chain.source.batch_records
+
+    # -- array (pure batch) pipelines ----------------------------------------
+    if chain.source.kind == "array":
+        if chain.windowing is not None or join_node is not None:
+            raise PipelineError("array pipelines are one-shot batch jobs: "
+                                "no window/join nodes")
+        if chain.reduce_mode != "group":
+            _ = chain.reduce_spec  # any aggregate kind labels the output
+        batch_plan, emit = _lower_array(
+            chain, top_node, num_buckets=num_buckets, n_workers=n_workers,
+            key_space=key_space, backend=backend, mesh=mesh,
+            data_spec=data_spec, finalize=finalize, jit=jit,
+            combine_fn=combine_fn, axis_name=axis_name)
+        side = SidePlan("main", chain.source, chain.transform, chain.key_fn,
+                        chain.value_fn, batch_plan, 0)
+        return BuiltPipeline(
+            sides=(side,), emit=emit, window=None, mode=chain.reduce_mode,
+            num_buckets=num_buckets, n_workers=n_workers, n_slots=n_slots,
+            batch_records=batch_records, key_space=key_space_str,
+            fanout=fanout,
+            allowed_lateness=allowed_lateness,
+            checkpoint_interval=checkpoint_interval, backend=backend,
+            output_prefix=output_prefix, job_id=job_id,
+            capacity=chain.capacity, batch_plan=batch_plan)
+
+    # -- record pipelines -----------------------------------------------------
+    if chain.windowing is None:
+        raise PipelineError("record pipelines need a window node before "
+                            "reduce (use Windowing.tumbling(...) with a "
+                            "large size for a single global window)")
+    _check_windowing(chain.windowing, n_slots, allowed_lateness)
+    _check_reduce(chain, in_join=join_node is not None)
+    w = chain.windowing
+    if w.is_session:
+        if chain.reduce_mode != "aggregate":
+            raise PipelineError("session windows reduce in aggregate mode "
+                                "only")
+        if top_node is not None:
+            raise PipelineError("top_k over session windows is meaningless "
+                                "(a session holds one key)")
+        if join_node is not None:
+            raise PipelineError("session windows cannot join (window "
+                                "bounds are per-key)")
+    if chain.reduce_mode == "group" and fanout != "device":
+        raise PipelineError("group mode runs with fanout='device'")
+    if top_node is not None and chain.reduce_mode != "aggregate":
+        raise PipelineError("top_k ranks an aggregate reduce")
+    if chain.reduce_mode == "aggregate" and num_buckets % n_workers != 0:
+        raise PipelineError("num_buckets must divide by n_workers so "
+                            "window slices stay aligned to the scattered "
+                            "carry")
+
+    if join_node is not None:
+        if fanout != "device":
+            raise PipelineError("joins run with fanout='device'")
+        on = join_node.params["on"]
+        rchain, _, rsink, rtop = _parse_chain(join_node.right, side="right",
+                                              allow_join=False, on=on)
+        if rsink is not None or rtop is not None:
+            raise PipelineError("the join's right side ends at its reduce "
+                                "node")
+        if rchain.windowing != chain.windowing:
+            raise PipelineError("join sides must share one window "
+                                f"({chain.windowing} != {rchain.windowing})")
+        if rchain.source.kind == "array":
+            raise PipelineError("join sides are record pipelines")
+        _check_reduce(rchain, in_join=True)
+        if on is not None:
+            chain = dataclasses.replace(chain, key_fn=on)
+        common = dict(num_buckets=num_buckets, n_workers=n_workers,
+                      n_slots=n_slots, key_space=key_space, fanout=fanout,
+                      backend=backend, mesh=mesh, jit=jit,
+                      combine_fn=combine_fn, axis_name=axis_name, channels=4)
+        sides = (_lower_side(chain, "left", channel_base=0, **common),
+                 _lower_side(rchain, "right", channel_base=2, **common))
+        emit = EmitSpec("join", join_aggs=(chain.reduce_spec,
+                                           rchain.reduce_spec))
+        return BuiltPipeline(
+            sides=sides, emit=emit, window=chain.windowing, mode="aggregate",
+            num_buckets=num_buckets, n_workers=n_workers, n_slots=n_slots,
+            batch_records=batch_records, key_space=key_space_str,
+            fanout=fanout,
+            allowed_lateness=allowed_lateness,
+            checkpoint_interval=checkpoint_interval, backend=backend,
+            output_prefix=output_prefix, job_id=job_id, capacity=0)
+
+    top_k, rank_by = 0, "sum"
+    if top_node is not None:
+        if top_node["k"] > num_buckets:
+            raise PipelineError("top_k k exceeds the bucket space")
+        top_k = top_node["k"]
+        rank_by = top_node["by"] or chain.reduce_spec
+        if rank_by not in AGGREGATE_KINDS:
+            raise PipelineError(f"top_k ranks by one of {AGGREGATE_KINDS}")
+    side = _lower_side(chain, "main", num_buckets=num_buckets,
+                       n_workers=n_workers, n_slots=n_slots,
+                       key_space=key_space, fanout=fanout, backend=backend,
+                       mesh=mesh, jit=jit, combine_fn=combine_fn,
+                       axis_name=axis_name, channels=2, channel_base=0,
+                       top_k=top_k, rank_by=rank_by)
+    if top_node is not None:
+        emit = EmitSpec("top_k", aggregation=chain.reduce_spec,
+                        k=top_k, rank_by=rank_by)
+    elif chain.reduce_mode == "group":
+        emit = EmitSpec("group", reduce_fn=chain.reduce_spec)
+    else:
+        emit = EmitSpec("aggregate", aggregation=chain.reduce_spec)
+    return BuiltPipeline(
+        sides=(side,), emit=emit, window=chain.windowing,
+        mode=chain.reduce_mode, num_buckets=num_buckets, n_workers=n_workers,
+        n_slots=n_slots, batch_records=batch_records,
+        key_space=key_space_str, fanout=fanout, allowed_lateness=allowed_lateness,
+        checkpoint_interval=checkpoint_interval, backend=backend,
+        output_prefix=output_prefix, job_id=job_id, capacity=chain.capacity)

@@ -1,0 +1,142 @@
+"""Executing a built pipeline — one program, two drive modes.
+
+Streaming mode hands the ``BuiltPipeline`` to the ``StreamingCoordinator``
+(micro-batches, watermarks, checkpoints, backpressure).  Batch mode drives
+the *same* compiled program once over the full input: all records fold in
+a single pass and the end-of-input flush finalizes every window — so the
+per-window output bytes are identical to the streaming run's, which the
+pipeline tests assert bit-for-bit.
+
+``JoinSource`` merges two event logs into one side-tagged record stream
+(``(ts, key, value, side)``), in event-time order with a deterministic
+left-before-right tie-break, so a two-input join replays identically in
+both modes and across restarts.
+"""
+
+from __future__ import annotations
+
+import heapq
+from itertools import islice
+from typing import Iterator
+
+from ..core.metadata import MetadataStore
+from ..core.storage import MemoryStore, ObjectStore
+from ..streaming.source import MicroBatch, StreamSource
+from .lower import BuiltPipeline, SourceSpec
+
+
+class JoinSource:
+    """Two event logs as one merged, side-tagged micro-batch stream."""
+
+    def __init__(self, left: StreamSource, right: StreamSource,
+                 batch_records: int) -> None:
+        self.left = left
+        self.right = right
+        self.batch_records = batch_records
+
+    @staticmethod
+    def _tagged(src: StreamSource, side: int) -> Iterator[tuple]:
+        for r in src.events():
+            yield (r[0], side, r)
+
+    def _merged(self, skip: int) -> Iterator[tuple]:
+        merged = heapq.merge(self._tagged(self.left, 0),
+                             self._tagged(self.right, 1),
+                             key=lambda t: (t[0], t[1]))
+        for _ts, side, rec in islice(merged, skip, None):
+            yield (rec[0], rec[1], rec[2], side)
+
+    def batch_sizes(self, start_record: int = 0) -> list[int]:
+        total = sum(sum(src.batch_sizes()) for src in (self.left, self.right))
+        total = max(0, total - start_record)
+        sizes = []
+        while total > 0:
+            sizes.append(min(total, self.batch_records))
+            total -= sizes[-1]
+        return sizes
+
+    def batches(self, start_record: int = 0) -> Iterator[MicroBatch]:
+        chunk: list = []
+        index = 0
+        for rec in self._merged(start_record):
+            chunk.append(rec)
+            if len(chunk) >= self.batch_records:
+                yield MicroBatch(index, chunk)
+                index += 1
+                chunk = []
+        if chunk:
+            yield MicroBatch(index, chunk)
+
+
+def _side_source(spec: SourceSpec, store: ObjectStore | None,
+                 batch_records: int, override=None) -> StreamSource:
+    if override is not None:
+        if isinstance(override, StreamSource):
+            return override
+        return StreamSource.from_records(override,
+                                         batch_records=batch_records)
+    if spec.kind == "log":
+        if store is None:
+            raise ValueError("a log-backed pipeline needs a store")
+        return StreamSource(store=store, prefix=spec.prefix,
+                            batch_records=batch_records)
+    if spec.kind == "records":
+        return StreamSource.from_records(spec.records,
+                                         batch_records=batch_records)
+    raise ValueError("this pipeline's source is unbound — pass source= "
+                     "(or sources= for a join) at run time")
+
+
+def resolve_source(built: BuiltPipeline, store: ObjectStore | None,
+                   source=None, sources=None):
+    """The graph's sources (or run-time overrides) as one drivable
+    micro-batch stream."""
+    if built.is_join:
+        overrides = sources or (None, None)
+        left = _side_source(built.sides[0].source, store,
+                            built.batch_records, overrides[0])
+        right = _side_source(built.sides[1].source, store,
+                             built.batch_records, overrides[1])
+        return JoinSource(left, right, built.batch_records)
+    return _side_source(built.sides[0].source, store, built.batch_records,
+                        source)
+
+
+def run_streaming(built: BuiltPipeline, store, meta, *, source=None,
+                  sources=None, bus=None, autoscaler=None,
+                  announce: bool = True, flush: bool = True):
+    """Continuous mode: micro-batches through the StreamingCoordinator."""
+    from ..streaming.coordinator import StreamingCoordinator
+    coord = StreamingCoordinator(store, meta, bus=bus, autoscaler=autoscaler,
+                                 program=built)
+    src = resolve_source(built, store, source, sources)
+    return coord.run_stream(src, announce=announce, flush=flush)
+
+
+def run_batch(built: BuiltPipeline, store=None, *, data=None, source=None,
+              sources=None):
+    """One-shot mode over the full input.
+
+    Array pipelines run the compiled batch plan over ``data`` (or the
+    graph's bound shards) and return its ``(result, stats)``.  Windowed
+    pipelines fold every record in one pass through the same compiled
+    program streaming mode drives — checkpointing disabled, end-of-input
+    flush on — and return ``(outputs, report)`` where ``outputs`` maps
+    each window's object-store key to its emitted bytes.
+    """
+    if built.is_array:
+        shards = data if data is not None else built.sides[0].source.shards
+        if shards is None:
+            raise ValueError("array pipelines need data= (device shards)")
+        return built.batch_plan.run(shards)
+
+    from ..streaming.coordinator import StreamingCoordinator
+    store = store if store is not None else MemoryStore()
+    src = resolve_source(built, store, source, sources)
+    prog = built.one_shot(sum(src.batch_sizes()))
+    src = resolve_source(prog, store, source, sources)
+    coord = StreamingCoordinator(store, MetadataStore(), program=prog)
+    report = coord.run_stream(src, announce=False, flush=True)
+    prefix = f"{built.output_prefix.rstrip('/')}/{built.job_id}/"
+    outputs = {m.key: store.get(m.key) for m in store.list_objects(prefix)}
+    return outputs, report

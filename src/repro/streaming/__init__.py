@@ -13,13 +13,19 @@ long-lived incremental dataflow:
   * ``WindowTracker`` — watermark bookkeeping: in-flight windows live in a
     bounded ring of carry slots, finalize in event-time order once the
     watermark passes their end, and late events are counted and dropped;
-  * ``StreamingCoordinator`` — one map→shuffle→reduce round per micro-batch
-    through a compiled ``repro.engine.ExecutionPlan``: records ship to the
-    device once and fan out into their windows on-chip; aggregate-mode
-    per-window partials merge across batches by a single fused
-    ``reduce_scatter`` per batch, group-mode records buffer per (worker,
-    window slot) and reduce with an arbitrary ``reduce_fn`` at
-    finalization, and finalized windows are emitted to the object store.
+  * ``SessionTracker`` — gap-based session windows: data-dependent
+    per-key window bounds, carried as (slot, bucket) *cells* of the same
+    aggregate carry, with on-device cell merges for bridged sessions;
+  * ``StreamingCoordinator`` — one map→shuffle→reduce round per
+    micro-batch through a compiled pipeline program
+    (``repro.pipeline.BuiltPipeline`` — the declarative dataflow API is
+    the front door; ``StreamingConfig`` lowers to it as a deprecated
+    shim): records ship to the device once and fan out into their windows
+    on-chip; aggregate-mode per-window partials merge across batches by a
+    single fused ``reduce_scatter`` per batch per side (a join's two
+    sides share one carry), group-mode records buffer per (worker, window
+    slot) and reduce with an arbitrary ``reduce_fn`` at finalization, and
+    finalized windows are emitted idempotently to the object store.
     ``key_space="hashed"`` opens the key domain (collisions counted, not
     fatal).
 
@@ -30,14 +36,16 @@ signal, instead of a fixed split count.
 """
 
 from .coordinator import (StreamingConfig, StreamingCoordinator, StreamReport,
-                          window_output_key)
+                          session_output_key, window_output_key)
+from .sessions import Session, SessionTracker
 from .source import MicroBatch, StreamSource, write_event_log
 from .state import LateEventError, WindowTracker
 from .windows import SlidingWindows, TumblingWindows, Window, WindowAssigner
 
 __all__ = [
     "StreamingConfig", "StreamingCoordinator", "StreamReport",
-    "window_output_key", "MicroBatch", "StreamSource", "write_event_log",
-    "LateEventError", "WindowTracker", "SlidingWindows", "TumblingWindows",
-    "Window", "WindowAssigner",
+    "window_output_key", "session_output_key", "MicroBatch", "StreamSource",
+    "write_event_log", "LateEventError", "WindowTracker", "Session",
+    "SessionTracker", "SlidingWindows", "TumblingWindows", "Window",
+    "WindowAssigner",
 ]

@@ -2,39 +2,45 @@
 
 Where ``core.coordinator.Coordinator`` drives a one-shot job to DONE and
 terminates, this coordinator runs a long-lived loop: consume the next
-micro-batch trigger, fold the batch through the execution-plan layer
-(``repro.engine``), advance the watermark, and finalize + emit every window
-the watermark has passed.  The full streaming state — consumed record
-offset, carried window aggregates, watermark/ring tracker, key dictionary —
-checkpoints at batch boundaries (metadata + object store), so a restarted
-coordinator resumes exactly where it stopped, even over a log that has
-grown since — the streaming analogue of ``Coordinator.resume_job``.
+micro-batch trigger, fold the batch through a **compiled pipeline program**
+(``repro.pipeline.BuiltPipeline`` — the lowered form of the declarative
+``Pipeline`` dataflow graph), advance the watermark, and finalize + emit
+every window the watermark has passed.  The full streaming state —
+consumed record offset, carried window aggregates, watermark/ring (or
+session) tracker, key dictionary — checkpoints at batch boundaries
+(metadata + object store), so a restarted coordinator resumes exactly
+where it stopped, even over a log that has grown since — the streaming
+analogue of ``Coordinator.resume_job``.
 
-The plan space (``StreamingConfig`` → ``ExecutionPlan``):
+The coordinator no longer builds its own single plan: the program carries
+one compiled ``ExecutionPlan`` per stage chain ("side").  A plain chain
+has one side; a windowed join has two, compiled over disjoint channel
+pairs of **one shared carry** — left records fold into channels [0, 2),
+right into [2, 4), and finalization inner-joins buckets populated on both
+sides.  Session windows (``Windowing.session(gap)``) drive the host-wire
+fold with a ``SessionTracker`` mapping each open session to a carry *cell*
+(slot, bucket), merging bridged sessions on-device.  Fixed windows keep
+the PR 2 machinery: on-device fan-out (one row per record, replicated
+on-chip), host fan-out as the measured legacy baseline, aggregate or
+group-mode reduction, dense or hashed key spaces.
 
-  * ``fanout="device"`` (default) — a record crosses host→device **once**
-    as a ``[last_window_index, n_windows, key, value, valid]`` row and the
-    fan-out stage replicates it into its ``ceil(size/slide)`` overlapping
-    windows on-chip (broadcast + iota); late (record, window) pairs are
-    masked and counted against the watermark bound the host ships per fold.
-    ``fanout="host"`` keeps the PR 1 event × window numpy expansion as a
-    measured baseline (``benchmarks/bench_streaming.py`` compares the two).
-  * ``mode="aggregate"`` — count/sum/mean folded by one fused
-    ``reduce_scatter`` per batch into a dense scattered carry.
-    ``mode="group"`` — arbitrary ``reduce_fn`` over each (window, key)'s
-    full value list: records exchange over the flattened (slot, bucket) id
-    space into fixed-capacity per-slot buffers and reduce at finalization.
-  * ``key_space="dense"`` — keys get dense ids from a bounded dictionary
-    (raises past ``num_buckets``).  ``key_space="hashed"`` — open domains:
-    keys fold to a 24-bit raw id (exact in the float32 wire) and hash into
-    buckets on-device; colliding keys share a bucket and are reported
-    (``StreamReport.hash_collisions``) instead of raising.
+``StreamingConfig`` remains as a deprecated shim: it lowers itself to a
+two-node pipeline (``source → key_by → window → reduce → sink``) through
+the Pipeline API, so both front doors drive the same program shape.
+
+Restart tightening: on ``_restore_state`` the coordinator lists the
+windows already persisted under the job's output prefix; a replayed window
+whose bytes match the persisted object is **not** re-written (and not
+re-announced), so a crash after an emission no longer causes a duplicate
+write — at-least-once becomes effectively exactly-once for unchanged
+windows, while a window whose content legitimately changed (a flushed
+partial window over a log that since grew) still overwrites.
 
 Scaling is backpressure-driven: the source announces each batch on
-``TOPIC_STREAM_BATCH``; the coordinator is a consumer group on that topic and
-sizes its mapper pool from the consumer lag (queue depth) instead of a fixed
-split count — KEDA's Kafka-lag signal where the batch engine uses KPA
-concurrency.
+``TOPIC_STREAM_BATCH``; the coordinator is a consumer group on that topic
+and sizes its mapper pool from the consumer lag (queue depth) instead of a
+fixed split count — KEDA's Kafka-lag signal where the batch engine uses
+KPA concurrency.
 """
 
 from __future__ import annotations
@@ -43,6 +49,7 @@ import io
 import math
 import time
 import uuid
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -58,18 +65,28 @@ from ..core.storage import ObjectStore
 from ..core.workers import _encode_records
 from ..engine.plan import ExecutionPlan, KeySpace, ReduceSpec, WindowSpec
 from ..engine.stages import SEGMENT_REDUCE_KINDS as GROUP_KINDS
-from .source import MicroBatch, StreamSource
-from .state import LateEventError, WindowTracker
+from ..engine.stages import RAW_KEY_BITS, fold_key24, host_bucket
+from .source import MicroBatch
+from .state import LateEventError
 from .windows import SlidingWindows, TumblingWindows, Window, WindowAssigner
 
 AGGREGATIONS = ("count", "sum", "mean")
-_RAW_KEY_BITS = 24      # raw hashed-key ids must survive the float32 wire
+_RAW_KEY_BITS = RAW_KEY_BITS    # raw ids must survive the float32 wire
 _MAX_WIRE_INT = 1 << 24  # largest int the float32 wire carries exactly
 
 
 @dataclass
 class StreamingConfig:
-    """Stream-job analogue of the batch ``JobConfig`` JSON document."""
+    """Stream-job analogue of the batch ``JobConfig`` JSON document.
+
+    .. deprecated::
+        ``StreamingConfig`` is now a shim over the declarative Pipeline
+        API: ``build_pipeline()`` lowers it to a single-chain record
+        pipeline (``repro.pipeline.Pipeline``), and the coordinator drives
+        that program.  New call sites should author a ``Pipeline`` —
+        it also exposes session windows, windowed joins, top-k, and map
+        fusion, which this flat config cannot express.
+    """
 
     num_buckets: int = 128          # key-id space (dense bucket width)
     n_workers: int = 8              # device-engine mesh-axis size
@@ -77,7 +94,7 @@ class StreamingConfig:
     window_slide: float | None = None  # None → tumbling; else sliding
     allowed_lateness: float = 0.0   # watermark slack for out-of-order events
     n_slots: int = 8                # in-flight window ring capacity
-    batch_records: int = 1024       # micro-batch size bound
+    batch_records: int = 1024      # micro-batch size bound
     aggregation: str = "count"      # aggregate mode: count | sum | mean
     mode: str = "aggregate"         # aggregate | group (arbitrary reduce_fn)
     reduce_fn: str | Callable = "sum"   # group mode: kind name or callable
@@ -149,6 +166,32 @@ class StreamingConfig:
         return ExecutionPlan(key_space=keys, reduce=reduce,
                              n_workers=self.n_workers, window=window)
 
+    def build_pipeline(self):
+        """Lower this flat config to the compiled pipeline program the
+        coordinator drives — the deprecation shim's whole body."""
+        from ..pipeline import Pipeline, Windowing
+        if self.window_slide is None:
+            w = Windowing.tumbling(self.window_size)
+        else:
+            w = Windowing.sliding(self.window_size, self.window_slide)
+        p = (Pipeline.from_source(batch_records=self.batch_records)
+             .key_by().window(w))
+        if self.mode == "aggregate":
+            p = p.reduce(self.aggregation)
+        else:
+            p = p.reduce(self.reduce_fn, mode="group",
+                         capacity=self.capacity)
+        p = p.sink(self.output_prefix)
+        return p.build(num_buckets=self.num_buckets,
+                       n_workers=self.n_workers, n_slots=self.n_slots,
+                       key_space=self.key_space, fanout=self.fanout,
+                       allowed_lateness=self.allowed_lateness,
+                       backend=self.backend,
+                       checkpoint_interval=self.checkpoint_interval,
+                       batch_records=self.batch_records,
+                       job_id=self.job_id,
+                       output_prefix=self.output_prefix)
+
 
 @dataclass
 class StreamReport:
@@ -167,6 +210,7 @@ class StreamReport:
     scale_events: int = 0           # pool resizes driven by lag
     hash_collisions: int = 0        # hashed key space: keys sharing a bucket
     capacity_dropped: int = 0       # group mode: window-buffer overflow
+    writes_skipped: int = 0         # restart: windows already persisted
     error: str | None = None
 
     @property
@@ -179,9 +223,19 @@ class StreamReport:
         return sum(ls) / len(ls) if ls else 0.0
 
 
-def window_output_key(cfg: StreamingConfig, window: Window) -> str:
+def window_output_key(cfg, window: Window) -> str:
+    """Object key for a fixed window's emission.  ``cfg`` is anything with
+    ``output_prefix`` and ``job_id`` — a ``StreamingConfig`` or a
+    ``BuiltPipeline``."""
     return (f"{cfg.output_prefix.rstrip('/')}/{cfg.job_id}/"
             f"window-{window.start:.3f}-{window.end:.3f}")
+
+
+def session_output_key(cfg, label: str, start: float, end: float) -> str:
+    """Object key for a finalized session — the key's label is part of the
+    address because two keys' sessions may share identical bounds."""
+    return (f"{cfg.output_prefix.rstrip('/')}/{cfg.job_id}/"
+            f"session-{label}-{start:.3f}-{end:.3f}")
 
 
 def _state_key(job_id: str) -> str:
@@ -192,50 +246,37 @@ def _carry_key(job_id: str) -> str:
     return f"jobs/{job_id}/stream/carry"
 
 
-def _fnv24(key: Any) -> int:
-    """Stable key → 24-bit raw id (FNV-1a 64, xor-folded).  Small enough to
-    ride the float32 wire exactly; the device hashes it into buckets."""
-    h = 0xCBF29CE484222325
-    for b in str(key).encode():
-        h = ((h ^ b) * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
-    return (h ^ (h >> 24) ^ (h >> 48)) & ((1 << _RAW_KEY_BITS) - 1)
-
-
-def _murmur_bucket(raw: int, num_buckets: int) -> int:
-    """Host mirror of ``engine.stages.device_hash`` % num_buckets, for
-    labeling hashed buckets with the keys that landed in them."""
-    h = raw & 0xFFFFFFFF
-    h ^= h >> 16
-    h = (h * 0x85EBCA6B) & 0xFFFFFFFF
-    h ^= h >> 13
-    h = (h * 0xC2B2AE35) & 0xFFFFFFFF
-    h ^= h >> 16
-    return h % num_buckets
-
-
 class StreamingCoordinator:
-    """Long-lived coordinator: micro-batch rounds over a continuous stream."""
+    """Long-lived coordinator: micro-batch rounds over a continuous stream,
+    driving one compiled pipeline program."""
 
     CONSUMER_GROUP = "streaming-coordinator"
 
     def __init__(self, store: ObjectStore, meta: MetadataStore,
-                 cfg: StreamingConfig, bus: EventBus | None = None,
-                 autoscaler: AutoscalerConfig | None = None) -> None:
-        cfg.validate()
+                 cfg: StreamingConfig | None = None,
+                 bus: EventBus | None = None,
+                 autoscaler: AutoscalerConfig | None = None, *,
+                 program=None) -> None:
+        if (cfg is None) == (program is None):
+            raise ValueError("pass exactly one of cfg (deprecated shim) or "
+                             "program (a BuiltPipeline)")
+        if cfg is not None:
+            cfg.validate()
+            program = cfg.build_pipeline()
         self.store = store
         self.meta = meta
-        self.cfg = cfg
+        self.cfg = cfg                  # legacy handle (None for programs)
+        self.prog = program
         self.bus = bus or EventBus()
-        self.assigner = cfg.assigner()
+        self.assigner = program.assigner()      # None for session windows
         self.pool = ServerlessPool(
             "stream-mapper", autoscaler or AutoscalerConfig(
-                max_scale=cfg.n_workers))
-        # compiled once per stream: the per-batch fold (fused reduce_scatter
-        # for aggregates, fan-out + exchange + buffer-append for group mode)
-        self._compiled = cfg.plan().compile(backend=cfg.backend)
-        self._carry = self._compiled.init_carry()
-        self.tracker = WindowTracker(self.assigner, cfg.n_slots,
-                                     cfg.allowed_lateness)
+                max_scale=program.n_workers))
+        # each side's plan was compiled once at build(); a join's two plans
+        # share one carry through disjoint channel pairs
+        self._carry = program.sides[0].compiled.init_carry()
+        self.tracker = program.make_tracker()
+        self._is_session = program.window.is_session
         # bounded key→bucket-id dictionary (the data layer's vocab analogue)
         self._key_ids: dict[Any, int] = {}
         self._id_keys: list[Any] = []
@@ -245,50 +286,63 @@ class StreamingCoordinator:
         self._hash_collisions = 0
         self._window_base = 0           # per-batch wire-index rebase
         self._records_consumed = 0      # checkpointed resume point (records)
+        self._persisted: set[str] = set()   # restart: already-written windows
         # fixed per-batch array capacity so XLA compiles a single program:
-        # device fan-out ships one row per record; host fan-out pre-expands
-        if cfg.fanout == "device":
-            cap, self._row_width = cfg.batch_records, 5
+        # device fan-out ships one row per record; host fan-out pre-expands;
+        # sessions ship host-wire rows with fan-out 1
+        if self._is_session:
+            cap, self._row_width = program.batch_records, 4
+        elif program.fanout == "device":
+            cap, self._row_width = program.batch_records, 5
         else:
             fanout = self.assigner.max_windows_per_event()
-            cap, self._row_width = cfg.batch_records * fanout, 4
-        self._per_worker = -(-cap // cfg.n_workers)
+            cap, self._row_width = program.batch_records * fanout, 4
+        self._per_worker = -(-cap // program.n_workers)
 
     # -- key dictionary --------------------------------------------------------
     def _key_id(self, key: Any) -> int:
-        if self.cfg.key_space == "hashed":
+        if self.prog.key_space == "hashed":
             return self._raw_key_id(key)
         kid = self._key_ids.get(key)
         if kid is None:
             kid = len(self._id_keys)
-            if kid >= self.cfg.num_buckets:
+            if kid >= self.prog.num_buckets:
                 raise ValueError(
                     f"distinct key count exceeded num_buckets="
-                    f"{self.cfg.num_buckets}; raise it (keys seen: {kid}) "
+                    f"{self.prog.num_buckets}; raise it (keys seen: {kid}) "
                     f"or open the domain with key_space='hashed'")
             self._key_ids[key] = kid
             self._id_keys.append(key)
         return kid
 
     def _raw_key_id(self, key: Any) -> int:
-        """Open domain: fold the key to its raw wire id, remember which keys
-        landed in which bucket so emissions stay labeled and collisions are
-        counted instead of raising."""
+        """Open domain: fold the key to its raw wire id (the engine's
+        ``fold_key24``), remember which keys landed in which bucket so
+        emissions stay labeled and collisions are counted instead of
+        raising."""
         raw = self._raw_ids.get(key)
         if raw is None:
-            raw = _fnv24(key)
+            raw = fold_key24(key)
             self._raw_ids[key] = raw
             seen = self._bucket_keys.setdefault(
-                _murmur_bucket(raw, self.cfg.num_buckets), [])
+                host_bucket(raw, self.prog.num_buckets), [])
             if seen and key not in seen:
                 self._hash_collisions += 1
             if key not in seen:
                 seen.append(key)
         return raw
 
+    def _bucket_of(self, kid: int) -> int:
+        """Host-side bucket for a wire key id — the device folds the same
+        id through ``device_hash``, and ``host_bucket`` mirrors it exactly
+        (they share the murmur finalizer), so labels cannot drift."""
+        if self.prog.key_space == "dense":
+            return kid
+        return host_bucket(kid, self.prog.num_buckets)
+
     def _label(self, kid: int) -> str:
         """Output key for bucket/key id ``kid``."""
-        if self.cfg.key_space == "dense":
+        if self.prog.key_space == "dense":
             return str(self._id_keys[kid])
         seen = self._bucket_keys.get(kid)
         if not seen:
@@ -297,65 +351,170 @@ class StreamingCoordinator:
             return str(seen[0])
         return f"bucket-{kid}[{'|'.join(sorted(str(k) for k in seen))}]"
 
+    # -- record transforms -----------------------------------------------------
+    def _transformed(self, batch: MicroBatch, report: StreamReport
+                     ) -> list[tuple[float, Any, float, int]]:
+        """Apply each side's fused map chain and key/value extractors;
+        returns side-tagged ``(ts, key, value, side)`` records."""
+        recs: list[tuple[float, Any, float, int]] = []
+        for rec in batch.records:
+            report.records_in += 1
+            side = int(rec[3]) if len(rec) > 3 else 0
+            sp = self.prog.sides[side]
+            if sp.transform is None:
+                out = (rec[:3],)
+            else:
+                o = sp.transform(tuple(rec[:3]))
+                out = () if o is None else \
+                    ((o,) if isinstance(o, tuple) else tuple(o))
+            for r in out:
+                recs.append((float(r[0]), sp.key_fn(r),
+                             float(sp.value_fn(r)), side))
+        # flat-maps may expand a batch past batch_records: grow the wire
+        # buffer (and retrace the step once per growth) instead of failing,
+        # so the same graph runs in batch mode, where one "micro-batch" is
+        # the whole input
+        if self._is_session or self.prog.fanout == "device":
+            needed = len(recs)
+        else:
+            needed = len(recs) * self.assigner.max_windows_per_event()
+        per = -(-needed // self.prog.n_workers)
+        if per > self._per_worker:
+            self._per_worker = per
+        return recs
+
     # -- batch ingestion -------------------------------------------------------
-    def _fold_device(self, rows: np.ndarray, report: StreamReport) -> None:
+    def _wire(self, rows: np.ndarray, width: int) -> np.ndarray:
+        """Rows in the backend's wire layout: vmap batches the worker axis,
+        shard_map shards the flat global array over the mesh axis."""
+        if self.prog.backend == "vmap":
+            return rows.reshape(self.prog.n_workers, self._per_worker, width)
+        return rows
+
+    def _fold_device(self, rows: np.ndarray, report: StreamReport,
+                     side: int = 0) -> None:
         """Fold one-row-per-record [last_window, n_windows, key, value,
-        valid] rows through the plan's step; the device fans out, masks late
-        pairs against the watermark bound, and returns the accounting.
-        Window indices on the wire are rebased by the per-batch
-        ``_window_base`` (a multiple of ``n_slots``, so modular slots are
-        unchanged) to stay exact in float32 at any absolute event time."""
-        data = rows.reshape(self.cfg.n_workers, self._per_worker, 5)
+        valid] rows through one side's compiled step; the device fans out,
+        masks late pairs against the watermark bound, and returns the
+        accounting.  Window indices on the wire are rebased by the
+        per-batch ``_window_base`` (a multiple of ``n_slots``, so modular
+        slots are unchanged) to stay exact in float32 at any absolute
+        event time."""
+        data = self._wire(rows, 5)
         bound = self.tracker.min_admissible() - self._window_base
         bound = max(min(bound, 2 ** 31 - 1), -(2 ** 31))
         self._carry, stats = self.pool.submit(
-            self._compiled.step, data, self._carry, bound)
+            self.prog.sides[side].compiled.step, data, self._carry, bound)
         late, expanded, dropped = (int(x) for x in np.asarray(stats))
         self.tracker.note_late(late)
         report.records_expanded += expanded
         report.capacity_dropped += dropped
 
     def _fold_host(self, rows: np.ndarray) -> None:
-        """Legacy host-fan-out fold: [window_slot, key, value, valid] rows,
-        already expanded event × window on the host."""
-        data = rows.reshape(self.cfg.n_workers, self._per_worker, 4)
-        self._carry, _ = self.pool.submit(self._compiled.step, data,
-                                          self._carry)
+        """Host-wire fold: [window_slot, key, value, valid] rows whose slot
+        was assigned host-side (legacy host fan-out, or session cells)."""
+        data = self._wire(rows, 4)
+        self._carry, _ = self.pool.submit(
+            self.prog.sides[0].compiled.step, data, self._carry)
 
     # -- window finalization --------------------------------------------------
-    def _emit_window(self, window_index: int, slot: int) -> None:
-        cfg = self.cfg
-        window = self.assigner.window(window_index)
+    def _put_window(self, out_key: str, records: list, start: float,
+                    end: float, report: StreamReport) -> None:
+        """Persist one finalized window, idempotently across restarts: a
+        window already in the store with identical bytes (a replayed
+        emission from before the crash) is skipped, not re-written; changed
+        bytes (a flushed partial window over a since-grown log) overwrite."""
+        blob = _encode_records(records)
+        if out_key in self._persisted and self.store.get(out_key) == blob:
+            report.writes_skipped += 1
+            return
+        self.store.put(out_key, blob)
+        self.bus.produce(TOPIC_STREAM_WINDOW,
+                         window_event(self.prog.job_id, start, end,
+                                      len(records), out_key),
+                         key=f"{self.prog.job_id}/{start}")
+
+    def _aggregate_value(self, kind: str, total: float, count: float) -> Any:
+        if kind == "count":
+            return int(count)
+        if kind == "sum":
+            return float(total)
+        return float(total / count)
+
+    def _window_records(self, slot: int) -> list[tuple[str, Any]]:
+        """One finalized fixed window's output records, per the program's
+        emission spec."""
+        emit = self.prog.emit
+        compiled = self.prog.sides[0].compiled
         records: list[tuple[str, Any]] = []
-        if cfg.mode == "aggregate":
-            agg = self._compiled.read_slot(self._carry, slot)
-            sums, counts = agg[:, 0], agg[:, 1]
-            for kid in np.nonzero(counts > 0)[0]:
-                if cfg.aggregation == "count":
-                    val: Any = int(counts[kid])
-                elif cfg.aggregation == "sum":
-                    val = float(sums[kid])
-                else:
-                    val = float(sums[kid] / counts[kid])
-                records.append((self._label(int(kid)), val))
-        else:
-            gk, gv, gvalid = self._compiled.finalize_slot(self._carry, slot)
+        if emit.kind == "group":
+            gk, gv, gvalid = compiled.finalize_slot(self._carry, slot)
             records = [(self._label(int(k)), float(v))
                        for k, v, ok in zip(gk, gv, gvalid) if ok]
-        records.sort(key=lambda kv: kv[0])
-        out_key = window_output_key(cfg, window)
-        self.store.put(out_key, _encode_records(records))
-        self.bus.produce(TOPIC_STREAM_WINDOW,
-                         window_event(cfg.job_id, window.start, window.end,
-                                      len(records), out_key),
-                         key=f"{cfg.job_id}/{window.start}")
-        self._carry = self._compiled.clear_slot(self._carry, slot)
+            records.sort(key=lambda kv: kv[0])
+        elif emit.kind == "top_k":
+            ids, _vals, valid = compiled.top_k_slot(self._carry, slot,
+                                                    emit.rank_by)
+            agg = compiled.read_slot(self._carry, slot)
+            for kid in ids[valid]:
+                records.append((self._label(int(kid)), self._aggregate_value(
+                    emit.aggregation, agg[kid, 0], agg[kid, 1])))
+            # rank order, not label order: the k heaviest keys, heaviest
+            # first — deterministic (top_k ties break on bucket id)
+        elif emit.kind == "join":
+            agg = compiled.read_slot(self._carry, slot)
+            lkind, rkind = emit.join_aggs
+            both = np.nonzero((agg[:, 1] > 0) & (agg[:, 3] > 0))[0]
+            for kid in both:
+                records.append((self._label(int(kid)), [
+                    self._aggregate_value(lkind, agg[kid, 0], agg[kid, 1]),
+                    self._aggregate_value(rkind, agg[kid, 2], agg[kid, 3]),
+                ]))
+            records.sort(key=lambda kv: kv[0])
+        else:
+            agg = compiled.read_slot(self._carry, slot)
+            sums, counts = agg[:, 0], agg[:, 1]
+            for kid in np.nonzero(counts > 0)[0]:
+                records.append((self._label(int(kid)), self._aggregate_value(
+                    emit.aggregation, sums[kid], counts[kid])))
+            records.sort(key=lambda kv: kv[0])
+        return records
+
+    def _emit_window(self, window_index: int, slot: int,
+                     report: StreamReport) -> None:
+        window = self.assigner.window(window_index)
+        records = self._window_records(slot)
+        self._put_window(window_output_key(self.prog, window), records,
+                         window.start, window.end, report)
+        self._carry = self.prog.sides[0].compiled.clear_slot(self._carry,
+                                                             slot)
         self.tracker.release(window_index)
 
+    def _emit_session(self, session, report: StreamReport) -> None:
+        compiled = self.prog.sides[0].compiled
+        cell = compiled.read_cell(self._carry, session.slot, session.bucket)
+        label = self._label(session.bucket)
+        records: list[tuple[str, Any]] = []
+        if cell[1] > 0:
+            records.append((label, self._aggregate_value(
+                self.prog.emit.aggregation, cell[0], cell[1])))
+        out_key = session_output_key(self.prog, label, session.start,
+                                     session.end)
+        self._put_window(out_key, records, session.start, session.end,
+                         report)
+        self._carry = compiled.clear_cell(self._carry, session.slot,
+                                          session.bucket)
+        self.tracker.release(session)
+
     def _finalize_ripe(self, report: StreamReport) -> None:
-        for window_index, slot in self.tracker.ripe():
-            self._emit_window(window_index, slot)
-            report.windows_emitted += 1
+        if self._is_session:
+            for session in self.tracker.ripe():
+                self._emit_session(session, report)
+                report.windows_emitted += 1
+        else:
+            for window_index, slot in self.tracker.ripe():
+                self._emit_window(window_index, slot, report)
+                report.windows_emitted += 1
 
     # -- checkpoint / restore --------------------------------------------------
     def _save_state(self) -> None:
@@ -365,14 +524,15 @@ class StreamingCoordinator:
         indices) keeps resume correct when the log grows past a
         previously-partial final batch.  A restarted coordinator re-folds at
         most the batches since the last checkpoint; window emissions are
-        idempotent (same carry → same bytes), keeping restart effectively
-        exactly-once."""
+        idempotent (same carry → same bytes) and replayed writes of
+        already-persisted windows are skipped (``_put_window``), keeping
+        restart effectively exactly-once."""
         leaves = [np.asarray(leaf)
                   for leaf in jax.tree_util.tree_leaves(self._carry)]
         buf = io.BytesIO()
         np.savez(buf, **{f"leaf{i}": leaf for i, leaf in enumerate(leaves)})
-        self.store.put(_carry_key(self.cfg.job_id), buf.getvalue())
-        self.meta.set(_state_key(self.cfg.job_id), {
+        self.store.put(_carry_key(self.prog.job_id), buf.getvalue())
+        self.meta.set(_state_key(self.prog.job_id), {
             "offset": self._records_consumed,
             "carry_shapes": [list(leaf.shape) for leaf in leaves],
             "tracker": self.tracker.state_dict(),
@@ -384,14 +544,20 @@ class StreamingCoordinator:
 
     def _restore_state(self) -> int:
         """Load a prior run's checkpoint; returns the record offset to
-        resume from (0 when starting fresh)."""
-        state = self.meta.get(_state_key(self.cfg.job_id))
+        resume from (0 when starting fresh).  Also consults the output
+        prefix for windows the prior run already persisted, so the replay
+        of the uncheckpointed tail does not re-write them — including a
+        crash before the *first* checkpoint, where the whole log replays."""
+        out_prefix = (f"{self.prog.output_prefix.rstrip('/')}/"
+                      f"{self.prog.job_id}/")
+        self._persisted = {m.key for m in self.store.list_objects(out_prefix)}
+        state = self.meta.get(_state_key(self.prog.job_id))
         if state is None:
             self._records_consumed = 0
             return 0
         if "carry_shapes" not in state:
             raise ValueError(
-                f"checkpoint for job {self.cfg.job_id} predates the "
+                f"checkpoint for job {self.prog.job_id} predates the "
                 f"execution-plan carry format (PR 2); restart the stream "
                 f"under a fresh job_id or replay it from the log")
         leaves, treedef = jax.tree_util.tree_flatten(self._carry)
@@ -400,8 +566,8 @@ class StreamingCoordinator:
             raise ValueError(
                 f"checkpointed carry shapes {shapes} do not match this "
                 f"coordinator's {[leaf.shape for leaf in leaves]}; the "
-                f"streaming config changed under job {self.cfg.job_id}")
-        blob = self.store.get(_carry_key(self.cfg.job_id))
+                f"streaming config changed under job {self.prog.job_id}")
+        blob = self.store.get(_carry_key(self.prog.job_id))
         with np.load(io.BytesIO(blob)) as loaded:
             restored = [jnp.asarray(loaded[f"leaf{i}"])
                         for i in range(len(leaves))]
@@ -411,7 +577,7 @@ class StreamingCoordinator:
         self._key_ids = {k: i for i, k in enumerate(self._id_keys)}
         self._bucket_keys = {int(kid): list(keys)
                              for kid, keys in state.get("bucket_keys", [])}
-        self._raw_ids = {k: _fnv24(k)
+        self._raw_ids = {k: fold_key24(k)
                          for keys in self._bucket_keys.values() for k in keys}
         self._hash_collisions = int(state.get("hash_collisions", 0))
         self._records_consumed = int(state["offset"])
@@ -430,7 +596,7 @@ class StreamingCoordinator:
                 report.scale_events += 1
 
     # -- the streaming loop -----------------------------------------------------
-    def announce(self, source: StreamSource, start_record: int = 0) -> int:
+    def announce(self, source, start_record: int = 0) -> int:
         """Publish one trigger CloudEvent per available micro-batch — the
         stand-in for a Kafka producer filling the topic ahead of the
         consumer.  The resulting consumer lag drives autoscaling.
@@ -442,8 +608,8 @@ class StreamingCoordinator:
         for index, size in enumerate(source.batch_sizes(start_record)):
             self.bus.produce(
                 TOPIC_STREAM_BATCH,
-                batch_event(self.cfg.job_id, index, size),
-                key=f"{self.cfg.job_id}/{index}")
+                batch_event(self.prog.job_id, index, size),
+                key=f"{self.prog.job_id}/{index}")
             n += 1
         return n
 
@@ -455,20 +621,27 @@ class StreamingCoordinator:
         on-chip.  A batch that spans more windows than the ring holds folds
         and finalizes mid-batch instead of aborting — splitting the
         triggering record's coverage so pairs admitted before the mid-batch
-        watermark advance still land, exactly like the host path."""
-        cfg = self.cfg
+        watermark advance still land, exactly like the host path.  Each
+        record folds through its side's plan; a join's two sides share the
+        carry, so one pass interleaves them safely."""
+        prog = self.prog
+        recs = self._transformed(batch, report)
+        if not recs:
+            self.tracker.observe(batch.max_event_time)
+            self._finalize_ripe(report)
+            return
         w0 = self.assigner.window(0)
         step = self.assigner.window(1).start - w0.start
-        ts = np.array([r[0] for r in batch.records], np.float64)
+        ts = np.array([r[0] for r in recs], np.float64)
         rel = ts - w0.start
         last = np.floor(rel / step).astype(np.int64)
-        if cfg.window_slide is None:
+        if prog.window.slide is None:
             first = last
         else:
             first = np.floor((rel - w0.size) / step).astype(np.int64) + 1
         # rebase wire indices so they stay exact in float32 at any absolute
         # event time; a multiple of n_slots keeps w % n_slots unchanged
-        base = (int(first.min()) // cfg.n_slots) * cfg.n_slots
+        base = (int(first.min()) // prog.n_slots) * prog.n_slots
         if int(last.max()) - base >= _MAX_WIRE_INT:
             raise ValueError(
                 f"micro-batch {batch.index} spans "
@@ -476,11 +649,23 @@ class StreamingCoordinator:
                 f"wire's exact-integer range; reduce batch_records or "
                 f"raise the window slide")
         self._window_base = base
-        rows = np.zeros((cfg.n_workers * self._per_worker, 5), np.float32)
-        n = 0
+        n_sides = len(prog.sides)
+        shape = (prog.n_workers * self._per_worker, 5)
+        rows = [np.zeros(shape, np.float32) for _ in range(n_sides)]
+        n = [0] * n_sides
+
+        def fold_staged() -> None:
+            # the dispatched fold may zero-copy-alias the numpy buffer; a
+            # fresh buffer avoids racing the in-flight computation with our
+            # next writes
+            for s in range(n_sides):
+                if n[s]:
+                    self._fold_device(rows[s], report, s)
+                    rows[s] = np.zeros(shape, np.float32)
+                    n[s] = 0
+
         seen = float("-inf")        # stream position within this batch
-        for i, (tsi, key, value) in enumerate(batch.records):
-            report.records_in += 1
+        for i, (tsi, key, value, side) in enumerate(recs):
             seen = tsi if tsi > seen else seen
             kid = self._key_id(key)
             lo, hi = int(first[i]), int(last[i])
@@ -497,17 +682,11 @@ class StreamingCoordinator:
                     # retry (a second failure is a genuine capacity error
                     # and propagates)
                     if widx > start:
-                        rows[n] = (widx - 1 - base, widx - start, kid,
-                                   value, 1.0)
-                        n += 1
+                        rows[side][n[side]] = (widx - 1 - base, widx - start,
+                                               kid, value, 1.0)
+                        n[side] += 1
                         start = widx
-                    if n:
-                        self._fold_device(rows, report)
-                        # the dispatched fold may zero-copy-alias the numpy
-                        # buffer; a fresh buffer avoids racing the in-flight
-                        # computation with our next writes
-                        rows = np.zeros_like(rows)
-                        n = 0
+                    fold_staged()
                     self.tracker.observe(seen)
                     self._finalize_ripe(report)
                     if not self.tracker.is_late(widx):
@@ -515,9 +694,11 @@ class StreamingCoordinator:
                     # else: the watermark advance closed widx; the device
                     # masks + counts the pair (slot_for would double-count)
             if hi >= start:
-                rows[n] = (hi - base, hi - start + 1, kid, value, 1.0)
-                n += 1
-        self._fold_device(rows, report)
+                rows[side][n[side]] = (hi - base, hi - start + 1, kid, value,
+                                       1.0)
+                n[side] += 1
+        for s in range(n_sides):
+            self._fold_device(rows[s], report, s)
         self.tracker.observe(batch.max_event_time)
         self._finalize_ripe(report)
 
@@ -525,12 +706,12 @@ class StreamingCoordinator:
         """Legacy host fan-out: expand every record into one row per
         containing window on the host (numpy), the PR 1 baseline the
         device path is benchmarked against."""
-        cfg = self.cfg
-        rows = np.zeros((cfg.n_workers * self._per_worker, 4), np.float32)
+        prog = self.prog
+        recs = self._transformed(batch, report)
+        rows = np.zeros((prog.n_workers * self._per_worker, 4), np.float32)
         n = 0
         seen = float("-inf")
-        for ts, key, value in batch.records:
-            report.records_in += 1
+        for ts, key, value, _side in recs:
             seen = ts if ts > seen else seen
             for widx in self.assigner.assign(ts):
                 try:
@@ -553,25 +734,78 @@ class StreamingCoordinator:
         self.tracker.observe(batch.max_event_time)
         self._finalize_ripe(report)
 
+    def _ingest_session(self, batch: MicroBatch,
+                        report: StreamReport) -> None:
+        """Session ingestion: the tracker assigns each admitted event a
+        carry cell (slot, bucket), merging bridged sessions; rows ship on
+        the host wire with fan-out 1.  Cell merges apply *after* folding
+        the rows already staged for the source cells, so the carry and the
+        tracker never disagree about where a session lives."""
+        compiled = self.prog.sides[0].compiled
+        recs = self._transformed(batch, report)
+        shape = (self.prog.n_workers * self._per_worker, 4)
+        rows = np.zeros(shape, np.float32)
+        n = 0
+        seen = float("-inf")
+
+        def fold_staged() -> None:
+            nonlocal rows, n
+            if n:
+                report.records_expanded += n
+                self._fold_host(rows)
+                rows = np.zeros(shape, np.float32)
+                n = 0
+
+        for tsi, key, value, _side in recs:
+            seen = tsi if tsi > seen else seen
+            kid = self._key_id(key)
+            bucket = self._bucket_of(kid)
+            try:
+                admitted = self.tracker.admit(bucket, tsi)
+            except LateEventError:
+                # every slot holds an open session for this bucket: fold,
+                # advance the watermark to the position reached, finalize,
+                # retry (a second failure is a genuine capacity error)
+                fold_staged()
+                self.tracker.observe(seen)
+                self._finalize_ripe(report)
+                admitted = self.tracker.admit(bucket, tsi)
+            if admitted is None:
+                continue                # late: session already emitted
+            slot, merges = admitted
+            if merges:
+                fold_staged()
+                for src, dst in merges:
+                    self._carry = compiled.merge_cell(self._carry, src, dst,
+                                                      bucket)
+            rows[n] = (slot, kid, value, 1.0)
+            n += 1
+        fold_staged()
+        self.tracker.observe(batch.max_event_time)
+        self._finalize_ripe(report)
+
     def process_batch(self, batch: MicroBatch,
                       report: StreamReport) -> None:
         """One micro-batch round: admit → fold (device) → watermark →
-        finalize.  Normally one fused collective per batch; a batch that
-        spans more windows than the ring holds (low event rate relative to
-        batch size) folds and finalizes mid-batch instead of aborting."""
-        cfg = self.cfg
-        if len(batch.records) > cfg.batch_records:
+        finalize.  Normally one fused collective per batch per side; a
+        batch that spans more windows than the ring holds (low event rate
+        relative to batch size) folds and finalizes mid-batch instead of
+        aborting."""
+        prog = self.prog
+        if len(batch.records) > prog.batch_records:
             raise ValueError(
                 f"micro-batch {batch.index} carries {len(batch.records)} "
                 f"records but the coordinator was sized for batch_records="
-                f"{cfg.batch_records}; create the StreamSource with "
+                f"{prog.batch_records}; create the StreamSource with "
                 f"batch_records <= the coordinator's")
         t0 = time.perf_counter()
         self.bus.poll(self.CONSUMER_GROUP, TOPIC_STREAM_BATCH,
                       timeout=0.01, max_records=1)
         self._autoscale(report)
         late_before = self.tracker.late_dropped
-        if cfg.fanout == "device":
+        if self._is_session:
+            self._ingest_session(batch, report)
+        elif prog.fanout == "device":
             self._ingest_device(batch, report)
         else:
             self._ingest_host(batch, report)
@@ -580,17 +814,19 @@ class StreamingCoordinator:
         report.batches += 1
         self._records_consumed += len(batch.records)
         # sparser checkpoints trade restart replay (the log is replayable
-        # from the last checkpoint) for hot-path device syncs
-        if (batch.index + 1) % self.cfg.checkpoint_interval == 0:
+        # from the last checkpoint) for hot-path device syncs; interval 0
+        # disables checkpointing entirely (the batch-mode drive)
+        if prog.checkpoint_interval and \
+                (batch.index + 1) % prog.checkpoint_interval == 0:
             self._save_state()
         report.batch_latencies.append(time.perf_counter() - t0)
 
-    def run_stream(self, source: StreamSource, *, announce: bool = True,
+    def run_stream(self, source, *, announce: bool = True,
                    flush: bool = True) -> StreamReport:
         """Consume the whole currently-available log; with ``flush`` also
         finalize the still-open windows at the end (end-of-stream watermark
         → +inf), which a truly continuous deployment would never do."""
-        report = StreamReport(self.cfg.job_id)
+        report = StreamReport(self.prog.job_id)
         t_start = time.perf_counter()
         start = self._restore_state()
         try:
@@ -603,7 +839,7 @@ class StreamingCoordinator:
                 # a later run over a grown log must resume with the real
                 # watermark, not +inf (which would drop every new event as
                 # late); flushed windows then re-finalize idempotently
-                if report.batches:
+                if report.batches and self.prog.checkpoint_interval:
                     self._save_state()
                 self.tracker.observe(float("inf"))
                 self._finalize_ripe(report)
@@ -616,8 +852,23 @@ class StreamingCoordinator:
 
     # -- introspection ---------------------------------------------------------
     def checkpointed_offset(self) -> int:
-        state = self.meta.get(_state_key(self.cfg.job_id))
+        state = self.meta.get(_state_key(self.prog.job_id))
         return int(state["offset"]) if state else 0
 
     def pool_stats(self) -> dict[str, Any]:
         return self.pool.stats()
+
+
+def _fnv24(key: Any) -> int:
+    """Deprecated alias — the helper moved to ``engine.stages.fold_key24``
+    so host and device key folding share one source of truth."""
+    warnings.warn("_fnv24 moved to repro.engine.stages.fold_key24",
+                  DeprecationWarning, stacklevel=2)
+    return fold_key24(key)
+
+
+def _murmur_bucket(raw: int, num_buckets: int) -> int:
+    """Deprecated alias — see ``engine.stages.host_bucket``."""
+    warnings.warn("_murmur_bucket moved to repro.engine.stages.host_bucket",
+                  DeprecationWarning, stacklevel=2)
+    return host_bucket(raw, num_buckets)

@@ -331,10 +331,10 @@ def test_streaming_hashed_matches_dense_when_no_collisions():
     rng = np.random.default_rng(13)
     # probe for a collision-free key set under the 24-bit fold + murmur
     keys, buckets, k = [], set(), 0
-    from repro.streaming.coordinator import _fnv24, _murmur_bucket
+    from repro.engine.stages import fold_key24, host_bucket
     while len(keys) < 8:
         name = f"s{k}"
-        b = _murmur_bucket(_fnv24(name), 64)
+        b = host_bucket(fold_key24(name), 64)
         if b not in buckets:
             buckets.add(b)
             keys.append(name)

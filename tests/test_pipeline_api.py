@@ -1,0 +1,576 @@
+"""The declarative Pipeline API: graph validation, map fusion, one
+definition running batch + streaming with bit-identical windows, session
+windows vs a host reference, top-k exactness vs a full sort, windowed join
+parity, the deprecation shims, shared host/device key hashing, and restart
+write-idempotency."""
+
+import json
+from collections import Counter, defaultdict
+
+import numpy as np
+import pytest
+
+from repro.core import MemoryStore, MetadataStore
+from repro.core.mapreduce import DeviceJobConfig, mapreduce
+from repro.engine.stages import device_hash, fold_key24, host_bucket
+from repro.pipeline import Pipeline, PipelineError, Windowing
+from repro.streaming import (SessionTracker, StreamSource, StreamingConfig,
+                             StreamingCoordinator, LateEventError)
+
+W = 4
+
+
+def _events(n=2000, n_keys=8, span=200.0, seed=0, vmax=20):
+    rng = np.random.default_rng(seed)
+    ts = np.sort(rng.uniform(0, span, n))
+    keys = rng.integers(0, n_keys, n)
+    vals = rng.integers(0, vmax, n).astype(float)   # ints exact in fp32
+    return [(float(t), f"k{k}", float(v))
+            for t, k, v in zip(ts, keys, vals)]
+
+
+def _streamed(built, store):
+    built.run_streaming(store, MetadataStore())
+    prefix = f"{built.output_prefix.rstrip('/')}/{built.job_id}/"
+    return {m.key: store.get(m.key) for m in store.list_objects(prefix)}
+
+
+def _decoded(outputs):
+    return {k.rsplit("/", 1)[1]: [json.loads(ln) for ln in v.splitlines()]
+            for k, v in outputs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Graph construction + validation
+# ---------------------------------------------------------------------------
+
+def test_graph_is_immutable_and_reusable():
+    base = Pipeline.from_source(records=[(0.0, "a", 1.0)]).key_by()
+    p1 = base.window(Windowing.tumbling(10.0)).reduce("sum")
+    p2 = base.window(Windowing.tumbling(20.0)).reduce("count")
+    assert len(base.nodes) == 2 and len(p1.nodes) == 4
+    assert p1.nodes != p2.nodes
+
+
+@pytest.mark.parametrize("make,match", [
+    (lambda: Pipeline().reduce("sum"), "from_source"),
+    (lambda: Pipeline.from_source().key_by().reduce("sum"), "window"),
+    (lambda: Pipeline.from_source().window(10.0).reduce("sum")
+        .key_by(), "stage order"),
+    (lambda: Pipeline.from_source().window(10.0), "reduce"),
+    (lambda: Pipeline.from_source().window(10.0).reduce("median"),
+     "aggregate reduce"),
+    (lambda: Pipeline.from_source().window(10.0)
+        .reduce("max", mode="group"), "capacity"),
+    (lambda: Pipeline.from_source().window(Windowing.session(5.0))
+        .reduce("sum").top_k(3), "session"),
+    (lambda: Pipeline.from_source().window(Windowing.sliding(5.0, 10.0))
+        .reduce("sum"), "slide"),
+])
+def test_malformed_graphs_rejected(make, match):
+    with pytest.raises(PipelineError, match=match):
+        make().build(num_buckets=16, n_workers=W)
+
+
+def test_join_sides_must_share_window():
+    left = (Pipeline.from_source(records=[(0.0, "a", 1.0)])
+            .window(10.0).reduce("sum"))
+    right = (Pipeline.from_source(records=[(0.0, "a", 1.0)])
+             .window(20.0).reduce("sum"))
+    with pytest.raises(PipelineError, match="share one window"):
+        left.join(right).build(num_buckets=16, n_workers=W)
+
+
+def test_adjacent_maps_fuse_into_one_stage():
+    """Two maps + a filter fuse into one host transform; the fused chain
+    flat-maps, filters, and rewrites records."""
+    events = [(float(i), "x", float(i)) for i in range(8)]
+    p = (Pipeline.from_source(records=events, batch_records=8)
+         .map(lambda r: (r[0], "even" if r[2] % 2 == 0 else "odd", r[2]))
+         .map(lambda r: None if r[1] == "odd" else r)
+         .map(lambda r: [r, (r[0], r[1], 0.0)])    # flat-map: echo a zero
+         .key_by()
+         .window(Windowing.tumbling(100.0))
+         .reduce("sum"))
+    built = p.build(num_buckets=16, n_workers=W, job_id="fuse")
+    assert built.sides[0].transform is not None
+    out = _decoded(_streamed(built, MemoryStore()))
+    assert out == {"window-0.000-100.000": [["even", 0 + 2 + 4 + 6]]}
+
+
+# ---------------------------------------------------------------------------
+# One definition, both modes — bit identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("agg", ["count", "sum", "mean"])
+def test_batch_and_streaming_bit_identical(agg):
+    events = _events()
+    p = (Pipeline.from_source(records=events, batch_records=128)
+         .map(lambda r: (r[0], r[1], r[2] + 1.0))
+         .key_by()
+         .window(Windowing.tumbling(50.0))
+         .reduce(agg)
+         .sink("out/"))
+    built = p.build(num_buckets=16, n_workers=W, job_id=f"bi-{agg}")
+    stream_store = MemoryStore()
+    streamed = _streamed(built, stream_store)
+    batched, report = built.run_batch(MemoryStore())
+    assert report.batches == 1
+    assert streamed and streamed == batched     # byte-for-byte, every window
+    # and both agree with a host oracle
+    oracle = defaultdict(lambda: defaultdict(list))
+    for ts, k, v in events:
+        oracle[int(ts // 50.0)][k].append(v + 1.0)
+    got = _decoded(streamed)
+    for widx, per_key in oracle.items():
+        win = got[f"window-{widx * 50.0:.3f}-{(widx + 1) * 50.0:.3f}"]
+        want = {k: {"count": len(vs), "sum": sum(vs),
+                    "mean": sum(vs) / len(vs)}[agg]
+                for k, vs in per_key.items()}
+        assert dict(win) == pytest.approx(want)
+
+
+def test_expanding_flat_map_runs_in_both_modes():
+    """A net-expanding flat-map (2 output records per input) must not
+    break either mode: the coordinator grows its wire buffer instead of
+    failing, and the modes stay bit-identical."""
+    events = [(float(i), "k", 1.0) for i in range(10)]
+    p = (Pipeline.from_source(records=events, batch_records=10)
+         .map(lambda r: [r, (r[0], "echo", r[2])])
+         .key_by()
+         .window(Windowing.tumbling(100.0))
+         .reduce("count"))
+    built = p.build(num_buckets=8, n_workers=W, job_id="expand")
+    streamed = _streamed(built, MemoryStore())
+    batched, _ = built.run_batch(MemoryStore())
+    assert streamed == batched
+    assert _decoded(streamed) == {
+        "window-0.000-100.000": [["echo", 10], ["k", 10]]}
+
+
+def test_sliding_pipeline_bit_identical_both_modes():
+    events = _events(n=1500, span=150.0, seed=4)
+    p = (Pipeline.from_source(records=events, batch_records=100)
+         .key_by().window(Windowing.sliding(40.0, 10.0)).reduce("sum"))
+    built = p.build(num_buckets=16, n_workers=W, job_id="slide")
+    streamed = _streamed(built, MemoryStore())
+    batched, _ = built.run_batch(MemoryStore())
+    assert streamed and streamed == batched
+
+
+# ---------------------------------------------------------------------------
+# Session windows
+# ---------------------------------------------------------------------------
+
+def test_session_tracker_merges_and_finalizes():
+    t = SessionTracker(gap=5.0, n_slots=4)
+    s0, m = t.admit(1, 0.0)             # session [0, 5)
+    assert m == []
+    s1, m = t.admit(1, 8.0)             # separate session [8, 13)
+    assert s1 != s0 and m == []
+    slot, merges = t.admit(1, 2.0)      # extends session 0 → [0, 7)
+    assert slot == s0 and merges == []
+    # a bridging event ([4, 9) overlaps both) merges into the earlier one
+    slot, merges = t.admit(1, 4.0)
+    assert slot == s0 and merges == [(s1, s0)]
+    assert t.open_sessions == 1
+    t.observe(40.0)
+    ripe = t.ripe()
+    assert len(ripe) == 1 and (ripe[0].start, ripe[0].end) == (0.0, 13.0)
+    t.release(ripe[0])
+    assert t.open_sessions == 0
+
+
+def test_session_tracker_cells_shared_across_buckets():
+    """Sessions of different keys share ring slots (their cells differ);
+    same-key concurrent sessions need distinct slots and overflow raises."""
+    t = SessionTracker(gap=1.0, n_slots=2)
+    assert t.admit(0, 0.0)[0] == 0
+    assert t.admit(1, 0.0)[0] == 0      # other bucket: same slot is fine
+    assert t.admit(0, 10.0)[0] == 1     # same bucket: second slot
+    with pytest.raises(LateEventError, match="session ring full"):
+        t.admit(0, 20.0)                # both cells of bucket 0 occupied
+
+
+def _session_reference(events, gap, agg="sum"):
+    """Host reference: per key, maximal runs of sorted event times with no
+    gap > ``gap``; session [min_ts, max_ts + gap) — merged across any
+    arrival order."""
+    per_key = defaultdict(list)
+    for ts, k, v in events:
+        per_key[k].append((ts, v))
+    out = {}
+    for k, tv in per_key.items():
+        tv.sort()
+        run = [tv[0]]
+        for ts, v in tv[1:]:
+            if ts - run[-1][0] > gap:
+                out[(k, run[0][0], run[-1][0] + gap)] = [x[1] for x in run]
+                run = []
+            run.append((ts, v))
+        out[(k, run[0][0], run[-1][0] + gap)] = [x[1] for x in run]
+    if agg == "sum":
+        return {key: sum(vs) for key, vs in out.items()}
+    if agg == "count":
+        return {key: len(vs) for key, vs in out.items()}
+    return {key: sum(vs) / len(vs) for key, vs in out.items()}
+
+
+def test_session_windows_match_host_reference_across_batches():
+    """Sessionized traces: bursts per key with real inactivity gaps, mild
+    out-of-order arrival (bridging events merge sessions mid-stream), split
+    over many micro-batches — assignment and aggregates must match the
+    gap-merging host reference, and batch mode must be bit-identical to
+    streaming."""
+    rng = np.random.default_rng(3)
+    events = []
+    for k in range(5):
+        t = rng.uniform(0, 10.0)
+        for _burst in range(6):
+            for _ in range(rng.integers(2, 6)):
+                events.append((float(t), f"k{k}",
+                               float(rng.integers(1, 9))))
+                t += float(rng.uniform(0.1, 3.0))   # intra-session spacing
+            t += float(rng.uniform(8.0, 30.0))      # inactivity gap > 5
+    events.sort()
+    # bounded disorder, covered by allowed_lateness below
+    events = [(ts + float(j), k, v)
+              for (ts, k, v), j in zip(events,
+                                       rng.uniform(-1.5, 1.5, len(events)))]
+    gap = 5.0
+    p = (Pipeline.from_source(records=events, batch_records=32)
+         .key_by().window(Windowing.session(gap)).reduce("sum"))
+    built = p.build(num_buckets=8, n_workers=W, n_slots=6,
+                    allowed_lateness=4.0, job_id="sess")
+    streamed = _streamed(built, MemoryStore())
+    batched, report = built.run_batch(MemoryStore())
+    assert report.error is None and streamed == batched
+    want = _session_reference(events, gap)
+    got = {}
+    for key, blob in streamed.items():
+        name = key.rsplit("/", 1)[1]            # session-<key>-<start>-<end>
+        _, k, start, end = name.rsplit("-", 3)
+        ((label, value),) = [json.loads(ln) for ln in blob.splitlines()]
+        assert label == k
+        got[(k, round(float(start), 3), round(float(end), 3))] = value
+    want = {(k, round(s, 3), round(e, 3)): v for (k, s, e), v in want.items()}
+    assert got == pytest.approx(want)
+
+
+def test_session_windows_checkpoint_resume_bit_identical():
+    """A crashed + resumed session stream (open sessions straddling the
+    crash) reproduces the uninterrupted run byte for byte."""
+    events = _events(n=600, n_keys=4, span=300.0, seed=8)
+
+    def build():
+        return (Pipeline.from_source(records=events, batch_records=50)
+                .key_by().window(Windowing.session(7.0)).reduce("count")
+                .build(num_buckets=8, n_workers=W, n_slots=6,
+                       job_id="sessres"))
+
+    ref = _streamed(build(), MemoryStore())
+    store, meta = MemoryStore(), MetadataStore()
+    built = build()
+    built.run_streaming(store, meta,
+                        source=StreamSource.from_records(events[:300],
+                                                         batch_records=50),
+                        flush=False)
+    built2 = build()
+    built2.run_streaming(store, meta)
+    got = {m.key: store.get(m.key)
+           for m in store.list_objects("stream-output/sessres/")}
+    assert ref and got == ref
+
+
+# ---------------------------------------------------------------------------
+# Top-k / heavy hitters
+# ---------------------------------------------------------------------------
+
+def test_top_k_exact_vs_full_sort_closed_domain():
+    """On a closed (dense) key domain the fixed-capacity top-k selection
+    must equal the head of a full sort of the per-window aggregates —
+    streaming and batch, bit-identically."""
+    events = _events(n=3000, n_keys=12, span=100.0, seed=5)
+    k = 4
+    p = (Pipeline.from_source(records=events, batch_records=200)
+         .key_by().window(Windowing.tumbling(25.0))
+         .reduce("count").top_k(k))
+    built = p.build(num_buckets=16, n_workers=W, job_id="topk")
+    streamed = _streamed(built, MemoryStore())
+    batched, _ = built.run_batch(MemoryStore())
+    assert streamed and streamed == batched
+    oracle = defaultdict(Counter)
+    for ts, key, _v in events:
+        oracle[int(ts // 25.0)][key] += 1
+    got = _decoded(streamed)
+    assert len(got) == len(oracle)
+    for widx, counts in oracle.items():
+        rows = got[f"window-{widx * 25.0:.3f}-{(widx + 1) * 25.0:.3f}"]
+        assert len(rows) == k
+        full_sort = sorted(counts.values(), reverse=True)
+        assert [v for _k, v in rows] == full_sort[:k]   # exact, rank order
+        for key, v in rows:
+            assert counts[key] == v                     # keys truly heavy
+
+
+def test_top_k_batch_array_pipeline():
+    """top_k as a graph node on an array (device UDF) pipeline: the batch
+    plan returns the k heaviest buckets of the aggregate vector."""
+    import jax.numpy as jnp
+
+    def map_fn(shard):
+        keys = shard[:, 0].astype(jnp.int32)
+        return keys, shard[:, 1], shard[:, 2] > 0
+
+    rows = np.zeros((W, 8, 3), np.float32)
+    weights = {3: 50.0, 7: 30.0, 1: 20.0, 5: 10.0}
+    i = 0
+    for key, total in weights.items():
+        for _ in range(2):
+            rows[i % W, i // W] = (key, total / 2, 1.0)
+            i += 1
+    p = (Pipeline.from_source(shards=rows).map(map_fn)
+         .reduce("sum").top_k(3))
+    built = p.build(num_buckets=8, n_workers=W)
+    (ids, vals, valid), _stats = built.run_batch(data=rows)
+    assert ids[valid].tolist() == [3, 7, 1]
+    assert vals[valid].tolist() == [50.0, 30.0, 20.0]
+
+
+# ---------------------------------------------------------------------------
+# Windowed joins
+# ---------------------------------------------------------------------------
+
+def test_windowed_join_parity_and_oracle():
+    rng = np.random.default_rng(11)
+    mk = lambda n, seed: _events(n=n, n_keys=6, span=100.0, seed=seed,
+                                 vmax=9)
+    left_ev, right_ev = mk(800, 12), mk(500, 13)
+    left = (Pipeline.from_source(records=left_ev, batch_records=100)
+            .key_by().window(Windowing.tumbling(25.0)).reduce("sum"))
+    right = (Pipeline.from_source(records=right_ev, batch_records=100)
+             .key_by().window(Windowing.tumbling(25.0)).reduce("count"))
+    built = left.join(right).build(num_buckets=12, n_workers=W,
+                                   job_id="join")
+    streamed = _streamed(built, MemoryStore())
+    batched, _ = built.run_batch(MemoryStore())
+    assert streamed and streamed == batched         # parity, byte for byte
+    lsum = defaultdict(lambda: defaultdict(float))
+    rcnt = defaultdict(lambda: defaultdict(int))
+    for ts, k, v in left_ev:
+        lsum[int(ts // 25.0)][k] += v
+    for ts, k, _v in right_ev:
+        rcnt[int(ts // 25.0)][k] += 1
+    got = _decoded(streamed)
+    for widx in lsum:
+        rows = dict(got[f"window-{widx * 25.0:.3f}-{(widx + 1) * 25.0:.3f}"])
+        want = {k: [lsum[widx][k], rcnt[widx][k]]
+                for k in lsum[widx] if rcnt[widx].get(k)}
+        assert rows == pytest.approx(want)          # inner join, both aggs
+
+
+def test_join_on_key_extractor():
+    """join(on=...) overrides both sides' keys."""
+    left = [(1.0, ("user", 7), 5.0)]
+    right = [(2.0, ("user", 7), 1.0)]
+    lp = (Pipeline.from_source(records=left).window(10.0).reduce("sum"))
+    rp = (Pipeline.from_source(records=right).window(10.0).reduce("count"))
+    built = lp.join(rp, on=lambda r: r[1][1]).build(num_buckets=8,
+                                                    n_workers=W,
+                                                    job_id="jon")
+    outs, _ = built.run_batch(MemoryStore())
+    assert _decoded(outs) == {"window-0.000-10.000": [["7", [5.0, 1]]]}
+
+
+# ---------------------------------------------------------------------------
+# Shared host/device hashing (no drift possible)
+# ---------------------------------------------------------------------------
+
+def test_host_bucket_mirrors_device_hash():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(2)
+    raws = rng.integers(0, 1 << 24, 500)
+    for nb in (7, 16, 37, 128):
+        dev = np.asarray(device_hash(jnp.asarray(raws, jnp.int32))
+                         % np.uint32(nb)).astype(int)
+        assert [host_bucket(int(r), nb) for r in raws] == dev.tolist()
+
+
+def test_fold_key24_fits_wire_and_is_stable():
+    ids = {fold_key24(k) for k in (f"key-{i}" for i in range(200))}
+    assert all(0 <= r < (1 << 24) for r in ids)
+    assert fold_key24("abc") == fold_key24("abc")
+    assert len(ids) > 190       # 24-bit fold rarely collides at n=200
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: old entry points ride the pipeline layer
+# ---------------------------------------------------------------------------
+
+def test_streaming_config_shim_equals_pipeline():
+    """A StreamingConfig-driven run and the equivalent Pipeline build
+    produce identical window bytes — the shim really is a façade."""
+    events = _events(n=800, seed=6)
+    cfg = StreamingConfig(num_buckets=16, n_workers=W, window_size=50.0,
+                          batch_records=100, aggregation="mean",
+                          job_id="shim")
+    store_cfg = MemoryStore()
+    StreamingCoordinator(store_cfg, MetadataStore(), cfg).run_stream(
+        StreamSource.from_records(events, batch_records=100))
+    built = (Pipeline.from_source(records=events, batch_records=100)
+             .key_by().window(Windowing.tumbling(50.0)).reduce("mean")
+             .build(num_buckets=16, n_workers=W, job_id="shim"))
+    assert _streamed(built, MemoryStore()) == {
+        m.key: store_cfg.get(m.key)
+        for m in store_cfg.list_objects("stream-output/shim/")}
+
+
+def test_mapreduce_facade_is_a_two_node_pipeline():
+    """The deprecated mapreduce() call and the explicit two-node array
+    pipeline agree exactly."""
+    import jax.numpy as jnp
+
+    def map_fn(shard):
+        keys = shard[:, 0].astype(jnp.int32)
+        return keys, shard[:, 1], shard[:, 2] > 0
+
+    rng = np.random.default_rng(9)
+    rows = np.zeros((W, 16, 3), np.float32)
+    rows[:, :, 0] = rng.integers(0, 8, (W, 16))
+    rows[:, :, 1] = rng.integers(0, 9, (W, 16))
+    rows[:, :, 2] = 1.0
+    out = mapreduce(map_fn, rows, DeviceJobConfig(num_buckets=8, n_workers=W))
+    built = (Pipeline.from_source(shards=rows).map(map_fn).reduce("sum")
+             .build(num_buckets=8, n_workers=W))
+    direct, _stats = built.run_batch(data=rows)
+    assert np.array_equal(np.asarray(out), np.asarray(direct))
+
+
+# ---------------------------------------------------------------------------
+# shard_map backend: the same program over a real mesh axis
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_pipeline_streaming_shard_map_matches_vmap():
+    """The coordinator ships shard_map-backed programs the flat global
+    wire (not the vmap-batched layout); outputs must be byte-identical to
+    the vmap drive of the same pipeline."""
+    import subprocess
+    import sys
+    code = """
+import jax, numpy as np
+from repro.core import MemoryStore, MetadataStore
+from repro.pipeline import Pipeline, Windowing
+mesh = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("workers",))
+events = [(float(t), f"k{t % 5}", float(t % 7)) for t in range(400)]
+p = (Pipeline.from_source(records=events, batch_records=100)
+     .key_by().window(Windowing.tumbling(50.0)).reduce("sum"))
+outs = []
+for backend, m in (("vmap", None), ("shard_map", mesh)):
+    built = p.build(num_buckets=20, n_workers=4, job_id="sm",
+                    backend=backend, mesh=m)
+    store = MemoryStore()
+    built.run_streaming(store, MetadataStore())
+    outs.append({x.key: store.get(x.key)
+                 for x in store.list_objects("stream-output/sm/")})
+assert outs[0] and outs[0] == outs[1]
+print("OK")
+"""
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": "src"}
+    import os
+    proc = subprocess.run([sys.executable, "-c", code],
+                          cwd=os.path.dirname(os.path.dirname(__file__)),
+                          env={**os.environ, **env},
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK" in proc.stdout
+
+
+def test_key_space_instance_passes_through_verbatim():
+    """build(key_space=KeySpace(...)) hands the instance to the plans
+    unchanged — callers keep control of collision tracking."""
+    from repro.engine import KeySpace
+
+    def map_fn(shard):
+        import jax.numpy as jnp
+        return shard[:, 0].astype(jnp.int32), shard[:, 1], shard[:, 2] > 0
+
+    ks = KeySpace.hashed(32, track_collisions=False)
+    built = (Pipeline.from_source(shards=np.zeros((W, 4, 3), np.float32))
+             .map(map_fn).reduce("sum")
+             .build(num_buckets=8, n_workers=W, key_space=ks))
+    assert built.batch_plan.plan.key_space is ks
+    assert built.num_buckets == 32 and built.key_space == "hashed"
+
+
+# ---------------------------------------------------------------------------
+# Restart idempotency: a crash after emission does not re-write windows
+# ---------------------------------------------------------------------------
+
+class CountingStore(MemoryStore):
+    def __init__(self):
+        super().__init__()
+        self.put_counts = Counter()
+
+    def put(self, key, data):
+        self.put_counts[key] += 1
+        return super().put(key, data)
+
+
+def test_crash_after_emission_resumes_with_single_write():
+    """checkpoint_interval > 1 leaves emitted windows ahead of the last
+    checkpoint; the resumed run replays those batches but must *skip*
+    re-writing the already-persisted windows (byte-identical content), so
+    every window object is written exactly once across the crash."""
+    events = _events(n=1000, seed=7)
+
+    def build():
+        return (Pipeline.from_source(records=events, batch_records=100)
+                .key_by().window(Windowing.tumbling(20.0)).reduce("sum")
+                .build(num_buckets=16, n_workers=W,
+                       checkpoint_interval=4, job_id="once"))
+
+    ref = _streamed(build(), MemoryStore())
+
+    store, meta = CountingStore(), MetadataStore()
+    build().run_streaming(
+        store, meta, flush=False,
+        source=StreamSource.from_records(events[:700], batch_records=100))
+    emitted_before_crash = set(store.put_counts) & set(ref)
+    assert emitted_before_crash                 # windows landed pre-crash
+    report = build().run_streaming(store, meta)
+    assert report.batches == 6                  # replay from checkpoint @400
+    assert report.writes_skipped > 0
+    got = {m.key: store.get(m.key)
+           for m in store.list_objects("stream-output/once/")}
+    assert got == ref
+    for key in ref:
+        assert store.put_counts[key] == 1, key  # exactly one write each
+
+
+def test_crash_before_first_checkpoint_still_single_write():
+    """A crash after emissions but before the FIRST checkpoint replays the
+    whole log; the already-persisted windows must still not be re-written
+    (the restore consults the output prefix even with no checkpoint)."""
+    events = _events(n=400, seed=10)
+
+    def build():
+        return (Pipeline.from_source(records=events, batch_records=100)
+                .key_by().window(Windowing.tumbling(20.0)).reduce("sum")
+                .build(num_buckets=16, n_workers=W,
+                       checkpoint_interval=50, job_id="first"))
+
+    ref = _streamed(build(), MemoryStore())
+    store, meta = CountingStore(), MetadataStore()
+    build().run_streaming(
+        store, meta, flush=False,
+        source=StreamSource.from_records(events[:200], batch_records=100))
+    assert set(store.put_counts) & set(ref)     # emissions landed pre-crash
+    report = build().run_streaming(store, meta)
+    assert report.writes_skipped > 0
+    got = {m.key: store.get(m.key)
+           for m in store.list_objects("stream-output/first/")}
+    assert got == ref
+    for key in ref:
+        assert store.put_counts[key] == 1, key
