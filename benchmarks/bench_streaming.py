@@ -70,6 +70,21 @@ def run_pipeline_once(events, batch_records: int, job_id: str):
     return built.run_streaming(MemoryStore(), MetadataStore())
 
 
+def run_multistage_once(events, batch_records: int, job_id: str,
+                        handoff: str):
+    """A two-phase chain — count per key per window, then top-8 over the
+    counts per 4-window span — comparing the on-device carry handoff
+    against the host record path at the stage boundary."""
+    pipe = (Pipeline.from_source(records=events,
+                                 batch_records=batch_records)
+            .key_by().window(Windowing.tumbling(WINDOW_SIZE)).reduce("count")
+            .window(Windowing.tumbling(4 * WINDOW_SIZE)).reduce("sum")
+            .top_k(8))
+    built = pipe.build(num_buckets=N_KEYS, n_workers=8, n_slots=8,
+                       job_id=job_id, handoff=handoff)
+    return built.run_streaming(MemoryStore(), MetadataStore())
+
+
 def _append_trajectory(entry: dict) -> None:
     """Append this run to the cross-PR trajectory file (best effort)."""
     try:
@@ -120,14 +135,34 @@ def run(print_rows: bool = True, write_json: bool = True) -> list[str]:
             f"windows={report.windows_emitted}"))
     # the declarative Pipeline API on the tumbling workload: guard that the
     # graph front door costs <= 5% over driving the ExecutionPlan through
-    # the flat-config path measured above (same machinery underneath)
+    # the flat-config path (same machinery underneath).  Each fresh build
+    # re-traces its plan, so the first batch of every run carries the XLA
+    # compile — the guard reads *steady-state* batch latency (first batch
+    # dropped), interleaved back-to-back, best of 3 per path; wall-clock
+    # records/sec over a sub-second run is half compile time and noise
+
+    def steady_latency(report):
+        tail = report.batch_latencies[1:] or report.batch_latencies
+        return sum(tail) / len(tail)
+
     run_pipeline_once(events[: 2 * SLIDING_BATCH], SLIDING_BATCH,
                       "warm-pipe")
-    rep_pipe = run_pipeline_once(events, SLIDING_BATCH, "pipe")
-    direct_rps = entry["tumbling_records_per_sec"][str(SLIDING_BATCH)]
-    overhead = direct_rps / max(rep_pipe.records_per_sec, 1e-9) - 1.0
+    direct_lat, pipe_lat, rep_pipe = [], [], None
+    for i in range(3):
+        rep_d, _ = run_stream_once(events, SLIDING_BATCH,
+                                   job_id=f"direct-{i}")
+        rep_p = run_pipeline_once(events, SLIDING_BATCH, f"pipe-{i}")
+        direct_lat.append(steady_latency(rep_d))
+        pipe_lat.append(steady_latency(rep_p))
+        if rep_pipe is None or \
+                rep_p.records_per_sec > rep_pipe.records_per_sec:
+            rep_pipe = rep_p
+    overhead = min(pipe_lat) / min(direct_lat) - 1.0
     entry["pipeline_api_records_per_sec"] = round(rep_pipe.records_per_sec)
-    entry["pipeline_api_overhead_pct"] = round(100 * overhead, 2)
+    # a NEW key: the pre-PR-4 "pipeline_api_overhead_pct" rows were a
+    # wall-clock records/sec ratio (compile time included) and are not
+    # comparable to this steady-state latency ratio
+    entry["pipeline_api_steady_overhead_pct"] = round(100 * overhead, 2)
     entry["pipeline_api_overhead_ok"] = bool(overhead <= 0.05)
     rows.append(fmt_csv(
         "streaming/pipeline_api", rep_pipe.mean_batch_latency * 1e6,
@@ -137,6 +172,22 @@ def run(print_rows: bool = True, write_json: bool = True) -> list[str]:
     if overhead > 0.05:
         print(f"! pipeline API overhead {100 * overhead:.2f}% exceeds the "
               f"5% guard vs the direct plan drive")
+    # multi-stage chain (count → re-window → top-k) — the carry-handoff
+    # seam measured both ways: on-device vs host record materialization
+    entry["multistage_records_per_sec"] = {}
+    for handoff in ("device", "host"):
+        run_multistage_once(events[: 2 * SLIDING_BATCH], SLIDING_BATCH,
+                            f"warm-ms-{handoff}", handoff)
+        rep_ms = run_multistage_once(events, SLIDING_BATCH,
+                                     f"ms-{handoff}", handoff)
+        entry["multistage_records_per_sec"][handoff] = \
+            round(rep_ms.records_per_sec)
+        rows.append(fmt_csv(
+            f"streaming/multistage_handoff_{handoff}",
+            rep_ms.mean_batch_latency * 1e6,
+            f"records_per_s={rep_ms.records_per_sec:.0f};"
+            f"handoffs={rep_ms.handoffs};"
+            f"windows={rep_ms.windows_emitted}"))
     if write_json:
         _append_trajectory(entry)
     if print_rows:

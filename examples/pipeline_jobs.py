@@ -1,11 +1,16 @@
 """Paper Fig. 4, re-expressed on the declarative Pipeline API: the two
 chained jobs become dataflow graphs — the second job's two map functions
 are adjacent ``.map`` nodes that fuse into one stage at build time instead
-of running as two consecutive MapReduce jobs (§III-D), and a third graph
-adds ``top_k`` to rank the hot words, all through the same front door the
-streaming engine uses.  (The original host-plane client path —
-``JobConfig``/``Coordinator`` — still works and stays exercised by
-``tests/test_coordinator_client.py``.)
+of running as two consecutive MapReduce jobs (§III-D), a third graph
+adds ``top_k`` to rank the hot words, and a fourth is a **two-phase
+multi-stage chain** — count per key per minute, then top-k over those
+counts per five minutes — where the paper would run two separate jobs
+with an object-store round-trip between them, the chain continues past
+the first reduce and the finalized windows hand off to the second plan
+through the carry (on device: no re-serialization between stages).  All
+through the same front door the streaming engine uses.  (The original
+host-plane client path — ``JobConfig``/``Coordinator`` — still works and
+stays exercised by ``tests/test_coordinator_client.py``.)
 
     PYTHONPATH=src python examples/pipeline_jobs.py
 """
@@ -73,8 +78,32 @@ def main() -> None:
     print(f"job3 (top_k node): hottest words {top}")
     assert total1 == total2 == len(words)
     print("conservation across pipelines ✓")
-    print(f"[{rep1.batches + rep2.batches} batch drives; the same graphs "
-          f"run continuously via .run_streaming(...)]")
+
+    # job 4 — a two-phase chain: count per word per "minute" of event
+    # time, then the 5 heaviest words per "five minutes" of those counts.
+    # One graph, two stages, carry handoff between them — and the same
+    # graph runs batch (here) or streaming, bit-identically per window.
+    timed = [(float(i % 300), w, 1.0) for i, w in enumerate(corpus.split())]
+    two_phase = (Pipeline.from_source(records=timed)
+                 .map(normalize)
+                 .key_by()
+                 .window(Windowing.tumbling(60.0))
+                 .reduce("count")                   # phase 1: count/minute
+                 .window(Windowing.tumbling(300.0))
+                 .reduce("sum")                     # phase 2: re-window …
+                 .top_k(5))                         # … and rank the counts
+    built = two_phase.build(num_buckets=BUCKETS, n_workers=WORKERS,
+                            job_id="two-phase")
+    out4, rep4 = built.run_batch(MemoryStore())
+    hot5 = decode(out4)
+    print(f"job4 (two-phase chain, {len(built.stages)} stages, "
+          f"{rep4.handoffs} carry handoffs): top-5 over minute-counts "
+          f"{hot5}")
+    assert len(built.stages) == 2 and built.stages[0].handoff_device
+    assert [w for w, _c in hot5] == [w for w, _c in top[:5]]
+    print("two-phase ranking agrees with the single-window top_k ✓")
+    print(f"[{rep1.batches + rep2.batches + rep4.batches} batch drives; "
+          f"the same graphs run continuously via .run_streaming(...)]")
 
 
 if __name__ == "__main__":

@@ -14,9 +14,9 @@ import numpy as np
 
 from repro.core import (Coordinator, MemoryStore, MetadataStore,
                         make_wordcount_job, read_final_output)
-from repro.core.mapreduce import (DeviceJobConfig, mapreduce,
-                                  wordcount_map_factory)
+from repro.core.mapreduce import wordcount_map_factory
 from repro.data.pipeline import synth_corpus
+from repro.pipeline import Pipeline
 
 
 def main() -> None:
@@ -38,7 +38,9 @@ def main() -> None:
     assert out == dict(expected)
     print(f"  exact counts for {len(out)} distinct words ✓")
 
-    # 3. same job on the device engine: hash-partition shuffle on the mesh
+    # 3. same job on the device engine: hash-partition shuffle on the mesh,
+    # authored as the two-node array pipeline the old mapreduce() façade
+    # lowers to (the deprecated shim would warn here)
     vocab = {w: i for i, w in enumerate(sorted(expected))}
     tok = np.array([vocab[w] for w in corpus.split()], dtype=np.int32)
     W = 8
@@ -46,9 +48,12 @@ def main() -> None:
     toks = np.concatenate([tok, np.full(n - len(tok), -1, np.int32)])
     shard = np.stack([toks.reshape(W, -1),
                       np.ones((W, n // W), np.int32)], axis=-1)
-    dcfg = DeviceJobConfig(num_buckets=len(vocab), n_workers=W)
-    res = np.asarray(mapreduce(wordcount_map_factory(len(vocab)), shard, dcfg,
-                               mode="aggregate", backend="vmap"))
+    built = (Pipeline.from_source(shards=shard)
+             .map(wordcount_map_factory(len(vocab)))
+             .reduce("sum")
+             .build(num_buckets=len(vocab), n_workers=W, backend="vmap"))
+    res, _stats = built.run_batch(data=shard)
+    res = np.asarray(res)
     for w, c in expected.items():
         assert res[vocab[w]] == c
     print(f"  device engine agrees across {W} workers ✓")

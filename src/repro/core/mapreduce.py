@@ -80,13 +80,20 @@ def mapreduce(map_fn: Callable, data, cfg: DeviceJobConfig, *,
 
     Since the Pipeline redesign this façade is literally a two-node
     pipeline — ``Pipeline.from_source(shards=...).map(map_fn).reduce(...)``
-    — lowered and run in batch mode.  Return shapes are unchanged from the
+    — lowered and run in batch mode, and calling it emits a
+    ``DeprecationWarning``.  Return shapes are unchanged from the
     pre-plan engine: the aggregate bucket vector, or ``(group_keys,
     group_values, group_valid, dropped)``.  Pass
     ``key_space=KeySpace.hashed(...)`` (or build a ``Pipeline`` /
     ``ExecutionPlan``) to open the key domain; collision accounting then
     comes from ``ExecutionPlan.compile(...).run``'s ``ShuffleStats``.
     """
+    import warnings
+    warnings.warn(
+        "mapreduce() is a deprecated shim that lowers onto the Pipeline "
+        "layer; author the job as repro.pipeline.Pipeline.from_source("
+        "shards=...).map(map_fn).reduce(...) and run_batch(data=...) "
+        "instead", DeprecationWarning, stacklevel=2)
     from ..pipeline import Pipeline   # lazy: core is imported by pipeline
     p = Pipeline.from_source(shards=data).map(map_fn)
     if mode == "group":

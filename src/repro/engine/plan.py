@@ -156,7 +156,12 @@ class ReduceSpec:
     ``[channel_base, channel_base + 1]`` of a ``channels``-wide carry and
     leaves the rest untouched — the windowed-join wiring, where the left
     and right stream are two compiled plans over disjoint channel pairs of
-    the same carry.
+    the same carry.  ``carry_buckets`` widens the carry's *bucket* axis
+    past the plan's own key space (0 → the key space width): plans with
+    asymmetric per-side key spaces (join key-space asymmetry) each
+    bucketize within their own ``KeySpace.num_buckets`` but flatten window
+    slots over the shared ``carry_buckets`` width, so both sides address
+    one carry without their bucket ranges drifting.
     """
 
     mode: str = "aggregate"         # "aggregate" | "group" | "top_k"
@@ -166,6 +171,7 @@ class ReduceSpec:
     k: int = 0                      # top_k mode: selection capacity
     channels: int = 2               # carry width (2 per resident plan)
     channel_base: int = 0           # this plan's [sum, count] offset
+    carry_buckets: int = 0          # shared carry bucket width (0 → own)
 
     @classmethod
     def top_k(cls, k: int) -> "ReduceSpec":
@@ -188,6 +194,13 @@ class ExecutionPlan:
     window: WindowSpec | None = None
     axis_name: str = "workers"
 
+    @property
+    def carry_buckets(self) -> int:
+        """Bucket width of the carry this plan folds into — the plan's own
+        key space unless ``ReduceSpec.carry_buckets`` widens it (per-side
+        key-space asymmetry over one shared carry)."""
+        return self.reduce.carry_buckets or self.key_space.num_buckets
+
     def compile(self, map_fn: Callable | None = None, *,
                 backend: str = "vmap",
                 mesh: jax.sharding.Mesh | None = None,
@@ -208,6 +221,9 @@ class ExecutionPlan:
         if rs.channels < 2 or rs.channel_base + 2 > rs.channels:
             raise ValueError("channel window [base, base+2) must fit the "
                              "carry's channel count")
+        if rs.carry_buckets and rs.carry_buckets < self.key_space.num_buckets:
+            raise ValueError("carry_buckets must cover the plan's own key "
+                             "space (carry width >= num_buckets)")
         if self.window is not None and self.window.is_session:
             if self.window.gap <= 0:
                 raise ValueError("session windows need a positive gap")
@@ -339,7 +355,7 @@ def _stream_agg_host_body(shard, carry_slice, *, plan: ExecutionPlan, map_fn):
     buckets = stages.bucketize(keys, ks.num_buckets, hashed=ks.is_hashed)
     part = stages.shuffle_aggregate_windowed(
         slots, buckets, values, plan.axis_name, plan.window.n_slots,
-        ks.num_buckets, valid=valid, combine_fn=plan.reduce.combine_fn)
+        plan.carry_buckets, valid=valid, combine_fn=plan.reduce.combine_fn)
     folded = jax.lax.psum(jnp.sum(valid.astype(jnp.int32)), plan.axis_name)
     stats = jnp.stack([jnp.zeros((), jnp.int32), folded,
                        jnp.zeros((), jnp.int32)])
@@ -370,7 +386,7 @@ def _stream_agg_device_body(rows, carry_slice, min_window, *,
     slots, keys_f, vals_f, live, late, expanded = stages.window_fanout(
         last, nw, buckets, values, valid, ws.fanout, ws.n_slots, min_window)
     part = stages.shuffle_aggregate_windowed(
-        slots, keys_f, vals_f, plan.axis_name, ws.n_slots, ks.num_buckets,
+        slots, keys_f, vals_f, plan.axis_name, ws.n_slots, plan.carry_buckets,
         valid=live, combine_fn=plan.reduce.combine_fn)
     stats = jnp.stack([jax.lax.psum(late, plan.axis_name),
                        jax.lax.psum(expanded, plan.axis_name),
@@ -491,12 +507,14 @@ class CompiledStreamAggregate:
     """
 
     def __init__(self, plan, map_fn, backend, mesh, jit):
-        ks, ws = plan.key_space, plan.window
-        if (ws.n_slots * ks.num_buckets) % plan.n_workers != 0:
-            raise ValueError("n_slots * num_buckets must divide by n_workers")
+        ws = plan.window
+        carry_b = plan.carry_buckets
+        if (ws.n_slots * carry_b) % plan.n_workers != 0:
+            raise ValueError("n_slots * carry bucket width must divide by "
+                             "n_workers")
         self.plan = plan
         self.backend = backend
-        self._per_worker = (ws.n_slots * ks.num_buckets) // plan.n_workers
+        self._per_worker = (ws.n_slots * carry_b) // plan.n_workers
         axis = plan.axis_name
         if ws.fanout_on_device:
             body = partial(_stream_agg_device_body, plan=plan)
@@ -508,6 +526,7 @@ class CompiledStreamAggregate:
         self._step = lower(body, axis_name=axis, in_specs=in_specs,
                            out_specs=(P(axis), P()), backend=backend,
                            mesh=mesh, jit=jit)
+        self._handoffs: dict[tuple, Callable] = {}  # (kind, rows) → handoff
 
     def init_carry(self, n_channels: int | None = None,
                    dtype=jnp.float32) -> jax.Array:
@@ -521,8 +540,7 @@ class CompiledStreamAggregate:
             return jnp.zeros((plan.n_workers, self._per_worker, n_channels),
                              dtype)
         return jnp.zeros(
-            (plan.window.n_slots * plan.key_space.num_buckets, n_channels),
-            dtype)
+            (plan.window.n_slots * plan.carry_buckets, n_channels), dtype)
 
     def step(self, rows, carry, min_window: int | None = None):
         if self.plan.window.fanout_on_device:
@@ -530,25 +548,24 @@ class CompiledStreamAggregate:
         return self._step(rows, carry)
 
     def read_slot(self, carry, slot: int) -> np.ndarray:
-        return gather_window_slot(carry, slot, self.plan.key_space.num_buckets)
+        return gather_window_slot(carry, slot, self.plan.carry_buckets)
 
     def clear_slot(self, carry, slot: int) -> jax.Array:
-        return clear_window_slot_carry(carry, slot,
-                                       self.plan.key_space.num_buckets)
+        return clear_window_slot_carry(carry, slot, self.plan.carry_buckets)
 
     # -- cell ops (session windows: one key per window) ----------------------
     def read_cell(self, carry, slot: int, bucket: int) -> np.ndarray:
         return read_window_cell(carry, slot, bucket,
-                                self.plan.key_space.num_buckets)
+                                self.plan.carry_buckets)
 
     def merge_cell(self, carry, src_slot: int, dst_slot: int,
                    bucket: int) -> jax.Array:
         return merge_window_cell_carry(carry, src_slot, dst_slot, bucket,
-                                       self.plan.key_space.num_buckets)
+                                       self.plan.carry_buckets)
 
     def clear_cell(self, carry, slot: int, bucket: int) -> jax.Array:
         return clear_window_cell_carry(carry, slot, bucket,
-                                       self.plan.key_space.num_buckets)
+                                       self.plan.carry_buckets)
 
     # -- fixed-capacity heavy hitters ----------------------------------------
     def top_k_slot(self, carry, slot: int, kind: str | None = None
@@ -565,10 +582,50 @@ class CompiledStreamAggregate:
             kind = rs.reduce_fn if isinstance(rs.reduce_fn, str) else "sum"
         flat, _ = _flat_carry(carry)
         agg = _gather_flat_slot(flat, jnp.int32(slot),
-                                self.plan.key_space.num_buckets)
+                                self.plan.carry_buckets)
         ids, vals, valid = _select_top_k(agg, self.plan.key_space.num_buckets,
                                          rs.k, kind)
         return np.asarray(ids), np.asarray(vals), np.asarray(valid)
+
+    # -- carry handoff (multi-stage chains) ----------------------------------
+    def handoff_rows(self, carry, slot: int, relabel: jax.Array,
+                     last_window: int, n_windows: int, kind: str,
+                     dst_rows: int) -> jax.Array:
+        """One finalized window's aggregates as the *next* plan's wire rows
+        — the reduce → map → window → reduce seam, entirely on device.
+
+        Gathers the slot's dense aggregate, re-keys each occupied bucket
+        through the ``relabel`` lookup (this plan's bucket id → the next
+        plan's key id, ``< 0`` = unassigned), stamps the re-windowed span
+        ``[last_window, n_windows]`` (already rebased by the caller), and
+        values each row with the finalized ``kind`` aggregate.  Returns
+        device-fan-out rows padded to ``dst_rows`` in the destination
+        backend's wire layout: vmap gets the batched (workers, per, 5)
+        shape, shard_map keeps the flat (rows, 5) global layout.
+        """
+        fn = self._handoffs.get((kind, dst_rows))
+        if fn is None:
+            fn = jax.jit(partial(self._handoff_impl, kind=kind,
+                                 num_buckets=self.plan.carry_buckets,
+                                 channel_base=self.plan.reduce.channel_base,
+                                 dst_rows=dst_rows,
+                                 n_workers=self.plan.n_workers
+                                 if self.backend == "vmap" else 0))
+            self._handoffs[(kind, dst_rows)] = fn
+        return fn(carry, jnp.int32(slot), relabel,
+                  jnp.float32(last_window), jnp.float32(n_windows))
+
+    @staticmethod
+    def _handoff_impl(carry, slot, relabel, last_window, n_windows, *,
+                      kind, num_buckets, channel_base, dst_rows, n_workers):
+        flat, _ = _flat_carry(carry)
+        agg = _gather_flat_slot(flat, slot, num_buckets)
+        rows = stages.carry_handoff_rows(agg, relabel, last_window,
+                                         n_windows, kind, dst_rows,
+                                         channel_base=channel_base)
+        if n_workers:                   # vmap: batch the worker axis
+            return rows.reshape(n_workers, dst_rows // n_workers, 5)
+        return rows                     # shard_map: flat global wire
 
 
 def _stream_group_body(rows, carry, min_window, *, plan: ExecutionPlan):

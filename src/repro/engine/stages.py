@@ -458,6 +458,50 @@ def top_k_buckets(agg: jax.Array, k: int, kind: str = "sum"
 
 
 # ---------------------------------------------------------------------------
+# Carry handoff (multi-stage chains: one plan's windows feed the next plan)
+# ---------------------------------------------------------------------------
+
+def carry_handoff_rows(agg: jax.Array, relabel: jax.Array,
+                       last_window: jax.Array, n_windows: jax.Array,
+                       kind: str, n_rows: int,
+                       channel_base: int = 0) -> jax.Array:
+    """One finalized window's dense aggregate → the next plan's wire rows.
+
+    ``agg`` is the (num_buckets, channels) slice of a finalized window;
+    its ``[sum, count]`` pair lives at ``channel_base``.  Each occupied
+    bucket becomes one device-fan-out wire row ``[last_window, n_windows,
+    key, value, valid]`` for the *next* stage's plan: ``relabel`` maps
+    this plan's bucket ids to the next key space (a dense id or a raw
+    hashed-wire id; ``< 0`` marks unassigned buckets), ``last_window`` /
+    ``n_windows`` are the re-windowed span of the finalized window's
+    timestamp (scalars — every row of one handoff shares them), and the
+    value is the finalized aggregate per ``kind`` (count | sum | mean).
+    Output is padded to ``n_rows`` with invalid rows, so the next plan's
+    step compiles once.  The emitted aggregates never visit the host —
+    this is the reduce → map → window → reduce seam of a multi-stage
+    chain.
+    """
+    sums = agg[:, channel_base]
+    counts = agg[:, channel_base + 1]
+    if kind == "count":
+        value = counts
+    elif kind == "sum":
+        value = sums
+    elif kind == "mean":
+        value = sums / jnp.maximum(counts, 1.0)
+    else:
+        raise ValueError(f"unknown handoff aggregate kind {kind!r}")
+    valid = (counts > 0) & (relabel >= 0)
+    n = agg.shape[0]
+    last = jnp.full((n,), last_window, jnp.float32)
+    nw = jnp.full((n,), n_windows, jnp.float32)
+    rows = jnp.stack([last, nw, relabel.astype(jnp.float32),
+                      value.astype(jnp.float32),
+                      valid.astype(jnp.float32)], axis=-1)
+    return jnp.zeros((n_rows, 5), jnp.float32).at[:n].set(rows)
+
+
+# ---------------------------------------------------------------------------
 # On-device sliding-window fan-out (broadcast + iota)
 # ---------------------------------------------------------------------------
 

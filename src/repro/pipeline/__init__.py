@@ -4,9 +4,11 @@
 .top_k(k).join(other).sink(prefix).build(...)`` declares a dataflow graph;
 ``build()`` validates it and lowers every stage chain to ``repro.engine``
 execution plans (fusing adjacent maps, compiling a windowed join as two
-plans sharing one carry); the built program then runs in batch mode (one
-drive over an object-store prefix) or streaming mode (micro-batches via
-the ``StreamingCoordinator``) with bit-identical per-window results.
+plans sharing one carry, splitting a chain that continues past a reduce
+into a sequence of stages chained by carry handoff); the built program
+then runs in batch mode (one drive over an object-store prefix) or
+streaming mode (micro-batches via the ``StreamingCoordinator``) with
+bit-identical per-window results.
 
 The older entry points are thin shims over this package: ``mapreduce()``
 builds a two-node array pipeline, and ``StreamingConfig`` lowers to a
@@ -18,10 +20,10 @@ drivers plus the two-log ``JoinSource``).
 """
 
 from .graph import Pipeline, PipelineError, Windowing
-from .lower import BuiltPipeline, EmitSpec, SidePlan, SourceSpec
+from .lower import BuiltPipeline, EmitSpec, SidePlan, SourceSpec, StagePlan
 from .runtime import JoinSource, resolve_source
 
 __all__ = [
     "Pipeline", "PipelineError", "Windowing", "BuiltPipeline", "EmitSpec",
-    "SidePlan", "SourceSpec", "JoinSource", "resolve_source",
+    "SidePlan", "SourceSpec", "StagePlan", "JoinSource", "resolve_source",
 ]

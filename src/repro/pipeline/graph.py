@@ -36,6 +36,18 @@ Two source families share the grammar:
 identically and reduced with aggregate kinds; the join lowers to two plans
 sharing one carry (disjoint channel pairs) and emits, per window, every
 key present on both sides with ``[left_aggregate, right_aggregate]``.
+``build(num_buckets=(left, right))`` sizes the two key spaces
+independently (dense joins), widening the shared carry to the larger
+side.
+
+A chain may continue **past a reduce**: ``….reduce(...).map(...)
+.key_by(...).window(...).reduce(...)`` splits at each reduce boundary
+into a sequence of stages — each stage's finalized windows become the
+next stage's input records ``(window_start, key, aggregate)``, handed
+off through the carry (on-device when the boundary has no host
+transform).  Two-phase jobs — count-then-top-k, average-of-averages —
+are one graph, and batch and streaming runs of it stay bit-identical
+per window.
 """
 
 from __future__ import annotations

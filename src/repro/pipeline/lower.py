@@ -7,9 +7,18 @@ each stage chain onto ``repro.engine``:
 
 * record chains → one ``ExecutionPlan`` per side, compiled once; adjacent
   ``map`` nodes fuse into a single host transform (one stage, not N);
+* a chain that continues *past* a reduce — ``…reduce(...).map(...)
+  .key_by(...).window(...).reduce(...)`` — splits at each reduce boundary
+  into a **sequence of stages**, each with its own plan and carry; a
+  finalized window of stage N becomes stage N+1's input batch through a
+  carry *handoff* (``engine.stages.carry_handoff_rows`` — on-device when
+  the boundary has no host transform, the host record path otherwise);
 * a windowed join → **two plans sharing one carry**: each side's plan folds
   its ``[value, 1]`` pair into a disjoint channel pair
   (``ReduceSpec.channel_base``) of the same scattered aggregate carry;
+  per-side key-space sizes (``num_buckets=(left, right)``) widen the
+  shared carry to the larger side (``ReduceSpec.carry_buckets``) while
+  each side buckets within its own declared space;
 * ``Windowing.session(gap)`` → the engine's ``WindowSpec.session`` variant
   (host-wire fold, cell-addressed carry);
 * ``top_k(k)`` → ``ReduceSpec(mode="top_k")`` — the aggregate fold plus the
@@ -43,6 +52,10 @@ AGGREGATE_KINDS = ("count", "sum", "mean")
 #: canonical stage order within one chain (source implicit at rank 0)
 _STAGE_RANK = {"source": 0, "map": 1, "key_by": 2, "window": 3,
                "reduce": 4, "top_k": 5, "join": 6, "sink": 7}
+
+_ORDER_HINT = ("stage order is source → map* → key_by → window → reduce "
+               "→ top_k → join → sink; a chain may continue past a reduce "
+               "with another map* → key_by → window → reduce stage")
 
 
 def _default_key(rec) -> Any:
@@ -81,9 +94,11 @@ def fuse_maps(fns: list[Callable]) -> Callable | None:
 
 @dataclass(frozen=True)
 class SourceSpec:
-    """Where one side's records come from (bound at build or at run)."""
+    """Where one side's records come from (bound at build or at run).
+    ``kind="carry"`` marks a continued stage: its input is the previous
+    stage's finalized windows, handed off through the carry."""
 
-    kind: str                       # "log" | "records" | "array" | "unbound"
+    kind: str           # "log" | "records" | "array" | "unbound" | "carry"
     prefix: str | None = None
     records: list | None = None
     shards: Any = None
@@ -92,7 +107,8 @@ class SourceSpec:
 
 @dataclass(frozen=True)
 class _Chain:
-    """One parsed linear chain (a join has two)."""
+    """One parsed linear stage chain (a join has two; a multi-stage
+    pipeline has one per reduce boundary)."""
 
     source: SourceSpec
     transform: Callable | None
@@ -102,12 +118,15 @@ class _Chain:
     reduce_spec: str | Callable
     reduce_mode: str
     capacity: int
+    top: dict | None = None         # this stage's top_k node, if any
 
 
 @dataclass(frozen=True)
 class SidePlan:
     """One side's lowered stage chain: the fused host transform plus the
-    compiled execution plan folding into its channel pair of the carry."""
+    compiled execution plan folding into its channel pair of the carry.
+    ``num_buckets`` is the side's *own* key-space width — for asymmetric
+    joins it can be narrower than the shared carry."""
 
     name: str
     source: SourceSpec
@@ -116,11 +135,14 @@ class SidePlan:
     value_fn: Callable
     compiled: Any
     channel_base: int
+    num_buckets: int = 0
 
 
 @dataclass(frozen=True)
 class EmitSpec:
-    """How a finalized window turns into output records."""
+    """How a finalized window turns into output records — the store
+    emission of the final stage, or the handoff records of an
+    intermediate one."""
 
     kind: str                       # "aggregate" | "group" | "top_k" | "join"
     aggregation: str = "count"      # aggregate / session emission kind
@@ -130,33 +152,34 @@ class EmitSpec:
     join_aggs: tuple = ("sum", "sum")
 
 
-@dataclass
-class BuiltPipeline:
-    """A validated, lowered pipeline — the compiled program both execution
-    modes drive.  ``run_streaming`` hands it to the ``StreamingCoordinator``;
-    ``run_batch`` drives the same program once over the full input."""
+@dataclass(frozen=True)
+class StagePlan:
+    """One lowered stage of the chain: its compiled side plan(s), window
+    shape, and emission/handoff spec.  A plain pipeline has one stage; a
+    windowed join has one stage with two sides; a multi-stage chain has
+    one per reduce boundary, executed as a sequence — stage N's finalized
+    windows are stage N+1's input batches."""
 
+    index: int
     sides: tuple[SidePlan, ...]
-    emit: EmitSpec
-    window: Windowing | None        # None → array (pure batch) pipeline
+    window: Windowing | None        # None → array (pure batch) stage
     mode: str                       # fold machinery: "aggregate" | "group"
-    num_buckets: int
-    n_workers: int
+    emit: EmitSpec
+    num_buckets: int                # carry bucket width (max over sides)
     n_slots: int
-    batch_records: int
-    key_space: str
-    fanout: str
     allowed_lateness: float
-    checkpoint_interval: int
-    backend: str
-    output_prefix: str
-    job_id: str
     capacity: int
-    batch_plan: Any = None          # array pipelines: CompiledBatchPlan
+    handoff_device: bool = False    # finalized windows hand off on device
+    #: the boundary to the next stage passes keys through unchanged (no
+    #: host transform, default key_by, aggregate emission) — the next
+    #: stage's dense dictionary registers each key the moment this stage
+    #: first sees it, so both handoff transports (and every checkpoint)
+    #: agree on the id order
+    eager_boundary: bool = False
 
     @property
-    def is_array(self) -> bool:
-        return self.window is None
+    def is_session(self) -> bool:
+        return self.window is not None and self.window.is_session
 
     @property
     def is_join(self) -> bool:
@@ -177,6 +200,69 @@ class BuiltPipeline:
                                   self.allowed_lateness)
         return WindowTracker(self.assigner(), self.n_slots,
                              self.allowed_lateness)
+
+
+@dataclass
+class BuiltPipeline:
+    """A validated, lowered pipeline — the compiled program both execution
+    modes drive.  ``run_streaming`` hands it to the ``StreamingCoordinator``;
+    ``run_batch`` drives the same program once over the full input.
+    ``stages`` is the executable sequence: one entry for a plain chain or
+    join, several for a multi-stage graph chained by carry handoffs."""
+
+    stages: tuple[StagePlan, ...]
+    num_buckets: int                # stage-0 carry bucket width
+    n_workers: int
+    n_slots: int
+    batch_records: int
+    key_space: str
+    fanout: str
+    allowed_lateness: float
+    checkpoint_interval: int
+    backend: str
+    output_prefix: str
+    job_id: str
+    handoff: str = "device"
+    batch_plan: Any = None          # array pipelines: CompiledBatchPlan
+
+    # -- stage-0 / final-stage views (the single-stage API surface) -----------
+    @property
+    def sides(self) -> tuple[SidePlan, ...]:
+        return self.stages[0].sides
+
+    @property
+    def emit(self) -> EmitSpec:
+        return self.stages[-1].emit
+
+    @property
+    def window(self) -> Windowing | None:
+        return self.stages[0].window
+
+    @property
+    def mode(self) -> str:
+        return self.stages[0].mode
+
+    @property
+    def capacity(self) -> int:
+        return self.stages[0].capacity
+
+    @property
+    def is_array(self) -> bool:
+        return self.window is None
+
+    @property
+    def is_join(self) -> bool:
+        return self.stages[0].is_join
+
+    @property
+    def is_multistage(self) -> bool:
+        return len(self.stages) > 1
+
+    def assigner(self):
+        return self.stages[0].assigner()
+
+    def make_tracker(self):
+        return self.stages[0].make_tracker()
 
     def one_shot(self, total_records: int) -> "BuiltPipeline":
         """The same program re-sized to fold the whole input as one batch
@@ -213,68 +299,102 @@ class BuiltPipeline:
 # ---------------------------------------------------------------------------
 
 def _parse_chain(p: Pipeline, *, side: str, allow_join: bool,
-                 on: Callable | None = None):
-    """Walk one pipeline's nodes; returns (chain, join_node, sink_prefix,
-    top_node)."""
+                 allow_stages: bool = False, on: Callable | None = None):
+    """Walk one pipeline's nodes into stage chains (split at each reduce
+    boundary when ``allow_stages``); returns ``(chains, join_node,
+    sink_prefix)`` where ``chains[i].top`` carries stage i's top_k node."""
     if not p.nodes or p.nodes[0].op != "source":
         raise PipelineError(f"{side}: a pipeline starts at "
                             f"Pipeline.from_source(...)")
-    rank = 0
-    maps: list[Callable] = []
-    key_fn = None
-    windowing = None
-    reduce_node = None
-    top_node = None
+    src = p.nodes[0].params
+    source = SourceSpec(kind=src["kind"], prefix=src["prefix"],
+                        records=src["records"], shards=src["shards"],
+                        batch_records=src["batch_records"])
+    chains: list[_Chain] = []
     join_node = None
     sink_prefix = None
-    src = p.nodes[0].params
+
+    def _fresh():
+        return {"maps": [], "key_fn": None, "windowing": None,
+                "reduce": None, "top": None}
+
+    def _close(stage: dict) -> None:
+        n = len(chains)
+        if stage["reduce"] is None:
+            what = "a pipeline" if n == 0 else f"stage {n + 1} of the chain"
+            raise PipelineError(
+                f"{side}: {what} needs a reduce node ({_ORDER_HINT})")
+        chains.append(_Chain(
+            source=source if n == 0 else SourceSpec(kind="carry"),
+            transform=fuse_maps(stage["maps"]),
+            key_fn=(on if n == 0 and on is not None else None)
+            or stage["key_fn"] or _default_key,
+            value_fn=_default_value,
+            windowing=stage["windowing"],
+            reduce_spec=stage["reduce"]["spec"],
+            reduce_mode=stage["reduce"]["mode"],
+            capacity=stage["reduce"]["capacity"],
+            top=stage["top"]))
+
+    stage = _fresh()
+    rank = 0
     for node in p.nodes[1:]:
         r = _STAGE_RANK.get(node.op)
         if r is None:
             raise PipelineError(f"unknown node op {node.op!r}")
         if node.op == "source":
             raise PipelineError(f"{side}: more than one source")
+        if sink_prefix is not None:
+            raise PipelineError(f"{side}: sink must be the last node")
         if r < rank or (r == rank and node.op != "map"):
-            raise PipelineError(
-                f"{side}: {node.op!r} cannot follow a "
-                f"{[k for k, v in _STAGE_RANK.items() if v == rank][0]!r} "
-                f"node — stage order is source → map* → key_by → window → "
-                f"reduce → top_k → join → sink")
+            # past this stage's reduce the chain may continue with a new
+            # stage; anything else is an ordering error
+            if stage["reduce"] is not None and node.op in (
+                    "map", "key_by", "window", "reduce"):
+                if not allow_stages:
+                    raise PipelineError(
+                        f"{side}: the right side of a join ends at its "
+                        f"reduce node")
+                if join_node is not None:
+                    raise PipelineError("multi-stage chains cannot contain "
+                                        "a join (rank the join output in a "
+                                        "downstream pipeline instead)")
+                _close(stage)
+                stage = _fresh()
+                rank = 0
+                r = _STAGE_RANK[node.op]
+            else:
+                raise PipelineError(
+                    f"{side}: {node.op!r} cannot follow a "
+                    f"{[k for k, v in _STAGE_RANK.items() if v == rank][0]!r}"
+                    f" node — {_ORDER_HINT}")
         rank = r
         if node.op == "map":
-            maps.append(node.params["fn"])
+            stage["maps"].append(node.params["fn"])
         elif node.op == "key_by":
-            key_fn = node.params["fn"]
+            stage["key_fn"] = node.params["fn"]
         elif node.op == "window":
-            windowing = node.params["windowing"]
+            stage["windowing"] = node.params["windowing"]
         elif node.op == "reduce":
-            reduce_node = node.params
+            stage["reduce"] = node.params
         elif node.op == "top_k":
-            top_node = node.params
+            stage["top"] = node.params
         elif node.op == "join":
             if not allow_join:
                 raise PipelineError(f"{side}: nested joins are not "
                                     f"supported")
+            if chains:
+                raise PipelineError("multi-stage chains cannot contain a "
+                                    "join (rank the join output in a "
+                                    "downstream pipeline instead)")
             join_node = node
         elif node.op == "sink":
             sink_prefix = node.params["prefix"]
-    if reduce_node is None:
-        raise PipelineError(f"{side}: a pipeline needs a reduce node")
-    if top_node is not None and join_node is not None:
+    if stage["top"] is not None and join_node is not None:
         raise PipelineError("top_k and join cannot combine (rank the join "
                             "output downstream instead)")
-    chain = _Chain(
-        source=SourceSpec(kind=src["kind"], prefix=src["prefix"],
-                          records=src["records"], shards=src["shards"],
-                          batch_records=src["batch_records"]),
-        transform=fuse_maps(maps),
-        key_fn=on or key_fn or _default_key,
-        value_fn=_default_value,
-        windowing=windowing,
-        reduce_spec=reduce_node["spec"],
-        reduce_mode=reduce_node["mode"],
-        capacity=reduce_node["capacity"])
-    return chain, (join_node if allow_join else None), sink_prefix, top_node
+    _close(stage)
+    return chains, (join_node if allow_join else None), sink_prefix
 
 
 def _check_windowing(w: Windowing, n_slots: int, lateness: float) -> None:
@@ -320,6 +440,25 @@ def _check_reduce(chain: _Chain, *, in_join: bool) -> None:
         raise PipelineError(f"unknown reduce mode {mode!r}")
 
 
+def _check_channels_disjoint(sides: "tuple[tuple[int, int], ...]",
+                             channels: int) -> None:
+    """Plans sharing one carry must claim non-overlapping [base, base+2)
+    channel pairs inside the carry's channel count."""
+    claimed: set[int] = set()
+    for base, width in sides:
+        span = set(range(base, base + width))
+        if base < 0 or base + width > channels:
+            raise PipelineError(
+                f"channel window [{base}, {base + width}) exceeds the "
+                f"carry's {channels} channels")
+        if claimed & span:
+            raise PipelineError(
+                f"channel window [{base}, {base + width}) overlaps another "
+                f"side's channels — plans sharing a carry must stay "
+                f"disjoint")
+        claimed |= span
+
+
 # ---------------------------------------------------------------------------
 # Lowering
 # ---------------------------------------------------------------------------
@@ -341,7 +480,8 @@ def _lower_side(chain: _Chain, name: str, *, num_buckets: int,
                 n_workers: int, n_slots: int, key_space, fanout: str,
                 backend: str, mesh, jit: bool, combine_fn,
                 axis_name: str, channels: int, channel_base: int,
-                top_k: int = 0, rank_by: str = "sum") -> SidePlan:
+                carry_buckets: int = 0, top_k: int = 0,
+                rank_by: str = "sum") -> SidePlan:
     # streaming sides default collision tracking off: the coordinator's
     # host-side label table already reports collisions exactly
     ks = _key_space_obj(key_space, num_buckets, track_collisions=False)
@@ -351,23 +491,26 @@ def _lower_side(chain: _Chain, name: str, *, num_buckets: int,
     else:
         window = WindowSpec(size=w.size, slide=w.slide, n_slots=n_slots,
                             fanout_on_device=fanout == "device")
+    carry = 0 if carry_buckets == ks.num_buckets else carry_buckets
     if chain.reduce_mode == "group":
         reduce = ReduceSpec("group", reduce_fn=chain.reduce_spec,
                             capacity=chain.capacity)
     elif top_k:
         reduce = ReduceSpec(mode="top_k", reduce_fn=rank_by, k=top_k,
                             combine_fn=combine_fn, channels=channels,
-                            channel_base=channel_base)
+                            channel_base=channel_base, carry_buckets=carry)
     else:
         reduce = ReduceSpec("aggregate", combine_fn=combine_fn,
-                            channels=channels, channel_base=channel_base)
+                            channels=channels, channel_base=channel_base,
+                            carry_buckets=carry)
     plan = ExecutionPlan(key_space=ks, reduce=reduce, n_workers=n_workers,
                          window=window, axis_name=axis_name)
     compiled = plan.compile(backend=backend, mesh=mesh, jit=jit)
     return SidePlan(name=name, source=chain.source,
                     transform=chain.transform, key_fn=chain.key_fn,
                     value_fn=chain.value_fn, compiled=compiled,
-                    channel_base=channel_base)
+                    channel_base=channel_base,
+                    num_buckets=ks.num_buckets)
 
 
 def _lower_array(chain: _Chain, top_node, *, num_buckets: int, n_workers: int,
@@ -396,7 +539,86 @@ def _lower_array(chain: _Chain, top_node, *, num_buckets: int, n_workers: int,
     return compiled, emit
 
 
-def build_pipeline(p: Pipeline, *, num_buckets: int = 128, n_workers: int = 8,
+def _stage_emit(chain: _Chain, num_buckets: int) -> tuple[EmitSpec, int, str]:
+    """One record stage's emission spec + validated top-k parameters."""
+    top_k, rank_by = 0, "sum"
+    if chain.top is not None:
+        if chain.reduce_mode != "aggregate":
+            raise PipelineError("top_k ranks an aggregate reduce")
+        if chain.top["k"] > num_buckets:
+            raise PipelineError("top_k k exceeds the bucket space")
+        top_k = chain.top["k"]
+        rank_by = chain.top["by"] or chain.reduce_spec
+        if rank_by not in AGGREGATE_KINDS:
+            raise PipelineError(f"top_k ranks by one of {AGGREGATE_KINDS}")
+        emit = EmitSpec("top_k", aggregation=chain.reduce_spec,
+                        k=top_k, rank_by=rank_by)
+    elif chain.reduce_mode == "group":
+        emit = EmitSpec("group", reduce_fn=chain.reduce_spec)
+    else:
+        emit = EmitSpec("aggregate", aggregation=chain.reduce_spec)
+    return emit, top_k, rank_by
+
+
+def _check_record_stage(chain: _Chain, *, index: int, last: bool,
+                        n_slots: int, lateness: float, fanout: str,
+                        num_buckets: int, n_workers: int) -> None:
+    """The per-stage validation shared by single- and multi-stage chains."""
+    where = f"stage {index + 1}: " if index else ""
+    if chain.windowing is None:
+        raise PipelineError(where + "record pipelines need a window node "
+                            "before reduce (use Windowing.tumbling(...) "
+                            "with a large size for a single global window)")
+    _check_windowing(chain.windowing, n_slots, lateness)
+    _check_reduce(chain, in_join=False)
+    if chain.windowing.is_session:
+        if index > 0 or not last:
+            raise PipelineError(
+                "session windows run in the last position of a "
+                "single-stage pipeline only: sessions finalize out of "
+                "start order, so handing them to a further stage would "
+                "break the deterministic batch ↔ streaming replay")
+        if chain.reduce_mode != "aggregate":
+            raise PipelineError("session windows reduce in aggregate mode "
+                                "only")
+        if chain.top is not None:
+            raise PipelineError("top_k over session windows is meaningless "
+                                "(a session holds one key)")
+    if chain.reduce_mode == "group" and fanout != "device":
+        raise PipelineError(where + "group mode runs with fanout='device'")
+    if chain.reduce_mode == "aggregate" and num_buckets % n_workers != 0:
+        raise PipelineError("num_buckets must divide by n_workers so "
+                            "window slices stay aligned to the scattered "
+                            "carry")
+
+
+def _identity_boundary(src: _Chain, src_emit: EmitSpec, dst: _Chain) -> bool:
+    """True when the src → dst boundary passes every emitted key through
+    unchanged: an aggregate source stage with fixed windows feeding a
+    destination with no host transform and the default key.  On such a
+    boundary the destination's dictionary can register keys *eagerly*
+    (the moment the source first sees them), which keeps the id order
+    identical across handoff transports and closed in every checkpoint."""
+    return (src_emit.kind == "aggregate"
+            and not src.windowing.is_session
+            and dst.transform is None
+            and dst.key_fn is _default_key
+            and not dst.windowing.is_session)
+
+
+def _handoff_on_device(src: _Chain, src_emit: EmitSpec, dst: _Chain, *,
+                       key_space_str: str, fanout: str,
+                       handoff: str) -> bool:
+    """True when the src → dst boundary can re-key/re-window finalized
+    aggregates entirely on device: a dense identity boundary under the
+    device fan-out wire.  Any host map/key_by between the stages falls
+    back to the host record path — the same records, materialized."""
+    return (handoff == "device" and fanout == "device"
+            and key_space_str == "dense"
+            and _identity_boundary(src, src_emit, dst))
+
+
+def build_pipeline(p: Pipeline, *, num_buckets=128, n_workers: int = 8,
                    n_slots: int = 8,
                    key_space: "str | KeySpace" = "dense",
                    fanout: str = "device", allowed_lateness: float = 0.0,
@@ -404,11 +626,29 @@ def build_pipeline(p: Pipeline, *, num_buckets: int = 128, n_workers: int = 8,
                    batch_records: int | None = None, job_id: str | None = None,
                    output_prefix: str | None = None, mesh=None, data_spec=None,
                    finalize: bool = True, jit: bool = True, combine_fn=None,
-                   axis_name: str = "workers") -> BuiltPipeline:
+                   axis_name: str = "workers",
+                   handoff: str = "device") -> BuiltPipeline:
     """Validate ``p`` and lower it to a runnable ``BuiltPipeline``.
     ``key_space`` is ``"dense"`` / ``"hashed"`` or a ``KeySpace`` instance
-    (passed to the plans verbatim, e.g. to control collision tracking)."""
+    (passed to the plans verbatim, e.g. to control collision tracking).
+    ``num_buckets`` takes a ``(left, right)`` pair on a join to size the
+    two key spaces independently (dense only); the shared carry widens to
+    the larger side.  ``handoff`` picks the multi-stage boundary transport:
+    ``"device"`` re-keys/re-windows finalized aggregates on-chip where the
+    boundary allows it, ``"host"`` always materializes the records."""
+    side_buckets: tuple[int, int] | None = None
+    if isinstance(num_buckets, (tuple, list)):
+        if len(num_buckets) != 2:
+            raise PipelineError("num_buckets takes an int or a "
+                                "(left, right) pair")
+        side_buckets = (int(num_buckets[0]), int(num_buckets[1]))
+        if min(side_buckets) < 1:
+            raise PipelineError("per-side num_buckets must be >= 1")
+        num_buckets = max(side_buckets)
     if isinstance(key_space, KeySpace):
+        if side_buckets is not None:
+            raise PipelineError("per-side num_buckets cannot combine with "
+                                "a KeySpace instance")
         num_buckets = key_space.num_buckets
         key_space_str = key_space.mode
     elif key_space in ("dense", "hashed"):
@@ -418,72 +658,64 @@ def build_pipeline(p: Pipeline, *, num_buckets: int = 128, n_workers: int = 8,
                             "KeySpace")
     if fanout not in ("device", "host"):
         raise PipelineError("fanout must be 'device' or 'host'")
+    if handoff not in ("device", "host"):
+        raise PipelineError("handoff must be 'device' or 'host'")
     if checkpoint_interval < 1:
         raise PipelineError("checkpoint_interval must be >= 1")
-    chain, join_node, sink_prefix, top_node = _parse_chain(
-        p, side="pipeline", allow_join=True)
+    chains, join_node, sink_prefix = _parse_chain(
+        p, side="pipeline", allow_join=True, allow_stages=True)
+    chain = chains[0]
     job_id = job_id or "p" + uuid.uuid4().hex[:11]
     output_prefix = output_prefix or sink_prefix or "stream-output/"
     batch_records = batch_records or chain.source.batch_records
+    if side_buckets is not None and join_node is None:
+        raise PipelineError("per-side num_buckets only applies to joins")
 
     # -- array (pure batch) pipelines ----------------------------------------
     if chain.source.kind == "array":
-        if chain.windowing is not None or join_node is not None:
+        if chain.windowing is not None or join_node is not None \
+                or len(chains) > 1:
             raise PipelineError("array pipelines are one-shot batch jobs: "
-                                "no window/join nodes")
-        if chain.reduce_mode != "group":
-            _ = chain.reduce_spec  # any aggregate kind labels the output
+                                "no window/join nodes and no continued "
+                                "stages")
         batch_plan, emit = _lower_array(
-            chain, top_node, num_buckets=num_buckets, n_workers=n_workers,
+            chain, chain.top, num_buckets=num_buckets, n_workers=n_workers,
             key_space=key_space, backend=backend, mesh=mesh,
             data_spec=data_spec, finalize=finalize, jit=jit,
             combine_fn=combine_fn, axis_name=axis_name)
         side = SidePlan("main", chain.source, chain.transform, chain.key_fn,
-                        chain.value_fn, batch_plan, 0)
+                        chain.value_fn, batch_plan, 0,
+                        num_buckets=num_buckets)
+        stage = StagePlan(0, (side,), None, chain.reduce_mode, emit,
+                          num_buckets, n_slots, allowed_lateness,
+                          chain.capacity)
         return BuiltPipeline(
-            sides=(side,), emit=emit, window=None, mode=chain.reduce_mode,
-            num_buckets=num_buckets, n_workers=n_workers, n_slots=n_slots,
-            batch_records=batch_records, key_space=key_space_str,
-            fanout=fanout,
+            stages=(stage,), num_buckets=num_buckets, n_workers=n_workers,
+            n_slots=n_slots, batch_records=batch_records,
+            key_space=key_space_str, fanout=fanout,
             allowed_lateness=allowed_lateness,
             checkpoint_interval=checkpoint_interval, backend=backend,
-            output_prefix=output_prefix, job_id=job_id,
-            capacity=chain.capacity, batch_plan=batch_plan)
+            output_prefix=output_prefix, job_id=job_id, handoff=handoff,
+            batch_plan=batch_plan)
 
     # -- record pipelines -----------------------------------------------------
-    if chain.windowing is None:
-        raise PipelineError("record pipelines need a window node before "
-                            "reduce (use Windowing.tumbling(...) with a "
-                            "large size for a single global window)")
-    _check_windowing(chain.windowing, n_slots, allowed_lateness)
-    _check_reduce(chain, in_join=join_node is not None)
-    w = chain.windowing
-    if w.is_session:
-        if chain.reduce_mode != "aggregate":
-            raise PipelineError("session windows reduce in aggregate mode "
-                                "only")
-        if top_node is not None:
-            raise PipelineError("top_k over session windows is meaningless "
-                                "(a session holds one key)")
-        if join_node is not None:
+    if join_node is not None:
+        if chain.windowing is None:
+            raise PipelineError("record pipelines need a window node before "
+                                "reduce (use Windowing.tumbling(...) with a "
+                                "large size for a single global window)")
+        _check_windowing(chain.windowing, n_slots, allowed_lateness)
+        _check_reduce(chain, in_join=True)
+        if chain.windowing.is_session:
             raise PipelineError("session windows cannot join (window "
                                 "bounds are per-key)")
-    if chain.reduce_mode == "group" and fanout != "device":
-        raise PipelineError("group mode runs with fanout='device'")
-    if top_node is not None and chain.reduce_mode != "aggregate":
-        raise PipelineError("top_k ranks an aggregate reduce")
-    if chain.reduce_mode == "aggregate" and num_buckets % n_workers != 0:
-        raise PipelineError("num_buckets must divide by n_workers so "
-                            "window slices stay aligned to the scattered "
-                            "carry")
-
-    if join_node is not None:
         if fanout != "device":
             raise PipelineError("joins run with fanout='device'")
         on = join_node.params["on"]
-        rchain, _, rsink, rtop = _parse_chain(join_node.right, side="right",
-                                              allow_join=False, on=on)
-        if rsink is not None or rtop is not None:
+        rchains, _, rsink = _parse_chain(join_node.right, side="right",
+                                         allow_join=False, on=on)
+        rchain = rchains[0]
+        if rsink is not None or rchain.top is not None:
             raise PipelineError("the join's right side ends at its reduce "
                                 "node")
         if rchain.windowing != chain.windowing:
@@ -494,48 +726,75 @@ def build_pipeline(p: Pipeline, *, num_buckets: int = 128, n_workers: int = 8,
         _check_reduce(rchain, in_join=True)
         if on is not None:
             chain = dataclasses.replace(chain, key_fn=on)
-        common = dict(num_buckets=num_buckets, n_workers=n_workers,
-                      n_slots=n_slots, key_space=key_space, fanout=fanout,
-                      backend=backend, mesh=mesh, jit=jit,
-                      combine_fn=combine_fn, axis_name=axis_name, channels=4)
-        sides = (_lower_side(chain, "left", channel_base=0, **common),
-                 _lower_side(rchain, "right", channel_base=2, **common))
+        lb, rb = side_buckets or (num_buckets, num_buckets)
+        if key_space_str == "hashed" and lb != rb:
+            raise PipelineError(
+                "hashed joins need symmetric num_buckets: both sides must "
+                "hash keys into the same bucket space to match")
+        if num_buckets % n_workers != 0:
+            raise PipelineError("num_buckets must divide by n_workers so "
+                                "window slices stay aligned to the "
+                                "scattered carry (asymmetric joins: the "
+                                "larger side)")
+        layout = ((0, 2), (2, 2))       # per-side [sum, count] channel pairs
+        _check_channels_disjoint(layout, channels=4)
+        common = dict(n_workers=n_workers, n_slots=n_slots,
+                      key_space=key_space, fanout=fanout, backend=backend,
+                      mesh=mesh, jit=jit, combine_fn=combine_fn,
+                      axis_name=axis_name, channels=4,
+                      carry_buckets=num_buckets)
+        sides = (_lower_side(chain, "left", num_buckets=lb,
+                             channel_base=layout[0][0], **common),
+                 _lower_side(rchain, "right", num_buckets=rb,
+                             channel_base=layout[1][0], **common))
         emit = EmitSpec("join", join_aggs=(chain.reduce_spec,
                                            rchain.reduce_spec))
+        stage = StagePlan(0, sides, chain.windowing, "aggregate", emit,
+                          num_buckets, n_slots, allowed_lateness, 0)
         return BuiltPipeline(
-            sides=sides, emit=emit, window=chain.windowing, mode="aggregate",
-            num_buckets=num_buckets, n_workers=n_workers, n_slots=n_slots,
-            batch_records=batch_records, key_space=key_space_str,
-            fanout=fanout,
+            stages=(stage,), num_buckets=num_buckets, n_workers=n_workers,
+            n_slots=n_slots, batch_records=batch_records,
+            key_space=key_space_str, fanout=fanout,
             allowed_lateness=allowed_lateness,
             checkpoint_interval=checkpoint_interval, backend=backend,
-            output_prefix=output_prefix, job_id=job_id, capacity=0)
+            output_prefix=output_prefix, job_id=job_id, handoff=handoff)
 
-    top_k, rank_by = 0, "sum"
-    if top_node is not None:
-        if top_node["k"] > num_buckets:
-            raise PipelineError("top_k k exceeds the bucket space")
-        top_k = top_node["k"]
-        rank_by = top_node["by"] or chain.reduce_spec
-        if rank_by not in AGGREGATE_KINDS:
-            raise PipelineError(f"top_k ranks by one of {AGGREGATE_KINDS}")
-    side = _lower_side(chain, "main", num_buckets=num_buckets,
-                       n_workers=n_workers, n_slots=n_slots,
-                       key_space=key_space, fanout=fanout, backend=backend,
-                       mesh=mesh, jit=jit, combine_fn=combine_fn,
-                       axis_name=axis_name, channels=2, channel_base=0,
-                       top_k=top_k, rank_by=rank_by)
-    if top_node is not None:
-        emit = EmitSpec("top_k", aggregation=chain.reduce_spec,
-                        k=top_k, rank_by=rank_by)
-    elif chain.reduce_mode == "group":
-        emit = EmitSpec("group", reduce_fn=chain.reduce_spec)
-    else:
-        emit = EmitSpec("aggregate", aggregation=chain.reduce_spec)
+    # a linear chain of one or more stages, split at each reduce boundary
+    stages: list[StagePlan] = []
+    emits: list[EmitSpec] = []
+    for i, ch in enumerate(chains):
+        last = i == len(chains) - 1
+        # stages past the first see the previous stage's finalized windows
+        # in watermark order — no out-of-order slack needed
+        lateness = allowed_lateness if i == 0 else 0.0
+        _check_record_stage(ch, index=i, last=last, n_slots=n_slots,
+                            lateness=lateness, fanout=fanout,
+                            num_buckets=num_buckets, n_workers=n_workers)
+        emit, top_k, rank_by = _stage_emit(ch, num_buckets)
+        emits.append(emit)
+        side = _lower_side(ch, "main" if len(chains) == 1 else f"stage{i}",
+                           num_buckets=num_buckets, n_workers=n_workers,
+                           n_slots=n_slots, key_space=key_space,
+                           fanout=fanout, backend=backend, mesh=mesh,
+                           jit=jit, combine_fn=combine_fn,
+                           axis_name=axis_name, channels=2, channel_base=0,
+                           top_k=top_k, rank_by=rank_by)
+        stages.append(StagePlan(
+            i, (side,), ch.windowing, ch.reduce_mode, emit, num_buckets,
+            n_slots, lateness, ch.capacity))
+    # mark identity boundaries (eager next-stage key registration) and the
+    # subset whose handoff stays on device
+    for i in range(len(stages) - 1):
+        if _identity_boundary(chains[i], emits[i], chains[i + 1]):
+            device = _handoff_on_device(
+                chains[i], emits[i], chains[i + 1],
+                key_space_str=key_space_str, fanout=fanout, handoff=handoff)
+            stages[i] = dataclasses.replace(stages[i], eager_boundary=True,
+                                            handoff_device=device)
     return BuiltPipeline(
-        sides=(side,), emit=emit, window=chain.windowing,
-        mode=chain.reduce_mode, num_buckets=num_buckets, n_workers=n_workers,
+        stages=tuple(stages), num_buckets=num_buckets, n_workers=n_workers,
         n_slots=n_slots, batch_records=batch_records,
-        key_space=key_space_str, fanout=fanout, allowed_lateness=allowed_lateness,
+        key_space=key_space_str, fanout=fanout,
+        allowed_lateness=allowed_lateness,
         checkpoint_interval=checkpoint_interval, backend=backend,
-        output_prefix=output_prefix, job_id=job_id, capacity=chain.capacity)
+        output_prefix=output_prefix, job_id=job_id, handoff=handoff)

@@ -3,9 +3,10 @@
 Streaming mode hands the ``BuiltPipeline`` to the ``StreamingCoordinator``
 (micro-batches, watermarks, checkpoints, backpressure).  Batch mode drives
 the *same* compiled program once over the full input: all records fold in
-a single pass and the end-of-input flush finalizes every window — so the
-per-window output bytes are identical to the streaming run's, which the
-pipeline tests assert bit-for-bit.
+a single pass and the end-of-input flush finalizes every window, rippling
+multi-stage carry handoffs stage by stage — so the per-window output bytes
+are identical to the streaming run's, which the pipeline tests assert
+bit-for-bit.
 
 ``JoinSource`` merges two event logs into one side-tagged record stream
 (``(ts, key, value, side)``), in event-time order with a deterministic

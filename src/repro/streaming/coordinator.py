@@ -6,27 +6,51 @@ micro-batch trigger, fold the batch through a **compiled pipeline program**
 (``repro.pipeline.BuiltPipeline`` — the lowered form of the declarative
 ``Pipeline`` dataflow graph), advance the watermark, and finalize + emit
 every window the watermark has passed.  The full streaming state —
-consumed record offset, carried window aggregates, watermark/ring (or
-session) tracker, key dictionary — checkpoints at batch boundaries
-(metadata + object store), so a restarted coordinator resumes exactly
-where it stopped, even over a log that has grown since — the streaming
-analogue of ``Coordinator.resume_job``.
+consumed record offset, carried window aggregates (all stages' carries as
+one pytree), watermark/ring (or session) trackers, key dictionaries —
+checkpoints at batch boundaries (metadata + object store), so a restarted
+coordinator resumes exactly where it stopped, even over a log that has
+grown since — the streaming analogue of ``Coordinator.resume_job``.
 
-The coordinator no longer builds its own single plan: the program carries
-one compiled ``ExecutionPlan`` per stage chain ("side").  A plain chain
-has one side; a windowed join has two, compiled over disjoint channel
-pairs of **one shared carry** — left records fold into channels [0, 2),
-right into [2, 4), and finalization inner-joins buckets populated on both
-sides.  Session windows (``Windowing.session(gap)``) drive the host-wire
-fold with a ``SessionTracker`` mapping each open session to a carry *cell*
-(slot, bucket), merging bridged sessions on-device.  Fixed windows keep
-the PR 2 machinery: on-device fan-out (one row per record, replicated
+The program is a **sequence of stages** (``BuiltPipeline.stages``).  A
+plain chain has one stage; a windowed join has one stage with two sides,
+compiled over disjoint channel pairs of **one shared carry** — left
+records fold into channels [0, 2), right into [2, 4), and finalization
+inner-joins keys populated on both sides (by label for dense joins, whose
+sides may size their key spaces independently; by bucket for hashed
+joins).  A multi-stage graph — ``reduce → map → window → reduce`` — runs
+as a *plan cascade*: when stage N's watermark finalizes a window, the
+window's aggregates become stage N+1's input batch through a **carry
+handoff**.  Boundaries with no host transform re-key/re-window entirely
+on device (``CompiledStreamAggregate.handoff_rows``: the finalized slot is
+gathered, relabeled through a host-maintained bucket → next-key-id
+table, stamped with the re-windowed span, and folded by the next plan's
+step — the aggregates never visit the host); boundaries with an
+inter-stage map or custom ``key_by`` materialize the same records host-side
+and feed them through the ordinary ingestion path.  Fixed windows finalize
+in start order, so stage N+1 sees a monotone event-time feed — batch and
+streaming replays fold in the same order and stay bit-identical.
+
+Session windows (``Windowing.session(gap)``) drive the host-wire fold with
+a ``SessionTracker`` mapping each open session to a carry *cell*
+(slot, bucket), merging bridged sessions on-device; they run in the final
+position of single-stage pipelines (sessions finalize out of start order,
+which would break the deterministic multi-stage replay).  Fixed windows
+keep the PR 2 machinery: on-device fan-out (one row per record, replicated
 on-chip), host fan-out as the measured legacy baseline, aggregate or
 group-mode reduction, dense or hashed key spaces.
+
+Late-drop accounting has exactly one writer: ``tracker.note_late``.  The
+admission methods (``slot_for`` / ``admit``) return ``None`` for a late
+pair without counting; the coordinator counts each host-dropped pair once,
+and the device fan-out's masked-pair count (for pairs that ride the wire
+inside a record's window span) flows back through the same method.  A pair
+is dropped on one path or the other, never both.
 
 ``StreamingConfig`` remains as a deprecated shim: it lowers itself to a
 two-node pipeline (``source → key_by → window → reduce → sink``) through
 the Pipeline API, so both front doors drive the same program shape.
+Constructing a coordinator from it emits a ``DeprecationWarning``.
 
 Restart tightening: on ``_restore_state`` the coordinator lists the
 windows already persisted under the job's output prefix; a replayed window
@@ -34,7 +58,9 @@ whose bytes match the persisted object is **not** re-written (and not
 re-announced), so a crash after an emission no longer causes a duplicate
 write — at-least-once becomes effectively exactly-once for unchanged
 windows, while a window whose content legitimately changed (a flushed
-partial window over a log that since grew) still overwrites.
+partial window over a log that since grew) still overwrites.  The same
+holds across stages: replayed handoffs re-fold into restored carries that
+predate them, so second-stage windows are neither lost nor duplicated.
 
 Scaling is backpressure-driven: the source announces each batch on
 ``TOPIC_STREAM_BATCH``; the coordinator is a consumer group on that topic
@@ -73,6 +99,7 @@ from .windows import SlidingWindows, TumblingWindows, Window, WindowAssigner
 AGGREGATIONS = ("count", "sum", "mean")
 _RAW_KEY_BITS = RAW_KEY_BITS    # raw ids must survive the float32 wire
 _MAX_WIRE_INT = 1 << 24  # largest int the float32 wire carries exactly
+_NEG_INF = float("-inf")
 
 
 @dataclass
@@ -84,8 +111,10 @@ class StreamingConfig:
         API: ``build_pipeline()`` lowers it to a single-chain record
         pipeline (``repro.pipeline.Pipeline``), and the coordinator drives
         that program.  New call sites should author a ``Pipeline`` —
-        it also exposes session windows, windowed joins, top-k, and map
-        fusion, which this flat config cannot express.
+        it also exposes session windows, windowed joins, top-k, map
+        fusion, and multi-stage chains, which this flat config cannot
+        express.  Handing a config to ``StreamingCoordinator`` emits a
+        ``DeprecationWarning``.
     """
 
     num_buckets: int = 128          # key-id space (dense bucket width)
@@ -203,7 +232,8 @@ class StreamReport:
     records_in: int = 0             # raw events consumed
     records_expanded: int = 0       # after window fan-out (sliding > 1×)
     late_dropped: int = 0
-    windows_emitted: int = 0
+    windows_emitted: int = 0        # final-stage windows written to the store
+    handoffs: int = 0               # intermediate windows handed to the next stage
     wall_time: float = 0.0
     batch_latencies: list[float] = field(default_factory=list)
     max_lag: int = 0                # worst backpressure observed
@@ -246,73 +276,47 @@ def _carry_key(job_id: str) -> str:
     return f"jobs/{job_id}/stream/carry"
 
 
-class StreamingCoordinator:
-    """Long-lived coordinator: micro-batch rounds over a continuous stream,
-    driving one compiled pipeline program."""
+class _KeyTable:
+    """One side's key dictionary (the data layer's vocab analogue).
 
-    CONSUMER_GROUP = "streaming-coordinator"
+    Dense mode: a bounded key → bucket-id map, ids assigned in first-seen
+    order.  Hashed mode: raw wire ids (``fold_key24``) plus bucket →
+    first-seen labels, so emissions stay labeled and collisions are
+    counted exactly instead of raising.  ``on_new`` (dense only) fires
+    when a key is first registered — the device-handoff path uses it to
+    keep the bucket → next-stage relabel table eager, so checkpoints
+    always hold a closed mapping.
+    """
 
-    def __init__(self, store: ObjectStore, meta: MetadataStore,
-                 cfg: StreamingConfig | None = None,
-                 bus: EventBus | None = None,
-                 autoscaler: AutoscalerConfig | None = None, *,
-                 program=None) -> None:
-        if (cfg is None) == (program is None):
-            raise ValueError("pass exactly one of cfg (deprecated shim) or "
-                             "program (a BuiltPipeline)")
-        if cfg is not None:
-            cfg.validate()
-            program = cfg.build_pipeline()
-        self.store = store
-        self.meta = meta
-        self.cfg = cfg                  # legacy handle (None for programs)
-        self.prog = program
-        self.bus = bus or EventBus()
-        self.assigner = program.assigner()      # None for session windows
-        self.pool = ServerlessPool(
-            "stream-mapper", autoscaler or AutoscalerConfig(
-                max_scale=program.n_workers))
-        # each side's plan was compiled once at build(); a join's two plans
-        # share one carry through disjoint channel pairs
-        self._carry = program.sides[0].compiled.init_carry()
-        self.tracker = program.make_tracker()
-        self._is_session = program.window.is_session
-        # bounded key→bucket-id dictionary (the data layer's vocab analogue)
+    def __init__(self, mode: str, num_buckets: int, name: str = "") -> None:
+        self.mode = mode
+        self.num_buckets = num_buckets
+        self.name = name
+        self.on_new: Callable[[int, str], None] | None = None
         self._key_ids: dict[Any, int] = {}
         self._id_keys: list[Any] = []
-        # hashed key space: raw-id cache + bucket → first-seen keys (labels)
         self._raw_ids: dict[Any, int] = {}
         self._bucket_keys: dict[int, list] = {}
-        self._hash_collisions = 0
-        self._window_base = 0           # per-batch wire-index rebase
-        self._records_consumed = 0      # checkpointed resume point (records)
-        self._persisted: set[str] = set()   # restart: already-written windows
-        # fixed per-batch array capacity so XLA compiles a single program:
-        # device fan-out ships one row per record; host fan-out pre-expands;
-        # sessions ship host-wire rows with fan-out 1
-        if self._is_session:
-            cap, self._row_width = program.batch_records, 4
-        elif program.fanout == "device":
-            cap, self._row_width = program.batch_records, 5
-        else:
-            fanout = self.assigner.max_windows_per_event()
-            cap, self._row_width = program.batch_records * fanout, 4
-        self._per_worker = -(-cap // program.n_workers)
+        self.collisions = 0
 
-    # -- key dictionary --------------------------------------------------------
-    def _key_id(self, key: Any) -> int:
-        if self.prog.key_space == "hashed":
+    def key_id(self, key: Any) -> int:
+        """The wire key id: a dense bucket id, or the 24-bit raw id the
+        device hashes into buckets."""
+        if self.mode == "hashed":
             return self._raw_key_id(key)
         kid = self._key_ids.get(key)
         if kid is None:
             kid = len(self._id_keys)
-            if kid >= self.prog.num_buckets:
+            if kid >= self.num_buckets:
+                side = f" on the {self.name} side" if self.name else ""
                 raise ValueError(
                     f"distinct key count exceeded num_buckets="
-                    f"{self.prog.num_buckets}; raise it (keys seen: {kid}) "
+                    f"{self.num_buckets}{side}; raise it (keys seen: {kid}) "
                     f"or open the domain with key_space='hashed'")
             self._key_ids[key] = kid
             self._id_keys.append(key)
+            if self.on_new is not None:
+                self.on_new(kid, str(key))
         return kid
 
     def _raw_key_id(self, key: Any) -> int:
@@ -325,44 +329,184 @@ class StreamingCoordinator:
             raw = fold_key24(key)
             self._raw_ids[key] = raw
             seen = self._bucket_keys.setdefault(
-                host_bucket(raw, self.prog.num_buckets), [])
+                host_bucket(raw, self.num_buckets), [])
             if seen and key not in seen:
-                self._hash_collisions += 1
+                self.collisions += 1
             if key not in seen:
                 seen.append(key)
         return raw
 
-    def _bucket_of(self, kid: int) -> int:
+    def bucket_of(self, kid: int) -> int:
         """Host-side bucket for a wire key id — the device folds the same
         id through ``device_hash``, and ``host_bucket`` mirrors it exactly
         (they share the murmur finalizer), so labels cannot drift."""
-        if self.prog.key_space == "dense":
+        if self.mode == "dense":
             return kid
-        return host_bucket(kid, self.prog.num_buckets)
+        return host_bucket(kid, self.num_buckets)
 
-    def _label(self, kid: int) -> str:
-        """Output key for bucket/key id ``kid``."""
-        if self.prog.key_space == "dense":
-            return str(self._id_keys[kid])
-        seen = self._bucket_keys.get(kid)
+    def label(self, bucket: int) -> str:
+        """Output label for a bucket id."""
+        if self.mode == "dense":
+            return str(self._id_keys[bucket])
+        seen = self._bucket_keys.get(bucket)
         if not seen:
-            return f"bucket-{kid}"
+            return f"bucket-{bucket}"
         if len(seen) == 1:
             return str(seen[0])
-        return f"bucket-{kid}[{'|'.join(sorted(str(k) for k in seen))}]"
+        return f"bucket-{bucket}[{'|'.join(sorted(str(k) for k in seen))}]"
+
+    @property
+    def dense_keys(self) -> list:
+        return self._id_keys
+
+    # -- checkpointing ---------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {"keys": list(self._id_keys),
+                "bucket_keys": [[kid, keys]
+                                for kid, keys in self._bucket_keys.items()],
+                "collisions": self.collisions}
+
+    def load_state_dict(self, d: dict) -> None:
+        """Restore without firing ``on_new`` — relabel tables are rebuilt
+        explicitly after every table has loaded."""
+        self._id_keys = list(d["keys"])
+        self._key_ids = {k: i for i, k in enumerate(self._id_keys)}
+        self._bucket_keys = {int(kid): list(keys)
+                             for kid, keys in d.get("bucket_keys", [])}
+        self._raw_ids = {k: fold_key24(k)
+                         for keys in self._bucket_keys.values() for k in keys}
+        self.collisions = int(d.get("collisions", 0))
+
+
+class _StageState:
+    """One stage's runtime state: the compiled plan handle(s), carry,
+    window tracker, per-side key tables, wire sizing, and — for a
+    device-handoff boundary — the bucket → next-stage-key relabel table."""
+
+    def __init__(self, plan, per_worker: int) -> None:
+        self.plan = plan
+        self.compiled = plan.sides[0].compiled
+        self.assigner = plan.assigner()         # None for session windows
+        self.tracker = plan.make_tracker()
+        self.carry = self.compiled.init_carry()
+        self.tables: list[_KeyTable] = []
+        self.per_worker = per_worker
+        self.window_base = 0                    # per-fold wire-index rebase
+        self.relabel: np.ndarray | None = None  # bucket → next stage key id
+        self.relabel_dev: jax.Array | None = None
+
+
+class StreamingCoordinator:
+    """Long-lived coordinator: micro-batch rounds over a continuous stream,
+    driving one compiled pipeline program — a sequence of execution-plan
+    stages chained by carry handoffs."""
+
+    CONSUMER_GROUP = "streaming-coordinator"
+
+    def __init__(self, store: ObjectStore, meta: MetadataStore,
+                 cfg: StreamingConfig | None = None,
+                 bus: EventBus | None = None,
+                 autoscaler: AutoscalerConfig | None = None, *,
+                 program=None) -> None:
+        if (cfg is None) == (program is None):
+            raise ValueError("pass exactly one of cfg (deprecated shim) or "
+                             "program (a BuiltPipeline)")
+        if cfg is not None:
+            warnings.warn(
+                "StreamingConfig is a deprecated shim that lowers onto the "
+                "Pipeline layer; author the job as a repro.pipeline."
+                "Pipeline and pass program=pipeline.build(...) instead",
+                DeprecationWarning, stacklevel=2)
+            cfg.validate()
+            program = cfg.build_pipeline()
+        self.store = store
+        self.meta = meta
+        self.cfg = cfg                  # legacy handle (None for programs)
+        self.prog = program
+        self.bus = bus or EventBus()
+        self.pool = ServerlessPool(
+            "stream-mapper", autoscaler or AutoscalerConfig(
+                max_scale=program.n_workers))
+        # fixed per-batch array capacity so XLA compiles a single program:
+        # device fan-out ships one row per record, host fan-out pre-expands,
+        # sessions ship host-wire rows with fan-out 1; stages past the first
+        # are sized by the previous stage's worst-case window output
+        self.stages = [
+            _StageState(sp, self._wire_rows(si))
+            for si, sp in enumerate(program.stages)]
+        self._build_tables()
+        self._records_consumed = 0      # checkpointed resume point (records)
+        self._persisted: set[str] = set()   # restart: already-written windows
+
+    # -- construction ----------------------------------------------------------
+    def _wire_rows(self, si: int) -> int:
+        """Per-worker wire capacity for stage ``si``: the micro-batch bound
+        for stage 0, the previous stage's worst-case window output for
+        continued stages (grown on demand if flat-maps expand it)."""
+        prog = self.prog
+        sp = prog.stages[si]
+        if si == 0:
+            bound = prog.batch_records
+        else:
+            prev = prog.stages[si - 1]
+            if prev.emit.kind == "top_k":
+                bound = max(prev.emit.k, 1)
+            elif prev.emit.kind == "group":
+                bound = prog.n_workers * max(prev.capacity, 1)
+            else:
+                bound = prev.num_buckets
+        if not (sp.is_session or prog.fanout == "device"):
+            bound *= sp.assigner().max_windows_per_event()
+        return -(-bound // prog.n_workers)
+
+    def _build_tables(self) -> None:
+        prog = self.prog
+        for st in self.stages:
+            if st.plan.is_join and prog.key_space == "dense":
+                # dense joins match by label at emission, so each side keeps
+                # its own dictionary — per-side key-space sizes stay honest
+                st.tables = [_KeyTable("dense", sp.num_buckets, name=sp.name)
+                             for sp in st.plan.sides]
+            else:
+                # hashed joins match by bucket id: one shared table keeps
+                # cross-side collision accounting and labels identical
+                table = _KeyTable(prog.key_space,
+                                  st.plan.sides[0].num_buckets)
+                st.tables = [table] * len(st.plan.sides)
+        for si in range(len(self.stages) - 1):
+            st, nxt = self.stages[si], self.stages[si + 1]
+            if not st.plan.eager_boundary:
+                continue
+            if st.plan.handoff_device:
+                st.relabel = np.full(st.plan.num_buckets, -1, np.int32)
+
+            def on_new(kid: int, label: str, st=st, nxt=nxt) -> None:
+                # eager: the next stage's dictionary (and, on device
+                # boundaries, the relabel table) grows the moment this
+                # stage first sees a key — both handoff transports assign
+                # the same downstream id order, and every checkpoint
+                # snapshots a closed mapping
+                next_id = nxt.tables[0].key_id(label)
+                if st.relabel is not None:
+                    st.relabel[kid] = next_id
+                    st.relabel_dev = None
+
+            st.tables[0].on_new = on_new
 
     # -- record transforms -----------------------------------------------------
-    def _transformed(self, batch: MicroBatch, report: StreamReport
-                     ) -> list[tuple[float, Any, float, int]]:
-        """Apply each side's fused map chain and key/value extractors;
+    def _stage_recs(self, si: int, raw, report: StreamReport,
+                    count_in: bool) -> list[tuple[float, Any, float, int]]:
+        """Apply stage ``si``'s fused map chain and key/value extractors;
         returns side-tagged ``(ts, key, value, side)`` records."""
+        stage = self.stages[si]
         recs: list[tuple[float, Any, float, int]] = []
-        for rec in batch.records:
-            report.records_in += 1
+        for rec in raw:
+            if count_in:
+                report.records_in += 1
             side = int(rec[3]) if len(rec) > 3 else 0
-            sp = self.prog.sides[side]
+            sp = stage.plan.sides[side]
             if sp.transform is None:
-                out = (rec[:3],)
+                out = (tuple(rec[:3]),)
             else:
                 o = sp.transform(tuple(rec[:3]))
                 out = () if o is None else \
@@ -370,52 +514,54 @@ class StreamingCoordinator:
             for r in out:
                 recs.append((float(r[0]), sp.key_fn(r),
                              float(sp.value_fn(r)), side))
-        # flat-maps may expand a batch past batch_records: grow the wire
+        # flat-maps may expand past the stage's wire capacity: grow the
         # buffer (and retrace the step once per growth) instead of failing,
         # so the same graph runs in batch mode, where one "micro-batch" is
         # the whole input
-        if self._is_session or self.prog.fanout == "device":
+        if stage.plan.is_session or self.prog.fanout == "device":
             needed = len(recs)
         else:
-            needed = len(recs) * self.assigner.max_windows_per_event()
+            needed = len(recs) * stage.assigner.max_windows_per_event()
         per = -(-needed // self.prog.n_workers)
-        if per > self._per_worker:
-            self._per_worker = per
+        if per > stage.per_worker:
+            stage.per_worker = per
         return recs
 
     # -- batch ingestion -------------------------------------------------------
-    def _wire(self, rows: np.ndarray, width: int) -> np.ndarray:
+    def _wire(self, stage: _StageState, rows: np.ndarray,
+              width: int) -> np.ndarray:
         """Rows in the backend's wire layout: vmap batches the worker axis,
         shard_map shards the flat global array over the mesh axis."""
         if self.prog.backend == "vmap":
-            return rows.reshape(self.prog.n_workers, self._per_worker, width)
+            return rows.reshape(self.prog.n_workers, stage.per_worker, width)
         return rows
 
-    def _fold_device(self, rows: np.ndarray, report: StreamReport,
+    def _fold_device(self, si: int, rows: np.ndarray, report: StreamReport,
                      side: int = 0) -> None:
         """Fold one-row-per-record [last_window, n_windows, key, value,
         valid] rows through one side's compiled step; the device fans out,
         masks late pairs against the watermark bound, and returns the
-        accounting.  Window indices on the wire are rebased by the
-        per-batch ``_window_base`` (a multiple of ``n_slots``, so modular
-        slots are unchanged) to stay exact in float32 at any absolute
-        event time."""
-        data = self._wire(rows, 5)
-        bound = self.tracker.min_admissible() - self._window_base
+        accounting.  Window indices on the wire are rebased by the stage's
+        ``window_base`` (a multiple of ``n_slots``, so modular slots are
+        unchanged) to stay exact in float32 at any absolute event time."""
+        stage = self.stages[si]
+        data = self._wire(stage, rows, 5)
+        bound = stage.tracker.min_admissible() - stage.window_base
         bound = max(min(bound, 2 ** 31 - 1), -(2 ** 31))
-        self._carry, stats = self.pool.submit(
-            self.prog.sides[side].compiled.step, data, self._carry, bound)
+        stage.carry, stats = self.pool.submit(
+            stage.plan.sides[side].compiled.step, data, stage.carry, bound)
         late, expanded, dropped = (int(x) for x in np.asarray(stats))
-        self.tracker.note_late(late)
+        stage.tracker.note_late(late)
         report.records_expanded += expanded
         report.capacity_dropped += dropped
 
-    def _fold_host(self, rows: np.ndarray) -> None:
+    def _fold_host(self, si: int, rows: np.ndarray) -> None:
         """Host-wire fold: [window_slot, key, value, valid] rows whose slot
         was assigned host-side (legacy host fan-out, or session cells)."""
-        data = self._wire(rows, 4)
-        self._carry, _ = self.pool.submit(
-            self.prog.sides[0].compiled.step, data, self._carry)
+        stage = self.stages[si]
+        data = self._wire(stage, rows, 4)
+        stage.carry, _ = self.pool.submit(stage.compiled.step, data,
+                                          stage.carry)
 
     # -- window finalization --------------------------------------------------
     def _put_window(self, out_key: str, records: list, start: float,
@@ -441,105 +587,251 @@ class StreamingCoordinator:
             return float(total)
         return float(total / count)
 
-    def _window_records(self, slot: int) -> list[tuple[str, Any]]:
-        """One finalized fixed window's output records, per the program's
-        emission spec."""
-        emit = self.prog.emit
-        compiled = self.prog.sides[0].compiled
+    def _window_records(self, si: int, slot: int) -> list[tuple[str, Any]]:
+        """One finalized fixed window's output records, per the stage's
+        emission spec — written to the store by the final stage, fed to
+        the next stage's ingestion by an intermediate one."""
+        stage = self.stages[si]
+        emit = stage.plan.emit
+        compiled = stage.compiled
+        table = stage.tables[0]
         records: list[tuple[str, Any]] = []
         if emit.kind == "group":
-            gk, gv, gvalid = compiled.finalize_slot(self._carry, slot)
-            records = [(self._label(int(k)), float(v))
+            gk, gv, gvalid = compiled.finalize_slot(stage.carry, slot)
+            records = [(table.label(int(k)), float(v))
                        for k, v, ok in zip(gk, gv, gvalid) if ok]
             records.sort(key=lambda kv: kv[0])
         elif emit.kind == "top_k":
-            ids, _vals, valid = compiled.top_k_slot(self._carry, slot,
+            ids, _vals, valid = compiled.top_k_slot(stage.carry, slot,
                                                     emit.rank_by)
-            agg = compiled.read_slot(self._carry, slot)
+            agg = compiled.read_slot(stage.carry, slot)
             for kid in ids[valid]:
-                records.append((self._label(int(kid)), self._aggregate_value(
+                records.append((table.label(int(kid)), self._aggregate_value(
                     emit.aggregation, agg[kid, 0], agg[kid, 1])))
             # rank order, not label order: the k heaviest keys, heaviest
             # first — deterministic (top_k ties break on bucket id)
         elif emit.kind == "join":
-            agg = compiled.read_slot(self._carry, slot)
+            agg = compiled.read_slot(stage.carry, slot)
             lkind, rkind = emit.join_aggs
-            both = np.nonzero((agg[:, 1] > 0) & (agg[:, 3] > 0))[0]
-            for kid in both:
-                records.append((self._label(int(kid)), [
-                    self._aggregate_value(lkind, agg[kid, 0], agg[kid, 1]),
-                    self._aggregate_value(rkind, agg[kid, 2], agg[kid, 3]),
-                ]))
+            lt, rt = stage.tables
+            if lt is rt:
+                # hashed join: both sides share one bucket space — match by
+                # bucket id, label from the shared table
+                both = np.nonzero((agg[:, 1] > 0) & (agg[:, 3] > 0))[0]
+                for kid in both:
+                    records.append((lt.label(int(kid)), [
+                        self._aggregate_value(lkind, agg[kid, 0],
+                                              agg[kid, 1]),
+                        self._aggregate_value(rkind, agg[kid, 2],
+                                              agg[kid, 3]),
+                    ]))
+            else:
+                # dense join (possibly asymmetric key spaces): each side
+                # owns its dictionary, so equality is by label
+                left = {lt.label(int(k)): int(k)
+                        for k in np.nonzero(agg[:lt.num_buckets, 1] > 0)[0]}
+                for rk in np.nonzero(agg[:rt.num_buckets, 3] > 0)[0]:
+                    lab = rt.label(int(rk))
+                    lk = left.get(lab)
+                    if lk is None:
+                        continue
+                    records.append((lab, [
+                        self._aggregate_value(lkind, agg[lk, 0], agg[lk, 1]),
+                        self._aggregate_value(rkind, agg[rk, 2], agg[rk, 3]),
+                    ]))
             records.sort(key=lambda kv: kv[0])
         else:
-            agg = compiled.read_slot(self._carry, slot)
+            agg = compiled.read_slot(stage.carry, slot)
             sums, counts = agg[:, 0], agg[:, 1]
             for kid in np.nonzero(counts > 0)[0]:
-                records.append((self._label(int(kid)), self._aggregate_value(
+                records.append((table.label(int(kid)), self._aggregate_value(
                     emit.aggregation, sums[kid], counts[kid])))
             records.sort(key=lambda kv: kv[0])
         return records
 
-    def _emit_window(self, window_index: int, slot: int,
+    def _emit_window(self, si: int, window_index: int, slot: int,
                      report: StreamReport) -> None:
-        window = self.assigner.window(window_index)
-        records = self._window_records(slot)
+        stage = self.stages[si]
+        window = stage.assigner.window(window_index)
+        records = self._window_records(si, slot)
         self._put_window(window_output_key(self.prog, window), records,
                          window.start, window.end, report)
-        self._carry = self.prog.sides[0].compiled.clear_slot(self._carry,
-                                                             slot)
-        self.tracker.release(window_index)
+        stage.carry = stage.compiled.clear_slot(stage.carry, slot)
+        stage.tracker.release(window_index)
 
-    def _emit_session(self, session, report: StreamReport) -> None:
-        compiled = self.prog.sides[0].compiled
-        cell = compiled.read_cell(self._carry, session.slot, session.bucket)
-        label = self._label(session.bucket)
+    def _emit_session(self, si: int, session, report: StreamReport) -> None:
+        stage = self.stages[si]
+        compiled = stage.compiled
+        cell = compiled.read_cell(stage.carry, session.slot, session.bucket)
+        label = stage.tables[0].label(session.bucket)
         records: list[tuple[str, Any]] = []
         if cell[1] > 0:
             records.append((label, self._aggregate_value(
-                self.prog.emit.aggregation, cell[0], cell[1])))
+                stage.plan.emit.aggregation, cell[0], cell[1])))
         out_key = session_output_key(self.prog, label, session.start,
                                      session.end)
         self._put_window(out_key, records, session.start, session.end,
                          report)
-        self._carry = compiled.clear_cell(self._carry, session.slot,
+        stage.carry = compiled.clear_cell(stage.carry, session.slot,
                                           session.bucket)
-        self.tracker.release(session)
+        stage.tracker.release(session)
 
-    def _finalize_ripe(self, report: StreamReport) -> None:
-        if self._is_session:
-            for session in self.tracker.ripe():
-                self._emit_session(session, report)
-                report.windows_emitted += 1
+    # -- span admission (shared by record ingestion and the carry handoff) -----
+    def _admit_span(self, si: int, lo: int, hi: int, seen: float,
+                    ship, flush, report: StreamReport, *ship_args) -> None:
+        """Admit windows ``[lo, hi]`` on stage ``si``'s ring and ship the
+        span in contiguous segments — THE ring/watermark protocol, in one
+        place for both transports.
+
+        ``ship(last, n, *ship_args)`` emits one segment covering
+        ``[last - n + 1, last]`` (absolute indices; late windows inside it
+        are masked + counted on device) — the extra args pass per-record
+        context through without a per-record closure on the hot path.  On
+        a mid-span ring-full, the already-safe prefix ships, ``flush()``
+        folds whatever the caller has staged, the watermark advances to
+        ``seen``, ripe windows finalize, and the blocked window retries
+        once — a second failure is a genuine capacity error and
+        propagates.  A window the watermark closed during the retry stays
+        in the span for the device mask (re-admitting it would
+        double-count the pair)."""
+        stage = self.stages[si]
+        start = lo
+        for widx in range(lo, hi + 1):
+            if widx in stage.tracker.active or stage.tracker.is_late(widx):
+                continue        # device masks + counts the late pairs
+            try:
+                stage.tracker.slot_for(widx)
+            except LateEventError:
+                if widx > start:
+                    ship(widx - 1, widx - start, *ship_args)
+                    start = widx
+                flush()
+                stage.tracker.observe(seen)
+                self._finalize_ripe(report, si)
+                if not stage.tracker.is_late(widx):
+                    stage.tracker.slot_for(widx)
+        if hi >= start:
+            ship(hi, hi - start + 1, *ship_args)
+
+    # -- the carry handoff (stage N windows → stage N+1 batches) ---------------
+    def _handoff_device(self, si: int, slot: int, wstart: float,
+                        report: StreamReport) -> None:
+        """On-device boundary: re-key/re-window one finalized window of
+        stage ``si`` and fold it into stage ``si+1``'s carry without the
+        aggregates visiting the host.  Admission control (which target
+        windows are open) stays host-side — it is pure scalar math on the
+        window's timestamp — through the same ``_admit_span`` protocol as
+        record ingestion."""
+        dst = self.stages[si + 1]
+        asg = dst.assigner
+        w0 = asg.window(0)
+        step = asg.window(1).start - w0.start
+        rel = wstart - w0.start
+        last = int(math.floor(rel / step))
+        if dst.plan.window.slide is None:
+            first = last
         else:
-            for window_index, slot in self.tracker.ripe():
-                self._emit_window(window_index, slot, report)
+            first = int(math.floor((rel - w0.size) / step)) + 1
+        dst.window_base = (first // dst.plan.n_slots) * dst.plan.n_slots
+        self._admit_span(
+            si + 1, first, last, wstart,
+            lambda seg_last, n: self._handoff_step(si, slot, seg_last, n,
+                                                   report),
+            lambda: None, report)
+
+    def _handoff_step(self, si: int, slot: int, last: int, n_windows: int,
+                      report: StreamReport) -> None:
+        """One fused handoff: gather stage ``si``'s finalized slot, relabel
+        + re-window + fold through stage ``si+1``'s step, all on device."""
+        src, dst = self.stages[si], self.stages[si + 1]
+        if src.relabel_dev is None:
+            src.relabel_dev = jnp.asarray(src.relabel)
+        base = dst.window_base
+        rows = src.compiled.handoff_rows(
+            src.carry, slot, src.relabel_dev, last - base, n_windows,
+            src.plan.emit.aggregation,
+            dst.per_worker * self.prog.n_workers)
+        bound = dst.tracker.min_admissible() - base
+        bound = max(min(bound, 2 ** 31 - 1), -(2 ** 31))
+        dst.carry, stats = self.pool.submit(dst.compiled.step, rows,
+                                            dst.carry, bound)
+        late, expanded, dropped = (int(x) for x in np.asarray(stats))
+        dst.tracker.note_late(late)
+        report.records_expanded += expanded
+        report.capacity_dropped += dropped
+
+    def _feed(self, si: int, records: list, report: StreamReport) -> None:
+        """Host boundary: one finalized window's records, materialized and
+        fed through stage ``si``'s ordinary ingestion (its inter-stage maps
+        and ``key_by`` apply here)."""
+        recs = self._stage_recs(si, records, report, count_in=False)
+        if not recs:
+            return
+        if self.prog.fanout == "device":
+            self._ingest_device(si, recs, report)
+        else:
+            self._ingest_host(si, recs, report)
+
+    def _finalize_ripe(self, report: StreamReport, si: int = 0) -> None:
+        """Emit (final stage) or hand off (intermediate stage) every window
+        the stage's watermark has passed, then cascade: the handed-off
+        window starts advance the next stage's watermark, which may ripen
+        *its* windows, and so on down the chain."""
+        stage = self.stages[si]
+        last_stage = si == len(self.stages) - 1
+        if stage.plan.is_session:
+            for session in stage.tracker.ripe():
+                self._emit_session(si, session, report)
                 report.windows_emitted += 1
+            return      # sessions run in the final position only
+        fed = _NEG_INF
+        for window_index, slot in stage.tracker.ripe():
+            if last_stage:
+                self._emit_window(si, window_index, slot, report)
+                report.windows_emitted += 1
+                continue
+            window = stage.assigner.window(window_index)
+            if stage.plan.handoff_device:
+                self._handoff_device(si, slot, window.start, report)
+            else:
+                self._feed(si + 1,
+                           [(window.start, key, value)
+                            for key, value in self._window_records(si, slot)],
+                           report)
+            report.handoffs += 1
+            stage.carry = stage.compiled.clear_slot(stage.carry, slot)
+            stage.tracker.release(window_index)
+            fed = max(fed, window.start)
+        if not last_stage and fed > _NEG_INF:
+            self.stages[si + 1].tracker.observe(fed)
+            self._finalize_ripe(report, si + 1)
 
     # -- checkpoint / restore --------------------------------------------------
     def _save_state(self) -> None:
-        """Persist the full streaming state at a batch boundary: carry
-        leaves to the object store, tracker + key dictionary + the consumed
-        *record* offset to the metadata store.  Record addressing (not batch
-        indices) keeps resume correct when the log grows past a
-        previously-partial final batch.  A restarted coordinator re-folds at
-        most the batches since the last checkpoint; window emissions are
-        idempotent (same carry → same bytes) and replayed writes of
-        already-persisted windows are skipped (``_put_window``), keeping
-        restart effectively exactly-once."""
+        """Persist the full streaming state at a batch boundary: every
+        stage's carry — one pytree — to the object store, trackers + key
+        dictionaries + the consumed *record* offset to the metadata store.
+        Record addressing (not batch indices) keeps resume correct when the
+        log grows past a previously-partial final batch.  A restarted
+        coordinator re-folds at most the batches since the last checkpoint;
+        window emissions are idempotent (same carries → same bytes),
+        replayed handoffs re-fold into carries that predate them, and
+        replayed writes of already-persisted windows are skipped
+        (``_put_window``), keeping restart effectively exactly-once."""
+        carries = tuple(st.carry for st in self.stages)
         leaves = [np.asarray(leaf)
-                  for leaf in jax.tree_util.tree_leaves(self._carry)]
+                  for leaf in jax.tree_util.tree_leaves(carries)]
         buf = io.BytesIO()
         np.savez(buf, **{f"leaf{i}": leaf for i, leaf in enumerate(leaves)})
         self.store.put(_carry_key(self.prog.job_id), buf.getvalue())
         self.meta.set(_state_key(self.prog.job_id), {
             "offset": self._records_consumed,
             "carry_shapes": [list(leaf.shape) for leaf in leaves],
-            "tracker": self.tracker.state_dict(),
-            "keys": list(self._id_keys),
-            "bucket_keys": [[kid, keys]
-                            for kid, keys in self._bucket_keys.items()],
-            "hash_collisions": self._hash_collisions,
+            "stages": [{
+                "tracker": st.tracker.state_dict(),
+                "tables": [t.state_dict()
+                           for t in self._unique_tables(st)],
+            } for st in self.stages],
         })
 
     def _restore_state(self) -> int:
@@ -555,12 +847,18 @@ class StreamingCoordinator:
         if state is None:
             self._records_consumed = 0
             return 0
-        if "carry_shapes" not in state:
+        if "carry_shapes" not in state or "stages" not in state:
             raise ValueError(
                 f"checkpoint for job {self.prog.job_id} predates the "
-                f"execution-plan carry format (PR 2); restart the stream "
+                f"multi-stage carry format (PR 4); restart the stream "
                 f"under a fresh job_id or replay it from the log")
-        leaves, treedef = jax.tree_util.tree_flatten(self._carry)
+        if len(state["stages"]) != len(self.stages):
+            raise ValueError(
+                f"checkpoint for job {self.prog.job_id} holds "
+                f"{len(state['stages'])} stages but this program has "
+                f"{len(self.stages)}; the pipeline changed under the job")
+        carries = tuple(st.carry for st in self.stages)
+        leaves, treedef = jax.tree_util.tree_flatten(carries)
         shapes = [tuple(s) for s in state["carry_shapes"]]
         if shapes != [leaf.shape for leaf in leaves]:
             raise ValueError(
@@ -571,15 +869,25 @@ class StreamingCoordinator:
         with np.load(io.BytesIO(blob)) as loaded:
             restored = [jnp.asarray(loaded[f"leaf{i}"])
                         for i in range(len(leaves))]
-        self._carry = jax.tree_util.tree_unflatten(treedef, restored)
-        self.tracker.load_state_dict(state["tracker"])
-        self._id_keys = list(state["keys"])
-        self._key_ids = {k: i for i, k in enumerate(self._id_keys)}
-        self._bucket_keys = {int(kid): list(keys)
-                             for kid, keys in state.get("bucket_keys", [])}
-        self._raw_ids = {k: fold_key24(k)
-                         for keys in self._bucket_keys.values() for k in keys}
-        self._hash_collisions = int(state.get("hash_collisions", 0))
+        for st, carry in zip(self.stages,
+                             jax.tree_util.tree_unflatten(treedef, restored)):
+            st.carry = carry
+        for st, sdict in zip(self.stages, state["stages"]):
+            st.tracker.load_state_dict(sdict["tracker"])
+            for table, tdict in zip(self._unique_tables(st),
+                                    sdict["tables"]):
+                table.load_state_dict(tdict)
+        # rebuild the device-handoff relabel tables from the restored
+        # dictionaries (eager registration means every label already has a
+        # next-stage id — nothing is created here)
+        for si in range(len(self.stages) - 1):
+            st = self.stages[si]
+            if st.relabel is None:
+                continue
+            nxt = self.stages[si + 1].tables[0]
+            for kid, key in enumerate(st.tables[0].dense_keys):
+                st.relabel[kid] = nxt.key_id(str(key))
+            st.relabel_dev = None
         self._records_consumed = int(state["offset"])
         return self._records_consumed
 
@@ -613,8 +921,7 @@ class StreamingCoordinator:
             n += 1
         return n
 
-    def _ingest_device(self, batch: MicroBatch,
-                       report: StreamReport) -> None:
+    def _ingest_device(self, si: int, recs, report: StreamReport) -> None:
         """Device fan-out ingestion: one 5-column row per record; window
         *indices* are assigned host-side in float64 (bit-identical to the
         host-fan-out assigner) but the event × window expansion happens
@@ -624,33 +931,29 @@ class StreamingCoordinator:
         watermark advance still land, exactly like the host path.  Each
         record folds through its side's plan; a join's two sides share the
         carry, so one pass interleaves them safely."""
+        stage = self.stages[si]
         prog = self.prog
-        recs = self._transformed(batch, report)
-        if not recs:
-            self.tracker.observe(batch.max_event_time)
-            self._finalize_ripe(report)
-            return
-        w0 = self.assigner.window(0)
-        step = self.assigner.window(1).start - w0.start
+        w0 = stage.assigner.window(0)
+        step = stage.assigner.window(1).start - w0.start
         ts = np.array([r[0] for r in recs], np.float64)
         rel = ts - w0.start
         last = np.floor(rel / step).astype(np.int64)
-        if prog.window.slide is None:
+        if stage.plan.window.slide is None:
             first = last
         else:
             first = np.floor((rel - w0.size) / step).astype(np.int64) + 1
         # rebase wire indices so they stay exact in float32 at any absolute
         # event time; a multiple of n_slots keeps w % n_slots unchanged
-        base = (int(first.min()) // prog.n_slots) * prog.n_slots
+        n_slots = stage.plan.n_slots
+        base = (int(first.min()) // n_slots) * n_slots
         if int(last.max()) - base >= _MAX_WIRE_INT:
             raise ValueError(
-                f"micro-batch {batch.index} spans "
-                f"{int(last.max()) - base} windows, beyond the float32 "
-                f"wire's exact-integer range; reduce batch_records or "
-                f"raise the window slide")
-        self._window_base = base
-        n_sides = len(prog.sides)
-        shape = (prog.n_workers * self._per_worker, 5)
+                f"one ingestion round spans {int(last.max()) - base} "
+                f"windows, beyond the float32 wire's exact-integer range; "
+                f"reduce batch_records or raise the window slide")
+        stage.window_base = base
+        n_sides = len(stage.plan.sides)
+        shape = (prog.n_workers * stage.per_worker, 5)
         rows = [np.zeros(shape, np.float32) for _ in range(n_sides)]
         n = [0] * n_sides
 
@@ -660,137 +963,134 @@ class StreamingCoordinator:
             # next writes
             for s in range(n_sides):
                 if n[s]:
-                    self._fold_device(rows[s], report, s)
+                    self._fold_device(si, rows[s], report, s)
                     rows[s] = np.zeros(shape, np.float32)
                     n[s] = 0
 
-        seen = float("-inf")        # stream position within this batch
+        seen = _NEG_INF             # stream position within this round
+
+        def ship(seg_last: int, nw: int, side: int, kid: int,
+                 value: float) -> None:
+            rows[side][n[side]] = (seg_last - base, nw, kid, value, 1.0)
+            n[side] += 1
+
         for i, (tsi, key, value, side) in enumerate(recs):
             seen = tsi if tsi > seen else seen
-            kid = self._key_id(key)
-            lo, hi = int(first[i]), int(last[i])
-            start = lo
-            for widx in range(lo, hi + 1):
-                if widx in self.tracker.active or self.tracker.is_late(widx):
-                    continue        # device masks + counts the late pairs
-                try:
-                    self.tracker.slot_for(widx)
-                except LateEventError:
-                    # ring full mid-batch: ship this record's already-safe
-                    # window span, fold what we have, advance the watermark
-                    # to the position reached, finalize ripe windows, then
-                    # retry (a second failure is a genuine capacity error
-                    # and propagates)
-                    if widx > start:
-                        rows[side][n[side]] = (widx - 1 - base, widx - start,
-                                               kid, value, 1.0)
-                        n[side] += 1
-                        start = widx
-                    fold_staged()
-                    self.tracker.observe(seen)
-                    self._finalize_ripe(report)
-                    if not self.tracker.is_late(widx):
-                        self.tracker.slot_for(widx)
-                    # else: the watermark advance closed widx; the device
-                    # masks + counts the pair (slot_for would double-count)
-            if hi >= start:
-                rows[side][n[side]] = (hi - base, hi - start + 1, kid, value,
-                                       1.0)
-                n[side] += 1
+            kid = stage.tables[side].key_id(key)
+            # a mid-span ring-full ships the record's already-safe prefix,
+            # folds the staged rows, and finalizes before retrying — see
+            # _admit_span for the protocol
+            self._admit_span(si, int(first[i]), int(last[i]), seen, ship,
+                             fold_staged, report, side, kid, value)
         for s in range(n_sides):
-            self._fold_device(rows[s], report, s)
-        self.tracker.observe(batch.max_event_time)
-        self._finalize_ripe(report)
+            self._fold_device(si, rows[s], report, s)
 
-    def _ingest_host(self, batch: MicroBatch, report: StreamReport) -> None:
+    def _ingest_host(self, si: int, recs, report: StreamReport) -> None:
         """Legacy host fan-out: expand every record into one row per
         containing window on the host (numpy), the PR 1 baseline the
-        device path is benchmarked against."""
-        prog = self.prog
-        recs = self._transformed(batch, report)
-        rows = np.zeros((prog.n_workers * self._per_worker, 4), np.float32)
+        device path is benchmarked against.  Host-dropped pairs are
+        counted here through the tracker's single accounting entry point
+        (``note_late``)."""
+        stage = self.stages[si]
+        rows = np.zeros((self.prog.n_workers * stage.per_worker, 4),
+                        np.float32)
         n = 0
-        seen = float("-inf")
+        seen = _NEG_INF
         for ts, key, value, _side in recs:
             seen = ts if ts > seen else seen
-            for widx in self.assigner.assign(ts):
+            for widx in stage.assigner.assign(ts):
                 try:
-                    slot = self.tracker.slot_for(widx)
+                    slot = stage.tracker.slot_for(widx)
                 except LateEventError:
                     if n:
-                        self._fold_host(rows)
+                        self._fold_host(si, rows)
                         report.records_expanded += n
                         rows = np.zeros_like(rows)
                         n = 0
-                    self.tracker.observe(seen)
-                    self._finalize_ripe(report)
-                    slot = self.tracker.slot_for(widx)
+                    stage.tracker.observe(seen)
+                    self._finalize_ripe(report, si)
+                    slot = stage.tracker.slot_for(widx)
                 if slot is None:        # late: window already emitted
+                    stage.tracker.note_late(1)
                     continue
-                rows[n] = (slot, self._key_id(key), value, 1.0)
+                rows[n] = (slot, stage.tables[0].key_id(key), value, 1.0)
                 n += 1
         report.records_expanded += n
-        self._fold_host(rows)
-        self.tracker.observe(batch.max_event_time)
-        self._finalize_ripe(report)
+        self._fold_host(si, rows)
 
-    def _ingest_session(self, batch: MicroBatch,
-                        report: StreamReport) -> None:
+    def _ingest_session(self, si: int, recs, report: StreamReport) -> None:
         """Session ingestion: the tracker assigns each admitted event a
         carry cell (slot, bucket), merging bridged sessions; rows ship on
         the host wire with fan-out 1.  Cell merges apply *after* folding
         the rows already staged for the source cells, so the carry and the
         tracker never disagree about where a session lives."""
-        compiled = self.prog.sides[0].compiled
-        recs = self._transformed(batch, report)
-        shape = (self.prog.n_workers * self._per_worker, 4)
+        stage = self.stages[si]
+        compiled = stage.compiled
+        table = stage.tables[0]
+        shape = (self.prog.n_workers * stage.per_worker, 4)
         rows = np.zeros(shape, np.float32)
         n = 0
-        seen = float("-inf")
+        seen = _NEG_INF
 
         def fold_staged() -> None:
             nonlocal rows, n
             if n:
                 report.records_expanded += n
-                self._fold_host(rows)
+                self._fold_host(si, rows)
                 rows = np.zeros(shape, np.float32)
                 n = 0
 
         for tsi, key, value, _side in recs:
             seen = tsi if tsi > seen else seen
-            kid = self._key_id(key)
-            bucket = self._bucket_of(kid)
+            kid = table.key_id(key)
+            bucket = table.bucket_of(kid)
             try:
-                admitted = self.tracker.admit(bucket, tsi)
+                admitted = stage.tracker.admit(bucket, tsi)
             except LateEventError:
                 # every slot holds an open session for this bucket: fold,
                 # advance the watermark to the position reached, finalize,
                 # retry (a second failure is a genuine capacity error)
                 fold_staged()
-                self.tracker.observe(seen)
-                self._finalize_ripe(report)
-                admitted = self.tracker.admit(bucket, tsi)
-            if admitted is None:
-                continue                # late: session already emitted
+                stage.tracker.observe(seen)
+                self._finalize_ripe(report, si)
+                admitted = stage.tracker.admit(bucket, tsi)
+            if admitted is None:        # late: session already emitted
+                stage.tracker.note_late(1)
+                continue
             slot, merges = admitted
             if merges:
                 fold_staged()
                 for src, dst in merges:
-                    self._carry = compiled.merge_cell(self._carry, src, dst,
+                    stage.carry = compiled.merge_cell(stage.carry, src, dst,
                                                       bucket)
             rows[n] = (slot, kid, value, 1.0)
             n += 1
         fold_staged()
-        self.tracker.observe(batch.max_event_time)
-        self._finalize_ripe(report)
+
+    @staticmethod
+    def _unique_tables(st: _StageState) -> list[_KeyTable]:
+        """A stage's tables deduped by identity — a hashed join aliases
+        one shared table in both side slots."""
+        seen: list[_KeyTable] = []
+        for table in st.tables:
+            if not any(table is u for u in seen):
+                seen.append(table)
+        return seen
+
+    def _late_dropped(self) -> int:
+        return sum(st.tracker.late_dropped for st in self.stages)
+
+    def _total_collisions(self) -> int:
+        return sum(table.collisions for st in self.stages
+                   for table in self._unique_tables(st))
 
     def process_batch(self, batch: MicroBatch,
                       report: StreamReport) -> None:
         """One micro-batch round: admit → fold (device) → watermark →
-        finalize.  Normally one fused collective per batch per side; a
-        batch that spans more windows than the ring holds (low event rate
-        relative to batch size) folds and finalizes mid-batch instead of
-        aborting."""
+        finalize, cascading finalized windows into any continued stages.
+        Normally one fused collective per batch per side; a batch that
+        spans more windows than the ring holds (low event rate relative to
+        batch size) folds and finalizes mid-batch instead of aborting."""
         prog = self.prog
         if len(batch.records) > prog.batch_records:
             raise ValueError(
@@ -802,15 +1102,20 @@ class StreamingCoordinator:
         self.bus.poll(self.CONSUMER_GROUP, TOPIC_STREAM_BATCH,
                       timeout=0.01, max_records=1)
         self._autoscale(report)
-        late_before = self.tracker.late_dropped
-        if self._is_session:
-            self._ingest_session(batch, report)
-        elif prog.fanout == "device":
-            self._ingest_device(batch, report)
-        else:
-            self._ingest_host(batch, report)
-        report.late_dropped += self.tracker.late_dropped - late_before
-        report.hash_collisions = self._hash_collisions
+        late_before = self._late_dropped()
+        stage0 = self.stages[0]
+        recs = self._stage_recs(0, batch.records, report, count_in=True)
+        if recs:
+            if stage0.plan.is_session:
+                self._ingest_session(0, recs, report)
+            elif prog.fanout == "device":
+                self._ingest_device(0, recs, report)
+            else:
+                self._ingest_host(0, recs, report)
+        stage0.tracker.observe(batch.max_event_time)
+        self._finalize_ripe(report, 0)
+        report.late_dropped += self._late_dropped() - late_before
+        report.hash_collisions = self._total_collisions()
         report.batches += 1
         self._records_consumed += len(batch.records)
         # sparser checkpoints trade restart replay (the log is replayable
@@ -825,7 +1130,8 @@ class StreamingCoordinator:
                    flush: bool = True) -> StreamReport:
         """Consume the whole currently-available log; with ``flush`` also
         finalize the still-open windows at the end (end-of-stream watermark
-        → +inf), which a truly continuous deployment would never do."""
+        → +inf, rippled through every stage), which a truly continuous
+        deployment would never do."""
         report = StreamReport(self.prog.job_id)
         t_start = time.perf_counter()
         start = self._restore_state()
@@ -841,8 +1147,9 @@ class StreamingCoordinator:
                 # late); flushed windows then re-finalize idempotently
                 if report.batches and self.prog.checkpoint_interval:
                     self._save_state()
-                self.tracker.observe(float("inf"))
-                self._finalize_ripe(report)
+                for si in range(len(self.stages)):
+                    self.stages[si].tracker.observe(float("inf"))
+                    self._finalize_ripe(report, si)
         except Exception as exc:
             report.error = str(exc)
             raise

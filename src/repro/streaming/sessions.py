@@ -75,10 +75,13 @@ class SessionTracker:
     def admit(self, bucket: int, ts: float
               ) -> tuple[int, list[tuple[int, int]]] | None:
         """Admit one event: returns ``(slot, merges)`` or ``None`` for a
-        late drop.  ``merges`` is a list of ``(src_slot, dst_slot)`` cell
-        merges (same bucket) the caller must apply to the carry — after
-        folding any rows already staged for the source slots — because the
-        event bridged previously separate sessions.
+        late drop (the caller accounts it via ``note_late`` — admission
+        never writes ``late_dropped`` itself, mirroring the fixed-window
+        tracker's single-writer rule).  ``merges`` is a list of
+        ``(src_slot, dst_slot)`` cell merges (same bucket) the caller must
+        apply to the carry — after folding any rows already staged for the
+        source slots — because the event bridged previously separate
+        sessions.
 
         Raises ``LateEventError`` when a new session is needed but every
         slot's cell for this bucket is occupied (the ring is too small for
@@ -89,7 +92,6 @@ class SessionTracker:
         hits = self._overlapping(bucket, ts)
         if not hits:
             if ts < self.watermark:
-                self.late_dropped += 1
                 return None
             sessions = self._open.setdefault(bucket, [])
             for slot in range(self.n_slots):
@@ -137,6 +139,8 @@ class SessionTracker:
         self.finalized += 1
 
     def note_late(self, n: int) -> None:
+        """The only writer of ``late_dropped`` — see
+        ``WindowTracker.note_late`` for the ownership rule."""
         self.late_dropped += int(n)
 
     @property

@@ -61,16 +61,16 @@ class WindowTracker:
         claiming it on first sight.
 
         Returns ``None`` for a late window (the event must be dropped — its
-        aggregate was already emitted).  Raises ``LateEventError`` if the
-        window's modular slot still carries an older active window, which
-        means ``n_slots`` is too small for the configured window span +
-        lateness: admitting the event would corrupt that window's carry
-        slice.
+        aggregate was already emitted); the caller accounts the drop via
+        ``note_late``, never this method — see the ownership note there.
+        Raises ``LateEventError`` if the window's modular slot still
+        carries an older active window, which means ``n_slots`` is too
+        small for the configured window span + lateness: admitting the
+        event would corrupt that window's carry slice.
         """
         if window_index in self.active:
             return self.active[window_index]
         if self.is_late(window_index):
-            self.late_dropped += 1
             return None
         slot = window_index % self.n_slots
         owner = self._slots.get(slot)
@@ -84,8 +84,15 @@ class WindowTracker:
         return slot
 
     def note_late(self, n: int) -> None:
-        """Account (event, window) pairs the device fan-out masked as late —
-        the on-chip counterpart of ``slot_for`` returning ``None``."""
+        """Account ``n`` dropped (event, window) pairs.
+
+        The **only** writer of ``late_dropped``: the coordinator calls it
+        with the device fan-out's masked-pair count (device wire) or once
+        per ``slot_for``-returned-``None`` pair it drops host-side (host
+        wire).  Admission methods never count on their own — a pair that
+        is skipped host-side but still rides the wire inside a record's
+        window span is counted exactly once, by the device mask.
+        """
         self.late_dropped += int(n)
 
     # -- watermark ------------------------------------------------------------

@@ -229,6 +229,60 @@ def test_min_live_index_exact_on_boundary():
 
 
 # ---------------------------------------------------------------------------
+# Carry handoff: finalized aggregates → the next plan's wire rows
+# ---------------------------------------------------------------------------
+
+def test_carry_handoff_rows_relabels_and_masks():
+    """The handoff stage body: occupied buckets become device-fan-out wire
+    rows with the relabeled key and the kind-selected value; empty or
+    unlabeled buckets come back invalid, and the output pads to the
+    destination's wire capacity."""
+    from repro.engine.stages import carry_handoff_rows
+    agg = jnp.asarray([[6.0, 2.0],      # bucket 0: sum 6, count 2
+                       [0.0, 0.0],      # bucket 1: empty
+                       [5.0, 1.0],      # bucket 2: occupied
+                       [9.0, 3.0]])     # bucket 3: occupied but unlabeled
+    relabel = jnp.asarray([7, 4, 1, -1], jnp.int32)
+    for kind, want in (("count", [2.0, 1.0]), ("sum", [6.0, 5.0]),
+                       ("mean", [3.0, 5.0])):
+        rows = np.asarray(carry_handoff_rows(
+            agg, relabel, jnp.float32(11.0), jnp.float32(2.0), kind, 8))
+        assert rows.shape == (8, 5)
+        valid = rows[:, 4] > 0
+        assert valid.tolist() == [True, False, True, False] + [False] * 4
+        assert rows[valid, 2].tolist() == [7.0, 1.0]      # relabeled keys
+        assert rows[valid, 3].tolist() == want
+        assert set(rows[valid, 0]) == {11.0}              # last_window
+        assert set(rows[valid, 1]) == {2.0}               # n_windows
+
+
+def test_compiled_handoff_rows_feed_next_plan():
+    """End-to-end through the compiled plans: fold records into plan A,
+    hand its finalized slot to plan B via ``handoff_rows`` + ``step``, and
+    read the re-windowed aggregate back from B's carry."""
+    nb = 8
+    plan = ExecutionPlan(KeySpace.dense(nb), ReduceSpec("aggregate"),
+                         n_workers=W,
+                         window=WindowSpec(size=10.0, n_slots=4))
+    a = plan.compile()
+    b = plan.compile()
+    ca, cb = a.init_carry(), b.init_carry()
+    rows = np.zeros((W, 2, 5), np.float32)
+    rows[0, 0] = (3, 1, 2, 5.0, 1.0)    # window 3, key 2, value 5
+    rows[0, 1] = (3, 1, 2, 7.0, 1.0)    # window 3, key 2, value 7
+    rows[1, 0] = (3, 1, 4, 1.0, 1.0)    # window 3, key 4
+    ca, _ = a.step(rows, ca, -(2 ** 31))
+    relabel = jnp.arange(nb, dtype=jnp.int32)       # identity re-key
+    handoff = a.handoff_rows(ca, 3, relabel, 1, 1, "sum", W * 2)
+    assert handoff.shape == (W, 2, 5)               # vmap wire layout
+    cb, _ = b.step(handoff, cb, -(2 ** 31))
+    agg = b.read_slot(cb, 1)                        # window 1 of plan B
+    assert agg[2].tolist() == [12.0, 1.0]           # sum 12 as ONE record
+    assert agg[4].tolist() == [1.0, 1.0]
+    assert np.all(agg[[0, 1, 3, 5, 6, 7]] == 0)
+
+
+# ---------------------------------------------------------------------------
 # Windowed group mode: arbitrary reduce_fn through the plan layer
 # ---------------------------------------------------------------------------
 

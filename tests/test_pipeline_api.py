@@ -1,8 +1,9 @@
 """The declarative Pipeline API: graph validation, map fusion, one
 definition running batch + streaming with bit-identical windows, session
 windows vs a host reference, top-k exactness vs a full sort, windowed join
-parity, the deprecation shims, shared host/device key hashing, and restart
-write-idempotency."""
+parity (symmetric and per-side key spaces), multi-stage chains via carry
+handoff (reduce → map → window → reduce), the deprecation shims, shared
+host/device key hashing, and restart write-idempotency."""
 
 import json
 from collections import Counter, defaultdict
@@ -369,6 +370,49 @@ def test_windowed_join_parity_and_oracle():
         assert rows == pytest.approx(want)          # inner join, both aggs
 
 
+def test_join_per_side_num_buckets_parity_and_oracle():
+    """num_buckets=(left, right) sizes the two key spaces independently:
+    the symmetric tuple must be byte-identical to the int path, and the
+    asymmetric build must produce the same joined content (and survive the
+    streaming drive) — the carry widens to the larger side while each
+    side's dictionary stays within its own declared space."""
+    mk = lambda n, n_keys, seed: _events(n=n, n_keys=n_keys, span=100.0,
+                                         seed=seed, vmax=9)
+    left_ev, right_ev = mk(600, 4, 14), mk(900, 20, 15)
+    left = (Pipeline.from_source(records=left_ev, batch_records=100)
+            .key_by().window(Windowing.tumbling(25.0)).reduce("sum"))
+    right = (Pipeline.from_source(records=right_ev, batch_records=100)
+             .key_by().window(Windowing.tumbling(25.0)).reduce("count"))
+    sym_t, _ = left.join(right).build(num_buckets=(20, 20), n_workers=W,
+                                      job_id="jsym").run_batch(MemoryStore())
+    sym_i, _ = left.join(right).build(num_buckets=20, n_workers=W,
+                                      job_id="jsym").run_batch(MemoryStore())
+    assert sym_t and sym_t == sym_i        # tuple(L, L) ≡ int L, byte for byte
+    asym = left.join(right).build(num_buckets=(4, 20), n_workers=W,
+                                  job_id="jasym")
+    assert [s.num_buckets for s in asym.sides] == [4, 20]
+    assert asym.num_buckets == 20          # the shared carry takes the max
+    batched, _ = asym.run_batch(MemoryStore())
+    strip = lambda outs: {k.rsplit("/", 1)[1]: v for k, v in outs.items()}
+    assert strip(batched) == strip(sym_i)  # same joined content
+    streamed = _streamed(asym, MemoryStore())
+    assert strip(streamed) == strip(batched)    # and both modes agree
+
+
+def test_join_per_side_num_buckets_validation():
+    left = (Pipeline.from_source(records=[(0.0, "a", 1.0)])
+            .window(10.0).reduce("sum"))
+    right = (Pipeline.from_source(records=[(0.0, "a", 1.0)])
+             .window(10.0).reduce("count"))
+    with pytest.raises(PipelineError, match="only applies to joins"):
+        left.build(num_buckets=(8, 16), n_workers=W)
+    with pytest.raises(PipelineError, match="hashed joins"):
+        left.join(right).build(num_buckets=(8, 16), n_workers=W,
+                               key_space="hashed")
+    with pytest.raises(PipelineError, match="pair"):
+        left.join(right).build(num_buckets=(8, 16, 32), n_workers=W)
+
+
 def test_join_on_key_extractor():
     """join(on=...) overrides both sides' keys."""
     left = [(1.0, ("user", 7), 5.0)]
@@ -380,6 +424,205 @@ def test_join_on_key_extractor():
                                                     job_id="jon")
     outs, _ = built.run_batch(MemoryStore())
     assert _decoded(outs) == {"window-0.000-10.000": [["7", [5.0, 1]]]}
+
+
+# ---------------------------------------------------------------------------
+# Multi-stage chains: reduce → map → window → reduce via carry handoff
+# ---------------------------------------------------------------------------
+
+def _two_phase_oracle(events, w1, w2):
+    """Host reference for count-per-w1-window → per-key sum over w2."""
+    c1 = defaultdict(Counter)
+    for ts, k, _v in events:
+        c1[int(ts // w1)][k] += 1
+    c2 = defaultdict(Counter)
+    for idx, counts in c1.items():
+        for k, c in counts.items():
+            c2[int((idx * w1) // w2)][k] += c
+    return c2
+
+
+def test_multistage_graph_bit_identical_both_modes():
+    """The acceptance graph — map → key_by → window → reduce → map →
+    key_by → window → reduce — runs in batch and streaming with
+    bit-identical per-window bytes, and matches a two-phase host oracle.
+    The inter-stage map forces the host handoff path (records
+    materialize); the values stay exact in float32."""
+    events = _events(n=2500, n_keys=6, span=200.0, seed=20)
+    p = (Pipeline.from_source(records=events, batch_records=200)
+         .map(lambda r: (r[0], r[1], 1.0))
+         .key_by()
+         .window(Windowing.tumbling(10.0))
+         .reduce("count")
+         .map(lambda r: (r[0], r[1].upper(), r[2]))   # host boundary
+         .key_by()
+         .window(Windowing.tumbling(50.0))
+         .reduce("sum")
+         .sink("two-phase/"))
+    built = p.build(num_buckets=12, n_workers=W, job_id="ms-accept")
+    assert built.is_multistage and len(built.stages) == 2
+    assert not built.stages[0].handoff_device    # the map needs the host
+    streamed = _streamed(built, MemoryStore())
+    batched, report = built.run_batch(MemoryStore())
+    assert streamed and streamed == batched      # byte for byte
+    assert report.handoffs > 0 and report.error is None
+    oracle = _two_phase_oracle(events, 10.0, 50.0)
+    got = _decoded(streamed)
+    assert len(got) == len(oracle)
+    for widx, counts in oracle.items():
+        win = got[f"window-{widx * 50.0:.3f}-{(widx + 1) * 50.0:.3f}"]
+        assert dict(win) == {k.upper(): v for k, v in counts.items()}
+
+
+def test_multistage_handoff_transport_agrees_on_topk_ties():
+    """Regression: the two handoff transports must assign the *same*
+    downstream key ids (eager registration in first-seen order on identity
+    boundaries), or a final-stage top_k breaks ties toward different
+    buckets.  'z' arrives before 'a' with equal mass — both transports
+    must crown 'z'."""
+    events = [(float(i), k, 1.0)
+              for i in range(8) for k in ("z", "a")]   # tied counts, z first
+    p = (Pipeline.from_source(records=events, batch_records=4)
+         .key_by().window(Windowing.tumbling(2.0)).reduce("count")
+         .window(Windowing.tumbling(8.0)).reduce("sum").top_k(1))
+    outs = {}
+    for handoff in ("device", "host"):
+        built = p.build(num_buckets=8, n_workers=W, job_id="tie",
+                        handoff=handoff)
+        outs[handoff], _ = built.run_batch(MemoryStore())
+    assert outs["device"] == outs["host"]
+    for rows in _decoded(outs["device"]).values():
+        assert rows == [["z", 8.0]]     # first seen wins the tie, both paths
+
+
+def test_multistage_device_handoff_equals_host_handoff():
+    """A boundary with no host transform lowers to the on-device handoff;
+    forcing handoff='host' must produce byte-identical windows — the
+    device op is an optimization, not a semantics change."""
+    events = _events(n=2000, n_keys=8, span=160.0, seed=21)
+    p = (Pipeline.from_source(records=events, batch_records=250)
+         .key_by().window(Windowing.tumbling(8.0)).reduce("count")
+         .window(Windowing.tumbling(40.0)).reduce("sum").top_k(3))
+    dev = p.build(num_buckets=16, n_workers=W, job_id="msh")
+    host = p.build(num_buckets=16, n_workers=W, job_id="msh",
+                   handoff="host")
+    assert dev.stages[0].handoff_device and not host.stages[0].handoff_device
+    out_dev, _ = dev.run_batch(MemoryStore())
+    out_host, _ = host.run_batch(MemoryStore())
+    assert out_dev and out_dev == out_host
+    # and the streaming drive of the device path agrees too
+    assert _streamed(dev, MemoryStore()) == out_dev
+
+
+@pytest.mark.slow
+def test_multistage_streaming_parity_with_sliding_second_stage():
+    """Sliding windows in the second stage: each finalized first-stage
+    window fans into several second-stage windows on device; batch and
+    streaming must stay bit-identical and conserve the total count."""
+    events = _events(n=3000, n_keys=5, span=300.0, seed=22)
+    p = (Pipeline.from_source(records=events, batch_records=150)
+         .key_by().window(Windowing.tumbling(10.0)).reduce("count")
+         .window(Windowing.sliding(60.0, 20.0)).reduce("sum"))
+    built = p.build(num_buckets=20, n_workers=W, job_id="ms-slide")
+    assert built.stages[0].handoff_device
+    streamed = _streamed(built, MemoryStore())
+    batched, _ = built.run_batch(MemoryStore())
+    assert streamed and streamed == batched
+    got = _decoded(streamed)
+    # every 10s window start lands in 3 sliding [start, start+60) windows
+    # (slide 20): conservation → total mass = 3 × record count
+    total = sum(v for rows in got.values() for _k, v in rows)
+    assert total == 3 * len(events)
+
+
+@pytest.mark.slow
+def test_multistage_crash_restore_no_duplicate_or_lost_windows():
+    """A mid-stream crash + restore of a two-stage graph: the resumed run
+    reproduces the uninterrupted run byte for byte, every second-stage
+    window object is written exactly once across the crash, and none are
+    lost — the checkpoint snapshots all carries as one pytree."""
+    events = _events(n=2000, n_keys=5, span=400.0, seed=23)
+
+    def build(handoff):
+        return (Pipeline.from_source(records=events, batch_records=100)
+                .key_by().window(Windowing.tumbling(10.0)).reduce("count")
+                .window(Windowing.tumbling(50.0)).reduce("sum")
+                .build(num_buckets=12, n_workers=W, checkpoint_interval=4,
+                       job_id="ms-res", handoff=handoff))
+
+    for handoff in ("device", "host"):
+        ref = _streamed(build(handoff), MemoryStore())
+        store, meta = CountingStore(), MetadataStore()
+        build(handoff).run_streaming(
+            store, meta, flush=False,
+            source=StreamSource.from_records(events[:1100],
+                                             batch_records=100))
+        assert set(store.put_counts) & set(ref)    # windows landed pre-crash
+        report = build(handoff).run_streaming(store, meta)
+        assert report.error is None
+        got = {m.key: store.get(m.key)
+               for m in store.list_objects("stream-output/ms-res/")}
+        assert got == ref                          # no lost windows
+        for key in ref:
+            assert store.put_counts[key] == 1, (handoff, key)  # no dupes
+
+
+@pytest.mark.slow
+def test_multistage_shard_map_matches_vmap():
+    """The handoff keeps the flat global wire layout under shard_map:
+    a two-stage graph over a real mesh axis must emit byte-identical
+    windows to the vmap drive."""
+    import os
+    import subprocess
+    import sys
+    code = """
+import jax, numpy as np
+from repro.core import MemoryStore, MetadataStore
+from repro.pipeline import Pipeline, Windowing
+mesh = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("workers",))
+events = [(float(t), f"k{t % 5}", float(t % 7)) for t in range(600)]
+p = (Pipeline.from_source(records=events, batch_records=100)
+     .key_by().window(Windowing.tumbling(20.0)).reduce("count")
+     .window(Windowing.tumbling(100.0)).reduce("sum"))
+outs = []
+for backend, m in (("vmap", None), ("shard_map", mesh)):
+    built = p.build(num_buckets=20, n_workers=4, job_id="sm2",
+                    backend=backend, mesh=m)
+    assert built.stages[0].handoff_device
+    store = MemoryStore()
+    built.run_streaming(store, MetadataStore())
+    outs.append({x.key: store.get(x.key)
+                 for x in store.list_objects("stream-output/sm2/")})
+assert outs[0] and outs[0] == outs[1]
+print("OK")
+"""
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": "src"}
+    proc = subprocess.run([sys.executable, "-c", code],
+                          cwd=os.path.dirname(os.path.dirname(__file__)),
+                          env={**os.environ, **env},
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK" in proc.stdout
+
+
+def test_multistage_validation():
+    base = (Pipeline.from_source(records=[(0.0, "a", 1.0)])
+            .key_by().window(10.0).reduce("count"))
+    # an intermediate session stage would finalize out of start order
+    with pytest.raises(PipelineError, match="session"):
+        (Pipeline.from_source(records=[(0.0, "a", 1.0)])
+         .key_by().window(Windowing.session(5.0)).reduce("sum")
+         .window(10.0).reduce("sum")).build(num_buckets=8, n_workers=W)
+    # joins stay single-stage
+    right = (Pipeline.from_source(records=[(0.0, "a", 1.0)])
+             .window(10.0).reduce("sum"))
+    with pytest.raises(PipelineError, match="join"):
+        (base.window(10.0).reduce("sum").join(right)
+         ).build(num_buckets=8, n_workers=W)
+    # an unfinished trailing stage is rejected with the grammar hint
+    with pytest.raises(PipelineError, match="stage 2"):
+        base.key_by().build(num_buckets=8, n_workers=W)
 
 
 # ---------------------------------------------------------------------------
@@ -406,6 +649,28 @@ def test_fold_key24_fits_wire_and_is_stable():
 # ---------------------------------------------------------------------------
 # Deprecation shims: old entry points ride the pipeline layer
 # ---------------------------------------------------------------------------
+
+def test_streaming_config_shim_warns_deprecation():
+    """Driving the coordinator off the flat StreamingConfig emits a
+    DeprecationWarning with the migration hint — the shim no longer
+    lowers silently."""
+    cfg = StreamingConfig(num_buckets=8, n_workers=W, window_size=10.0,
+                          batch_records=16, job_id="warn")
+    with pytest.warns(DeprecationWarning, match="Pipeline"):
+        StreamingCoordinator(MemoryStore(), MetadataStore(), cfg)
+
+
+def test_mapreduce_shim_warns_deprecation():
+    import jax.numpy as jnp
+
+    def map_fn(shard):
+        return shard[:, 0].astype(jnp.int32), shard[:, 1], shard[:, 2] > 0
+
+    rows = np.zeros((W, 4, 3), np.float32)
+    rows[:, :, 2] = 1.0
+    with pytest.warns(DeprecationWarning, match="Pipeline"):
+        mapreduce(map_fn, rows, DeviceJobConfig(num_buckets=8, n_workers=W))
+
 
 def test_streaming_config_shim_equals_pipeline():
     """A StreamingConfig-driven run and the equivalent Pipeline build

@@ -1,6 +1,8 @@
 """Streaming layer: window-assignment boundaries, watermark finalization
-order, ring-slot reuse, replayable sources, backpressure scaling, and
-agreement of incremental per-window aggregates with a one-shot batch run."""
+order, ring-slot reuse (and the overflow error path), single-writer
+late-drop accounting vs a host-numpy oracle, session gap-merge under
+shuffled arrival, replayable sources, backpressure scaling, and agreement
+of incremental per-window aggregates with a one-shot batch run."""
 
 import json
 from collections import defaultdict
@@ -8,16 +10,27 @@ from collections import defaultdict
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic container: seeded-sampling shim
+    from _hypothesis_compat import given, settings, strategies as st
+
 from repro.core import (AutoscalerConfig, MemoryStore, MetadataStore,
                         ServerlessPool)
 from repro.core.events import EventBus, TOPIC_STREAM_WINDOW
 from repro.core.mapreduce import (DeviceJobConfig, clear_window_slot,
                                   init_window_carry, make_incremental_step,
                                   read_window_slot)
-from repro.streaming import (LateEventError, SlidingWindows, StreamSource,
-                             StreamingConfig, StreamingCoordinator,
-                             TumblingWindows, WindowTracker,
-                             window_output_key, write_event_log)
+from repro.pipeline import Pipeline, Windowing
+from repro.streaming import (LateEventError, SessionTracker, SlidingWindows,
+                             StreamSource, StreamingConfig,
+                             StreamingCoordinator, TumblingWindows,
+                             WindowTracker, window_output_key,
+                             write_event_log)
+
+# scoped per-test (no global load_profile: that would silently shrink every
+# other module's property tests for the whole session)
+_PROPERTY_SETTINGS = settings(max_examples=15, deadline=None)
 
 
 # ---------------------------------------------------------------------------
@@ -86,7 +99,11 @@ def test_late_events_dropped_after_finalization():
     t.observe(16.0)                 # watermark 11 >= 10: window 0 closes
     for w, _ in t.ripe():
         t.release(w)
-    assert t.slot_for(0) is None    # late event → dropped, counted
+    assert t.slot_for(0) is None    # late event → must be dropped
+    # admission never self-counts: note_late is the single writer, so a
+    # pair dropped host-side and a pair masked on-device can't double in
+    assert t.late_dropped == 0
+    t.note_late(1)
     assert t.late_dropped == 1
 
 
@@ -100,6 +117,161 @@ def test_slot_reuse_and_ring_overflow():
     for w, _ in t.ripe():
         t.release(w)
     assert t.slot_for(2) == s0      # freed slot recycled
+
+
+def test_ring_overflow_error_names_the_blocking_window():
+    """The overflow error path: the raised LateEventError identifies the
+    colliding modular slot and its still-active owner, and raising leaves
+    the tracker untouched (no half-claimed slot, no phantom late count)."""
+    t = WindowTracker(TumblingWindows(5.0), n_slots=3)
+    t.slot_for(4)                   # slot 1
+    before = dict(t.active)
+    with pytest.raises(LateEventError, match=r"slot 1 of 3.*window 4"):
+        t.slot_for(7)               # 7 % 3 == 1, still owned by window 4
+    assert t.active == before and t.late_dropped == 0
+
+
+@_PROPERTY_SETTINGS
+@given(st.integers(2, 6), st.lists(st.integers(0, 40), min_size=1,
+                                   max_size=60))
+def test_ring_overflow_property(n_slots, windows):
+    """Property: ``slot_for`` either returns the modular slot (claiming it
+    exactly once), returns None for a closed window, or raises
+    LateEventError precisely when the modular slot is owned by a
+    *different* active window — and never corrupts the slot table."""
+    t = WindowTracker(TumblingWindows(1.0), n_slots=n_slots)
+    for w in windows:
+        owner = {s: wi for wi, s in t.active.items()}.get(w % n_slots)
+        late = w not in t.active and t.is_late(w)
+        try:
+            slot = t.slot_for(w)
+        except LateEventError:
+            assert not late and owner is not None and owner != w
+            continue
+        if late:
+            assert slot is None         # closed window: dropped, not claimed
+        else:
+            assert slot == w % n_slots and owner in (None, w)
+        # drain once the ring fills so slots free up mid-sequence
+        if len(t.active) == n_slots:
+            t.observe(max(wi + 1 for wi in t.active))
+            for wi, _s in t.ripe():
+                t.release(wi)
+        assert len(t.active) == len({s for s in t.active.values()})
+
+
+# ---------------------------------------------------------------------------
+# Late-drop accounting: one writer, oracle-exact
+# ---------------------------------------------------------------------------
+
+def _late_oracle(events, assigner, batch_records, lateness):
+    """Host-numpy reference: the watermark advances to each batch's max
+    event time − lateness *after* the batch; a (record, window) pair is
+    dropped iff its window's end had already been passed when its batch
+    was processed.  Valid as long as the ring never fills mid-batch."""
+    wm = float("-inf")
+    dropped = 0
+    for i in range(0, len(events), batch_records):
+        batch = events[i:i + batch_records]
+        for ts, _k, _v in batch:
+            dropped += sum(assigner.window(w).end <= wm
+                           for w in assigner.assign(ts))
+        wm = max(wm, max(ts for ts, _k, _v in batch) - lateness)
+    return dropped
+
+
+def _disordered_events(n=2500, seed=0, spread=8.0):
+    rng = np.random.default_rng(seed)
+    ts = np.cumsum(rng.exponential(0.1, n)) + rng.uniform(-spread, spread, n)
+    return [(float(t), f"k{i % 6}", 1.0) for i, t in enumerate(ts)]
+
+
+@pytest.mark.parametrize("windowing,assigner", [
+    (Windowing.tumbling(10.0), TumblingWindows(10.0)),
+    (Windowing.sliding(20.0, 5.0), SlidingWindows(20.0, 5.0)),
+])
+@pytest.mark.parametrize("fanout", ["device", "host"])
+def test_late_dropped_matches_host_oracle(windowing, assigner, fanout):
+    """Regression: under out-of-order input with allowed_lateness > 0,
+    ``late_dropped`` equals the host-numpy oracle exactly — each dropped
+    (record, window) pair is counted once, whether the host admission
+    refused it or the device fan-out masked it (note_late is the single
+    writer on both paths)."""
+    events = _disordered_events(seed=5)
+    lateness = 3.0
+    built = (Pipeline.from_source(records=events, batch_records=200)
+             .key_by().window(windowing).reduce("count")
+             .build(num_buckets=12, n_workers=4, n_slots=12,
+                    allowed_lateness=lateness, fanout=fanout,
+                    job_id=f"late-{windowing.kind}-{fanout}"))
+    report = built.run_streaming(MemoryStore(), MetadataStore())
+    want = _late_oracle(events, assigner, 200, lateness)
+    assert want > 0                      # the input really is disordered
+    assert report.late_dropped == want
+
+
+@pytest.mark.slow
+def test_late_dropped_host_and_device_fanout_agree_under_ring_pressure():
+    """Mid-batch ring-full finalization advances the watermark inside a
+    batch; the host- and device-fan-out paths must still count the exact
+    same set of dropped pairs."""
+    rng = np.random.default_rng(9)
+    n = 3000
+    ts = np.cumsum(rng.exponential(0.5, n)) + rng.uniform(-12.0, 12.0, n)
+    events = [(float(t), f"k{i % 5}", 1.0) for i, t in enumerate(ts)]
+    counts = {}
+    for fanout in ("device", "host"):
+        built = (Pipeline.from_source(records=events, batch_records=1000)
+                 .key_by().window(Windowing.sliding(10.0, 2.5))
+                 .reduce("count")
+                 .build(num_buckets=10, n_workers=2, n_slots=8,
+                        allowed_lateness=3.0, fanout=fanout,
+                        job_id=f"ring-{fanout}"))
+        report = built.run_streaming(MemoryStore(), MetadataStore())
+        counts[fanout] = report.late_dropped
+    assert counts["device"] == counts["host"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Session gap-merge under shuffled arrival (property-style)
+# ---------------------------------------------------------------------------
+
+def _session_bounds_reference(times, gap):
+    """Sorted-order reference: maximal runs with no gap > ``gap``;
+    session [first, last + gap)."""
+    out = []
+    run = [times[0]]
+    for t in times[1:]:
+        if t - run[-1] > gap:
+            out.append((run[0], run[-1] + gap))
+            run = []
+        run.append(t)
+    out.append((run[0], run[-1] + gap))
+    return sorted(out)
+
+
+@_PROPERTY_SETTINGS
+@given(st.lists(st.floats(0.0, 200.0, allow_nan=False), min_size=1,
+                max_size=40),
+       st.floats(0.5, 10.0, allow_nan=False),
+       st.integers(0, 1 << 30))
+def test_session_gap_merge_shuffled_order_property(times, gap, shuffle_seed):
+    """Property: whatever order events arrive in (no watermark pressure),
+    the tracker's finalized sessions are exactly the maximal gap-runs of
+    the sorted event times — bridging events merge open sessions so the
+    final bounds are arrival-order independent."""
+    times = sorted(round(t, 3) for t in times)
+    shuffled = list(times)
+    np.random.default_rng(shuffle_seed).shuffle(shuffled)
+    t = SessionTracker(gap=gap, n_slots=len(times) + 1)
+    for ts in shuffled:
+        admitted = t.admit(0, ts)
+        assert admitted is not None     # watermark never advanced: no drops
+    t.observe(float("inf"))
+    got = sorted((s.start, s.end) for s in t.ripe())
+    want = _session_bounds_reference(times, gap)
+    assert got == pytest.approx(want)
+    assert t.late_dropped == 0
 
 
 # ---------------------------------------------------------------------------
