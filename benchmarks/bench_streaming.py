@@ -7,15 +7,24 @@ batches amortize it toward the device engine's aggregate throughput.  The
 fan-out comparison isolates the execution-plan layer's win: with
 slide = size/4 every record belongs to 4 windows, and the host baseline
 writes 4 numpy rows per event where the device path ships one row and
-replicates on-chip (broadcast + iota).
+replicates on-chip (broadcast + iota).  The DAG fan-out comparison
+measures the tee seam: two branches sharing one upstream stage through
+per-edge carry handoffs vs the serverless-baseline shape of two separate
+jobs each re-ingesting (and re-reducing) the full stream.
 
 Each run appends its numbers to ``BENCH_streaming.json`` at the repo root,
 so throughput is tracked as a trajectory across PRs instead of discarded.
+
+CI runs this file on a small fixed config (``BENCH_STREAM_EVENTS`` /
+``BENCH_STREAM_BATCHES`` env overrides) with ``--check``, which turns the
+steady-state ≤5% pipeline-API overhead guard into a blocking exit code.
 """
 
 from __future__ import annotations
 
 import json
+import os
+import sys
 import time
 from pathlib import Path
 
@@ -28,11 +37,12 @@ from repro.streaming import (StreamSource, StreamingConfig,
 
 from .common import fmt_csv
 
-N_EVENTS = 60_000
+N_EVENTS = int(os.environ.get("BENCH_STREAM_EVENTS", 60_000))
 N_KEYS = 64
 EVENT_RATE = 200.0           # events per second of event time
-BATCH_SIZES = [256, 1024, 4096, 16384]
-SLIDING_BATCH = 4096
+BATCH_SIZES = [int(b) for b in os.environ.get(
+    "BENCH_STREAM_BATCHES", "256,1024,4096,16384").split(",")]
+SLIDING_BATCH = min(4096, max(BATCH_SIZES))
 WINDOW_SIZE = 30.0           # sliding comparison: slide = size/4 → fan-out 4
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_streaming.json"
 
@@ -85,6 +95,49 @@ def run_multistage_once(events, batch_records: int, job_id: str,
     return built.run_streaming(MemoryStore(), MetadataStore())
 
 
+def _fanout_branches():
+    """The two consumers of the shared per-window count stream: a top-8
+    ranking and a coarse re-windowed rollup."""
+    top = (Pipeline.branch().window(Windowing.tumbling(4 * WINDOW_SIZE))
+           .reduce("sum").top_k(8).sink("bench-top/"))
+    roll = (Pipeline.branch().window(Windowing.tumbling(4 * WINDOW_SIZE))
+            .reduce("sum").sink("bench-roll/"))
+    return top, roll
+
+
+def run_fanout_tee(events, batch_records: int, job_id: str):
+    """DAG fan-out: ingest + count ONCE, tee the counts into both
+    branches through per-edge carry handoffs."""
+    top, roll = _fanout_branches()
+    pipe = (Pipeline.from_source(records=events,
+                                 batch_records=batch_records)
+            .key_by().window(Windowing.tumbling(WINDOW_SIZE)).reduce("count")
+            .tee(top, roll))
+    built = pipe.build(num_buckets=N_KEYS, n_workers=8, n_slots=8,
+                       job_id=job_id)
+    return built.run_streaming(MemoryStore(), MetadataStore())
+
+
+def run_fanout_reingest(events, batch_records: int, job_id: str):
+    """The baseline the paper's loosely-coupled services imply without a
+    shared intermediate: one job per consumer, each re-ingesting the full
+    stream and recomputing the count stage.  Returns the reports of both
+    runs (wall time adds; the shared-handoff tee does this work once)."""
+    reports = []
+    for bi, branch in enumerate(_fanout_branches()):
+        pipe = (Pipeline.from_source(records=events,
+                                     batch_records=batch_records)
+                .key_by().window(Windowing.tumbling(WINDOW_SIZE))
+                .reduce("count"))
+        # graft the branch onto a fresh single-consumer chain (each run
+        # gets its own store, so the branch sinks cannot collide)
+        pipe = Pipeline(pipe.nodes + branch.nodes[1:])
+        built = pipe.build(num_buckets=N_KEYS, n_workers=8, n_slots=8,
+                           job_id=f"{job_id}-{bi}")
+        reports.append(built.run_streaming(MemoryStore(), MetadataStore()))
+    return reports
+
+
 def _append_trajectory(entry: dict) -> None:
     """Append this run to the cross-PR trajectory file (best effort)."""
     try:
@@ -95,7 +148,8 @@ def _append_trajectory(entry: dict) -> None:
     BENCH_PATH.write_text(json.dumps(data, indent=1) + "\n")
 
 
-def run(print_rows: bool = True, write_json: bool = True) -> list[str]:
+def run(print_rows: bool = True,
+        write_json: bool = True) -> tuple[list[str], dict]:
     events = synth_stream()
     rows = []
     entry: dict = {"unix_time": round(time.time(), 1),
@@ -138,26 +192,39 @@ def run(print_rows: bool = True, write_json: bool = True) -> list[str]:
     # the flat-config path (same machinery underneath).  Each fresh build
     # re-traces its plan, so the first batch of every run carries the XLA
     # compile — the guard reads *steady-state* batch latency (first batch
-    # dropped), interleaved back-to-back, best of 3 per path; wall-clock
-    # records/sec over a sub-second run is half compile time and noise
+    # dropped, median over the rest).  Runs alternate direct/pipeline and
+    # the overhead is the MEDIAN of the per-iteration ratios: paired
+    # adjacent runs share the machine's momentary load, so a slow window
+    # on a shared CI runner cancels out instead of failing the gate; a
+    # smaller guard batch keeps the sample count meaningful even when the
+    # env overrides shrink the stream
 
     def steady_latency(report):
-        tail = report.batch_latencies[1:] or report.batch_latencies
-        return sum(tail) / len(tail)
+        tail = sorted(report.batch_latencies[1:] or report.batch_latencies)
+        return tail[len(tail) // 2]
 
-    run_pipeline_once(events[: 2 * SLIDING_BATCH], SLIDING_BATCH,
-                      "warm-pipe")
-    direct_lat, pipe_lat, rep_pipe = [], [], None
-    for i in range(3):
-        rep_d, _ = run_stream_once(events, SLIDING_BATCH,
-                                   job_id=f"direct-{i}")
-        rep_p = run_pipeline_once(events, SLIDING_BATCH, f"pipe-{i}")
-        direct_lat.append(steady_latency(rep_d))
-        pipe_lat.append(steady_latency(rep_p))
+    guard_batch = min(1024, SLIDING_BATCH)
+    run_pipeline_once(events[: 2 * guard_batch], guard_batch, "warm-pipe")
+    run_stream_once(events[: 2 * guard_batch], guard_batch,
+                    job_id="warm-direct")
+    ratios, rep_pipe = [], None
+    for i in range(5):
+        # alternate which path runs first within the pair: whoever runs
+        # second eats any within-pair drift (GC debt, thermal ramp), so a
+        # fixed order would bias the ratio one way on every iteration
+        if i % 2 == 0:
+            rep_d, _ = run_stream_once(events, guard_batch,
+                                       job_id=f"direct-{i}")
+            rep_p = run_pipeline_once(events, guard_batch, f"pipe-{i}")
+        else:
+            rep_p = run_pipeline_once(events, guard_batch, f"pipe-{i}")
+            rep_d, _ = run_stream_once(events, guard_batch,
+                                       job_id=f"direct-{i}")
+        ratios.append(steady_latency(rep_p) / steady_latency(rep_d))
         if rep_pipe is None or \
                 rep_p.records_per_sec > rep_pipe.records_per_sec:
             rep_pipe = rep_p
-    overhead = min(pipe_lat) / min(direct_lat) - 1.0
+    overhead = sorted(ratios)[len(ratios) // 2] - 1.0
     entry["pipeline_api_records_per_sec"] = round(rep_pipe.records_per_sec)
     # a NEW key: the pre-PR-4 "pipeline_api_overhead_pct" rows were a
     # wall-clock records/sec ratio (compile time included) and are not
@@ -188,14 +255,49 @@ def run(print_rows: bool = True, write_json: bool = True) -> list[str]:
             f"records_per_s={rep_ms.records_per_sec:.0f};"
             f"handoffs={rep_ms.handoffs};"
             f"windows={rep_ms.windows_emitted}"))
+    # DAG fan-out: two consumers off one shared count stage (tee + per-edge
+    # handoffs) vs two separate jobs each re-ingesting the full stream
+    run_fanout_tee(events[: 2 * SLIDING_BATCH], SLIDING_BATCH, "warm-fan")
+    rep_tee = run_fanout_tee(events, SLIDING_BATCH, "fan-tee")
+    run_fanout_reingest(events[: 2 * SLIDING_BATCH], SLIDING_BATCH,
+                        "warm-ri")
+    reps_ri = run_fanout_reingest(events, SLIDING_BATCH, "fan-ri")
+    ri_wall = sum(r.wall_time for r in reps_ri)
+    speedup = ri_wall / rep_tee.wall_time if rep_tee.wall_time else 0.0
+    entry["dag_fanout"] = {
+        "tee_wall_s": round(rep_tee.wall_time, 4),
+        "reingest_wall_s": round(ri_wall, 4),
+        "tee_records_per_sec": round(rep_tee.records_per_sec),
+        "speedup_vs_reingest": round(speedup, 3),
+    }
+    rows.append(fmt_csv(
+        "streaming/dag_fanout_tee", rep_tee.mean_batch_latency * 1e6,
+        f"records_per_s={rep_tee.records_per_sec:.0f};"
+        f"handoffs={rep_tee.handoffs};"
+        f"windows={rep_tee.windows_emitted};"
+        f"speedup_vs_reingest={speedup:.2f}x"))
+    rows.append(fmt_csv(
+        "streaming/dag_fanout_reingest",
+        sum(r.mean_batch_latency for r in reps_ri) * 1e6,
+        f"wall_s={ri_wall:.3f};"
+        f"windows={sum(r.windows_emitted for r in reps_ri)}"))
     if write_json:
         _append_trajectory(entry)
     if print_rows:
         for r in rows:
             print(r)
-    return rows
+    return rows, entry
 
 
 if __name__ == "__main__":
     print("name,us_per_call,derived")
-    run()
+    _rows, _entry = run()
+    if "--check" in sys.argv[1:]:
+        # the blocking CI guard: the declarative front door may cost at
+        # most 5% steady-state latency over driving the plan directly
+        if not _entry["pipeline_api_overhead_ok"]:
+            print(f"BENCH GATE FAILED: pipeline API steady-state overhead "
+                  f"{_entry['pipeline_api_steady_overhead_pct']}% > 5%")
+            sys.exit(2)
+        print(f"bench gate ok: pipeline API overhead "
+              f"{_entry['pipeline_api_steady_overhead_pct']}% <= 5%")

@@ -7,7 +7,11 @@ multi-stage chain** — count per key per minute, then top-k over those
 counts per five minutes — where the paper would run two separate jobs
 with an object-store round-trip between them, the chain continues past
 the first reduce and the finalized windows hand off to the second plan
-through the carry (on device: no re-serialization between stages).  All
+through the carry (on device: no re-serialization between stages).  A
+fifth job is a **DAG fan-out**: a GPS stream's per-minute counts tee into
+two concurrent consumers — a top-k branch and a per-region rollup branch
+— off ONE shared intermediate (the Kafka-ML shape: one ingested stream,
+many consumers), each tee edge picking its own handoff transport.  All
 through the same front door the streaming engine uses.  (The original
 host-plane client path — ``JobConfig``/``Coordinator`` — still works and
 stays exercised by ``tests/test_coordinator_client.py``.)
@@ -17,7 +21,7 @@ stays exercised by ``tests/test_coordinator_client.py``.)
 
 import json
 
-from repro.core import MemoryStore
+from repro.core import MemoryStore, MetadataStore
 from repro.data.pipeline import synth_corpus
 from repro.pipeline import Pipeline, Windowing
 
@@ -102,8 +106,60 @@ def main() -> None:
     assert len(built.stages) == 2 and built.stages[0].handoff_device
     assert [w for w, _c in hot5] == [w for w, _c in top[:5]]
     print("two-phase ranking agrees with the single-window top_k ✓")
-    print(f"[{rep1.batches + rep2.batches + rep4.batches} batch drives; "
-          f"the same graphs run continuously via .run_streaming(...)]")
+
+    # job 5 — DAG fan-out: a GPS fleet stream (event_time, vehicle, speed),
+    # counted per vehicle per "minute", then TEE'd: one branch ranks the 5
+    # busiest vehicles per five minutes (identity boundary → on-device
+    # handoff), the other rolls the counts up per region (a host map
+    # between the stages → host-record handoff).  One ingested stream, two
+    # concurrent consumers, one shared intermediate — and the same graph
+    # runs batch and streaming with bit-identical windows on BOTH sinks.
+    import numpy as np
+    rng = np.random.default_rng(7)
+    gps = [(float(t % 1800), f"v{int(v):02d}", float(s))
+           for t, v, s in zip(rng.uniform(0, 1800, 20_000),
+                              rng.integers(0, 24, 20_000),
+                              rng.uniform(0, 30, 20_000))]
+    gps.sort()
+
+    def to_region(rec):
+        ts, vehicle, count = rec
+        return ts, f"region-{int(vehicle[1:]) % 4}", count
+
+    fan = (Pipeline.from_source(records=gps, batch_records=2048)
+           .key_by()
+           .window(Windowing.tumbling(60.0))
+           .reduce("count")                        # per-minute counts, once
+           .tee(Pipeline.branch()                  # consumer 1: busiest
+                .window(Windowing.tumbling(300.0))
+                .reduce("sum").top_k(5)
+                .sink("gps-busy/"),
+                Pipeline.branch()                  # consumer 2: region load
+                .map(to_region).key_by()
+                .window(Windowing.tumbling(300.0))
+                .reduce("sum")
+                .sink("gps-region/")))
+    built5 = fan.build(num_buckets=64, n_workers=WORKERS, job_id="gps-fan")
+    transports = sorted(e.device for e in built5.edges)
+    assert len(built5.stages) == 3 and transports == [False, True]
+    out5, rep5 = built5.run_batch(MemoryStore())
+    stream_store = MemoryStore()
+    rep5s = built5.run_streaming(stream_store, MetadataStore())
+    streamed5 = built5.collect_outputs(stream_store)
+    assert streamed5 and streamed5 == out5
+    busy = {k: v for k, v in out5.items() if k.startswith("gps-busy/")}
+    region = {k: v for k, v in out5.items() if k.startswith("gps-region/")}
+    first_busy = [json.loads(ln)
+                  for ln in sorted(busy.items())[0][1].splitlines()]
+    first_region = [json.loads(ln)
+                    for ln in sorted(region.items())[0][1].splitlines()]
+    print(f"job5 (DAG fan-out, {len(built5.stages)} stages, "
+          f"{rep5.handoffs} edge handoffs): busiest vehicles "
+          f"{first_busy} | region load {dict(first_region)}")
+    print("tee'd branches: batch ↔ streaming bit-identical on both sinks ✓")
+    print(f"[{rep1.batches + rep2.batches + rep4.batches + rep5.batches} "
+          f"batch drives + {rep5s.batches} streaming micro-batches; the "
+          f"same graphs run continuously via .run_streaming(...)]")
 
 
 if __name__ == "__main__":

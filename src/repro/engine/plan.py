@@ -587,21 +587,27 @@ class CompiledStreamAggregate:
                                          rs.k, kind)
         return np.asarray(ids), np.asarray(vals), np.asarray(valid)
 
-    # -- carry handoff (multi-stage chains) ----------------------------------
+    # -- carry handoff (multi-stage chains and DAG fan-out edges) ------------
     def handoff_rows(self, carry, slot: int, relabel: jax.Array,
                      last_window: int, n_windows: int, kind: str,
                      dst_rows: int) -> jax.Array:
-        """One finalized window's aggregates as the *next* plan's wire rows
-        — the reduce → map → window → reduce seam, entirely on device.
+        """One finalized window's aggregates as a *successor* plan's wire
+        rows — the reduce → map → window → reduce seam, entirely on
+        device.  A teed stage calls this once per out-edge with that
+        edge's own ``relabel`` table (and the destination's ``dst_rows``),
+        so one finalized slot fans out to several downstream carries
+        without ever visiting the host.
 
         Gathers the slot's dense aggregate, re-keys each occupied bucket
-        through the ``relabel`` lookup (this plan's bucket id → the next
-        plan's key id, ``< 0`` = unassigned), stamps the re-windowed span
-        ``[last_window, n_windows]`` (already rebased by the caller), and
-        values each row with the finalized ``kind`` aggregate.  Returns
-        device-fan-out rows padded to ``dst_rows`` in the destination
-        backend's wire layout: vmap gets the batched (workers, per, 5)
-        shape, shard_map keeps the flat (rows, 5) global layout.
+        through the ``relabel`` lookup (this plan's bucket id → the
+        destination plan's key id, ``< 0`` = unassigned), stamps the
+        re-windowed span ``[last_window, n_windows]`` (already rebased by
+        the caller), and values each row with the finalized ``kind``
+        aggregate.  Returns device-fan-out rows padded to ``dst_rows`` in
+        the destination backend's wire layout: vmap gets the batched
+        (workers, per, 5) shape, shard_map keeps the flat (rows, 5) global
+        layout.  The (kind, dst_rows) jit cache keys one compiled handoff
+        per distinct edge shape.
         """
         fn = self._handoffs.get((kind, dst_rows))
         if fn is None:

@@ -458,14 +458,18 @@ def top_k_buckets(agg: jax.Array, k: int, kind: str = "sum"
 
 
 # ---------------------------------------------------------------------------
-# Carry handoff (multi-stage chains: one plan's windows feed the next plan)
+# Carry handoff (multi-stage chains + DAG fan-out: one plan's finalized
+# windows feed one or more successor plans, one call per edge)
 # ---------------------------------------------------------------------------
 
 def carry_handoff_rows(agg: jax.Array, relabel: jax.Array,
                        last_window: jax.Array, n_windows: jax.Array,
                        kind: str, n_rows: int,
                        channel_base: int = 0) -> jax.Array:
-    """One finalized window's dense aggregate → the next plan's wire rows.
+    """One finalized window's dense aggregate → a successor plan's wire
+    rows.  Pure per-edge function: a teed stage runs it once per out-edge
+    with that edge's own ``relabel`` table, fanning the same slot into
+    several downstream carries.
 
     ``agg`` is the (num_buckets, channels) slice of a finalized window;
     its ``[sum, count]`` pair lives at ``channel_base``.  Each occupied

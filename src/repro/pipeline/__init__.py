@@ -1,14 +1,16 @@
 """Declarative pipeline dataflow — the one front door for batch + streaming.
 
 ``Pipeline.from_source(...).map(fn).key_by(...).window(...).reduce(...)
-.top_k(k).join(other).sink(prefix).build(...)`` declares a dataflow graph;
-``build()`` validates it and lowers every stage chain to ``repro.engine``
-execution plans (fusing adjacent maps, compiling a windowed join as two
-plans sharing one carry, splitting a chain that continues past a reduce
-into a sequence of stages chained by carry handoff); the built program
-then runs in batch mode (one drive over an object-store prefix) or
-streaming mode (micro-batches via the ``StreamingCoordinator``) with
-bit-identical per-window results.
+.top_k(k).join(other).tee(branch, ...).sink(prefix).build(...)`` declares
+a dataflow graph; ``build()`` validates it and lowers it to
+``repro.engine`` execution plans (fusing adjacent maps, compiling a
+windowed join as two plans sharing one carry, splitting a chain that
+continues past a reduce into stages chained by carry handoff, and fanning
+a ``tee``'d stage out to several branches over per-edge handoffs — the
+program is a stage *DAG*, not just a chain); the built program then runs
+in batch mode (one drive over an object-store prefix) or streaming mode
+(micro-batches via the ``StreamingCoordinator``) with bit-identical
+per-window results on every branch.
 
 The older entry points are thin shims over this package: ``mapreduce()``
 builds a two-node array pipeline, and ``StreamingConfig`` lowers to a
@@ -20,10 +22,12 @@ drivers plus the two-log ``JoinSource``).
 """
 
 from .graph import Pipeline, PipelineError, Windowing
-from .lower import BuiltPipeline, EmitSpec, SidePlan, SourceSpec, StagePlan
+from .lower import (BuiltPipeline, EmitSpec, SidePlan, SourceSpec, StageEdge,
+                    StagePlan)
 from .runtime import JoinSource, resolve_source
 
 __all__ = [
     "Pipeline", "PipelineError", "Windowing", "BuiltPipeline", "EmitSpec",
-    "SidePlan", "SourceSpec", "StagePlan", "JoinSource", "resolve_source",
+    "SidePlan", "SourceSpec", "StageEdge", "StagePlan", "JoinSource",
+    "resolve_source",
 ]

@@ -48,6 +48,29 @@ off through the carry (on-device when the boundary has no host
 transform).  Two-phase jobs — count-then-top-k, average-of-averages —
 are one graph, and batch and streaming runs of it stay bit-identical
 per window.
+
+A chain may also **fan out**: ``….reduce(...).tee(branch, branch, …)``
+feeds the finalized windows of one stage to *several* downstream
+branches — the graph is a DAG, not just a chain.  Each branch is rooted
+at ``Pipeline.branch()`` (or built by a callable receiving that stub)
+and continues the grammar — ``map/key_by/window/reduce``, more stages,
+``top_k``, its own ``sink`` — so one ingested stream feeds many
+concurrent consumers off a single shared intermediate, the Kafka-ML
+fan-out shape::
+
+    counts = (Pipeline.from_source(prefix="streams/gps")
+              .key_by().window(60.0).reduce("count"))
+    dag = counts.tee(
+        Pipeline.branch().window(300.0).reduce("sum").top_k(8)
+                .sink("gps-top/"),
+        Pipeline.branch().map(to_region).key_by().window(300.0)
+                .reduce("sum").sink("gps-region/"))
+
+Each fan-out edge picks its own handoff transport (on-device for
+identity boundaries, host records otherwise), and a join's two inputs
+may themselves be multi-stage chains.  Stage-local build options ride
+on ``reduce(..., num_buckets=, n_slots=)`` when one branch needs a
+different carry width or ring depth than the rest of the graph.
 """
 
 from __future__ import annotations
@@ -127,6 +150,16 @@ class Pipeline:
                   "batch_records": batch_records}
         return cls((Node("source", params),))
 
+    @classmethod
+    def branch(cls) -> "Pipeline":
+        """Root a tee branch: a pipeline whose input is the finalized
+        windows of the stage it is teed from — records
+        ``(window_start, key, aggregate)`` delivered through the carry
+        handoff.  Only valid as an argument to ``tee``."""
+        return cls((Node("source", {"kind": "carry-stub", "prefix": None,
+                                    "shards": None, "records": None,
+                                    "batch_records": 1024}),))
+
     # -- chaining --------------------------------------------------------------
     def _append(self, node: Node) -> "Pipeline":
         return Pipeline(self.nodes + (node,))
@@ -154,18 +187,28 @@ class Pipeline:
         return self._append(Node("window", {"windowing": w}))
 
     def reduce(self, spec: str | Callable = "count", *, mode: str | None = None,
-               capacity: int = 0) -> "Pipeline":
+               capacity: int = 0, num_buckets: int | None = None,
+               n_slots: int | None = None) -> "Pipeline":
         """How each (window ×) key group reduces.
 
         ``spec`` is an aggregate kind (``count | sum | mean``), a group
         segment-reducer kind name, or a callable group reducer (the
         ``(keys, values, starts) -> (gk, gv, gvalid)`` contract).  A
         callable implies ``mode="group"``; group mode needs ``capacity``
-        (records buffered per worker per window slot)."""
+        (records buffered per worker per window slot).
+
+        ``num_buckets`` / ``n_slots`` are *stage-local* build options: the
+        stage this reduce closes sizes its own carry (key-bucket width ×
+        window-ring depth) instead of inheriting the ``build()``-wide
+        defaults — a fan-out branch over few keys need not carry the
+        ingest stage's wide bucket space, and a long-window stage can
+        deepen only its own ring.  Validated at lower time."""
         if mode is None:
             mode = "group" if callable(spec) else "aggregate"
         return self._append(Node("reduce", {"spec": spec, "mode": mode,
-                                            "capacity": capacity}))
+                                            "capacity": capacity,
+                                            "num_buckets": num_buckets,
+                                            "n_slots": n_slots}))
 
     def top_k(self, k: int, by: str | None = None) -> "Pipeline":
         """Keep only the k heaviest keys per window, ranked ``by`` an
@@ -175,12 +218,46 @@ class Pipeline:
             raise PipelineError("top_k needs k >= 1")
         return self._append(Node("top_k", {"k": k, "by": by}))
 
+    def tee(self, *branches: "Callable[[Pipeline], Pipeline] | Pipeline"
+            ) -> "Pipeline":
+        """Fan this stage out: every finalized window of the reduce that
+        closes the current stage feeds *each* branch as input records
+        ``(window_start, key, aggregate)`` — one intermediate stream,
+        several concurrent consumers.
+
+        Each branch is a pipeline rooted at ``Pipeline.branch()`` (pass it
+        pre-built, or pass a callable that receives the branch stub and
+        returns the extended pipeline) and follows the normal grammar:
+        ``map/key_by/window/reduce``, further stages, ``top_k``, nested
+        ``tee``, and its own ``sink`` — every terminal branch needs a
+        distinct sink, since each is a separate output stream.  ``tee`` is
+        a terminal node of this pipeline."""
+        if len(branches) < 2:
+            raise PipelineError("tee needs at least two branches (a single "
+                                "continuation is just a longer chain)")
+        resolved = []
+        for i, b in enumerate(branches):
+            bp = b if isinstance(b, Pipeline) else b(Pipeline.branch())
+            if not isinstance(bp, Pipeline):
+                raise PipelineError(f"tee branch {i} must be (or return) a "
+                                    f"Pipeline")
+            if not bp.nodes or bp.nodes[0].op != "source" \
+                    or bp.nodes[0].params.get("kind") != "carry-stub":
+                raise PipelineError(
+                    f"tee branch {i} must be rooted at Pipeline.branch() — "
+                    f"its input is the teed stage's finalized windows, not "
+                    f"an external source")
+            resolved.append(bp)
+        return self._append(Node("tee", {"branches": tuple(resolved)}))
+
     def join(self, other: "Pipeline", on: Callable | None = None
              ) -> "Pipeline":
         """Windowed equi-join: per window, emit every key present on both
         sides with both sides' aggregates.  Both sides must be reduced
-        record pipelines over the same window.  ``on`` overrides both
-        sides' ``key_by``."""
+        record pipelines over the same *final* window; either side may be
+        a multi-stage chain (its earlier stages lower to upstream DAG
+        stages feeding the join through carry handoffs).  ``on`` overrides
+        both sides' final ``key_by``."""
         if not isinstance(other, Pipeline):
             raise PipelineError("join expects another Pipeline")
         return self._append(Node("join", {"on": on}, right=other))

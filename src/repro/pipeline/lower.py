@@ -13,6 +13,18 @@ each stage chain onto ``repro.engine``:
   finalized window of stage N becomes stage N+1's input batch through a
   carry *handoff* (``engine.stages.carry_handoff_rows`` — on-device when
   the boundary has no host transform, the host record path otherwise);
+* ``tee(branch, …)`` → a stage **DAG**: the teed stage keeps one carry but
+  gains several out-*edges* (``BuiltPipeline.edges``), one per branch; each
+  edge picks its own transport (device for identity boundaries, host
+  records otherwise) and, at run time, its own bucket → next-key relabel
+  table — one finalized window fans out to every successor's carry;
+  conversely a join's two inputs may be multi-stage chains, so a stage may
+  also have two in-edges (one per join side).  Stages are emitted in
+  topological order (every edge points forward) and every terminal stage
+  of a fan-out carries its own distinct sink prefix;
+* stage-local ``reduce(..., num_buckets=, n_slots=)`` options override the
+  build-wide defaults per ``StagePlan`` — each stage's carry width and
+  ring depth are resolved (and validated) independently at lower time;
 * a windowed join → **two plans sharing one carry**: each side's plan folds
   its ``[value, 1]`` pair into a disjoint channel pair
   (``ReduceSpec.channel_base``) of the same scattered aggregate carry;
@@ -51,11 +63,11 @@ AGGREGATE_KINDS = ("count", "sum", "mean")
 
 #: canonical stage order within one chain (source implicit at rank 0)
 _STAGE_RANK = {"source": 0, "map": 1, "key_by": 2, "window": 3,
-               "reduce": 4, "top_k": 5, "join": 6, "sink": 7}
+               "reduce": 4, "top_k": 5, "join": 6, "tee": 6, "sink": 7}
 
 _ORDER_HINT = ("stage order is source → map* → key_by → window → reduce "
-               "→ top_k → join → sink; a chain may continue past a reduce "
-               "with another map* → key_by → window → reduce stage")
+               "→ top_k → join/tee → sink; a chain may continue past a "
+               "reduce with another map* → key_by → window → reduce stage")
 
 
 def _default_key(rec) -> Any:
@@ -119,6 +131,7 @@ class _Chain:
     reduce_mode: str
     capacity: int
     top: dict | None = None         # this stage's top_k node, if any
+    options: dict = dataclasses.field(default_factory=dict)  # stage-local
 
 
 @dataclass(frozen=True)
@@ -153,12 +166,31 @@ class EmitSpec:
 
 
 @dataclass(frozen=True)
+class StageEdge:
+    """One edge of the stage DAG: finalized windows of stage ``src``
+    become input batches of stage ``dst``, folding into side ``dst_side``
+    of its carry (a join destination has two sides).  ``device`` picks the
+    on-device handoff transport; ``eager`` marks an identity boundary
+    whose destination key dictionary registers eagerly.  Each edge owns
+    its own bucket → next-key relabel table at run time — a teed stage
+    with several out-edges relabels independently per successor."""
+
+    src: int
+    dst: int
+    dst_side: int = 0
+    device: bool = False
+    eager: bool = False
+
+
+@dataclass(frozen=True)
 class StagePlan:
-    """One lowered stage of the chain: its compiled side plan(s), window
+    """One lowered stage of the DAG: its compiled side plan(s), window
     shape, and emission/handoff spec.  A plain pipeline has one stage; a
     windowed join has one stage with two sides; a multi-stage chain has
-    one per reduce boundary, executed as a sequence — stage N's finalized
-    windows are stage N+1's input batches."""
+    one per reduce boundary; a tee'd graph has one per branch stage.
+    ``BuiltPipeline.edges`` wires them together — a stage with no
+    out-edges emits to the store (under ``output_prefix`` when set, the
+    pipeline default otherwise)."""
 
     index: int
     sides: tuple[SidePlan, ...]
@@ -169,13 +201,14 @@ class StagePlan:
     n_slots: int
     allowed_lateness: float
     capacity: int
-    handoff_device: bool = False    # finalized windows hand off on device
-    #: the boundary to the next stage passes keys through unchanged (no
-    #: host transform, default key_by, aggregate emission) — the next
-    #: stage's dense dictionary registers each key the moment this stage
-    #: first sees it, so both handoff transports (and every checkpoint)
-    #: agree on the id order
+    handoff_device: bool = False    # every out-edge hands off on device
+    #: every out-edge passes keys through unchanged (no host transform,
+    #: default key_by, aggregate emission) — each successor's dense
+    #: dictionary registers a key the moment this stage first sees it, so
+    #: both handoff transports (and every checkpoint) agree on the id
+    #: order
     eager_boundary: bool = False
+    output_prefix: str | None = None    # terminal stages: this sink's prefix
 
     @property
     def is_session(self) -> bool:
@@ -207,8 +240,12 @@ class BuiltPipeline:
     """A validated, lowered pipeline — the compiled program both execution
     modes drive.  ``run_streaming`` hands it to the ``StreamingCoordinator``;
     ``run_batch`` drives the same program once over the full input.
-    ``stages`` is the executable sequence: one entry for a plain chain or
-    join, several for a multi-stage graph chained by carry handoffs."""
+    ``stages`` is the executable DAG in topological order: one entry for a
+    plain chain or join, several for a multi-stage or tee'd graph wired by
+    the carry-handoff ``edges`` (every edge points forward).  ``inputs``
+    maps each external input stream to its ``(stage, side)`` ingestion
+    point — one entry for a plain pipeline, two for a join (whether its
+    sides are single- or multi-stage chains)."""
 
     stages: tuple[StagePlan, ...]
     num_buckets: int                # stage-0 carry bucket width
@@ -224,6 +261,8 @@ class BuiltPipeline:
     job_id: str
     handoff: str = "device"
     batch_plan: Any = None          # array pipelines: CompiledBatchPlan
+    edges: tuple[StageEdge, ...] = ()
+    inputs: tuple[tuple[int, int], ...] = ((0, 0),)
 
     # -- stage-0 / final-stage views (the single-stage API surface) -----------
     @property
@@ -252,11 +291,37 @@ class BuiltPipeline:
 
     @property
     def is_join(self) -> bool:
-        return self.stages[0].is_join
+        return any(st.is_join for st in self.stages)
 
     @property
     def is_multistage(self) -> bool:
         return len(self.stages) > 1
+
+    @property
+    def final_stages(self) -> tuple[int, ...]:
+        """Stages with no out-edge — the DAG's terminal stages, each
+        emitting finalized windows to its own output prefix."""
+        srcs = {e.src for e in self.edges}
+        return tuple(i for i in range(len(self.stages)) if i not in srcs)
+
+    def stage_prefix(self, si: int) -> str:
+        """The output prefix stage ``si`` emits under (its own sink, or
+        the pipeline default)."""
+        return self.stages[si].output_prefix or self.output_prefix
+
+    def output_prefixes(self) -> tuple[str, ...]:
+        """One normalized ``<sink>/<job_id>/`` key prefix per terminal
+        stage — everywhere this program's windows land in the store."""
+        return tuple(dict.fromkeys(
+            f"{self.stage_prefix(si).rstrip('/')}/{self.job_id}/"
+            for si in self.final_stages))
+
+    def collect_outputs(self, store) -> dict:
+        """Every window this program has persisted, across all of its
+        terminal sinks, keyed by object key."""
+        return {m.key: store.get(m.key)
+                for prefix in self.output_prefixes()
+                for m in store.list_objects(prefix)}
 
     def assigner(self):
         return self.stages[0].assigner()
@@ -299,19 +364,23 @@ class BuiltPipeline:
 # ---------------------------------------------------------------------------
 
 def _parse_chain(p: Pipeline, *, side: str, allow_join: bool,
-                 allow_stages: bool = False, on: Callable | None = None):
+                 allow_stages: bool = False, on: Callable | None = None,
+                 allow_tee: bool = False):
     """Walk one pipeline's nodes into stage chains (split at each reduce
     boundary when ``allow_stages``); returns ``(chains, join_node,
-    sink_prefix)`` where ``chains[i].top`` carries stage i's top_k node."""
+    tee_node, sink_prefix)`` where ``chains[i].top`` carries stage i's
+    top_k node and ``tee_node`` is the trailing fan-out, if any."""
     if not p.nodes or p.nodes[0].op != "source":
         raise PipelineError(f"{side}: a pipeline starts at "
                             f"Pipeline.from_source(...)")
     src = p.nodes[0].params
-    source = SourceSpec(kind=src["kind"], prefix=src["prefix"],
-                        records=src["records"], shards=src["shards"],
-                        batch_records=src["batch_records"])
+    source = SourceSpec(
+        kind="carry" if src["kind"] == "carry-stub" else src["kind"],
+        prefix=src["prefix"], records=src["records"], shards=src["shards"],
+        batch_records=src["batch_records"])
     chains: list[_Chain] = []
     join_node = None
+    tee_node = None
     sink_prefix = None
 
     def _fresh():
@@ -327,14 +396,16 @@ def _parse_chain(p: Pipeline, *, side: str, allow_join: bool,
         chains.append(_Chain(
             source=source if n == 0 else SourceSpec(kind="carry"),
             transform=fuse_maps(stage["maps"]),
-            key_fn=(on if n == 0 and on is not None else None)
-            or stage["key_fn"] or _default_key,
+            key_fn=stage["key_fn"] or _default_key,
             value_fn=_default_value,
             windowing=stage["windowing"],
             reduce_spec=stage["reduce"]["spec"],
             reduce_mode=stage["reduce"]["mode"],
             capacity=stage["reduce"]["capacity"],
-            top=stage["top"]))
+            top=stage["top"],
+            options={k: stage["reduce"][k]
+                     for k in ("num_buckets", "n_slots")
+                     if stage["reduce"].get(k) is not None}))
 
     stage = _fresh()
     rank = 0
@@ -346,19 +417,26 @@ def _parse_chain(p: Pipeline, *, side: str, allow_join: bool,
             raise PipelineError(f"{side}: more than one source")
         if sink_prefix is not None:
             raise PipelineError(f"{side}: sink must be the last node")
-        if r < rank or (r == rank and node.op != "map"):
+        if tee_node is not None:
+            raise PipelineError(f"{side}: tee is a terminal node — the "
+                                f"branches carry their own sinks and "
+                                f"continuations")
+        if node.op == "tee" and join_node is not None:
+            raise PipelineError("tee and join cannot combine in one "
+                                "pipeline (tee a downstream pipeline over "
+                                "the join output instead)")
+        if r < rank or (r == rank and node.op not in ("map",)):
             # past this stage's reduce the chain may continue with a new
             # stage; anything else is an ordering error
             if stage["reduce"] is not None and node.op in (
                     "map", "key_by", "window", "reduce"):
                 if not allow_stages:
                     raise PipelineError(
-                        f"{side}: the right side of a join ends at its "
-                        f"reduce node")
+                        f"{side}: this chain ends at its reduce node")
                 if join_node is not None:
-                    raise PipelineError("multi-stage chains cannot contain "
-                                        "a join (rank the join output in a "
-                                        "downstream pipeline instead)")
+                    raise PipelineError(
+                        "the chain cannot continue past a join (rank the "
+                        "join output in a downstream pipeline instead)")
                 _close(stage)
                 stage = _fresh()
                 rank = 0
@@ -383,18 +461,23 @@ def _parse_chain(p: Pipeline, *, side: str, allow_join: bool,
             if not allow_join:
                 raise PipelineError(f"{side}: nested joins are not "
                                     f"supported")
-            if chains:
-                raise PipelineError("multi-stage chains cannot contain a "
-                                    "join (rank the join output in a "
-                                    "downstream pipeline instead)")
             join_node = node
+        elif node.op == "tee":
+            if not allow_tee:
+                raise PipelineError(f"{side}: tee is not allowed here")
+            if stage["reduce"] is None:
+                raise PipelineError(f"{side}: tee fans out a *reduced* "
+                                    f"stage ({_ORDER_HINT})")
+            tee_node = node
         elif node.op == "sink":
             sink_prefix = node.params["prefix"]
     if stage["top"] is not None and join_node is not None:
         raise PipelineError("top_k and join cannot combine (rank the join "
                             "output downstream instead)")
     _close(stage)
-    return chains, (join_node if allow_join else None), sink_prefix
+    if on is not None:
+        chains[-1] = dataclasses.replace(chains[-1], key_fn=on)
+    return chains, (join_node if allow_join else None), tee_node, sink_prefix
 
 
 def _check_windowing(w: Windowing, n_slots: int, lateness: float) -> None:
@@ -560,11 +643,12 @@ def _stage_emit(chain: _Chain, num_buckets: int) -> tuple[EmitSpec, int, str]:
     return emit, top_k, rank_by
 
 
-def _check_record_stage(chain: _Chain, *, index: int, last: bool,
-                        n_slots: int, lateness: float, fanout: str,
-                        num_buckets: int, n_workers: int) -> None:
-    """The per-stage validation shared by single- and multi-stage chains."""
-    where = f"stage {index + 1}: " if index else ""
+def _check_record_stage(chain: _Chain, *, name: str, n_slots: int,
+                        lateness: float, fanout: str, num_buckets: int,
+                        n_workers: int) -> None:
+    """The per-stage validation shared by every record stage of the DAG —
+    run with the stage's *resolved* (possibly stage-local) options."""
+    where = f"{name}: " if name else ""
     if chain.windowing is None:
         raise PipelineError(where + "record pipelines need a window node "
                             "before reduce (use Windowing.tumbling(...) "
@@ -572,12 +656,6 @@ def _check_record_stage(chain: _Chain, *, index: int, last: bool,
     _check_windowing(chain.windowing, n_slots, lateness)
     _check_reduce(chain, in_join=False)
     if chain.windowing.is_session:
-        if index > 0 or not last:
-            raise PipelineError(
-                "session windows run in the last position of a "
-                "single-stage pipeline only: sessions finalize out of "
-                "start order, so handing them to a further stage would "
-                "break the deterministic batch ↔ streaming replay")
         if chain.reduce_mode != "aggregate":
             raise PipelineError("session windows reduce in aggregate mode "
                                 "only")
@@ -587,9 +665,25 @@ def _check_record_stage(chain: _Chain, *, index: int, last: bool,
     if chain.reduce_mode == "group" and fanout != "device":
         raise PipelineError(where + "group mode runs with fanout='device'")
     if chain.reduce_mode == "aggregate" and num_buckets % n_workers != 0:
-        raise PipelineError("num_buckets must divide by n_workers so "
-                            "window slices stay aligned to the scattered "
-                            "carry")
+        raise PipelineError(where + "num_buckets must divide by n_workers "
+                            "so window slices stay aligned to the "
+                            "scattered carry")
+
+
+def _stage_options(chain: _Chain, *, name: str, num_buckets: int,
+                   n_slots: int) -> tuple[int, int]:
+    """Resolve one stage's carry sizing: stage-local ``reduce(...,
+    num_buckets=, n_slots=)`` overrides win over the build-wide defaults;
+    both are validated here, per stage."""
+    nb = chain.options.get("num_buckets", num_buckets)
+    ns = chain.options.get("n_slots", n_slots)
+    where = f"{name}: " if name else ""
+    if nb < 1:
+        raise PipelineError(where + "num_buckets must be >= 1")
+    if ns < 2:
+        raise PipelineError(where + "need >= 2 window slots (one closing, "
+                            "one open)")
+    return int(nb), int(ns)
 
 
 def _identity_boundary(src: _Chain, src_emit: EmitSpec, dst: _Chain) -> bool:
@@ -662,8 +756,9 @@ def build_pipeline(p: Pipeline, *, num_buckets=128, n_workers: int = 8,
         raise PipelineError("handoff must be 'device' or 'host'")
     if checkpoint_interval < 1:
         raise PipelineError("checkpoint_interval must be >= 1")
-    chains, join_node, sink_prefix = _parse_chain(
-        p, side="pipeline", allow_join=True, allow_stages=True)
+    chains, join_node, tee_node, sink_prefix = _parse_chain(
+        p, side="pipeline", allow_join=True, allow_stages=True,
+        allow_tee=True)
     chain = chains[0]
     job_id = job_id or "p" + uuid.uuid4().hex[:11]
     output_prefix = output_prefix or sink_prefix or "stream-output/"
@@ -674,10 +769,14 @@ def build_pipeline(p: Pipeline, *, num_buckets=128, n_workers: int = 8,
     # -- array (pure batch) pipelines ----------------------------------------
     if chain.source.kind == "array":
         if chain.windowing is not None or join_node is not None \
-                or len(chains) > 1:
+                or tee_node is not None or len(chains) > 1:
             raise PipelineError("array pipelines are one-shot batch jobs: "
-                                "no window/join nodes and no continued "
+                                "no window/join/tee nodes and no continued "
                                 "stages")
+        if chain.options:
+            raise PipelineError("array pipelines take build-wide options "
+                                "only (stage-local num_buckets / n_slots "
+                                "size windowed record-stage carries)")
         batch_plan, emit = _lower_array(
             chain, chain.top, num_buckets=num_buckets, n_workers=n_workers,
             key_space=key_space, backend=backend, mesh=mesh,
@@ -698,34 +797,161 @@ def build_pipeline(p: Pipeline, *, num_buckets=128, n_workers: int = 8,
             output_prefix=output_prefix, job_id=job_id, handoff=handoff,
             batch_plan=batch_plan)
 
-    # -- record pipelines -----------------------------------------------------
+    # -- record pipelines: assemble the stage DAG -----------------------------
+    stages: list[StagePlan] = []
+    side_chains: list[tuple[_Chain, ...]] = []   # per stage, its side chains
+    raw_edges: list[tuple[int, int, int]] = []   # (src, dst, dst_side)
+
+    def _add_stage(ch: _Chain, *, name: str, lateness: float,
+                   prefix: str | None) -> int:
+        idx = len(stages)
+        nb, ns = _stage_options(ch, name=name, num_buckets=num_buckets,
+                                n_slots=n_slots)
+        if ch.options and isinstance(key_space, KeySpace):
+            raise PipelineError("stage-local options cannot combine with a "
+                                "KeySpace instance (it fixes one bucket "
+                                "width for the whole graph)")
+        _check_record_stage(ch, name=name, n_slots=ns, lateness=lateness,
+                            fanout=fanout, num_buckets=nb,
+                            n_workers=n_workers)
+        emit, top_k, rank_by = _stage_emit(ch, nb)
+        side = _lower_side(ch, name or "main", num_buckets=nb,
+                           n_workers=n_workers, n_slots=ns,
+                           key_space=key_space, fanout=fanout,
+                           backend=backend, mesh=mesh, jit=jit,
+                           combine_fn=combine_fn, axis_name=axis_name,
+                           channels=2, channel_base=0, top_k=top_k,
+                           rank_by=rank_by)
+        stages.append(StagePlan(idx, (side,), ch.windowing, ch.reduce_mode,
+                                emit, nb, ns, lateness, ch.capacity,
+                                output_prefix=prefix))
+        side_chains.append((ch,))
+        return idx
+
+    def _lower_seq(seq, tee, sink, *, upstream: int | None,
+                   label: str) -> tuple[int, int]:
+        """Lower one linear chain sequence — fed by stage ``upstream``
+        through the carry, or by an external source when ``upstream`` is
+        None — plus its trailing tee fan-out (each branch recursing here).
+        Returns the (first, last) stage indices of the linear part."""
+        prev = upstream
+        first = last = None
+        for j, ch in enumerate(seq):
+            terminal = j == len(seq) - 1 and tee is None
+            name = f"{label}stage {j + 1}" if (label or len(seq) > 1) else ""
+            # stages fed through the carry see finalized windows in
+            # watermark order — no out-of-order slack needed
+            lateness = allowed_lateness if prev is None else 0.0
+            idx = _add_stage(ch, name=name, lateness=lateness,
+                             prefix=sink if terminal else None)
+            if prev is not None:
+                raw_edges.append((prev, idx, 0))
+            prev = idx
+            last = idx
+            if first is None:
+                first = idx
+        if tee is not None:
+            for bi, bp in enumerate(tee.params["branches"]):
+                blabel = f"{label}branch {bi + 1}"
+                bchains, _, btee, bsink = _parse_chain(
+                    bp, side=blabel, allow_join=False, allow_stages=True,
+                    allow_tee=True)
+                _lower_seq(bchains, btee, bsink, upstream=prev,
+                           label=blabel + " ")
+        return first, last
+
+    def _finish(inputs: tuple[tuple[int, int], ...],
+                carry_width: int) -> BuiltPipeline:
+        """Shared tail of every record lowering: derive each edge's
+        transport, validate terminal sinks and session placement, and
+        assemble the built program."""
+        edges = []
+        for src, dst, dst_side in raw_edges:
+            src_ch = side_chains[src][0]
+            dst_ch = side_chains[dst][dst_side]
+            eager = _identity_boundary(src_ch, stages[src].emit, dst_ch)
+            device = eager and _handoff_on_device(
+                src_ch, stages[src].emit, dst_ch,
+                key_space_str=key_space_str, fanout=fanout, handoff=handoff)
+            edges.append(StageEdge(src, dst, dst_side, device, eager))
+        srcs: dict[int, list[StageEdge]] = {}
+        for e in edges:
+            srcs.setdefault(e.src, []).append(e)
+        for si, es in srcs.items():
+            # back-compat stage view: the stage counts as eager/device when
+            # every out-edge is (per-edge truth lives on the edges)
+            stages[si] = dataclasses.replace(
+                stages[si], eager_boundary=all(x.eager for x in es),
+                handoff_device=all(x.device for x in es))
+        if len(stages) > 1:
+            for st in stages:
+                if st.is_session:
+                    raise PipelineError(
+                        "session windows run in a single-stage pipeline "
+                        "only: sessions finalize out of start order, so "
+                        "wiring them into a stage DAG would break the "
+                        "deterministic batch ↔ streaming replay")
+        finals = [i for i in range(len(stages)) if i not in srcs]
+        if len(finals) > 1:
+            prefixes = [stages[i].output_prefix for i in finals]
+            if any(not pfx for pfx in prefixes):
+                raise PipelineError(
+                    "a fan-out pipeline writes several output streams: "
+                    "every terminal branch needs its own .sink(prefix)")
+            # output keys normalize the trailing slash away, so the
+            # distinctness check must too ("out" and "out/" collide)
+            normed = [pfx.rstrip("/") for pfx in prefixes]
+            if len(set(normed)) != len(normed):
+                raise PipelineError("terminal branches must sink to "
+                                    "distinct prefixes (two branches share "
+                                    "one, so their windows would collide)")
+        else:
+            # single output stream: the pipeline-level prefix (which the
+            # build option may override) stays authoritative, as ever
+            stages[finals[0]] = dataclasses.replace(
+                stages[finals[0]], output_prefix=None)
+        return BuiltPipeline(
+            stages=tuple(stages), num_buckets=carry_width,
+            n_workers=n_workers, n_slots=n_slots,
+            batch_records=batch_records, key_space=key_space_str,
+            fanout=fanout, allowed_lateness=allowed_lateness,
+            checkpoint_interval=checkpoint_interval, backend=backend,
+            output_prefix=output_prefix, job_id=job_id, handoff=handoff,
+            edges=tuple(edges), inputs=inputs)
+
+    # -- joins (either side may be a multi-stage chain) -----------------------
     if join_node is not None:
-        if chain.windowing is None:
+        on = join_node.params["on"]
+        lchain = chains[-1]
+        if on is not None:
+            lchain = dataclasses.replace(lchain, key_fn=on)
+        rchains, _, rtee, rsink = _parse_chain(
+            join_node.right, side="right", allow_join=False,
+            allow_stages=True, on=on)
+        rchain = rchains[-1]
+        if rsink is not None or rtee is not None or rchain.top is not None:
+            raise PipelineError("the join's right side ends at its reduce "
+                                "node")
+        if rchains[0].source.kind == "array":
+            raise PipelineError("join sides are record pipelines")
+        if lchain.windowing is None or rchain.windowing is None:
             raise PipelineError("record pipelines need a window node before "
                                 "reduce (use Windowing.tumbling(...) with a "
                                 "large size for a single global window)")
-        _check_windowing(chain.windowing, n_slots, allowed_lateness)
-        _check_reduce(chain, in_join=True)
-        if chain.windowing.is_session:
+        if rchain.windowing != lchain.windowing:
+            raise PipelineError("join sides must share one window "
+                                f"({lchain.windowing} != {rchain.windowing})")
+        if lchain.windowing.is_session:
             raise PipelineError("session windows cannot join (window "
                                 "bounds are per-key)")
         if fanout != "device":
             raise PipelineError("joins run with fanout='device'")
-        on = join_node.params["on"]
-        rchains, _, rsink = _parse_chain(join_node.right, side="right",
-                                         allow_join=False, on=on)
-        rchain = rchains[0]
-        if rsink is not None or rchain.top is not None:
-            raise PipelineError("the join's right side ends at its reduce "
-                                "node")
-        if rchain.windowing != chain.windowing:
-            raise PipelineError("join sides must share one window "
-                                f"({chain.windowing} != {rchain.windowing})")
-        if rchain.source.kind == "array":
-            raise PipelineError("join sides are record pipelines")
+        _check_reduce(lchain, in_join=True)
         _check_reduce(rchain, in_join=True)
-        if on is not None:
-            chain = dataclasses.replace(chain, key_fn=on)
+        if lchain.options or rchain.options:
+            raise PipelineError("stage-local options cannot size a join's "
+                                "final stage — size its key spaces with "
+                                "build(num_buckets=(left, right))")
         lb, rb = side_buckets or (num_buckets, num_buckets)
         if key_space_str == "hashed" and lb != rb:
             raise PipelineError(
@@ -736,6 +962,20 @@ def build_pipeline(p: Pipeline, *, num_buckets=128, n_workers: int = 8,
                                 "window slices stay aligned to the "
                                 "scattered carry (asymmetric joins: the "
                                 "larger side)")
+        # the join stage itself still sees raw external events on any
+        # single-stage side, so it keeps the out-of-order slack; a side fed
+        # through the carry arrives in watermark order
+        jlat = allowed_lateness if (len(chains) == 1 or len(rchains) == 1) \
+            else 0.0
+        _check_windowing(lchain.windowing, n_slots, jlat)
+        lfirst = llast = rfirst = rlast = None
+        if len(chains) > 1:
+            lfirst, llast = _lower_seq(chains[:-1], None, None,
+                                       upstream=None, label="left ")
+        if len(rchains) > 1:
+            rfirst, rlast = _lower_seq(rchains[:-1], None, None,
+                                       upstream=None, label="right ")
+        jidx = len(stages)
         layout = ((0, 2), (2, 2))       # per-side [sum, count] channel pairs
         _check_channels_disjoint(layout, channels=4)
         common = dict(n_workers=n_workers, n_slots=n_slots,
@@ -743,58 +983,25 @@ def build_pipeline(p: Pipeline, *, num_buckets=128, n_workers: int = 8,
                       mesh=mesh, jit=jit, combine_fn=combine_fn,
                       axis_name=axis_name, channels=4,
                       carry_buckets=num_buckets)
-        sides = (_lower_side(chain, "left", num_buckets=lb,
+        sides = (_lower_side(lchain, "left", num_buckets=lb,
                              channel_base=layout[0][0], **common),
                  _lower_side(rchain, "right", num_buckets=rb,
                              channel_base=layout[1][0], **common))
-        emit = EmitSpec("join", join_aggs=(chain.reduce_spec,
+        emit = EmitSpec("join", join_aggs=(lchain.reduce_spec,
                                            rchain.reduce_spec))
-        stage = StagePlan(0, sides, chain.windowing, "aggregate", emit,
-                          num_buckets, n_slots, allowed_lateness, 0)
-        return BuiltPipeline(
-            stages=(stage,), num_buckets=num_buckets, n_workers=n_workers,
-            n_slots=n_slots, batch_records=batch_records,
-            key_space=key_space_str, fanout=fanout,
-            allowed_lateness=allowed_lateness,
-            checkpoint_interval=checkpoint_interval, backend=backend,
-            output_prefix=output_prefix, job_id=job_id, handoff=handoff)
+        stages.append(StagePlan(jidx, sides, lchain.windowing, "aggregate",
+                                emit, num_buckets, n_slots, jlat, 0,
+                                output_prefix=sink_prefix))
+        side_chains.append((lchain, rchain))
+        if llast is not None:
+            raw_edges.append((llast, jidx, 0))
+        if rlast is not None:
+            raw_edges.append((rlast, jidx, 1))
+        inputs = ((jidx, 0) if lfirst is None else (lfirst, 0),
+                  (jidx, 1) if rfirst is None else (rfirst, 0))
+        return _finish(inputs, num_buckets)
 
-    # a linear chain of one or more stages, split at each reduce boundary
-    stages: list[StagePlan] = []
-    emits: list[EmitSpec] = []
-    for i, ch in enumerate(chains):
-        last = i == len(chains) - 1
-        # stages past the first see the previous stage's finalized windows
-        # in watermark order — no out-of-order slack needed
-        lateness = allowed_lateness if i == 0 else 0.0
-        _check_record_stage(ch, index=i, last=last, n_slots=n_slots,
-                            lateness=lateness, fanout=fanout,
-                            num_buckets=num_buckets, n_workers=n_workers)
-        emit, top_k, rank_by = _stage_emit(ch, num_buckets)
-        emits.append(emit)
-        side = _lower_side(ch, "main" if len(chains) == 1 else f"stage{i}",
-                           num_buckets=num_buckets, n_workers=n_workers,
-                           n_slots=n_slots, key_space=key_space,
-                           fanout=fanout, backend=backend, mesh=mesh,
-                           jit=jit, combine_fn=combine_fn,
-                           axis_name=axis_name, channels=2, channel_base=0,
-                           top_k=top_k, rank_by=rank_by)
-        stages.append(StagePlan(
-            i, (side,), ch.windowing, ch.reduce_mode, emit, num_buckets,
-            n_slots, lateness, ch.capacity))
-    # mark identity boundaries (eager next-stage key registration) and the
-    # subset whose handoff stays on device
-    for i in range(len(stages) - 1):
-        if _identity_boundary(chains[i], emits[i], chains[i + 1]):
-            device = _handoff_on_device(
-                chains[i], emits[i], chains[i + 1],
-                key_space_str=key_space_str, fanout=fanout, handoff=handoff)
-            stages[i] = dataclasses.replace(stages[i], eager_boundary=True,
-                                            handoff_device=device)
-    return BuiltPipeline(
-        stages=tuple(stages), num_buckets=num_buckets, n_workers=n_workers,
-        n_slots=n_slots, batch_records=batch_records,
-        key_space=key_space_str, fanout=fanout,
-        allowed_lateness=allowed_lateness,
-        checkpoint_interval=checkpoint_interval, backend=backend,
-        output_prefix=output_prefix, job_id=job_id, handoff=handoff)
+    # -- a linear chain (split at each reduce boundary) + optional tee --------
+    first, _last = _lower_seq(chains, tee_node, sink_prefix, upstream=None,
+                              label="")
+    return _finish(((first, 0),), stages[0].num_buckets)

@@ -4,14 +4,17 @@ Streaming mode hands the ``BuiltPipeline`` to the ``StreamingCoordinator``
 (micro-batches, watermarks, checkpoints, backpressure).  Batch mode drives
 the *same* compiled program once over the full input: all records fold in
 a single pass and the end-of-input flush finalizes every window, rippling
-multi-stage carry handoffs stage by stage — so the per-window output bytes
-are identical to the streaming run's, which the pipeline tests assert
-bit-for-bit.
+carry handoffs through the stage DAG in topological order — so the
+per-window output bytes are identical to the streaming run's (on every
+tee'd branch), which the pipeline tests assert bit-for-bit.  A fan-out
+program's batch outputs collect across all of its terminal sinks.
 
 ``JoinSource`` merges two event logs into one side-tagged record stream
 (``(ts, key, value, side)``), in event-time order with a deterministic
-left-before-right tie-break, so a two-input join replays identically in
-both modes and across restarts.
+left-before-right tie-break, so a two-input program — a join, even over
+multi-stage sides — replays identically in both modes and across
+restarts (the tag selects the record's ingestion stage via
+``BuiltPipeline.inputs``).
 """
 
 from __future__ import annotations
@@ -91,16 +94,20 @@ def _side_source(spec: SourceSpec, store: ObjectStore | None,
 def resolve_source(built: BuiltPipeline, store: ObjectStore | None,
                    source=None, sources=None):
     """The graph's sources (or run-time overrides) as one drivable
-    micro-batch stream."""
-    if built.is_join:
+    micro-batch stream.  A two-input program (a join, whether its sides
+    are single- or multi-stage chains) merges both logs into one
+    side-tagged stream whose tag selects the record's ingestion point
+    (``BuiltPipeline.inputs``)."""
+    specs = [built.stages[si].sides[side].source
+             for si, side in built.inputs]
+    if len(specs) == 2:
         overrides = sources or (None, None)
-        left = _side_source(built.sides[0].source, store,
-                            built.batch_records, overrides[0])
-        right = _side_source(built.sides[1].source, store,
-                             built.batch_records, overrides[1])
+        left = _side_source(specs[0], store, built.batch_records,
+                            overrides[0])
+        right = _side_source(specs[1], store, built.batch_records,
+                             overrides[1])
         return JoinSource(left, right, built.batch_records)
-    return _side_source(built.sides[0].source, store, built.batch_records,
-                        source)
+    return _side_source(specs[0], store, built.batch_records, source)
 
 
 def run_streaming(built: BuiltPipeline, store, meta, *, source=None,
@@ -138,6 +145,4 @@ def run_batch(built: BuiltPipeline, store=None, *, data=None, source=None,
     src = resolve_source(prog, store, source, sources)
     coord = StreamingCoordinator(store, MetadataStore(), program=prog)
     report = coord.run_stream(src, announce=False, flush=True)
-    prefix = f"{built.output_prefix.rstrip('/')}/{built.job_id}/"
-    outputs = {m.key: store.get(m.key) for m in store.list_objects(prefix)}
-    return outputs, report
+    return built.collect_outputs(store), report

@@ -12,24 +12,32 @@ checkpoints at batch boundaries (metadata + object store), so a restarted
 coordinator resumes exactly where it stopped, even over a log that has
 grown since — the streaming analogue of ``Coordinator.resume_job``.
 
-The program is a **sequence of stages** (``BuiltPipeline.stages``).  A
-plain chain has one stage; a windowed join has one stage with two sides,
-compiled over disjoint channel pairs of **one shared carry** — left
-records fold into channels [0, 2), right into [2, 4), and finalization
-inner-joins keys populated on both sides (by label for dense joins, whose
-sides may size their key spaces independently; by bucket for hashed
-joins).  A multi-stage graph — ``reduce → map → window → reduce`` — runs
-as a *plan cascade*: when stage N's watermark finalizes a window, the
-window's aggregates become stage N+1's input batch through a **carry
-handoff**.  Boundaries with no host transform re-key/re-window entirely
-on device (``CompiledStreamAggregate.handoff_rows``: the finalized slot is
-gathered, relabeled through a host-maintained bucket → next-key-id
-table, stamped with the re-windowed span, and folded by the next plan's
-step — the aggregates never visit the host); boundaries with an
-inter-stage map or custom ``key_by`` materialize the same records host-side
-and feed them through the ordinary ingestion path.  Fixed windows finalize
-in start order, so stage N+1 sees a monotone event-time feed — batch and
-streaming replays fold in the same order and stay bit-identical.
+The program is a **stage DAG** (``BuiltPipeline.stages`` in topological
+order, wired by ``BuiltPipeline.edges``).  A plain chain has one stage; a
+windowed join has one stage with two sides, compiled over disjoint channel
+pairs of **one shared carry** — left records fold into channels [0, 2),
+right into [2, 4), and finalization inner-joins keys populated on both
+sides (by label for dense joins, whose sides may size their key spaces
+independently; by bucket for hashed joins).  A multi-stage graph —
+``reduce → map → window → reduce`` — runs as a *plan cascade*: when stage
+N's watermark finalizes a window, the window's aggregates become each
+successor's input batch through a **carry handoff**, one delivery per
+out-*edge* — a ``tee``'d stage fans a single finalized window out to every
+branch, each edge with its own transport and its own bucket →
+next-key-id relabel table.  Edges with no host transform re-key/re-window
+entirely on device (``CompiledStreamAggregate.handoff_rows``: the
+finalized slot is gathered, relabeled through the edge's host-maintained
+table, stamped with the re-windowed span, and folded by the destination
+plan's step — the aggregates never visit the host); edges with an
+inter-stage map or custom ``key_by`` materialize the same records
+host-side and feed them through the ordinary ingestion path.  Fixed
+windows finalize in start order, so every successor sees a monotone
+event-time feed — batch and streaming replays fold in the same order and
+stay bit-identical.  Finalization runs as one forward sweep over the
+topologically ordered stages, and a stage with several inputs (a join
+over multi-stage sides) advances its watermark to the *minimum* over its
+input channels — a window never closes while a lagging input can still
+feed it.
 
 Session windows (``Windowing.session(gap)``) drive the host-wire fold with
 a ``SessionTracker`` mapping each open session to a carry *cell*
@@ -253,11 +261,12 @@ class StreamReport:
         return sum(ls) / len(ls) if ls else 0.0
 
 
-def window_output_key(cfg, window: Window) -> str:
+def window_output_key(cfg, window: Window, prefix: str | None = None) -> str:
     """Object key for a fixed window's emission.  ``cfg`` is anything with
     ``output_prefix`` and ``job_id`` — a ``StreamingConfig`` or a
-    ``BuiltPipeline``."""
-    return (f"{cfg.output_prefix.rstrip('/')}/{cfg.job_id}/"
+    ``BuiltPipeline``.  ``prefix`` overrides the config's prefix for a
+    terminal fan-out branch that sinks to its own stream."""
+    return (f"{(prefix or cfg.output_prefix).rstrip('/')}/{cfg.job_id}/"
             f"window-{window.start:.3f}-{window.end:.3f}")
 
 
@@ -380,8 +389,7 @@ class _KeyTable:
 
 class _StageState:
     """One stage's runtime state: the compiled plan handle(s), carry,
-    window tracker, per-side key tables, wire sizing, and — for a
-    device-handoff boundary — the bucket → next-stage-key relabel table."""
+    window tracker, per-side key tables, and wire sizing."""
 
     def __init__(self, plan, per_worker: int) -> None:
         self.plan = plan
@@ -392,8 +400,21 @@ class _StageState:
         self.tables: list[_KeyTable] = []
         self.per_worker = per_worker
         self.window_base = 0                    # per-fold wire-index rebase
-        self.relabel: np.ndarray | None = None  # bucket → next stage key id
+
+
+class _EdgeState:
+    """One DAG edge's runtime state: the lowered transport flags
+    (``spec`` is a ``pipeline.lower.StageEdge``), the bucket →
+    next-stage-key relabel table (device transports own one *per edge* —
+    a teed stage relabels independently toward each successor), and the
+    feed watermark driving the destination's min-over-inputs
+    observation."""
+
+    def __init__(self, spec) -> None:
+        self.spec = spec
+        self.relabel: np.ndarray | None = None  # src bucket → dst key id
         self.relabel_dev: jax.Array | None = None
+        self.fed: float = _NEG_INF              # max window start handed off
 
 
 class StreamingCoordinator:
@@ -427,10 +448,20 @@ class StreamingCoordinator:
         self.pool = ServerlessPool(
             "stream-mapper", autoscaler or AutoscalerConfig(
                 max_scale=program.n_workers))
-        # fixed per-batch array capacity so XLA compiles a single program:
-        # device fan-out ships one row per record, host fan-out pre-expands,
-        # sessions ship host-wire rows with fan-out 1; stages past the first
-        # are sized by the previous stage's worst-case window output
+        # the stage DAG: adjacency first (wire sizing needs the in-edges),
+        # then per-stage state.  Fixed per-batch array capacity so XLA
+        # compiles a single program: device fan-out ships one row per
+        # record, host fan-out pre-expands, sessions ship host-wire rows
+        # with fan-out 1; carry-fed stages are sized by their sources'
+        # worst-case window output
+        self.edges = [_EdgeState(e) for e in program.edges]
+        self._out: dict[int, list[_EdgeState]] = {}
+        self._in: dict[int, list[_EdgeState]] = {}
+        for e in self.edges:
+            self._out.setdefault(e.spec.src, []).append(e)
+            self._in.setdefault(e.spec.dst, []).append(e)
+        self._roots = sorted({si for si, _side in program.inputs})
+        self._ext_wm: dict[int, float] = {}  # per-root external watermark
         self.stages = [
             _StageState(sp, self._wire_rows(si))
             for si, sp in enumerate(program.stages)]
@@ -441,20 +472,23 @@ class StreamingCoordinator:
     # -- construction ----------------------------------------------------------
     def _wire_rows(self, si: int) -> int:
         """Per-worker wire capacity for stage ``si``: the micro-batch bound
-        for stage 0, the previous stage's worst-case window output for
-        continued stages (grown on demand if flat-maps expand it)."""
+        where an external input lands, each in-edge source's worst-case
+        window output where the carry feeds it — a stage fed both ways (a
+        join with one single-stage side) takes the max (grown on demand if
+        flat-maps expand it)."""
         prog = self.prog
         sp = prog.stages[si]
-        if si == 0:
-            bound = prog.batch_records
-        else:
-            prev = prog.stages[si - 1]
+        bounds = [prog.batch_records] if any(
+            s == si for s, _side in prog.inputs) else []
+        for e in self._in.get(si, ()):
+            prev = prog.stages[e.spec.src]
             if prev.emit.kind == "top_k":
-                bound = max(prev.emit.k, 1)
+                bounds.append(max(prev.emit.k, 1))
             elif prev.emit.kind == "group":
-                bound = prog.n_workers * max(prev.capacity, 1)
+                bounds.append(prog.n_workers * max(prev.capacity, 1))
             else:
-                bound = prev.num_buckets
+                bounds.append(prev.num_buckets)
+        bound = max(bounds)
         if not (sp.is_session or prog.fanout == "device"):
             bound *= sp.assigner().max_windows_per_event()
         return -(-bound // prog.n_workers)
@@ -473,23 +507,26 @@ class StreamingCoordinator:
                 table = _KeyTable(prog.key_space,
                                   st.plan.sides[0].num_buckets)
                 st.tables = [table] * len(st.plan.sides)
-        for si in range(len(self.stages) - 1):
-            st, nxt = self.stages[si], self.stages[si + 1]
-            if not st.plan.eager_boundary:
+        for si, st in enumerate(self.stages):
+            eager = [e for e in self._out.get(si, ()) if e.spec.eager]
+            if not eager:
                 continue
-            if st.plan.handoff_device:
-                st.relabel = np.full(st.plan.num_buckets, -1, np.int32)
+            for e in eager:
+                if e.spec.device:
+                    e.relabel = np.full(st.plan.num_buckets, -1, np.int32)
 
-            def on_new(kid: int, label: str, st=st, nxt=nxt) -> None:
-                # eager: the next stage's dictionary (and, on device
-                # boundaries, the relabel table) grows the moment this
-                # stage first sees a key — both handoff transports assign
-                # the same downstream id order, and every checkpoint
-                # snapshots a closed mapping
-                next_id = nxt.tables[0].key_id(label)
-                if st.relabel is not None:
-                    st.relabel[kid] = next_id
-                    st.relabel_dev = None
+            def on_new(kid: int, label: str, edges=tuple(eager)) -> None:
+                # eager: every identity successor's dictionary (and, on
+                # device edges, the edge's relabel table) grows the moment
+                # this stage first sees a key — both handoff transports
+                # assign the same downstream id order, and every checkpoint
+                # snapshots a closed mapping on every edge
+                for e in edges:
+                    dst = self.stages[e.spec.dst]
+                    next_id = dst.tables[e.spec.dst_side].key_id(label)
+                    if e.relabel is not None:
+                        e.relabel[kid] = next_id
+                        e.relabel_dev = None
 
             st.tables[0].on_new = on_new
 
@@ -654,8 +691,9 @@ class StreamingCoordinator:
         stage = self.stages[si]
         window = stage.assigner.window(window_index)
         records = self._window_records(si, slot)
-        self._put_window(window_output_key(self.prog, window), records,
-                         window.start, window.end, report)
+        out_key = window_output_key(self.prog, window,
+                                    prefix=self.prog.stage_prefix(si))
+        self._put_window(out_key, records, window.start, window.end, report)
         stage.carry = stage.compiled.clear_slot(stage.carry, slot)
         stage.tracker.release(window_index)
 
@@ -678,7 +716,8 @@ class StreamingCoordinator:
 
     # -- span admission (shared by record ingestion and the carry handoff) -----
     def _admit_span(self, si: int, lo: int, hi: int, seen: float,
-                    ship, flush, report: StreamReport, *ship_args) -> None:
+                    ship, flush, report: StreamReport, *ship_args,
+                    via: "_EdgeState | None" = None) -> None:
         """Admit windows ``[lo, hi]`` on stage ``si``'s ring and ship the
         span in contiguous segments — THE ring/watermark protocol, in one
         place for both transports.
@@ -706,23 +745,23 @@ class StreamingCoordinator:
                     ship(widx - 1, widx - start, *ship_args)
                     start = widx
                 flush()
-                stage.tracker.observe(seen)
+                self._observe_floor(si, seen, via)
                 self._finalize_ripe(report, si)
                 if not stage.tracker.is_late(widx):
                     stage.tracker.slot_for(widx)
         if hi >= start:
             ship(hi, hi - start + 1, *ship_args)
 
-    # -- the carry handoff (stage N windows → stage N+1 batches) ---------------
-    def _handoff_device(self, si: int, slot: int, wstart: float,
+    # -- the carry handoff (stage N windows → successor batches) ---------------
+    def _handoff_device(self, edge: _EdgeState, slot: int, wstart: float,
                         report: StreamReport) -> None:
-        """On-device boundary: re-key/re-window one finalized window of
-        stage ``si`` and fold it into stage ``si+1``'s carry without the
+        """On-device edge: re-key/re-window one finalized window of the
+        edge's source and fold it into the destination's carry without the
         aggregates visiting the host.  Admission control (which target
         windows are open) stays host-side — it is pure scalar math on the
         window's timestamp — through the same ``_admit_span`` protocol as
         record ingestion."""
-        dst = self.stages[si + 1]
+        dst = self.stages[edge.spec.dst]
         asg = dst.assigner
         w0 = asg.window(0)
         step = asg.window(1).start - w0.start
@@ -734,90 +773,155 @@ class StreamingCoordinator:
             first = int(math.floor((rel - w0.size) / step)) + 1
         dst.window_base = (first // dst.plan.n_slots) * dst.plan.n_slots
         self._admit_span(
-            si + 1, first, last, wstart,
-            lambda seg_last, n: self._handoff_step(si, slot, seg_last, n,
+            edge.spec.dst, first, last, wstart,
+            lambda seg_last, n: self._handoff_step(edge, slot, seg_last, n,
                                                    report),
-            lambda: None, report)
+            lambda: None, report, via=edge)
 
-    def _handoff_step(self, si: int, slot: int, last: int, n_windows: int,
-                      report: StreamReport) -> None:
-        """One fused handoff: gather stage ``si``'s finalized slot, relabel
-        + re-window + fold through stage ``si+1``'s step, all on device."""
-        src, dst = self.stages[si], self.stages[si + 1]
-        if src.relabel_dev is None:
-            src.relabel_dev = jnp.asarray(src.relabel)
+    def _handoff_step(self, edge: _EdgeState, slot: int, last: int,
+                      n_windows: int, report: StreamReport) -> None:
+        """One fused handoff: gather the source's finalized slot, relabel
+        through the *edge's* table + re-window + fold through the
+        destination side's step, all on device."""
+        src = self.stages[edge.spec.src]
+        dst = self.stages[edge.spec.dst]
+        if edge.relabel_dev is None:
+            edge.relabel_dev = jnp.asarray(edge.relabel)
         base = dst.window_base
         rows = src.compiled.handoff_rows(
-            src.carry, slot, src.relabel_dev, last - base, n_windows,
+            src.carry, slot, edge.relabel_dev, last - base, n_windows,
             src.plan.emit.aggregation,
             dst.per_worker * self.prog.n_workers)
         bound = dst.tracker.min_admissible() - base
         bound = max(min(bound, 2 ** 31 - 1), -(2 ** 31))
-        dst.carry, stats = self.pool.submit(dst.compiled.step, rows,
-                                            dst.carry, bound)
+        step_fn = dst.plan.sides[edge.spec.dst_side].compiled.step
+        dst.carry, stats = self.pool.submit(step_fn, rows, dst.carry, bound)
         late, expanded, dropped = (int(x) for x in np.asarray(stats))
         dst.tracker.note_late(late)
         report.records_expanded += expanded
         report.capacity_dropped += dropped
 
-    def _feed(self, si: int, records: list, report: StreamReport) -> None:
-        """Host boundary: one finalized window's records, materialized and
-        fed through stage ``si``'s ordinary ingestion (its inter-stage maps
-        and ``key_by`` apply here)."""
-        recs = self._stage_recs(si, records, report, count_in=False)
+    def _feed(self, edge: _EdgeState, records: list,
+              report: StreamReport) -> None:
+        """Host edge: one finalized window's records, materialized and fed
+        through the destination's ordinary ingestion (its inter-stage maps
+        and ``key_by`` apply here), side-tagged for a join destination."""
+        si, side = edge.spec.dst, edge.spec.dst_side
+        recs = self._stage_recs(si, [(r[0], r[1], r[2], side)
+                                     for r in records],
+                                report, count_in=False)
         if not recs:
             return
         if self.prog.fanout == "device":
-            self._ingest_device(si, recs, report)
+            self._ingest_device(si, recs, report, via=edge)
         else:
-            self._ingest_host(si, recs, report)
+            self._ingest_host(si, recs, report, via=edge)
 
-    def _finalize_ripe(self, report: StreamReport, si: int = 0) -> None:
-        """Emit (final stage) or hand off (intermediate stage) every window
-        the stage's watermark has passed, then cascade: the handed-off
-        window starts advance the next stage's watermark, which may ripen
-        *its* windows, and so on down the chain."""
+    def _observe(self, si: int) -> None:
+        """Advance stage ``si``'s watermark to the minimum over its input
+        channels — the external stream's observed event time (roots) and
+        each in-edge's feed watermark.  A join over a lagging input holds
+        its windows open until *every* channel has passed them; a root's
+        external channel counts from the start (at -inf until its first
+        batch lands), so a carry feed racing ahead of a not-yet-ingested
+        external side cannot close its windows early."""
+        cands = [e.fed for e in self._in.get(si, ())]
+        if si in self._roots:
+            cands.append(self._ext_wm.get(si, _NEG_INF))
+        if cands:
+            self.stages[si].tracker.observe(min(cands))
+
+    def _observe_floor(self, si: int, seen: float,
+                       via: "_EdgeState | None") -> None:
+        """The mid-batch ring-full recovery's watermark advance: the
+        *active* input channel (the external stream, or the in-edge
+        ``via`` currently feeding) stands at ``seen``, but every OTHER
+        input channel still caps the watermark at its feed position — a
+        multi-input stage (a join over a lagging side) frees slots only
+        past windows every input has passed, so the recovery can never
+        close a window a lagging channel could still feed.  If nothing
+        frees, the retry's second failure raises the genuine capacity
+        error instead of silently dropping a side."""
+        cands = [seen]
+        for e in self._in.get(si, ()):
+            if e is not via:
+                cands.append(e.fed)
+        if via is not None and si in self._roots:
+            cands.append(self._ext_wm.get(si, _NEG_INF))
+        self.stages[si].tracker.observe(min(cands))
+
+    def _finalize_stage(self, si: int, report: StreamReport) -> set[int]:
+        """Emit (terminal stage) or hand off (one delivery per out-edge)
+        every window stage ``si``'s watermark has passed; returns the
+        destination stages fed."""
         stage = self.stages[si]
-        last_stage = si == len(self.stages) - 1
+        out = self._out.get(si, ())
         if stage.plan.is_session:
             for session in stage.tracker.ripe():
                 self._emit_session(si, session, report)
                 report.windows_emitted += 1
-            return      # sessions run in the final position only
-        fed = _NEG_INF
+            return set()    # sessions run in single-stage pipelines only
+        fed: set[int] = set()
         for window_index, slot in stage.tracker.ripe():
-            if last_stage:
+            if not out:
                 self._emit_window(si, window_index, slot, report)
                 report.windows_emitted += 1
                 continue
             window = stage.assigner.window(window_index)
-            if stage.plan.handoff_device:
-                self._handoff_device(si, slot, window.start, report)
-            else:
-                self._feed(si + 1,
-                           [(window.start, key, value)
-                            for key, value in self._window_records(si, slot)],
-                           report)
-            report.handoffs += 1
+            host_records = None
+            for edge in out:
+                if edge.spec.device:
+                    self._handoff_device(edge, slot, window.start, report)
+                else:
+                    if host_records is None:    # materialize at most once
+                        host_records = self._window_records(si, slot)
+                    self._feed(edge, [(window.start, key, value)
+                                      for key, value in host_records],
+                               report)
+                edge.fed = max(edge.fed, window.start)
+                fed.add(edge.spec.dst)
+                report.handoffs += 1
             stage.carry = stage.compiled.clear_slot(stage.carry, slot)
             stage.tracker.release(window_index)
-            fed = max(fed, window.start)
-        if not last_stage and fed > _NEG_INF:
-            self.stages[si + 1].tracker.observe(fed)
-            self._finalize_ripe(report, si + 1)
+        if out and stage.tracker.watermark == float("inf"):
+            # end-of-stream: no further window can ever be fed over these
+            # edges, so successors may close everything they hold
+            for edge in out:
+                edge.fed = float("inf")
+                fed.add(edge.spec.dst)
+        return fed
+
+    def _finalize_ripe(self, report: StreamReport, si: int = 0) -> None:
+        """Finalize every ripe window of stage ``si`` and cascade the
+        handoffs through the DAG in one forward sweep: stages are stored
+        in topological order and every edge points forward, so by the time
+        the sweep reaches a stage, *all* of this round's feeds into it —
+        including both sides of a downstream join — have landed."""
+        self._finalize_sweep(report, {si})
+
+    def _finalize_sweep(self, report: StreamReport,
+                        touched: set[int]) -> None:
+        for si in range(len(self.stages)):
+            if si not in touched:
+                continue
+            for dst in self._finalize_stage(si, report):
+                self._observe(dst)
+                touched.add(dst)
 
     # -- checkpoint / restore --------------------------------------------------
     def _save_state(self) -> None:
         """Persist the full streaming state at a batch boundary: every
-        stage's carry — one pytree — to the object store, trackers + key
-        dictionaries + the consumed *record* offset to the metadata store.
-        Record addressing (not batch indices) keeps resume correct when the
-        log grows past a previously-partial final batch.  A restarted
-        coordinator re-folds at most the batches since the last checkpoint;
-        window emissions are idempotent (same carries → same bytes),
-        replayed handoffs re-fold into carries that predate them, and
-        replayed writes of already-persisted windows are skipped
-        (``_put_window``), keeping restart effectively exactly-once."""
+        stage's carry — branches included, one pytree — to the object
+        store, trackers + key dictionaries + per-edge feed watermarks +
+        the consumed *record* offset to the metadata store.  Record
+        addressing (not batch indices) keeps resume correct when the log
+        grows past a previously-partial final batch.  A restarted
+        coordinator re-folds at most the batches since the last
+        checkpoint; window emissions are idempotent (same carries → same
+        bytes), replayed handoffs re-fold into carries that predate them,
+        and replayed writes of already-persisted windows are skipped
+        (``_put_window``), keeping restart effectively exactly-once on
+        every branch."""
         carries = tuple(st.carry for st in self.stages)
         leaves = [np.asarray(leaf)
                   for leaf in jax.tree_util.tree_leaves(carries)]
@@ -827,6 +931,7 @@ class StreamingCoordinator:
         self.meta.set(_state_key(self.prog.job_id), {
             "offset": self._records_consumed,
             "carry_shapes": [list(leaf.shape) for leaf in leaves],
+            "edge_fed": [e.fed for e in self.edges],
             "stages": [{
                 "tracker": st.tracker.state_dict(),
                 "tables": [t.state_dict()
@@ -836,13 +941,14 @@ class StreamingCoordinator:
 
     def _restore_state(self) -> int:
         """Load a prior run's checkpoint; returns the record offset to
-        resume from (0 when starting fresh).  Also consults the output
-        prefix for windows the prior run already persisted, so the replay
-        of the uncheckpointed tail does not re-write them — including a
-        crash before the *first* checkpoint, where the whole log replays."""
-        out_prefix = (f"{self.prog.output_prefix.rstrip('/')}/"
-                      f"{self.prog.job_id}/")
-        self._persisted = {m.key for m in self.store.list_objects(out_prefix)}
+        resume from (0 when starting fresh).  Also consults every terminal
+        stage's output prefix for windows the prior run already persisted,
+        so the replay of the uncheckpointed tail does not re-write them —
+        including a crash before the *first* checkpoint, where the whole
+        log replays."""
+        self._persisted = {
+            m.key for out_prefix in self.prog.output_prefixes()
+            for m in self.store.list_objects(out_prefix)}
         state = self.meta.get(_state_key(self.prog.job_id))
         if state is None:
             self._records_consumed = 0
@@ -877,17 +983,20 @@ class StreamingCoordinator:
             for table, tdict in zip(self._unique_tables(st),
                                     sdict["tables"]):
                 table.load_state_dict(tdict)
-        # rebuild the device-handoff relabel tables from the restored
+        # rebuild every edge's relabel table from the restored
         # dictionaries (eager registration means every label already has a
-        # next-stage id — nothing is created here)
-        for si in range(len(self.stages) - 1):
-            st = self.stages[si]
-            if st.relabel is None:
+        # destination id — nothing is created here) and restore the feed
+        # watermarks driving min-over-inputs observation
+        for e, fed in zip(self.edges,
+                          state.get("edge_fed", [_NEG_INF] * len(self.edges))):
+            e.fed = float(fed)
+            if e.relabel is None:
                 continue
-            nxt = self.stages[si + 1].tables[0]
-            for kid, key in enumerate(st.tables[0].dense_keys):
-                st.relabel[kid] = nxt.key_id(str(key))
-            st.relabel_dev = None
+            src_table = self.stages[e.spec.src].tables[0]
+            dst_table = self.stages[e.spec.dst].tables[e.spec.dst_side]
+            for kid, key in enumerate(src_table.dense_keys):
+                e.relabel[kid] = dst_table.key_id(str(key))
+            e.relabel_dev = None
         self._records_consumed = int(state["offset"])
         return self._records_consumed
 
@@ -921,7 +1030,8 @@ class StreamingCoordinator:
             n += 1
         return n
 
-    def _ingest_device(self, si: int, recs, report: StreamReport) -> None:
+    def _ingest_device(self, si: int, recs, report: StreamReport,
+                       via: "_EdgeState | None" = None) -> None:
         """Device fan-out ingestion: one 5-column row per record; window
         *indices* are assigned host-side in float64 (bit-identical to the
         host-fan-out assigner) but the event × window expansion happens
@@ -981,11 +1091,12 @@ class StreamingCoordinator:
             # folds the staged rows, and finalizes before retrying — see
             # _admit_span for the protocol
             self._admit_span(si, int(first[i]), int(last[i]), seen, ship,
-                             fold_staged, report, side, kid, value)
+                             fold_staged, report, side, kid, value, via=via)
         for s in range(n_sides):
             self._fold_device(si, rows[s], report, s)
 
-    def _ingest_host(self, si: int, recs, report: StreamReport) -> None:
+    def _ingest_host(self, si: int, recs, report: StreamReport,
+                     via: "_EdgeState | None" = None) -> None:
         """Legacy host fan-out: expand every record into one row per
         containing window on the host (numpy), the PR 1 baseline the
         device path is benchmarked against.  Host-dropped pairs are
@@ -1007,7 +1118,7 @@ class StreamingCoordinator:
                         report.records_expanded += n
                         rows = np.zeros_like(rows)
                         n = 0
-                    stage.tracker.observe(seen)
+                    self._observe_floor(si, seen, via)
                     self._finalize_ripe(report, si)
                     slot = stage.tracker.slot_for(widx)
                 if slot is None:        # late: window already emitted
@@ -1086,11 +1197,13 @@ class StreamingCoordinator:
 
     def process_batch(self, batch: MicroBatch,
                       report: StreamReport) -> None:
-        """One micro-batch round: admit → fold (device) → watermark →
-        finalize, cascading finalized windows into any continued stages.
-        Normally one fused collective per batch per side; a batch that
-        spans more windows than the ring holds (low event rate relative to
-        batch size) folds and finalizes mid-batch instead of aborting."""
+        """One micro-batch round: route each record to its external
+        input's root stage, admit → fold (device) → watermark → finalize,
+        cascading finalized windows through the DAG in one topological
+        sweep.  Normally one fused collective per batch per side; a batch
+        that spans more windows than the ring holds (low event rate
+        relative to batch size) folds and finalizes mid-batch instead of
+        aborting."""
         prog = self.prog
         if len(batch.records) > prog.batch_records:
             raise ValueError(
@@ -1103,17 +1216,35 @@ class StreamingCoordinator:
                       timeout=0.01, max_records=1)
         self._autoscale(report)
         late_before = self._late_dropped()
-        stage0 = self.stages[0]
-        recs = self._stage_recs(0, batch.records, report, count_in=True)
-        if recs:
-            if stage0.plan.is_session:
-                self._ingest_session(0, recs, report)
+        if len(prog.inputs) == 1:
+            # single-input fast path: no per-record re-tagging on the hot
+            # path (the input necessarily lands at stage 0, side 0)
+            groups: dict[int, list] = {0: batch.records}
+        else:
+            groups = {}
+            for rec in batch.records:
+                tag = int(rec[3]) if len(rec) > 3 else 0
+                si, side = prog.inputs[tag]
+                groups.setdefault(si, []).append(
+                    (rec[0], rec[1], rec[2], side))
+        for si in sorted(groups):
+            recs = self._stage_recs(si, groups[si], report, count_in=True)
+            if not recs:
+                continue
+            stage = self.stages[si]
+            if stage.plan.is_session:
+                self._ingest_session(si, recs, report)
             elif prog.fanout == "device":
-                self._ingest_device(0, recs, report)
+                self._ingest_device(si, recs, report)
             else:
-                self._ingest_host(0, recs, report)
-        stage0.tracker.observe(batch.max_event_time)
-        self._finalize_ripe(report, 0)
+                self._ingest_host(si, recs, report)
+        # every root shares the merged stream's event-time watermark (a
+        # multi-root join consumes one merged, side-tagged source)
+        for si in self._roots:
+            self._ext_wm[si] = max(self._ext_wm.get(si, _NEG_INF),
+                                   batch.max_event_time)
+            self._observe(si)
+        self._finalize_sweep(report, set(self._roots))
         report.late_dropped += self._late_dropped() - late_before
         report.hash_collisions = self._total_collisions()
         report.batches += 1
@@ -1144,10 +1275,14 @@ class StreamingCoordinator:
                 # checkpoint BEFORE the artificial end-of-stream watermark:
                 # a later run over a grown log must resume with the real
                 # watermark, not +inf (which would drop every new event as
-                # late); flushed windows then re-finalize idempotently
+                # late); flushed windows then re-finalize idempotently.
+                # The stages flush in topological order, so by a stage's
+                # turn every upstream feed (on every in-edge) has landed
                 if report.batches and self.prog.checkpoint_interval:
                     self._save_state()
                 for si in range(len(self.stages)):
+                    if si in self._roots:
+                        self._ext_wm[si] = float("inf")
                     self.stages[si].tracker.observe(float("inf"))
                     self._finalize_ripe(report, si)
         except Exception as exc:

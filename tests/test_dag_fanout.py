@@ -1,0 +1,486 @@
+"""DAG fan-out: one stage feeding several downstream stages.
+
+Covers the tee grammar (``Pipeline.tee`` + ``Pipeline.branch``), per-edge
+handoff transports (device vs host on sibling edges of one teed stage),
+batch ↔ streaming bit-identity on every branch, exactly-once crash/restore
+across the fan-out, the property that a mid-stream restore rebuilds every
+edge's bucket → next-key table bit-identically to an uninterrupted run,
+joins over multi-stage inputs, and stage-local build options
+(``reduce(..., num_buckets=, n_slots=)``) resolved per ``StagePlan``.
+"""
+
+import json
+from collections import Counter, defaultdict
+from functools import lru_cache
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                 # hermetic container
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import MemoryStore, MetadataStore
+from repro.pipeline import Pipeline, PipelineError, Windowing
+from repro.streaming import StreamSource, StreamingCoordinator
+
+W = 4
+_PROPERTY_SETTINGS = settings(max_examples=5, deadline=None)
+
+
+def _events(n=1500, n_keys=6, span=200.0, seed=0, vmax=9):
+    rng = np.random.default_rng(seed)
+    ts = np.sort(rng.uniform(0, span, n))
+    keys = rng.integers(0, n_keys, n)
+    vals = rng.integers(0, vmax, n).astype(float)   # ints exact in fp32
+    return [(float(t), f"k{k}", float(v)) for t, k, v in zip(ts, keys, vals)]
+
+
+def _outputs(built, store):
+    """Every terminal branch's emitted windows, keyed by object key."""
+    return built.collect_outputs(store)
+
+
+def _streamed(built, store):
+    built.run_streaming(store, MetadataStore())
+    return _outputs(built, store)
+
+
+def _decoded(outputs):
+    return {k.rsplit("/", 1)[1] + "@" + k.split("/", 1)[0]:
+            [json.loads(ln) for ln in v.splitlines()]
+            for k, v in outputs.items()}
+
+
+def _region(rec):
+    ts, key, value = rec
+    return ts, ("even" if int(key[1:]) % 2 == 0 else "odd"), value
+
+
+def _tee_pipeline(events, *, batch_records=150):
+    """The acceptance graph: per-key counts per 10 s, teed into a top-k
+    branch (identity boundary → device edge) and a per-region rollup
+    branch (host transform → host edge)."""
+    base = (Pipeline.from_source(records=events, batch_records=batch_records)
+            .key_by().window(Windowing.tumbling(10.0)).reduce("count"))
+    return base.tee(
+        Pipeline.branch().window(Windowing.tumbling(50.0)).reduce("sum")
+                .top_k(3).sink("fan-top/"),
+        Pipeline.branch().map(_region).key_by()
+                .window(Windowing.tumbling(50.0)).reduce("sum")
+                .sink("fan-region/"))
+
+
+# ---------------------------------------------------------------------------
+# Tee: parity, per-edge transports, oracles
+# ---------------------------------------------------------------------------
+
+def test_tee_two_branch_parity_and_oracle():
+    """The acceptance criterion: a tee'd two-branch pipeline (shared
+    upstream reduce → top-k branch + rollup branch) produces bit-identical
+    window bytes in batch and streaming modes, and each branch matches a
+    host oracle."""
+    events = _events(n=2000, seed=31)
+    built = _tee_pipeline(events).build(num_buckets=12, n_workers=W,
+                                        job_id="fan")
+    assert len(built.stages) == 3 and built.final_stages == (1, 2)
+    streamed = _streamed(built, MemoryStore())
+    batched, report = built.run_batch(MemoryStore())
+    assert streamed and streamed == batched         # byte for byte, both sinks
+    assert report.error is None and report.handoffs > 0
+    assert {k.split("/", 1)[0] for k in streamed} == {"fan-top", "fan-region"}
+
+    counts = defaultdict(Counter)                   # host oracle per branch
+    for ts, k, _v in events:
+        counts[int(ts // 50.0)][k] += 1
+    got = _decoded(streamed)
+    for widx, per_key in counts.items():
+        name = f"window-{widx * 50.0:.3f}-{(widx + 1) * 50.0:.3f}"
+        top = got[name + "@fan-top"]
+        full_sort = sorted(per_key.values(), reverse=True)
+        assert [v for _k, v in top] == full_sort[:3]
+        for key, v in top:
+            assert per_key[key] == v
+        region = dict(got[name + "@fan-region"])
+        want = Counter()
+        for k, c in per_key.items():
+            want["even" if int(k[1:]) % 2 == 0 else "odd"] += c
+        assert region == dict(want)
+
+
+def test_tee_edges_pick_their_own_transport():
+    """Sibling edges of one teed stage choose transports independently —
+    the identity branch hands off on device while the mapped branch takes
+    the host record path — and forcing everything onto the host produces
+    byte-identical windows (the device op is an optimization, not a
+    semantics change)."""
+    events = _events(n=1200, seed=32)
+    pipe = _tee_pipeline(events)
+    dev = pipe.build(num_buckets=12, n_workers=W, job_id="fan-t")
+    transports = {(e.dst_side, e.dst): (e.device, e.eager) for e in dev.edges}
+    assert len(dev.edges) == 2
+    assert transports[(0, 1)] == (True, True)       # identity → device, eager
+    assert transports[(0, 2)] == (False, False)     # mapped → host
+    assert not dev.stages[0].handoff_device         # mixed edges: stage view
+    host = pipe.build(num_buckets=12, n_workers=W, job_id="fan-t",
+                      handoff="host")
+    assert not any(e.device for e in host.edges)
+    out_dev, _ = dev.run_batch(MemoryStore())
+    out_host, _ = host.run_batch(MemoryStore())
+    assert out_dev and out_dev == out_host
+
+
+def test_tee_hashed_key_space_falls_back_to_host_edges():
+    """Open (hashed) key domains cannot relabel densely on device, so
+    every tee edge takes the host record path (handed-off labels may be
+    collision-merged bucket names) — and both modes still agree byte for
+    byte on both branches."""
+    events = _events(n=800, seed=35)
+    base = (Pipeline.from_source(records=events, batch_records=150)
+            .key_by().window(Windowing.tumbling(10.0)).reduce("count"))
+    built = base.tee(
+        Pipeline.branch().window(Windowing.tumbling(50.0)).reduce("sum")
+                .top_k(3).sink("fanh-top/"),
+        Pipeline.branch().window(Windowing.tumbling(100.0)).reduce("sum")
+                .sink("fanh-roll/"),
+    ).build(num_buckets=16, n_workers=W, key_space="hashed", job_id="fan-h")
+    assert not any(e.device for e in built.edges)
+    streamed = _streamed(built, MemoryStore())
+    batched, _ = built.run_batch(MemoryStore())
+    assert streamed and streamed == batched
+
+
+def test_nested_tee_three_sinks():
+    """A branch may tee again: the DAG nests, every terminal sink stays
+    distinct, and both modes agree on all three output streams."""
+    events = _events(n=1000, seed=33)
+    base = (Pipeline.from_source(records=events, batch_records=200)
+            .key_by().window(Windowing.tumbling(10.0)).reduce("count"))
+    inner = (Pipeline.branch().window(Windowing.tumbling(40.0)).reduce("sum")
+             .tee(Pipeline.branch().window(Windowing.tumbling(200.0))
+                  .reduce("sum").sink("nest-a/"),
+                  Pipeline.branch().window(Windowing.tumbling(200.0))
+                  .reduce("mean").sink("nest-b/")))
+    built = base.tee(
+        inner,
+        Pipeline.branch().window(Windowing.tumbling(40.0)).reduce("sum")
+                .top_k(2).sink("nest-c/"),
+    ).build(num_buckets=8, n_workers=W, job_id="nest")
+    assert len(built.stages) == 5 and len(built.final_stages) == 3
+    streamed = _streamed(built, MemoryStore())
+    batched, _ = built.run_batch(MemoryStore())
+    assert streamed and streamed == batched
+    assert {k.split("/", 1)[0] for k in streamed} == \
+        {"nest-a", "nest-b", "nest-c"}
+
+
+# ---------------------------------------------------------------------------
+# Crash / restore across the fan-out
+# ---------------------------------------------------------------------------
+
+class CountingStore(MemoryStore):
+    def __init__(self):
+        super().__init__()
+        self.put_counts = Counter()
+
+    def put(self, key, data):
+        self.put_counts[key] += 1
+        return super().put(key, data)
+
+
+def test_tee_crash_restore_no_lost_or_duplicate_windows():
+    """A mid-stream crash + restore of a tee'd graph: the resumed run
+    reproduces the uninterrupted run byte for byte on *both* branches,
+    every window object is written exactly once across the crash, and
+    none are lost — the checkpoint snapshots every stage's carry (branches
+    included) as one pytree plus every edge's key table."""
+    events = _events(n=1600, n_keys=5, span=320.0, seed=34)
+
+    def build():
+        return _tee_pipeline(events, batch_records=100).build(
+            num_buckets=12, n_workers=W, checkpoint_interval=4,
+            job_id="fan-res")
+
+    ref = _streamed(build(), MemoryStore())
+    store, meta = CountingStore(), MetadataStore()
+    build().run_streaming(
+        store, meta, flush=False,
+        source=StreamSource.from_records(events[:900], batch_records=100))
+    assert set(store.put_counts) & set(ref)         # windows landed pre-crash
+    report = build().run_streaming(store, meta)
+    assert report.error is None
+    built = build()
+    got = _outputs(built, store)
+    assert got == ref                               # no lost windows
+    for key in ref:
+        assert store.put_counts[key] == 1, key      # no duplicates either
+
+
+@lru_cache(maxsize=1)
+def _property_program():
+    """One compiled tee'd program reused across property examples (the
+    coordinator owns all run state; the program is immutable)."""
+    return _tee_pipeline([], batch_records=64).build(
+        num_buckets=16, n_workers=W, checkpoint_interval=3, job_id="fan-pt")
+
+
+def _drive(built, events, crash_at=None):
+    """Run the program over ``events``; with ``crash_at`` set, crash after
+    that many records and resume a fresh coordinator over the same store +
+    metadata.  Returns the final coordinator (tables, edges, outputs)."""
+    store, meta = MemoryStore(), MetadataStore()
+    if crash_at is not None:
+        dead = StreamingCoordinator(store, meta, program=built)
+        dead.run_stream(StreamSource.from_records(events[:crash_at],
+                                                  batch_records=64),
+                        announce=False, flush=False)
+    coord = StreamingCoordinator(store, meta, program=built)
+    coord.run_stream(StreamSource.from_records(events, batch_records=64),
+                     announce=False, flush=True)
+    return coord, _outputs(built, store)
+
+
+@_PROPERTY_SETTINGS
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.05, 0.95),
+       st.integers(2, 12))
+def test_edge_key_tables_rebuild_bit_identically_after_restore(
+        seed, crash_frac, n_keys):
+    """Property: for any stream and any crash point, a mid-stream restore
+    rebuilds every stage's key dictionary and every edge's bucket →
+    next-key relabel table bit-identically to an uninterrupted run — and
+    the emitted windows match byte for byte.  New keys keep arriving after
+    the crash, so the tables must keep growing in the same first-seen
+    order across the restore."""
+    events = _events(n=700, n_keys=n_keys, span=280.0, seed=seed % 10_000)
+    built = _property_program()
+    crash_at = max(64, int(len(events) * crash_frac))
+    plain, out_plain = _drive(built, events)
+    crashed, out_crashed = _drive(built, events, crash_at=crash_at)
+    assert out_plain and out_crashed == out_plain
+    for st_a, st_b in zip(plain.stages, crashed.stages):
+        dicts_a = [t.state_dict() for t in st_a.tables]
+        dicts_b = [t.state_dict() for t in st_b.tables]
+        assert dicts_a == dicts_b
+    assert len(plain.edges) == len(crashed.edges) == 2
+    for e_a, e_b in zip(plain.edges, crashed.edges):
+        assert (e_a.relabel is None) == (e_b.relabel is None)
+        if e_a.relabel is not None:
+            assert np.array_equal(e_a.relabel, e_b.relabel), \
+                (e_a.relabel, e_b.relabel)
+
+
+@pytest.mark.slow
+def test_tee_shard_map_matches_vmap():
+    """The fan-out keeps the flat global wire under shard_map: a tee'd
+    graph over a real mesh axis — with a mid-stream crash/restore — must
+    emit byte-identical windows to the vmap drive on both sinks."""
+    import os
+    import subprocess
+    import sys
+    code = """
+import jax, numpy as np
+from repro.core import MemoryStore, MetadataStore
+from repro.pipeline import Pipeline, Windowing
+from repro.streaming import StreamSource, write_event_log
+mesh = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("workers",))
+events = [(float(t), f"k{t % 7}", float(t % 5)) for t in range(800)]
+def build(backend, m):
+    base = (Pipeline.from_source(prefix="streams/ev", batch_records=100)
+            .key_by().window(Windowing.tumbling(20.0)).reduce("count"))
+    return base.tee(
+        Pipeline.branch().window(Windowing.tumbling(100.0)).reduce("sum")
+                .top_k(3).sink("smt-top/"),
+        Pipeline.branch().map(lambda r: (r[0], r[1].upper(), r[2])).key_by()
+                .window(Windowing.tumbling(100.0)).reduce("sum")
+                .sink("smt-roll/"),
+    ).build(num_buckets=28, n_workers=4, job_id="smt",
+            backend=backend, mesh=m, checkpoint_interval=3)
+outs = {}
+for backend, m in (("vmap", None), ("shard_map", mesh)):
+    store, meta = MemoryStore(), MetadataStore()
+    write_event_log(store, "streams/ev", events)
+    built = build(backend, m)
+    if backend == "shard_map":
+        built.run_streaming(store, meta, flush=False,
+                            source=StreamSource.from_records(
+                                events[:400], batch_records=100))
+    rep = built.run_streaming(store, meta)
+    assert rep.error is None
+    outs[backend] = built.collect_outputs(store)
+assert outs["vmap"] and outs["vmap"] == outs["shard_map"]
+print("OK")
+"""
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": "src"}
+    proc = subprocess.run([sys.executable, "-c", code],
+                          cwd=os.path.dirname(os.path.dirname(__file__)),
+                          env={**os.environ, **env},
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Joins over multi-stage inputs
+# ---------------------------------------------------------------------------
+
+def _two_phase(records, w1, w2, agg1, agg2, batch_records=100):
+    return (Pipeline.from_source(records=records,
+                                 batch_records=batch_records)
+            .key_by().window(Windowing.tumbling(w1)).reduce(agg1)
+            .window(Windowing.tumbling(w2)).reduce(agg2))
+
+
+def test_join_over_two_multistage_inputs():
+    """A downstream join over two multi-stage inputs: each side's upstream
+    stage feeds the join through its own carry-handoff edge, both modes
+    agree byte for byte, and the joined content matches a host oracle."""
+    left_ev = _events(n=900, seed=41)
+    right_ev = _events(n=700, seed=42)
+    left = _two_phase(left_ev, 5.0, 25.0, "count", "sum")
+    right = _two_phase(right_ev, 5.0, 25.0, "sum", "sum")
+    built = left.join(right).build(num_buckets=12, n_workers=W,
+                                   job_id="msj")
+    assert len(built.stages) == 3 and built.stages[2].is_join
+    assert {(e.src, e.dst, e.dst_side) for e in built.edges} == \
+        {(0, 2, 0), (1, 2, 1)}
+    assert built.inputs == ((0, 0), (1, 0))
+    streamed = _streamed(built, MemoryStore())
+    batched, _ = built.run_batch(MemoryStore())
+    assert streamed and streamed == batched
+
+    def rollup(events, agg1):
+        fine = defaultdict(Counter)
+        for ts, k, v in events:
+            fine[int(ts // 5.0)][k] += 1 if agg1 == "count" else v
+        coarse = defaultdict(Counter)
+        for idx, per_key in fine.items():
+            for k, x in per_key.items():
+                coarse[int(idx * 5.0 // 25.0)][k] += x
+        return coarse
+
+    lo, ro = rollup(left_ev, "count"), rollup(right_ev, "sum")
+    got = {k.rsplit("/", 1)[1]: [json.loads(ln) for ln in v.splitlines()]
+           for k, v in streamed.items()}
+    for widx in lo:
+        rows = dict(got[f"window-{widx * 25.0:.3f}-{(widx + 1) * 25.0:.3f}"])
+        want = {k: [float(lo[widx][k]), float(ro[widx][k])]
+                for k in lo[widx] if k in ro[widx]}
+        assert rows == pytest.approx(want)
+
+
+def test_join_mixed_single_and_multistage_side():
+    """One single-stage side (raw external events) joined against a
+    multi-stage side (carry-fed): the join's watermark advances to the
+    minimum over its input channels, so neither a lagging carry nor a
+    lagging external stream loses windows — asserted via batch parity."""
+    left_ev = _events(n=800, seed=43)
+    right_ev = _events(n=600, seed=44)
+    left = (Pipeline.from_source(records=left_ev, batch_records=100)
+            .key_by().window(Windowing.tumbling(25.0)).reduce("sum"))
+    right = _two_phase(right_ev, 5.0, 25.0, "count", "sum")
+    built = left.join(right).build(num_buckets=12, n_workers=W,
+                                   job_id="mixj")
+    assert len(built.stages) == 2
+    assert built.inputs == ((1, 0), (0, 0))         # left lands in the join
+    streamed = _streamed(built, MemoryStore())
+    batched, _ = built.run_batch(MemoryStore())
+    assert streamed and streamed == batched
+
+
+# ---------------------------------------------------------------------------
+# Stage-local build options
+# ---------------------------------------------------------------------------
+
+def test_per_stage_build_options_resolved_per_stageplan():
+    """reduce(..., num_buckets=, n_slots=) overrides the build-wide
+    defaults for that stage only — and since dense labels don't depend on
+    the bucket width, the emitted bytes match the all-default build."""
+    events = _events(n=1000, seed=51)
+    p = (Pipeline.from_source(records=events, batch_records=200)
+         .key_by().window(Windowing.tumbling(10.0))
+         .reduce("count", num_buckets=32, n_slots=12)
+         .window(Windowing.tumbling(40.0))
+         .reduce("sum", num_buckets=8, n_slots=4))
+    built = p.build(num_buckets=16, n_workers=W, n_slots=8, job_id="opts")
+    assert [s.num_buckets for s in built.stages] == [32, 8]
+    assert [s.n_slots for s in built.stages] == [12, 4]
+    assert built.stages[0].handoff_device           # still an identity edge
+    streamed = _streamed(built, MemoryStore())
+    batched, _ = built.run_batch(MemoryStore())
+    assert streamed and streamed == batched
+    default = p.build(num_buckets=16, n_workers=W, n_slots=8,
+                      job_id="opts")                # same job id: same keys
+    base_out, _ = default.run_batch(MemoryStore())
+    # stage-local sizing is an execution detail, not a semantics change
+    assert {k.rsplit("/", 1)[1] for k in batched} == \
+        {k.rsplit("/", 1)[1] for k in base_out}
+    assert sorted(batched.values()) == sorted(base_out.values())
+
+
+def test_per_stage_options_validated_at_lower_time():
+    events = [(0.0, "a", 1.0)]
+    base = Pipeline.from_source(records=events).key_by()
+    with pytest.raises(PipelineError, match="divide by n_workers"):
+        (base.window(10.0).reduce("sum", num_buckets=6)
+         ).build(num_buckets=16, n_workers=W)
+    with pytest.raises(PipelineError, match="cannot hold the window span"):
+        (base.window(Windowing.sliding(40.0, 10.0))
+         .reduce("sum", n_slots=3)).build(num_buckets=16, n_workers=W)
+    with pytest.raises(PipelineError, match="window slots"):
+        (base.window(10.0).reduce("sum", n_slots=1)
+         ).build(num_buckets=16, n_workers=W)
+    right = (Pipeline.from_source(records=events).window(10.0)
+             .reduce("sum"))
+    with pytest.raises(PipelineError, match="join's final stage"):
+        (base.window(10.0).reduce("sum", num_buckets=8).join(right)
+         ).build(num_buckets=16, n_workers=W)
+    with pytest.raises(PipelineError, match="build-wide options"):
+        (Pipeline.from_source(shards=np.zeros((W, 4, 3), np.float32))
+         .map(lambda s: (s[:, 0], s[:, 1], s[:, 2] > 0))
+         .reduce("sum", num_buckets=4)).build(num_buckets=16, n_workers=W)
+
+
+# ---------------------------------------------------------------------------
+# Graph validation
+# ---------------------------------------------------------------------------
+
+def test_tee_validation():
+    events = [(0.0, "a", 1.0)]
+    base = (Pipeline.from_source(records=events).key_by().window(10.0)
+            .reduce("count"))
+    def leaf(sink):
+        return Pipeline.branch().window(100.0).reduce("sum").sink(sink)
+    with pytest.raises(PipelineError, match="at least two branches"):
+        base.tee(leaf("a/"))
+    with pytest.raises(PipelineError, match="rooted at Pipeline.branch"):
+        base.tee(leaf("a/"),
+                 Pipeline.from_source(records=events).window(100.0)
+                 .reduce("sum"))
+    with pytest.raises(PipelineError, match="terminal node"):
+        base.tee(leaf("a/"), leaf("b/")).sink("c/").build(
+            num_buckets=8, n_workers=W)
+    with pytest.raises(PipelineError, match="its own .sink"):
+        base.tee(leaf("a/"),
+                 Pipeline.branch().window(100.0).reduce("sum")
+                 ).build(num_buckets=8, n_workers=W)
+    with pytest.raises(PipelineError, match="distinct prefixes"):
+        base.tee(leaf("a/"), leaf("a/")).build(num_buckets=8, n_workers=W)
+    with pytest.raises(PipelineError, match="distinct prefixes"):
+        # output keys drop the trailing slash, so these collide too
+        base.tee(leaf("a"), leaf("a/")).build(num_buckets=8, n_workers=W)
+    with pytest.raises(PipelineError, match="fans out a .reduced"):
+        (Pipeline.from_source(records=events).key_by().window(10.0)
+         .tee(leaf("a/"), leaf("b/"))).build(num_buckets=8, n_workers=W)
+    with pytest.raises(PipelineError, match="session"):
+        base.tee(leaf("a/"),
+                 Pipeline.branch().window(Windowing.session(5.0))
+                 .reduce("sum").sink("s/")
+                 ).build(num_buckets=8, n_workers=W)
+    right = (Pipeline.from_source(records=events).window(10.0)
+             .reduce("sum"))
+    with pytest.raises(PipelineError, match="tee and join"):
+        (Pipeline.from_source(records=events).key_by().window(10.0)
+         .reduce("sum").join(right).tee(leaf("a/"), leaf("b/"))
+         ).build(num_buckets=8, n_workers=W)

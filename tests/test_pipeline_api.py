@@ -614,12 +614,18 @@ def test_multistage_validation():
         (Pipeline.from_source(records=[(0.0, "a", 1.0)])
          .key_by().window(Windowing.session(5.0)).reduce("sum")
          .window(10.0).reduce("sum")).build(num_buckets=8, n_workers=W)
-    # joins stay single-stage
+    # a join may take multi-stage inputs, but the chain cannot continue
+    # past it (rank the join output in a downstream pipeline instead)
     right = (Pipeline.from_source(records=[(0.0, "a", 1.0)])
              .window(10.0).reduce("sum"))
-    with pytest.raises(PipelineError, match="join"):
-        (base.window(10.0).reduce("sum").join(right)
-         ).build(num_buckets=8, n_workers=W)
+    with pytest.raises(PipelineError, match="past a join"):
+        (base.window(10.0).reduce("sum").join(right).window(10.0)
+         .reduce("sum")).build(num_buckets=8, n_workers=W)
+    # a join over a multi-stage left side lowers (the lifted restriction)
+    built = (base.window(10.0).reduce("sum").join(right)
+             ).build(num_buckets=8, n_workers=W)
+    assert len(built.stages) == 2 and built.stages[1].is_join
+    assert built.edges and built.edges[0].dst_side == 0
     # an unfinished trailing stage is rejected with the grammar hint
     with pytest.raises(PipelineError, match="stage 2"):
         base.key_by().build(num_buckets=8, n_workers=W)
