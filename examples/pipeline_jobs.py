@@ -21,9 +21,9 @@ stays exercised by ``tests/test_coordinator_client.py``.)
 
 import json
 
-from repro.core import MemoryStore, MetadataStore
+from repro.core import MemoryStore
 from repro.data.pipeline import synth_corpus
-from repro.pipeline import Pipeline, Windowing
+from repro.pipeline import Pipeline, RunOptions, Windowing
 
 BUCKETS = 1024      # dense key-id space (vocab is 500 words + variants)
 WORKERS = 4
@@ -62,12 +62,13 @@ def main() -> None:
            .reduce("count")
            .top_k(8))
 
+    # one front door: records-bound graphs dispatch to a one-shot batch
     out1, rep1 = wordcount.build(num_buckets=BUCKETS, n_workers=WORKERS,
-                                 job_id="words").run_batch(MemoryStore())
+                                 job_id="words").run()
     out2, rep2 = letters.build(num_buckets=BUCKETS, n_workers=WORKERS,
-                               job_id="letters").run_batch(MemoryStore())
+                               job_id="letters").run()
     out3, _ = hot.build(num_buckets=BUCKETS, n_workers=WORKERS,
-                        job_id="hot").run_batch(MemoryStore())
+                        job_id="hot").run()
 
     def decode(outputs):
         (blob,) = outputs.values()
@@ -98,7 +99,7 @@ def main() -> None:
                  .top_k(5))                         # … and rank the counts
     built = two_phase.build(num_buckets=BUCKETS, n_workers=WORKERS,
                             job_id="two-phase")
-    out4, rep4 = built.run_batch(MemoryStore())
+    out4, rep4 = built.run()
     hot5 = decode(out4)
     print(f"job4 (two-phase chain, {len(built.stages)} stages, "
           f"{rep4.handoffs} carry handoffs): top-5 over minute-counts "
@@ -142,9 +143,10 @@ def main() -> None:
     built5 = fan.build(num_buckets=64, n_workers=WORKERS, job_id="gps-fan")
     transports = sorted(e.device for e in built5.edges)
     assert len(built5.stages) == 3 and transports == [False, True]
-    out5, rep5 = built5.run_batch(MemoryStore())
+    out5, rep5 = built5.run()
     stream_store = MemoryStore()
-    rep5s = built5.run_streaming(stream_store, MetadataStore())
+    rep5s = built5.run(store=stream_store, mode="streaming",
+                       options=RunOptions(overlap=True, prefetch_batches=2))
     streamed5 = built5.collect_outputs(stream_store)
     assert streamed5 and streamed5 == out5
     busy = {k: v for k, v in out5.items() if k.startswith("gps-busy/")}
@@ -158,8 +160,9 @@ def main() -> None:
           f"{first_busy} | region load {dict(first_region)}")
     print("tee'd branches: batch ↔ streaming bit-identical on both sinks ✓")
     print(f"[{rep1.batches + rep2.batches + rep4.batches + rep5.batches} "
-          f"batch drives + {rep5s.batches} streaming micro-batches; the "
-          f"same graphs run continuously via .run_streaming(...)]")
+          f"batch drives + {rep5s.batches} streaming micro-batches "
+          f"(close→emit p99 {rep5s.p99_emit_latency * 1e3:.2f} ms); one "
+          f"front door — .run(..., options=RunOptions(...)) — both modes]")
 
 
 if __name__ == "__main__":

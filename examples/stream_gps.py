@@ -21,9 +21,9 @@ from collections import defaultdict
 
 import numpy as np
 
-from repro.core import MemoryStore, MetadataStore
+from repro.core import MemoryStore
 from repro.core.events import EventBus, TOPIC_STREAM_WINDOW
-from repro.pipeline import Pipeline, Windowing
+from repro.pipeline import Pipeline, RunOptions, Windowing
 from repro.streaming import write_event_log
 
 REGIONS = ["north", "south", "east", "west", "centre", "port", "depot", "hub"]
@@ -64,23 +64,33 @@ def main() -> None:
     built = pipe.build(num_buckets=8, n_workers=4, allowed_lateness=5.0,
                       job_id="gps-fleet")
 
-    # 2a. streaming mode: continuous micro-batches, watermarks, scaling
+    # 2a. streaming mode through the one front door: the graph's bound
+    # source is a log prefix, so run() dispatches to the streaming
+    # coordinator — here with the pipelined scheduler's knobs spelled out
+    # (all on by default: prefetch + host-prepare the next micro-batch
+    # while the device folds this one, drain stats and sink writes at the
+    # batch barrier, donate the carry buffers)
     bus = EventBus()
-    report = built.run_streaming(store, MetadataStore(), bus=bus)
+    report = built.run(store=store, bus=bus,
+                       options=RunOptions(overlap=True, prefetch_batches=2,
+                                          sink_batching=True))
     print(f"stream {built.job_id}: {report.batches} micro-batches, "
           f"{report.records_in} records in {report.wall_time:.3f}s "
           f"({report.records_per_sec:,.0f} rec/s)")
     print(f"  windows emitted: {report.windows_emitted}, "
           f"late dropped: {report.late_dropped}, "
           f"mean batch latency: {report.mean_batch_latency * 1e3:.2f} ms")
+    print(f"  close→emit latency: p50 {report.p50_emit_latency * 1e3:.2f} ms, "
+          f"p99 {report.p99_emit_latency * 1e3:.2f} ms")
     print(f"  backpressure: max lag {report.max_lag}, "
           f"{report.scale_events} scale events")
 
     # 2b. batch mode: the SAME built pipeline, one drive over the prefix
+    # (mode= pins the dispatch; a log-bound graph would otherwise stream)
     batch_store = MemoryStore()
     for m in store.list_objects("streams/gps"):
         batch_store.put(m.key, store.get(m.key))
-    batch_out, _ = built.run_batch(batch_store)
+    batch_out, _ = built.run(store=batch_store, mode="batch")
     stream_out = {m.key: store.get(m.key)
                   for m in store.list_objects("stream-output/gps-fleet/")}
     assert stream_out and stream_out == batch_out
@@ -130,7 +140,7 @@ def main() -> None:
             .window(Windowing.session(gap=30.0))
             .reduce("mean"))
     outs, srep = sess.build(num_buckets=8, n_workers=4, n_slots=4,
-                            job_id="gps-trips").run_batch(store)
+                            job_id="gps-trips").run(store=store)
     print(f"  sessionized trips: {srep.windows_emitted} trips from "
           f"{len(trips)} pings across 6 vehicles "
           f"(e.g. {sorted(outs)[0].rsplit('/', 1)[1]})")

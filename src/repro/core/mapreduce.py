@@ -91,8 +91,9 @@ def mapreduce(map_fn: Callable, data, cfg: DeviceJobConfig, *,
     import warnings
     warnings.warn(
         "mapreduce() is a deprecated shim that lowers onto the Pipeline "
-        "layer; author the job as repro.pipeline.Pipeline.from_source("
-        "shards=...).map(map_fn).reduce(...) and run_batch(data=...) "
+        "layer and is scheduled for removal in PR 8; author the job as "
+        "repro.pipeline.Pipeline.from_source(shards=...).map(map_fn)"
+        ".reduce(...) and drive it with BuiltPipeline.run(data) "
         "instead", DeprecationWarning, stacklevel=2)
     from ..pipeline import Pipeline   # lazy: core is imported by pipeline
     p = Pipeline.from_source(shards=data).map(map_fn)

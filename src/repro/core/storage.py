@@ -63,6 +63,20 @@ class ObjectStore:
         raise NotImplementedError
 
     # -- conveniences shared by both backends ------------------------------
+    def put_many(self, items: "list[tuple[str, bytes]]") -> None:
+        """PUT several objects in one store round trip.
+
+        The streaming coordinator stages every window emitted during one
+        finalization sweep and writes the whole sweep through a single
+        ``put_many`` call instead of one PUT per window — against a real
+        object store that is one batched request (and one set of
+        request-level latencies) per sweep.  The default implementation
+        loops ``self.put`` so every backend — and every instrumented
+        subclass that hooks ``put`` — observes the same per-object writes.
+        """
+        for key, data in items:
+            self.put(key, data)
+
     def exists(self, key: str) -> bool:
         try:
             self.head(key)

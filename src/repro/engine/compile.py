@@ -54,13 +54,21 @@ def _vmap_axes(specs: Any, axis_name: str):
 
 def lower(body: Callable, *, axis_name: str, in_specs, out_specs,
           backend: str = "vmap", mesh: jax.sharding.Mesh | None = None,
-          jit: bool = True) -> Callable:
+          jit: bool = True,
+          donate_argnums: tuple[int, ...] | None = None) -> Callable:
     """Lower an SPMD stage body to an executable for ``backend``.
 
     ``in_specs`` is a tuple with one PartitionSpec per body argument (a spec
     applies uniformly to a pytree argument); ``out_specs`` mirrors the body's
     output structure.  ``backend="vmap"`` needs no mesh; ``"shard_map"``
     shards/replicates per the same specs over ``mesh``.
+
+    ``donate_argnums`` marks arguments whose buffers XLA may reuse for the
+    outputs (``jax.jit`` donation) — streaming steps donate the carry so a
+    long-lived fold updates one buffer in place instead of copying it every
+    micro-batch.  The caller must not read a donated argument after the
+    call; with ``jit=False`` donation is unavailable and silently skipped
+    (an un-jitted body cannot alias buffers anyway).
     """
     if backend == "vmap":
         fn = jax.vmap(body, in_axes=_vmap_axes(tuple(in_specs), axis_name),
@@ -72,4 +80,6 @@ def lower(body: Callable, *, axis_name: str, in_specs, out_specs,
         fn = make_shard_map(body, mesh, tuple(in_specs), out_specs)
     else:
         raise ValueError(f"unknown backend {backend!r}")
-    return jax.jit(fn) if jit else fn
+    if not jit:
+        return fn
+    return jax.jit(fn, donate_argnums=donate_argnums or ())

@@ -523,9 +523,12 @@ class CompiledStreamAggregate:
             body = partial(_stream_agg_host_body, plan=plan,
                            map_fn=map_fn or streaming_record_map)
             in_specs = (P(axis), P(axis))
-        self._step = lower(body, axis_name=axis, in_specs=in_specs,
-                           out_specs=(P(axis), P()), backend=backend,
-                           mesh=mesh, jit=jit)
+        self._lower_step = partial(lower, body, axis_name=axis,
+                                   in_specs=in_specs,
+                                   out_specs=(P(axis), P()), backend=backend,
+                                   mesh=mesh, jit=jit)
+        self._step = self._lower_step()
+        self._step_donating: Callable | None = None  # lowered on first use
         self._handoffs: dict[tuple, Callable] = {}  # (kind, rows) → handoff
 
     def init_carry(self, n_channels: int | None = None,
@@ -542,10 +545,24 @@ class CompiledStreamAggregate:
         return jnp.zeros(
             (plan.window.n_slots * plan.carry_buckets, n_channels), dtype)
 
-    def step(self, rows, carry, min_window: int | None = None):
+    def step(self, rows, carry, min_window: int | None = None, *,
+             donate: bool = False):
+        """One micro-batch fold.  ``donate=True`` hands the carry buffer to
+        XLA for in-place reuse (``donate_argnums``) — the caller must treat
+        the passed carry as consumed and keep only the returned one, which
+        every streaming drive loop already does (``stage.carry = step(...)``).
+        """
+        fn = self._donating_step() if donate else self._step
         if self.plan.window.fanout_on_device:
-            return self._step(rows, carry, jnp.int32(min_window))
-        return self._step(rows, carry)
+            return fn(rows, carry, jnp.int32(min_window))
+        return fn(rows, carry)
+
+    def _donating_step(self) -> Callable:
+        """The same lowered step with the carry argument (index 1) donated,
+        built lazily so non-streaming users never pay the second trace."""
+        if self._step_donating is None:
+            self._step_donating = self._lower_step(donate_argnums=(1,))
+        return self._step_donating
 
     def read_slot(self, carry, slot: int) -> np.ndarray:
         return gather_window_slot(carry, slot, self.plan.carry_buckets)
@@ -675,11 +692,14 @@ class CompiledStreamGroup:
         self.plan = plan
         self.backend = backend
         axis = plan.axis_name
-        self._step = lower(partial(_stream_group_body, plan=plan),
-                           axis_name=axis,
-                           in_specs=(P(axis), P(axis), P()),
-                           out_specs=(P(axis), P()), backend=backend,
-                           mesh=mesh, jit=jit)
+        self._lower_step = partial(lower, partial(_stream_group_body,
+                                                  plan=plan),
+                                   axis_name=axis,
+                                   in_specs=(P(axis), P(axis), P()),
+                                   out_specs=(P(axis), P()), backend=backend,
+                                   mesh=mesh, jit=jit)
+        self._step = self._lower_step()
+        self._step_donating = None
         self._finalize = lower(partial(_stream_group_finalize_body, plan=plan),
                                axis_name=axis, in_specs=(P(axis), P()),
                                out_specs=(P(), P(), P()), backend=backend,
@@ -702,7 +722,14 @@ class CompiledStreamGroup:
                 "vals": jnp.zeros(shape, dtype),
                 "counts": jnp.zeros(shape[:-1], jnp.int32)}
 
-    def step(self, rows, carry, min_window: int | None = None):
+    def step(self, rows, carry, min_window: int | None = None, *,
+             donate: bool = False):
+        """One micro-batch fold; ``donate=True`` donates the carry pytree's
+        buffers for in-place reuse (see ``CompiledStreamAggregate.step``)."""
+        if donate:
+            if self._step_donating is None:
+                self._step_donating = self._lower_step(donate_argnums=(1,))
+            return self._step_donating(rows, carry, jnp.int32(min_window))
         return self._step(rows, carry, jnp.int32(min_window))
 
     def finalize_slot(self, carry, slot: int):

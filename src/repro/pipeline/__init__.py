@@ -24,10 +24,10 @@ drivers plus the two-log ``JoinSource``).
 from .graph import Pipeline, PipelineError, Windowing
 from .lower import (BuiltPipeline, EmitSpec, SidePlan, SourceSpec, StageEdge,
                     StagePlan)
-from .runtime import JoinSource, resolve_source
+from .runtime import JoinSource, RunOptions, resolve_source, run
 
 __all__ = [
     "Pipeline", "PipelineError", "Windowing", "BuiltPipeline", "EmitSpec",
     "SidePlan", "SourceSpec", "StageEdge", "StagePlan", "JoinSource",
-    "resolve_source",
+    "RunOptions", "resolve_source", "run",
 ]

@@ -336,27 +336,50 @@ class BuiltPipeline:
                                    checkpoint_interval=0)
 
     # -- execution -------------------------------------------------------------
+    def run(self, source_or_data=None, *, options=None, store=None,
+            meta=None, sources=None, bus=None, autoscaler=None,
+            announce: bool = True, flush: bool = True,
+            mode: str | None = None):
+        """The one front door for executing the program.  Dispatches by
+        source kind — a ``StreamSource``/``JoinSource`` (or a pair with a
+        live side) streams through the pipelined coordinator, an
+        in-memory record list (or an array pipeline's shards) runs as one
+        batch, and ``None`` falls back to the graph's bound source.
+        ``options=RunOptions(...)`` carries the scheduler knobs (overlap,
+        prefetch depth, sink batching, carry donation, checkpoint
+        spacing, key-space sharding); ``mode=`` pins the dispatch.
+        Returns a ``StreamReport`` (streaming), ``(outputs, report)``
+        (windowed batch) or ``(result, stats)`` (array)."""
+        from .runtime import run
+        return run(self, source_or_data, options=options, store=store,
+                   meta=meta, sources=sources, bus=bus,
+                   autoscaler=autoscaler, announce=announce, flush=flush,
+                   mode=mode)
+
     def run_streaming(self, store, meta, *, source=None, sources=None,
                       bus=None, autoscaler=None, announce: bool = True,
-                      flush: bool = True):
-        """Drive the program continuously over micro-batches.  Sources
-        default to the graph's (``prefix=``/``records=``); joins take
+                      flush: bool = True, options=None):
+        """Streaming pinned explicitly — a thin delegate through
+        :meth:`run` with ``mode="streaming"``.  Sources default to the
+        graph's (``prefix=``/``records=``); joins take
         ``sources=(left, right)`` overrides.  Returns a ``StreamReport``."""
         from .runtime import run_streaming
         return run_streaming(self, store, meta, source=source,
                              sources=sources, bus=bus, autoscaler=autoscaler,
-                             announce=announce, flush=flush)
+                             announce=announce, flush=flush, options=options)
 
-    def run_batch(self, store=None, *, data=None, source=None, sources=None):
-        """Drive the same program once over the full input (batch mode):
-        array pipelines run the batch plan over ``data``; windowed
-        pipelines fold everything in one pass and flush — emitting
-        bit-identical window bytes to the streaming mode.  Returns
-        ``(outputs, report)`` for windowed pipelines (outputs keyed by
-        object-store key) or ``(result, stats)`` for array pipelines."""
+    def run_batch(self, store=None, *, data=None, source=None, sources=None,
+                  options=None):
+        """One-shot pinned explicitly — a thin delegate through
+        :meth:`run` with ``mode="batch"``: array pipelines run the batch
+        plan over ``data``; windowed pipelines fold everything in one
+        pass and flush — emitting bit-identical window bytes to the
+        streaming mode.  Returns ``(outputs, report)`` for windowed
+        pipelines (outputs keyed by object-store key) or
+        ``(result, stats)`` for array pipelines."""
         from .runtime import run_batch
         return run_batch(self, store, data=data, source=source,
-                         sources=sources)
+                         sources=sources, options=options)
 
 
 # ---------------------------------------------------------------------------

@@ -1,13 +1,24 @@
-"""Executing a built pipeline — one program, two drive modes.
+"""Executing a built pipeline — one program, one front door, two modes.
 
-Streaming mode hands the ``BuiltPipeline`` to the ``StreamingCoordinator``
-(micro-batches, watermarks, checkpoints, backpressure).  Batch mode drives
-the *same* compiled program once over the full input: all records fold in
-a single pass and the end-of-input flush finalizes every window, rippling
-carry handoffs through the stage DAG in topological order — so the
-per-window output bytes are identical to the streaming run's (on every
-tee'd branch), which the pipeline tests assert bit-for-bit.  A fan-out
-program's batch outputs collect across all of its terminal sinks.
+``run(built, source_or_data, options=RunOptions(...))`` — surfaced as
+``BuiltPipeline.run`` — is the single public entry point.  It dispatches
+by source kind: a ``StreamSource``/``JoinSource`` (or a pair of them)
+drives **streaming** mode through the ``StreamingCoordinator``
+(micro-batches, watermarks, checkpoints, backpressure, the pipelined
+scheduler's prepare/fold/drain lanes); an in-memory record list (or the
+graph's bound ``records=``) drives **batch** mode — the *same* compiled
+program once over the full input, where the end-of-input flush finalizes
+every window and carry handoffs ripple through the stage DAG in
+topological order, so per-window output bytes are identical to the
+streaming run's (on every tee'd branch), which the pipeline tests assert
+bit-for-bit.  ``None`` falls back to the graph's bound source: a log
+prefix streams, bound records run as one batch.  ``run_streaming`` and
+``run_batch`` remain as thin delegates that pin the mode explicitly.
+
+``RunOptions`` (re-exported here from the coordinator) carries the
+scheduler knobs — overlap, prefetch depth, sink batching, carry donation,
+checkpoint spacing, and key-space sharding — so no drive path grows an
+ad-hoc kwarg list.
 
 ``JoinSource`` merges two event logs into one side-tagged record stream
 (``(ts, key, value, side)``), in event-time order with a deterministic
@@ -19,12 +30,15 @@ restarts (the tag selects the record's ingestion stage via
 
 from __future__ import annotations
 
+import dataclasses
 import heapq
 from itertools import islice
 from typing import Iterator
 
 from ..core.metadata import MetadataStore
 from ..core.storage import MemoryStore, ObjectStore
+from ..engine.stages import fold_key24
+from ..streaming.coordinator import RunOptions
 from ..streaming.source import MicroBatch, StreamSource
 from .lower import BuiltPipeline, SourceSpec
 
@@ -110,20 +124,153 @@ def resolve_source(built: BuiltPipeline, store: ObjectStore | None,
     return _side_source(specs[0], store, built.batch_records, source)
 
 
+def _resolve(built: BuiltPipeline, store, source, sources):
+    """``resolve_source`` plus the one case it cannot express: an
+    already-merged ``JoinSource`` passed as the single drivable source."""
+    if isinstance(source, JoinSource):
+        return source
+    return resolve_source(built, store, source, sources)
+
+
+def _infer_mode(built: BuiltPipeline, source, sources) -> str:
+    """Dispatch by source kind: live streams stream, in-memory records run
+    as one batch, and ``None`` falls back to what the graph bound (a log
+    prefix is an unbounded stream; bound records are a dataset)."""
+    if isinstance(source, (StreamSource, JoinSource)):
+        return "streaming"
+    if sources is not None:
+        return ("streaming"
+                if any(isinstance(s, StreamSource)
+                       for s in sources if s is not None) else "batch")
+    if source is not None:
+        return "batch"
+    specs = [built.stages[si].sides[side].source
+             for si, side in built.inputs]
+    return ("streaming" if any(sp.kind == "log" for sp in specs)
+            else "batch")
+
+
+def _shard_source(built: BuiltPipeline, store, source, sources,
+                  shard: tuple[int, int]):
+    """Restrict the run to one partition of the key space.
+
+    Partitioning hashes each record's key through ``fold_key24`` — the
+    same stable fold the engine uses for device bucketing — so every
+    shard of a job agrees on the assignment and the union of all shards'
+    outputs equals the unsharded run's.  Each shard writes under a
+    suffixed job id so sibling shards never collide in the store or the
+    metadata table.
+    """
+    index, count = shard
+    if len(built.inputs) != 1:
+        raise ValueError("shard= currently drives single-input pipelines; "
+                         "shard a join by sharding its upstream logs")
+    src = _resolve(built, store, source, sources)
+    recs = [r for r in src.events()
+            if fold_key24(r[1]) % count == index]
+    sharded = StreamSource.from_records(recs,
+                                        batch_records=built.batch_records)
+    built = dataclasses.replace(
+        built, job_id=f"{built.job_id}-shard{index}of{count}")
+    return built, sharded
+
+
+def run(built: BuiltPipeline, source_or_data=None, *,
+        options: RunOptions | None = None, store=None, meta=None,
+        sources=None, bus=None, autoscaler=None, announce: bool = True,
+        flush: bool = True, mode: str | None = None):
+    """The one front door for driving a built pipeline.
+
+    ``source_or_data`` picks the mode: a ``StreamSource``/``JoinSource``
+    (or a ``(left, right)`` pair with a live side) streams; a list of
+    records — or an array pipeline's device shards — runs as one batch;
+    ``None`` falls back to the graph's bound source (log prefix →
+    streaming, bound records → batch).  ``mode="streaming"|"batch"``
+    forces the choice (what the ``run_streaming``/``run_batch`` delegates
+    do).  ``options`` is the scheduler's knob block — see ``RunOptions``
+    for the lane each knob drives.
+
+    Returns a ``StreamReport`` in streaming mode, ``(outputs, report)``
+    for a windowed batch run, and ``(result, stats)`` for an array
+    pipeline.
+    """
+    opts = options if options is not None else RunOptions()
+    opts.validate()
+    if mode not in (None, "streaming", "batch"):
+        raise ValueError(f"mode must be 'streaming' or 'batch', got {mode!r}")
+
+    if built.is_array:
+        if mode == "streaming":
+            raise ValueError("array pipelines have no streaming mode")
+        if opts.shard is not None:
+            raise ValueError("shard= partitions a keyed record stream; "
+                             "array pipelines shard via their input shards")
+        shards = (source_or_data if source_or_data is not None
+                  else built.sides[0].source.shards)
+        if shards is None:
+            raise ValueError("array pipelines need data (device shards)")
+        return built.batch_plan.run(shards)
+
+    # One positional accepts a join's (left, right) pair too.
+    source = None
+    if source_or_data is not None:
+        if (len(built.inputs) == 2 and sources is None
+                and isinstance(source_or_data, (tuple, list))
+                and len(source_or_data) == 2
+                and all(isinstance(s, (StreamSource, list))
+                        for s in source_or_data)):
+            sources = tuple(source_or_data)
+        else:
+            source = source_or_data
+
+    if mode is None:
+        mode = _infer_mode(built, source, sources)
+
+    if opts.shard is not None:
+        built, source = _shard_source(built, store, source, sources,
+                                      opts.shard)
+        sources = None
+
+    from ..streaming.coordinator import StreamingCoordinator
+
+    if mode == "streaming":
+        store = store if store is not None else MemoryStore()
+        meta = meta if meta is not None else MetadataStore()
+        coord = StreamingCoordinator(store, meta, bus=bus,
+                                     autoscaler=autoscaler, program=built,
+                                     options=opts)
+        src = _resolve(built, store, source, sources)
+        return coord.run_stream(src, announce=announce, flush=flush)
+
+    # Batch: the same compiled program, one pass, end-of-input flush.
+    # Checkpoint spacing is a streaming knob — a one-shot drive has no
+    # mid-run offsets worth persisting, so the override is dropped here.
+    opts = dataclasses.replace(opts, checkpoint_interval=None)
+    store = store if store is not None else MemoryStore()
+    src = _resolve(built, store, source, sources)
+    prog = built.one_shot(sum(src.batch_sizes()))
+    src = _resolve(prog, store, source, sources)
+    coord = StreamingCoordinator(store, MetadataStore(), program=prog,
+                                 options=opts)
+    report = coord.run_stream(src, announce=False, flush=True)
+    return built.collect_outputs(store), report
+
+
 def run_streaming(built: BuiltPipeline, store, meta, *, source=None,
                   sources=None, bus=None, autoscaler=None,
-                  announce: bool = True, flush: bool = True):
-    """Continuous mode: micro-batches through the StreamingCoordinator."""
-    from ..streaming.coordinator import StreamingCoordinator
-    coord = StreamingCoordinator(store, meta, bus=bus, autoscaler=autoscaler,
-                                 program=built)
-    src = resolve_source(built, store, source, sources)
-    return coord.run_stream(src, announce=announce, flush=flush)
+                  announce: bool = True, flush: bool = True,
+                  options: RunOptions | None = None):
+    """Continuous mode, pinned: a thin delegate through :func:`run` with
+    ``mode="streaming"`` (so a records-bound graph still streams)."""
+    return run(built, source, store=store, meta=meta, sources=sources,
+               bus=bus, autoscaler=autoscaler, announce=announce,
+               flush=flush, options=options, mode="streaming")
 
 
 def run_batch(built: BuiltPipeline, store=None, *, data=None, source=None,
-              sources=None):
-    """One-shot mode over the full input.
+              sources=None, options: RunOptions | None = None):
+    """One-shot mode, pinned: a thin delegate through :func:`run` with
+    ``mode="batch"``.
 
     Array pipelines run the compiled batch plan over ``data`` (or the
     graph's bound shards) and return its ``(result, stats)``.  Windowed
@@ -133,16 +280,6 @@ def run_batch(built: BuiltPipeline, store=None, *, data=None, source=None,
     each window's object-store key to its emitted bytes.
     """
     if built.is_array:
-        shards = data if data is not None else built.sides[0].source.shards
-        if shards is None:
-            raise ValueError("array pipelines need data= (device shards)")
-        return built.batch_plan.run(shards)
-
-    from ..streaming.coordinator import StreamingCoordinator
-    store = store if store is not None else MemoryStore()
-    src = resolve_source(built, store, source, sources)
-    prog = built.one_shot(sum(src.batch_sizes()))
-    src = resolve_source(prog, store, source, sources)
-    coord = StreamingCoordinator(store, MetadataStore(), program=prog)
-    report = coord.run_stream(src, announce=False, flush=True)
-    return built.collect_outputs(store), report
+        return run(built, data, options=options, mode="batch")
+    return run(built, source, store=store, sources=sources,
+               options=options, mode="batch")

@@ -35,15 +35,15 @@ scales its mapper pool from the queue depth (consumer lag), the KEDA-style
 signal, instead of a fixed split count.
 """
 
-from .coordinator import (StreamingConfig, StreamingCoordinator, StreamReport,
-                          session_output_key, window_output_key)
+from .coordinator import (RunOptions, StreamingConfig, StreamingCoordinator,
+                          StreamReport, session_output_key, window_output_key)
 from .sessions import Session, SessionTracker
 from .source import MicroBatch, StreamSource, write_event_log
 from .state import LateEventError, WindowTracker
 from .windows import SlidingWindows, TumblingWindows, Window, WindowAssigner
 
 __all__ = [
-    "StreamingConfig", "StreamingCoordinator", "StreamReport",
+    "RunOptions", "StreamingConfig", "StreamingCoordinator", "StreamReport",
     "window_output_key", "session_output_key", "MicroBatch", "StreamSource",
     "write_event_log", "LateEventError", "WindowTracker", "Session",
     "SessionTracker", "SlidingWindows", "TumblingWindows", "Window",

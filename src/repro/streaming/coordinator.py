@@ -75,17 +75,36 @@ Scaling is backpressure-driven: the source announces each batch on
 and sizes its mapper pool from the consumer lag (queue depth) instead of a
 fixed split count — KEDA's Kafka-lag signal where the batch engine uses
 KPA concurrency.
+
+The drive loop is a **pipelined scheduler** (``RunOptions``) with three
+lanes.  *Prepare*: a background thread reads and host-prepares micro-batch
+N+1 (source read, record wiring through the fused map chains) while the
+device folds batch N — key-table lookups and ring admission stay on the
+main thread, strictly in batch order, so key-id assignment (and with it
+every output byte) is identical with overlap on or off.  *Fold*: device
+steps dispatch asynchronously (JAX async dispatch) and donate the carry
+buffer (``donate_argnums``), so sibling tee branches' handoff folds queue
+back-to-back on the device with no host round trip between them.  *Drain*:
+the per-fold device→host stats reads (late/expanded/dropped counters) are
+deferred to the micro-batch boundary and drained in one pass, and window
+emissions within one finalization sweep stage into a single
+``ObjectStore.put_many`` round trip.  Checkpoints snapshot at micro-batch
+barriers only, after the drain and the sink flush — a crash mid-prefetch
+(batch N+1 prepared but unconsumed) replays from the barrier exactly like
+a crash in the synchronous loop.
 """
 
 from __future__ import annotations
 
 import io
 import math
+import queue
+import threading
 import time
 import uuid
 import warnings
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any, Callable, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -110,19 +129,152 @@ _MAX_WIRE_INT = 1 << 24  # largest int the float32 wire carries exactly
 _NEG_INF = float("-inf")
 
 
+@dataclass(frozen=True)
+class RunOptions:
+    """Scheduler knobs for one drive of a built pipeline — the single
+    options surface behind ``BuiltPipeline.run(...)``.
+
+    Each knob maps onto one lane of the pipelined runtime:
+
+    * ``overlap`` — the *prepare* and *drain* lanes: prefetch + host-prepare
+      micro-batch N+1 on a background thread while batch N folds, and defer
+      the per-fold device→host stats reads to the micro-batch boundary.
+      ``False`` restores the fully synchronous PR 4/5 loop; output bytes
+      are identical either way.
+    * ``prefetch_batches`` — prepare-lane queue depth (how many prepared
+      batches may sit ahead of the fold lane).
+    * ``sink_batching`` — drain lane: stage every window emitted during one
+      finalization sweep and write them through a single
+      ``ObjectStore.put_many`` round trip instead of one PUT per window.
+    * ``donate_carry`` — fold lane: donate the carry buffer to each step
+      (``jax.jit(..., donate_argnums=...)``) so the long-lived fold reuses
+      one buffer instead of copying the carry every micro-batch.
+    * ``checkpoint_interval`` — overrides the built program's barrier
+      spacing (``None`` keeps the build-time value); checkpoints only ever
+      land at micro-batch barriers, after the drain and sink flush.
+    * ``shard`` — ``(index, count)``: drive only the keys this coordinator
+      owns (``fold_key24(key) % count == index``) under a per-shard job id,
+      so ``count`` coordinators split one program's key space cleanly
+      (aggregation is per-key, so shard outputs union to the unsharded
+      run's).  Single-input pipelines only.
+    """
+
+    overlap: bool = True
+    prefetch_batches: int = 2
+    sink_batching: bool = True
+    donate_carry: bool = True
+    checkpoint_interval: int | None = None
+    shard: tuple[int, int] | None = None
+
+    def validate(self) -> None:
+        if self.prefetch_batches < 1:
+            raise ValueError("prefetch_batches must be >= 1")
+        if self.checkpoint_interval is not None \
+                and self.checkpoint_interval < 0:
+            raise ValueError("checkpoint_interval must be >= 0 "
+                             "(0 disables checkpointing)")
+        if self.shard is not None:
+            index, count = self.shard
+            if count < 1 or not 0 <= index < count:
+                raise ValueError(f"shard must be (index, count) with "
+                                 f"0 <= index < count, got {self.shard}")
+
+
+#: the StreamingConfig shim's behavior predates the pipelined scheduler:
+#: every lane off, exactly the synchronous PR 4/5 loop
+_LEGACY_OPTIONS = RunOptions(overlap=False, sink_batching=False,
+                             donate_carry=False)
+
+
+@dataclass
+class _PreparedBatch:
+    """One micro-batch after prepare-lane work: records routed to their
+    root stages and pushed through the fused map chains.  Key-table
+    lookups, admission, and folding stay on the main thread."""
+
+    index: int
+    n_records: int
+    max_event_time: float
+    groups: dict[int, list]         # root stage → transformed records
+
+
+class _Prefetcher:
+    """Bounded-depth background prefetcher — the prepare lane.
+
+    Reads micro-batches from the source iterator and host-prepares them on
+    a worker thread while the main loop folds the batch in flight; at most
+    ``depth`` prepared batches queue ahead.  A source or prepare error is
+    forwarded and re-raised on the main thread at the position the
+    synchronous loop would have raised it.  ``close`` stops the thread
+    promptly even when the main loop exits early (crash injection, ring
+    capacity errors), leaving any prepared-but-unconsumed batches to the
+    next run's replay from the checkpoint barrier."""
+
+    def __init__(self, batches: Iterator[MicroBatch],
+                 prepare: Callable[[MicroBatch], _PreparedBatch],
+                 depth: int) -> None:
+        self._q: queue.Queue = queue.Queue(maxsize=max(depth, 1))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._fill, args=(batches, prepare),
+            name="stream-prefetch", daemon=True)
+        self._thread.start()
+
+    def _fill(self, batches: Iterator[MicroBatch], prepare) -> None:
+        try:
+            for batch in batches:
+                item = ("batch", prepare(batch))
+                if not self._offer(item):
+                    return
+            self._offer(("end", None))
+        except BaseException as exc:  # forwarded, re-raised by the consumer
+            self._offer(("error", exc))
+
+    def _offer(self, item) -> bool:
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def __iter__(self) -> Iterator[_PreparedBatch]:
+        while True:
+            kind, payload = self._q.get()
+            if kind == "batch":
+                yield payload
+            elif kind == "end":
+                return
+            else:
+                raise payload
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)
+
+
 @dataclass
 class StreamingConfig:
     """Stream-job analogue of the batch ``JobConfig`` JSON document.
 
     .. deprecated::
-        ``StreamingConfig`` is now a shim over the declarative Pipeline
-        API: ``build_pipeline()`` lowers it to a single-chain record
-        pipeline (``repro.pipeline.Pipeline``), and the coordinator drives
-        that program.  New call sites should author a ``Pipeline`` —
-        it also exposes session windows, windowed joins, top-k, map
-        fusion, and multi-stage chains, which this flat config cannot
-        express.  Handing a config to ``StreamingCoordinator`` emits a
-        ``DeprecationWarning``.
+        ``StreamingConfig`` is a shim over the declarative Pipeline API,
+        **scheduled for removal in PR 8**: ``build_pipeline()`` lowers it
+        to a single-chain record pipeline (``repro.pipeline.Pipeline``),
+        and the coordinator drives that program.  Author a ``Pipeline``
+        and drive it through ``BuiltPipeline.run(...)`` instead — that
+        front door also exposes session windows, windowed joins, top-k,
+        map fusion, multi-stage chains, and the pipelined scheduler's
+        ``RunOptions``, none of which this flat config can express.  The
+        shim drives the legacy synchronous loop only: handing a config to
+        ``StreamingCoordinator`` emits a ``DeprecationWarning``, and
+        combining it with ``options=`` raises ``ValueError``.
     """
 
     num_buckets: int = 128          # key-id space (dense bucket width)
@@ -249,6 +401,9 @@ class StreamReport:
     hash_collisions: int = 0        # hashed key space: keys sharing a bucket
     capacity_dropped: int = 0       # group mode: window-buffer overflow
     writes_skipped: int = 0         # restart: windows already persisted
+    emit_latencies: list[float] = field(default_factory=list)
+    # ^ per emitted window: wall-clock seconds from the watermark passing
+    #   its end (close) to its bytes landing in the store (emit)
     error: str | None = None
 
     @property
@@ -259,6 +414,22 @@ class StreamReport:
     def mean_batch_latency(self) -> float:
         ls = self.batch_latencies
         return sum(ls) / len(ls) if ls else 0.0
+
+    def emit_latency_quantile(self, q: float) -> float:
+        """Close-to-emit latency at quantile ``q`` (nearest-rank), in
+        seconds; 0.0 when no window was emitted."""
+        ls = sorted(self.emit_latencies)
+        if not ls:
+            return 0.0
+        return ls[min(int(q * len(ls)), len(ls) - 1)]
+
+    @property
+    def p50_emit_latency(self) -> float:
+        return self.emit_latency_quantile(0.50)
+
+    @property
+    def p99_emit_latency(self) -> float:
+        return self.emit_latency_quantile(0.99)
 
 
 def window_output_key(cfg, window: Window, prefix: str | None = None) -> str:
@@ -428,22 +599,37 @@ class StreamingCoordinator:
                  cfg: StreamingConfig | None = None,
                  bus: EventBus | None = None,
                  autoscaler: AutoscalerConfig | None = None, *,
-                 program=None) -> None:
+                 program=None, options: RunOptions | None = None) -> None:
         if (cfg is None) == (program is None):
             raise ValueError("pass exactly one of cfg (deprecated shim) or "
                              "program (a BuiltPipeline)")
         if cfg is not None:
+            if options is not None:
+                raise ValueError(
+                    "RunOptions (the pipelined scheduler: overlap, "
+                    "prefetch, sink batching, carry donation) is part of "
+                    "the Pipeline front door and is not supported through "
+                    "the deprecated StreamingConfig shim; author a "
+                    "repro.pipeline.Pipeline and drive it with "
+                    "BuiltPipeline.run(..., options=RunOptions(...))")
             warnings.warn(
                 "StreamingConfig is a deprecated shim that lowers onto the "
-                "Pipeline layer; author the job as a repro.pipeline."
-                "Pipeline and pass program=pipeline.build(...) instead",
+                "Pipeline layer and is scheduled for removal in PR 8; "
+                "author the job as a repro.pipeline.Pipeline and drive it "
+                "with BuiltPipeline.run(...) instead",
                 DeprecationWarning, stacklevel=2)
             cfg.validate()
             program = cfg.build_pipeline()
+            options = _LEGACY_OPTIONS   # shim keeps the synchronous loop
+        self.opts = options or RunOptions()
+        self.opts.validate()
         self.store = store
         self.meta = meta
         self.cfg = cfg                  # legacy handle (None for programs)
         self.prog = program
+        self._ckpt_interval = (program.checkpoint_interval
+                               if self.opts.checkpoint_interval is None
+                               else self.opts.checkpoint_interval)
         self.bus = bus or EventBus()
         self.pool = ServerlessPool(
             "stream-mapper", autoscaler or AutoscalerConfig(
@@ -468,6 +654,12 @@ class StreamingCoordinator:
         self._build_tables()
         self._records_consumed = 0      # checkpointed resume point (records)
         self._persisted: set[str] = set()   # restart: already-written windows
+        # drain-lane staging: per-fold device stats awaiting their batch-
+        # boundary host read, and per-sweep window emissions awaiting their
+        # batched store write
+        self._pending_stats: list[tuple[int, Any]] = []
+        self._pending_puts: list[tuple[str, bytes, float, float, int,
+                                       float]] = []
 
     # -- construction ----------------------------------------------------------
     def _wire_rows(self, si: int) -> int:
@@ -531,15 +723,16 @@ class StreamingCoordinator:
             st.tables[0].on_new = on_new
 
     # -- record transforms -----------------------------------------------------
-    def _stage_recs(self, si: int, raw, report: StreamReport,
-                    count_in: bool) -> list[tuple[float, Any, float, int]]:
+    def _transform_recs(self, si: int,
+                        raw) -> list[tuple[float, Any, float, int]]:
         """Apply stage ``si``'s fused map chain and key/value extractors;
-        returns side-tagged ``(ts, key, value, side)`` records."""
+        returns side-tagged ``(ts, key, value, side)`` records.  Touches
+        only the immutable program (transforms are pure by the Pipeline
+        contract), so the prepare lane may run it off-thread while the
+        main loop folds the batch in flight."""
         stage = self.stages[si]
         recs: list[tuple[float, Any, float, int]] = []
         for rec in raw:
-            if count_in:
-                report.records_in += 1
             side = int(rec[3]) if len(rec) > 3 else 0
             sp = stage.plan.sides[side]
             if sp.transform is None:
@@ -551,10 +744,14 @@ class StreamingCoordinator:
             for r in out:
                 recs.append((float(r[0]), sp.key_fn(r),
                              float(sp.value_fn(r)), side))
-        # flat-maps may expand past the stage's wire capacity: grow the
-        # buffer (and retrace the step once per growth) instead of failing,
-        # so the same graph runs in batch mode, where one "micro-batch" is
-        # the whole input
+        return recs
+
+    def _grow_wire(self, si: int, recs: list) -> None:
+        """Flat-maps may expand past the stage's wire capacity: grow the
+        buffer (and retrace the step once per growth) instead of failing,
+        so the same graph runs in batch mode, where one "micro-batch" is
+        the whole input.  Mutates stage state — main thread only."""
+        stage = self.stages[si]
         if stage.plan.is_session or self.prog.fanout == "device":
             needed = len(recs)
         else:
@@ -562,6 +759,15 @@ class StreamingCoordinator:
         per = -(-needed // self.prog.n_workers)
         if per > stage.per_worker:
             stage.per_worker = per
+
+    def _stage_recs(self, si: int, raw, report: StreamReport,
+                    count_in: bool) -> list[tuple[float, Any, float, int]]:
+        """Transform + wire growth in one synchronous call — the host-edge
+        feed path and the prepare lane's building block."""
+        if count_in:
+            report.records_in += len(raw)
+        recs = self._transform_recs(si, raw)
+        self._grow_wire(si, recs)
         return recs
 
     # -- batch ingestion -------------------------------------------------------
@@ -586,11 +792,37 @@ class StreamingCoordinator:
         bound = stage.tracker.min_admissible() - stage.window_base
         bound = max(min(bound, 2 ** 31 - 1), -(2 ** 31))
         stage.carry, stats = self.pool.submit(
-            stage.plan.sides[side].compiled.step, data, stage.carry, bound)
+            stage.plan.sides[side].compiled.step, data, stage.carry, bound,
+            donate=self.opts.donate_carry)
+        self._account_stats(si, stats, report)
+
+    def _account_stats(self, si: int, stats, report: StreamReport) -> None:
+        """Apply one fold's [late, expanded, dropped] counters.  With
+        overlap on, the device→host read is deferred — the stats array
+        queues on the drain lane and ``_drain_stats`` reads the whole
+        batch's worth at the micro-batch barrier, so no fold forces a
+        host sync on the hot path (and sibling tee-branch folds dispatch
+        back-to-back on the device).  The counters feed accounting only
+        (never admission), so deferral cannot change any output byte."""
+        if self.opts.overlap:
+            self._pending_stats.append((si, stats))
+            return
         late, expanded, dropped = (int(x) for x in np.asarray(stats))
-        stage.tracker.note_late(late)
+        self.stages[si].tracker.note_late(late)
         report.records_expanded += expanded
         report.capacity_dropped += dropped
+
+    def _drain_stats(self, report: StreamReport) -> None:
+        """Batch-boundary drain: read every deferred fold's counters in one
+        pass (each ``np.asarray`` waits on its already-dispatched step)."""
+        if not self._pending_stats:
+            return
+        pending, self._pending_stats = self._pending_stats, []
+        for si, stats in pending:
+            late, expanded, dropped = (int(x) for x in np.asarray(stats))
+            self.stages[si].tracker.note_late(late)
+            report.records_expanded += expanded
+            report.capacity_dropped += dropped
 
     def _fold_host(self, si: int, rows: np.ndarray) -> None:
         """Host-wire fold: [window_slot, key, value, valid] rows whose slot
@@ -598,24 +830,59 @@ class StreamingCoordinator:
         stage = self.stages[si]
         data = self._wire(stage, rows, 4)
         stage.carry, _ = self.pool.submit(stage.compiled.step, data,
-                                          stage.carry)
+                                          stage.carry,
+                                          donate=self.opts.donate_carry)
 
     # -- window finalization --------------------------------------------------
     def _put_window(self, out_key: str, records: list, start: float,
-                    end: float, report: StreamReport) -> None:
+                    end: float, report: StreamReport,
+                    t_close: float | None = None) -> None:
         """Persist one finalized window, idempotently across restarts: a
         window already in the store with identical bytes (a replayed
         emission from before the crash) is skipped, not re-written; changed
-        bytes (a flushed partial window over a since-grown log) overwrite."""
+        bytes (a flushed partial window over a since-grown log) overwrite.
+
+        With sink batching on, the write stages on the drain lane instead
+        of PUTting immediately; ``_flush_sinks`` writes the whole
+        finalization sweep's windows through one ``ObjectStore.put_many``
+        round trip (the idempotence check already ran here, so a staged
+        window is always a real write).  ``t_close`` is when the watermark
+        passed the window's end, for the close-to-emit latency histogram."""
         blob = _encode_records(records)
+        if t_close is None:
+            t_close = time.perf_counter()
         if out_key in self._persisted and self.store.get(out_key) == blob:
             report.writes_skipped += 1
             return
+        if self.opts.sink_batching:
+            self._pending_puts.append((out_key, blob, start, end,
+                                       len(records), t_close))
+            return
         self.store.put(out_key, blob)
+        report.emit_latencies.append(time.perf_counter() - t_close)
         self.bus.produce(TOPIC_STREAM_WINDOW,
                          window_event(self.prog.job_id, start, end,
                                       len(records), out_key),
                          key=f"{self.prog.job_id}/{start}")
+
+    def _flush_sinks(self, report: StreamReport) -> None:
+        """Drain-lane sink flush: one batched store write for every window
+        the sweep emitted, then the per-window bus events in emission
+        order.  Runs at the end of each finalization sweep — always before
+        a checkpoint barrier, so a crash can lose only writes the replay
+        will re-emit (bytes are deterministic, so re-writes are
+        idempotent)."""
+        if not self._pending_puts:
+            return
+        pending, self._pending_puts = self._pending_puts, []
+        self.store.put_many([(key, blob) for key, blob, *_ in pending])
+        t_emit = time.perf_counter()
+        for key, blob, start, end, n_records, t_close in pending:
+            report.emit_latencies.append(t_emit - t_close)
+            self.bus.produce(TOPIC_STREAM_WINDOW,
+                             window_event(self.prog.job_id, start, end,
+                                          n_records, key),
+                             key=f"{self.prog.job_id}/{start}")
 
     def _aggregate_value(self, kind: str, total: float, count: float) -> Any:
         if kind == "count":
@@ -693,7 +960,9 @@ class StreamingCoordinator:
         records = self._window_records(si, slot)
         out_key = window_output_key(self.prog, window,
                                     prefix=self.prog.stage_prefix(si))
-        self._put_window(out_key, records, window.start, window.end, report)
+        t_close = getattr(stage.tracker, "closed_at", {}).get(window_index)
+        self._put_window(out_key, records, window.start, window.end, report,
+                         t_close=t_close)
         stage.carry = stage.compiled.clear_slot(stage.carry, slot)
         stage.tracker.release(window_index)
 
@@ -795,11 +1064,9 @@ class StreamingCoordinator:
         bound = dst.tracker.min_admissible() - base
         bound = max(min(bound, 2 ** 31 - 1), -(2 ** 31))
         step_fn = dst.plan.sides[edge.spec.dst_side].compiled.step
-        dst.carry, stats = self.pool.submit(step_fn, rows, dst.carry, bound)
-        late, expanded, dropped = (int(x) for x in np.asarray(stats))
-        dst.tracker.note_late(late)
-        report.records_expanded += expanded
-        report.capacity_dropped += dropped
+        dst.carry, stats = self.pool.submit(step_fn, rows, dst.carry, bound,
+                                            donate=self.opts.donate_carry)
+        self._account_stats(edge.spec.dst, stats, report)
 
     def _feed(self, edge: _EdgeState, records: list,
               report: StreamReport) -> None:
@@ -901,12 +1168,19 @@ class StreamingCoordinator:
 
     def _finalize_sweep(self, report: StreamReport,
                         touched: set[int]) -> None:
+        """One forward topological sweep, then one batched sink flush for
+        everything it emitted.  With overlap on, a tee'd stage's sibling
+        out-edges dispatch their handoff folds with no host sync between
+        them (each fold's stats read is deferred to the drain lane), so
+        independent branches of the DAG execute concurrently under JAX
+        async dispatch instead of serializing on per-branch host reads."""
         for si in range(len(self.stages)):
             if si not in touched:
                 continue
             for dst in self._finalize_stage(si, report):
                 self._observe(dst)
                 touched.add(dst)
+        self._flush_sinks(report)
 
     # -- checkpoint / restore --------------------------------------------------
     def _save_state(self) -> None:
@@ -921,7 +1195,20 @@ class StreamingCoordinator:
         bytes), replayed handoffs re-fold into carries that predate them,
         and replayed writes of already-persisted windows are skipped
         (``_put_window``), keeping restart effectively exactly-once on
-        every branch."""
+        every branch.
+
+        Checkpoints land at micro-batch barriers only, strictly after the
+        drain lane has emptied: staged sink writes must be durable before
+        the offset advances (a checkpoint past an unwritten window would
+        replay nothing that re-emits it), and deferred stats must be
+        applied so the snapshot's late-drop counters match the synchronous
+        loop's bit-for-bit."""
+        if self._pending_puts or self._pending_stats:
+            raise RuntimeError(
+                "internal: checkpoint requested with an undrained lane "
+                f"({len(self._pending_puts)} staged sink writes, "
+                f"{len(self._pending_stats)} deferred stats reads); "
+                "checkpoints must follow the batch-boundary drain")
         carries = tuple(st.carry for st in self.stages)
         leaves = [np.asarray(leaf)
                   for leaf in jax.tree_util.tree_leaves(carries)]
@@ -1195,15 +1482,12 @@ class StreamingCoordinator:
         return sum(table.collisions for st in self.stages
                    for table in self._unique_tables(st))
 
-    def process_batch(self, batch: MicroBatch,
-                      report: StreamReport) -> None:
-        """One micro-batch round: route each record to its external
-        input's root stage, admit → fold (device) → watermark → finalize,
-        cascading finalized windows through the DAG in one topological
-        sweep.  Normally one fused collective per batch per side; a batch
-        that spans more windows than the ring holds (low event rate
-        relative to batch size) folds and finalizes mid-batch instead of
-        aborting."""
+    def _prepare_batch(self, batch: MicroBatch) -> _PreparedBatch:
+        """Prepare-lane work for one micro-batch: size check, routing each
+        record to its external input's root stage, and the fused map
+        chains.  Reads only the immutable program, so the prefetch thread
+        runs it for batch N+1 while the main thread folds batch N; the
+        synchronous path calls it inline."""
         prog = self.prog
         if len(batch.records) > prog.batch_records:
             raise ValueError(
@@ -1211,11 +1495,6 @@ class StreamingCoordinator:
                 f"records but the coordinator was sized for batch_records="
                 f"{prog.batch_records}; create the StreamSource with "
                 f"batch_records <= the coordinator's")
-        t0 = time.perf_counter()
-        self.bus.poll(self.CONSUMER_GROUP, TOPIC_STREAM_BATCH,
-                      timeout=0.01, max_records=1)
-        self._autoscale(report)
-        late_before = self._late_dropped()
         if len(prog.inputs) == 1:
             # single-input fast path: no per-record re-tagging on the hot
             # path (the input necessarily lands at stage 0, side 0)
@@ -1227,10 +1506,33 @@ class StreamingCoordinator:
                 si, side = prog.inputs[tag]
                 groups.setdefault(si, []).append(
                     (rec[0], rec[1], rec[2], side))
-        for si in sorted(groups):
-            recs = self._stage_recs(si, groups[si], report, count_in=True)
+        return _PreparedBatch(
+            index=batch.index, n_records=len(batch.records),
+            max_event_time=batch.max_event_time,
+            groups={si: self._transform_recs(si, raw)
+                    for si, raw in groups.items()})
+
+    def _process_prepared(self, prep: _PreparedBatch,
+                          report: StreamReport) -> None:
+        """Fold + drain lanes for one prepared micro-batch: admit → fold
+        (device) → watermark → finalize, cascading finalized windows
+        through the DAG in one topological sweep, then drain the deferred
+        stats at the barrier and checkpoint if due.  Normally one fused
+        collective per batch per side; a batch that spans more windows
+        than the ring holds (low event rate relative to batch size) folds
+        and finalizes mid-batch instead of aborting."""
+        prog = self.prog
+        t0 = time.perf_counter()
+        self.bus.poll(self.CONSUMER_GROUP, TOPIC_STREAM_BATCH,
+                      timeout=0.01, max_records=1)
+        self._autoscale(report)
+        late_before = self._late_dropped()
+        report.records_in += prep.n_records
+        for si in sorted(prep.groups):
+            recs = prep.groups[si]
             if not recs:
                 continue
+            self._grow_wire(si, recs)
             stage = self.stages[si]
             if stage.plan.is_session:
                 self._ingest_session(si, recs, report)
@@ -1242,35 +1544,59 @@ class StreamingCoordinator:
         # multi-root join consumes one merged, side-tagged source)
         for si in self._roots:
             self._ext_wm[si] = max(self._ext_wm.get(si, _NEG_INF),
-                                   batch.max_event_time)
+                                   prep.max_event_time)
             self._observe(si)
         self._finalize_sweep(report, set(self._roots))
+        self._drain_stats(report)       # micro-batch barrier: lanes empty
         report.late_dropped += self._late_dropped() - late_before
         report.hash_collisions = self._total_collisions()
         report.batches += 1
-        self._records_consumed += len(batch.records)
+        self._records_consumed += prep.n_records
         # sparser checkpoints trade restart replay (the log is replayable
         # from the last checkpoint) for hot-path device syncs; interval 0
         # disables checkpointing entirely (the batch-mode drive)
-        if prog.checkpoint_interval and \
-                (batch.index + 1) % prog.checkpoint_interval == 0:
+        if self._ckpt_interval and \
+                (prep.index + 1) % self._ckpt_interval == 0:
             self._save_state()
         report.batch_latencies.append(time.perf_counter() - t0)
+
+    def process_batch(self, batch: MicroBatch,
+                      report: StreamReport) -> None:
+        """One micro-batch round, prepared and processed inline — the
+        synchronous entry point (``run_stream`` overlaps the two halves
+        when ``RunOptions.overlap`` is on)."""
+        self._process_prepared(self._prepare_batch(batch), report)
 
     def run_stream(self, source, *, announce: bool = True,
                    flush: bool = True) -> StreamReport:
         """Consume the whole currently-available log; with ``flush`` also
         finalize the still-open windows at the end (end-of-stream watermark
         → +inf, rippled through every stage), which a truly continuous
-        deployment would never do."""
+        deployment would never do.
+
+        With ``RunOptions.overlap`` on, a background prefetcher reads and
+        host-prepares batch N+1 while batch N folds; a crash leaves the
+        prepared-but-unconsumed batches unconsumed (the record offset only
+        advances at the barrier), so restart replays them from the
+        checkpoint exactly like the synchronous loop."""
         report = StreamReport(self.prog.job_id)
         t_start = time.perf_counter()
         start = self._restore_state()
         try:
             if announce:
                 self.announce(source, start_record=start)
-            for batch in source.batches(start_record=start):
-                self.process_batch(batch, report)
+            if self.opts.overlap:
+                prefetcher = _Prefetcher(source.batches(start_record=start),
+                                         self._prepare_batch,
+                                         self.opts.prefetch_batches)
+                try:
+                    for prep in prefetcher:
+                        self._process_prepared(prep, report)
+                finally:
+                    prefetcher.close()
+            else:
+                for batch in source.batches(start_record=start):
+                    self.process_batch(batch, report)
             if flush:
                 # checkpoint BEFORE the artificial end-of-stream watermark:
                 # a later run over a grown log must resume with the real
@@ -1278,13 +1604,15 @@ class StreamingCoordinator:
                 # late); flushed windows then re-finalize idempotently.
                 # The stages flush in topological order, so by a stage's
                 # turn every upstream feed (on every in-edge) has landed
-                if report.batches and self.prog.checkpoint_interval:
+                if report.batches and self._ckpt_interval:
                     self._save_state()
                 for si in range(len(self.stages)):
                     if si in self._roots:
                         self._ext_wm[si] = float("inf")
                     self.stages[si].tracker.observe(float("inf"))
                     self._finalize_ripe(report, si)
+                self._drain_stats(report)
+                self._flush_sinks(report)
         except Exception as exc:
             report.error = str(exc)
             raise

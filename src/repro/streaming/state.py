@@ -19,6 +19,7 @@ order so downstream consumers see an ordered stream of closed windows.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 from .windows import WindowAssigner
@@ -40,6 +41,11 @@ class WindowTracker:
     finalized: int = 0
     late_dropped: int = 0
     _slots: dict[int, int] = field(default_factory=dict)   # slot → window idx
+    # wall-clock instant the watermark passed each active window's end —
+    # the "close" end of the close-to-emit latency histogram.  Transient
+    # (not checkpointed): latency is a property of one run's scheduling,
+    # and a restored run re-times replayed windows from its own clock.
+    closed_at: dict[int, float] = field(default_factory=dict)
 
     def __post_init__(self) -> None:
         if self.n_slots < 1:
@@ -97,10 +103,16 @@ class WindowTracker:
 
     # -- watermark ------------------------------------------------------------
     def observe(self, max_event_time: float) -> float:
-        """Advance the watermark (monotone) past a batch's max event time."""
+        """Advance the watermark (monotone) past a batch's max event time,
+        stamping the close instant of every window it passes."""
         wm = max_event_time - self.allowed_lateness
         if wm > self.watermark:
             self.watermark = wm
+            now = time.perf_counter()
+            for w in self.active:
+                if w not in self.closed_at \
+                        and self.assigner.window(w).end <= wm:
+                    self.closed_at[w] = now
         return self.watermark
 
     def ripe(self) -> list[tuple[int, int]]:
@@ -114,6 +126,7 @@ class WindowTracker:
         """Return a finalized window's slot to the ring."""
         slot = self.active.pop(window_index)
         del self._slots[slot]
+        self.closed_at.pop(window_index, None)
         self.finalized += 1
 
     # -- checkpointing ---------------------------------------------------------

@@ -1,0 +1,436 @@
+"""The pipelined streaming runtime and its one front door.
+
+Covers the three-lane scheduler (prepare/fold/drain): byte-identity of
+overlapped vs synchronous drives on every tee branch, exactly-once
+crash/restore with a batch prepared-but-unconsumed in the prefetch queue,
+batched sink writes (one ``put_many`` round trip per finalization sweep,
+identical bytes), carry-donation parity, the ``RunOptions`` knob block,
+``BuiltPipeline.run``'s dispatch by source kind, key-space sharding, and
+the escalated deprecation surface of the pre-Pipeline shims.
+"""
+
+import json
+from collections import Counter
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                 # hermetic container
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import MemoryStore, MetadataStore
+from repro.core.mapreduce import DeviceJobConfig, mapreduce
+from repro.pipeline import JoinSource, Pipeline, RunOptions, Windowing
+from repro.streaming import (StreamingConfig, StreamingCoordinator,
+                             StreamSource)
+
+W = 4
+_PROPERTY_SETTINGS = settings(max_examples=4, deadline=None)
+
+#: every scheduler lane off — the synchronous pre-async drive loop
+SYNC = RunOptions(overlap=False, sink_batching=False, donate_carry=False)
+
+
+def _events(n=1500, n_keys=6, span=200.0, seed=0, vmax=9):
+    rng = np.random.default_rng(seed)
+    ts = np.sort(rng.uniform(0, span, n))
+    keys = rng.integers(0, n_keys, n)
+    vals = rng.integers(0, vmax, n).astype(float)   # ints exact in fp32
+    return [(float(t), f"k{k}", float(v)) for t, k, v in zip(ts, keys, vals)]
+
+
+def _region(rec):
+    ts, key, value = rec
+    return ts, ("even" if int(key[1:]) % 2 == 0 else "odd"), value
+
+
+def _tee_pipeline(events, *, batch_records=150):
+    """Counts per 10 s teed into a top-k branch (device edge) and a
+    per-region rollup branch (host edge) — both transports under test."""
+    base = (Pipeline.from_source(records=events, batch_records=batch_records)
+            .key_by().window(Windowing.tumbling(10.0)).reduce("count"))
+    return base.tee(
+        Pipeline.branch().window(Windowing.tumbling(50.0)).reduce("sum")
+                .top_k(3).sink("async-top/"),
+        Pipeline.branch().map(_region).key_by()
+                .window(Windowing.tumbling(50.0)).reduce("sum")
+                .sink("async-region/"))
+
+
+def _chain_pipeline(events, *, batch_records=100, job_id="async-chain"):
+    return (Pipeline.from_source(records=events, batch_records=batch_records)
+            .key_by().window(10.0).reduce("sum").sink("async-out/")
+            .build(num_buckets=8, n_workers=W, job_id=job_id))
+
+
+def _stream(built, store, options, *, events=None, batch_records=100,
+            meta=None, flush=True):
+    src = (StreamSource.from_records(events, batch_records=batch_records)
+           if events is not None else None)
+    return built.run(src, store=store, meta=meta, options=options,
+                     mode="streaming", flush=flush)
+
+
+# ---------------------------------------------------------------------------
+# Determinism: every lane combination emits the same bytes
+# ---------------------------------------------------------------------------
+
+def test_overlap_matches_sync_byte_identical_on_all_branches():
+    """The acceptance criterion: the overlapped scheduler (prefetch +
+    deferred stats + batched sinks + donated carries) emits bit-identical
+    window bytes to the synchronous drive, on both branches of a tee."""
+    events = _events(n=2000, seed=41)
+    built = _tee_pipeline(events).build(num_buckets=12, n_workers=W,
+                                        job_id="async-tee")
+    sync_store, async_store = MemoryStore(), MemoryStore()
+    _stream(built, sync_store, SYNC)
+    report = _stream(built, async_store, RunOptions(overlap=True))
+    sync_out = built.collect_outputs(sync_store)
+    async_out = built.collect_outputs(async_store)
+    assert sync_out and async_out == sync_out       # byte for byte
+    assert {k.split("/", 1)[0] for k in async_out} \
+        == {"async-top", "async-region"}
+    # the drain lane records close→emit latency for every emitted window
+    assert len(report.emit_latencies) == report.windows_emitted > 0
+    assert report.p99_emit_latency >= report.p50_emit_latency >= 0.0
+
+
+@pytest.mark.parametrize("knob", ["overlap", "sink_batching", "donate_carry"])
+def test_each_lane_alone_is_byte_identical(knob):
+    """Each scheduler knob toggled on its own changes no output byte —
+    the lanes are pure scheduling, never semantics."""
+    events = _events(n=800, seed=43)
+    built = _chain_pipeline(events, job_id=f"async-{knob}")
+    ref_store, got_store = MemoryStore(), MemoryStore()
+    _stream(built, ref_store, SYNC)
+    one_on = RunOptions(**{**{"overlap": False, "sink_batching": False,
+                              "donate_carry": False}, knob: True})
+    _stream(built, got_store, one_on)
+    ref = built.collect_outputs(ref_store)
+    assert ref and built.collect_outputs(got_store) == ref
+
+
+# ---------------------------------------------------------------------------
+# Exactly-once across a mid-prefetch crash
+# ---------------------------------------------------------------------------
+
+class _Boom(RuntimeError):
+    pass
+
+
+class CrashingCoordinator(StreamingCoordinator):
+    """Crashes before processing micro-batch ``crash_batch`` — with the
+    prefetcher on, later batches are already host-prepared and sitting
+    unconsumed in the queue at that instant."""
+
+    def __init__(self, *args, crash_batch, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._crash_batch = crash_batch
+        self._processed = 0
+
+    def _process_prepared(self, prep, report):
+        if self._processed >= self._crash_batch:
+            raise _Boom(f"injected crash before batch {prep.index}")
+        super()._process_prepared(prep, report)
+        self._processed += 1
+
+
+class CountingStore(MemoryStore):
+    def __init__(self):
+        super().__init__()
+        self.put_counts = Counter()
+        self.put_many_calls = []
+
+    def put(self, key, data):
+        self.put_counts[key] += 1
+        return super().put(key, data)
+
+    def put_many(self, items):
+        self.put_many_calls.append(len(items))
+        return super().put_many(items)
+
+
+def _check_crash_restore(overlap: bool, seed: int, crash_batch: int) -> None:
+    """Crash while batch N folds and batch N+1 sits prepared in the
+    prefetch queue; a fresh coordinator restores from the checkpoint and
+    the stream converges to the uninterrupted run byte for byte on
+    *every* tee branch — each window object written exactly once, none
+    lost, with the overlapped and the synchronous loop alike (the record
+    offset only advances at the micro-batch barrier, so
+    prepared-but-unconsumed batches replay from the log)."""
+    events = _events(n=1000, n_keys=5, span=200.0, seed=seed)
+    opts = (RunOptions(prefetch_batches=2) if overlap else SYNC)
+
+    def build():
+        return _tee_pipeline(events, batch_records=100).build(
+            num_buckets=12, n_workers=W, checkpoint_interval=2,
+            job_id="async-crash")
+
+    ref_store = MemoryStore()
+    _stream(build(), ref_store, opts, events=events)
+    ref = build().collect_outputs(ref_store)
+
+    store, meta = CountingStore(), MetadataStore()
+    dead = CrashingCoordinator(store, meta, program=build(), options=opts,
+                               crash_batch=crash_batch)
+    with pytest.raises(_Boom):
+        dead.run_stream(StreamSource.from_records(events, batch_records=100),
+                        announce=False, flush=False)
+    report = _stream(build(), store, opts, events=events, meta=meta)
+    assert report.error is None
+    got = build().collect_outputs(store)
+    assert got == ref                               # no lost windows
+    for key in ref:
+        assert store.put_counts[key] == 1, key      # no duplicates either
+
+
+@_PROPERTY_SETTINGS
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8))
+def test_mid_prefetch_crash_restores_exactly_once(seed, crash_batch):
+    _check_crash_restore(True, seed, crash_batch)
+
+
+@_PROPERTY_SETTINGS
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8))
+def test_mid_stream_crash_restores_exactly_once_sync(seed, crash_batch):
+    _check_crash_restore(False, seed, crash_batch)
+
+
+# ---------------------------------------------------------------------------
+# Batched sinks: one store round trip per finalization sweep
+# ---------------------------------------------------------------------------
+
+def test_sink_batching_one_round_trip_per_sweep_same_bytes():
+    """With ``sink_batching`` on, every window emitted during one
+    finalization sweep lands through a single ``put_many`` round trip;
+    the per-object writes (and their bytes) are unchanged because the
+    base ``put_many`` loops ``put``."""
+    events = _events(n=1200, n_keys=8, span=300.0, seed=47)
+    built = _chain_pipeline(events, batch_records=600, job_id="async-sink")
+
+    plain = MemoryStore()
+    _stream(built, plain, SYNC, batch_records=600)
+    ref = built.collect_outputs(plain)
+
+    counting = CountingStore()
+    _stream(built, counting, RunOptions(overlap=False, donate_carry=False),
+            batch_records=600)
+    got = built.collect_outputs(counting)
+    assert ref and got == ref                       # bytes identical
+    # every window went through the batched path, in sweep-sized groups
+    window_keys = [k for k in counting.put_counts if k in ref]
+    assert sum(counting.put_many_calls) == len(window_keys)
+    assert max(counting.put_many_calls) >= 2        # a real multi-put sweep
+    for key in ref:
+        assert counting.put_counts[key] == 1        # base put_many loops put
+
+
+def test_checkpoint_never_passes_staged_writes():
+    """The barrier invariant: a checkpoint with staged-but-unwritten sink
+    bytes would lose windows on crash, so the coordinator refuses it."""
+    events = _events(n=300, seed=49)
+    built = _chain_pipeline(events, job_id="async-barrier")
+    coord = StreamingCoordinator(MemoryStore(), MetadataStore(),
+                                 program=built, options=RunOptions())
+    coord._pending_puts.append(("k", b"x", 0.0, 1.0, 1, 0.0))
+    with pytest.raises(RuntimeError, match="undrained lane"):
+        coord._save_state()
+
+
+# ---------------------------------------------------------------------------
+# RunOptions: validation and the shim boundary
+# ---------------------------------------------------------------------------
+
+def test_run_options_validation():
+    RunOptions().validate()                         # defaults are valid
+    RunOptions(prefetch_batches=1, checkpoint_interval=0,
+               shard=(2, 3)).validate()
+    with pytest.raises(ValueError, match="prefetch_batches"):
+        RunOptions(prefetch_batches=0).validate()
+    with pytest.raises(ValueError, match="checkpoint_interval"):
+        RunOptions(checkpoint_interval=-1).validate()
+    for bad in [(3, 3), (-1, 2), (0, 0)]:
+        with pytest.raises(ValueError, match="shard"):
+            RunOptions(shard=bad).validate()
+
+
+def test_streaming_config_rejects_run_options():
+    """The legacy shim predates the scheduler: combining it with
+    ``RunOptions`` is a ``ValueError`` pointing at the front door."""
+    cfg = StreamingConfig(window_size=10.0, num_buckets=8, n_workers=2,
+                          job_id="shim-opts")
+    with pytest.raises(ValueError, match=r"BuiltPipeline\.run"):
+        StreamingCoordinator(MemoryStore(), MetadataStore(), cfg,
+                             options=RunOptions())
+
+
+def test_streaming_config_shim_drives_sync_lanes():
+    """A cfg-driven coordinator runs the pre-async loop verbatim — every
+    scheduler lane off — so shim users see unchanged behavior."""
+    cfg = StreamingConfig(window_size=10.0, num_buckets=8, n_workers=2,
+                          job_id="shim-lanes")
+    with pytest.warns(DeprecationWarning, match="Pipeline"):
+        coord = StreamingCoordinator(MemoryStore(), MetadataStore(), cfg)
+    assert (coord.opts.overlap, coord.opts.sink_batching,
+            coord.opts.donate_carry) == (False, False, False)
+
+
+def test_shim_warnings_name_run_front_door_and_removal():
+    """Both pre-Pipeline shims now steer to ``BuiltPipeline.run`` and
+    carry a concrete removal milestone."""
+    cfg = StreamingConfig(window_size=10.0, num_buckets=8, n_workers=2,
+                          job_id="shim-warn")
+    with pytest.warns(DeprecationWarning, match=r"BuiltPipeline\.run") as rec:
+        StreamingCoordinator(MemoryStore(), MetadataStore(), cfg)
+    assert "removal in PR 8" in str(rec[0].message)
+
+    def map_fn(shard):
+        n = shard.shape[0]
+        return (np.zeros(n, np.int32), np.ones(n, np.float32),
+                np.ones(n, np.float32))
+
+    data = np.ones((2, 8), np.float32)
+    with pytest.warns(DeprecationWarning, match=r"BuiltPipeline\.run") as rec:
+        mapreduce(map_fn, data, DeviceJobConfig(num_buckets=4, n_workers=2))
+    warned = [str(w.message) for w in rec
+              if "mapreduce()" in str(w.message)]
+    assert warned and "removal in PR 8" in warned[0]
+
+
+# ---------------------------------------------------------------------------
+# run(): dispatch by source kind
+# ---------------------------------------------------------------------------
+
+def test_run_dispatches_records_to_batch_and_streams_to_streaming():
+    events = _events(n=600, seed=53)
+    built = _chain_pipeline(events, job_id="async-dispatch")
+    # records-bound graph, no argument → one-shot batch
+    outs, report = built.run()
+    assert outs and report.batches == 1             # one_shot: a single fold
+    # a live StreamSource → streaming (micro-batches), same bytes
+    store = MemoryStore()
+    rep2 = built.run(StreamSource.from_records(events, batch_records=100),
+                     store=store)
+    assert rep2.batches == 6
+    assert sorted(built.collect_outputs(store).values()) \
+        == sorted(outs.values())
+    # mode= pins the dispatch: records stream when forced
+    store3 = MemoryStore()
+    rep3 = built.run(store=store3, mode="streaming")
+    assert rep3.batches == 6
+    with pytest.raises(ValueError, match="mode"):
+        built.run(mode="sideways")
+
+
+def test_run_dispatches_array_pipeline_to_batch_plan():
+    def map_fn(shard):
+        n = shard.shape[0]
+        return (np.arange(n, dtype=np.int32) % 4, shard[:, 0],
+                np.ones(n, np.float32))
+
+    data = np.arange(2 * 8 * 3, dtype=np.float32).reshape(2, 8, 3)
+    built = (Pipeline.from_source(shards=data).map(map_fn).reduce("sum")
+             .build(num_buckets=4, n_workers=2))
+    result, _stats = built.run()                    # bound shards
+    result2, _stats2 = built.run(data)              # explicit data
+    np.testing.assert_allclose(np.asarray(result), np.asarray(result2))
+    with pytest.raises(ValueError, match="no streaming mode"):
+        built.run(data, mode="streaming")
+
+
+def test_run_accepts_join_pair_and_join_source():
+    left = _events(n=400, seed=57)
+    right = _events(n=400, seed=58)
+    built = (Pipeline.from_source(records=left, batch_records=100)
+             .key_by().window(20.0).reduce("sum")
+             .join(Pipeline.from_source(records=right, batch_records=100)
+                   .key_by().window(20.0).reduce("sum"))
+             .sink("async-join/")
+             .build(num_buckets=8, n_workers=W, job_id="async-join"))
+    outs, _report = built.run((left, right))        # pair of lists → batch
+    store = MemoryStore()
+    merged = JoinSource(StreamSource.from_records(left, batch_records=100),
+                        StreamSource.from_records(right, batch_records=100),
+                        batch_records=100)
+    built.run(merged, store=store)                  # JoinSource → streaming
+    assert outs and sorted(built.collect_outputs(store).values()) \
+        == sorted(outs.values())
+
+
+def test_checkpoint_interval_override_reaches_coordinator():
+    """``RunOptions.checkpoint_interval`` overrides the program's spacing
+    for one run without rebuilding the pipeline."""
+    events = _events(n=500, seed=59)
+    built = _chain_pipeline(events, job_id="async-ckpt")   # program: every batch
+    store, meta = MemoryStore(), MetadataStore()
+    _stream(built, store, RunOptions(checkpoint_interval=0),
+            events=events, meta=meta, flush=False)
+    coord = StreamingCoordinator(store, meta, program=built)
+    assert coord.checkpointed_offset() == 0         # 0 disables checkpoints
+    _stream(built, store, RunOptions(checkpoint_interval=2),
+            events=events, meta=meta, flush=False)
+    coord = StreamingCoordinator(store, meta, program=built)
+    assert coord.checkpointed_offset() == 400       # batch 4 of 5, interval 2
+
+
+# ---------------------------------------------------------------------------
+# Sharding: partition the key space, union the outputs
+# ---------------------------------------------------------------------------
+
+def _rows(outputs):
+    """window name → {key: value} across all of a run's output objects."""
+    rows = {}
+    for k, blob in outputs.items():
+        name = k.rsplit("/", 1)[1]
+        for ln in blob.splitlines():
+            key, val = json.loads(ln)
+            rows.setdefault(name, {})[key] = val
+    return rows
+
+
+def test_shard_union_equals_unsharded_run():
+    """``shard=(i, n)`` drives one key partition under a suffixed job id;
+    the shards' rows union — disjointly — to the unsharded run's."""
+    events = _events(n=1000, n_keys=6, seed=61)
+    built = _chain_pipeline(events, job_id="async-shard")
+    full = MemoryStore()
+    _stream(built, full, RunOptions())
+    want = _rows(built.collect_outputs(full))
+
+    union, seen_keys = {}, []
+    for i in range(3):
+        store = MemoryStore()
+        _stream(built, store, RunOptions(shard=(i, 3)))
+        outs = {m.key: store.get(m.key)
+                for m in store.list_objects("async-out/")}
+        assert all(f"async-shard-shard{i}of3/" in k for k in outs)
+        part = _rows(outs)
+        for name, per_key in part.items():
+            overlap = set(per_key) & set(union.get(name, {}))
+            assert not overlap                      # partitions are disjoint
+            union.setdefault(name, {}).update(per_key)
+        seen_keys.append({k for per in part.values() for k in per})
+    assert union == want                            # union == the whole
+    assert sum(map(len, seen_keys)) == len(set().union(*seen_keys))
+
+
+def test_shard_rejects_joins_and_arrays():
+    left = _events(n=100, seed=63)
+    joined = (Pipeline.from_source(records=left, batch_records=50)
+              .key_by().window(20.0).reduce("sum")
+              .join(Pipeline.from_source(records=left, batch_records=50)
+                    .key_by().window(20.0).reduce("sum"))
+              .sink("sj/").build(num_buckets=8, n_workers=2, job_id="sj"))
+    with pytest.raises(ValueError, match="single-input"):
+        joined.run((left, left), options=RunOptions(shard=(0, 2)))
+
+    def map_fn(shard):
+        n = shard.shape[0]
+        return (np.zeros(n, np.int32), shard[:, 0], np.ones(n, np.float32))
+
+    arr = (Pipeline.from_source(shards=np.ones((2, 4, 2), np.float32))
+           .map(map_fn).reduce("sum").build(num_buckets=4, n_workers=2))
+    with pytest.raises(ValueError, match="shard"):
+        arr.run(options=RunOptions(shard=(0, 2)))
