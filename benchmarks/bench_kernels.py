@@ -62,6 +62,34 @@ def run(print_rows=True) -> list[str]:
     rows.append(fmt_csv("kernels/flash_decode/b4_h8_s16k", us,
                         f"bytes_touched={2*4*2*16384*128*4}"))
 
+    # fused streaming fold: the pallas backend's one-kernel hash → window
+    # fan-out → (slot, bucket) scatter-accumulate vs the XLA chain it
+    # replaces, at several batch × slots × buckets shapes.  On this CPU the
+    # XLA ref JITs to native code while the kernel runs under the pallas
+    # interpreter, so the pair tracks decode/dispatch overhead, not the TPU
+    # win — that is the roofline streaming-fold row.  Interpret timing is
+    # only taken at the smallest shape to keep the bench budget flat.
+    from repro.kernels.fused_fold.ops import fold
+    for n, n_slots, nb in [(4096, 8, 64), (16384, 8, 256), (16384, 16, 1024)]:
+        cols = [rng.integers(0, 3 * n_slots, n), rng.integers(1, 5, n),
+                rng.integers(0, 1 << 20, n), rng.integers(0, 100, n),
+                np.ones(n)]
+        frows = jnp.asarray(np.stack(cols, axis=1), jnp.float32)
+        carry = jnp.zeros((n_slots * nb, 2), jnp.float32)
+        kwf = dict(fanout=4, n_slots=n_slots, num_buckets=nb,
+                   carry_buckets=nb, hashed=True, kind="sum")
+        us = _time(lambda r, c: fold(r, c, 0, use_pallas=False, **kwf),
+                   frows, carry)
+        derived = (f"pairs_per_s={4 * n / us * 1e6:.0f};"
+                   f"carry_cells={n_slots * nb}")
+        if n == 4096:
+            us_pal = _time(lambda r, c: fold(r, c, 0, use_pallas=True,
+                                             interpret=True, **kwf),
+                           frows, carry, n=2)
+            derived += f";pallas_interpret_us={us_pal:.0f}"
+        rows.append(fmt_csv(
+            f"kernels/fused_fold/n{n}_s{n_slots}_b{nb}", us, derived))
+
     # mamba selective scan
     b, L, d, ns = 1, 1024, 512, 16
     u = jnp.asarray(rng.normal(size=(b, L, d)), jnp.float32)

@@ -376,6 +376,33 @@ def run(print_rows: bool = True,
         sum(r.mean_batch_latency for r in reps_ri) * 1e6,
         f"wall_s={ri_wall:.3f};"
         f"windows={sum(r.windows_emitted for r in reps_ri)}"))
+    # the fold backend seam: the same sliding fan-out-4 workload compiled
+    # via the XLA chain (backend="vmap") vs the fused pallas kernel
+    # (backend="pallas").  Recorded, not gated: off-TPU the kernel runs
+    # under the pallas *interpreter*, so these rows track the dispatch
+    # seam's cost trajectory, not the kernel's HBM win (that placement is
+    # benchmarks/roofline.py's streaming-fold table).
+    def run_fold_backend(job_id: str, backend: str):
+        built = (Pipeline.from_source(records=events,
+                                      batch_records=SLIDING_BATCH)
+                 .key_by().window(Windowing.sliding(WINDOW_SIZE, slide))
+                 .reduce("sum")
+                 .build(num_buckets=N_KEYS, n_workers=8, n_slots=8,
+                        job_id=job_id, backend=backend))
+        return built.run(store=MemoryStore(), mode="streaming")
+
+    entry["fold_backend_records_per_sec"] = {}
+    for backend in ("vmap", "pallas"):
+        run_fold_backend(f"warm-fb-{backend}", backend)
+        rep_fb = run_fold_backend(f"fb-{backend}", backend)
+        entry["fold_backend_records_per_sec"][backend] = \
+            round(rep_fb.records_per_sec)
+        rows.append(fmt_csv(
+            f"streaming/fold_backend_{backend}",
+            rep_fb.mean_batch_latency * 1e6,
+            f"records_per_s={rep_fb.records_per_sec:.0f};"
+            f"windows={rep_fb.windows_emitted};"
+            + ("interpret=cpu" if backend == "pallas" else "jit=xla")))
     if write_json:
         _append_trajectory(entry)
     if print_rows:

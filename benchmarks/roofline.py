@@ -124,6 +124,71 @@ def analyse(dirpath: str, mesh: str = "single") -> list[dict]:
     return rows
 
 
+# -- streaming fold (kernels/fused_fold) placement -----------------------------
+#
+# The streaming engine's per-batch fold — hash, window fan-out, (slot,
+# bucket) scatter-accumulate — does a handful of VPU ops per byte, so on
+# any accelerator it sits deep in the memory-bound region of the roofline
+# and runtime ∝ HBM bytes moved.  Its placement is therefore the fraction
+# of peak bandwidth spent on *useful* traffic: the wire rows in, plus one
+# read-modify-write of the carry slab (S·C cells, S = n_slots · buckets).
+#
+#   useful     = n·row_bytes + 2·S·C·4
+#   fused      = useful + (tiles_s − 1)·n·row_bytes      (rows re-stream
+#                once per extra carry tile; one tile at these sizes)
+#   xla chain  = useful + hash ids (w+r) + the fan-out-expanded
+#                (slot, bucket, value, valid) pair matrix (w + one read
+#                per scatter pass: values, then counts)
+#
+# The fused kernel keeps the expansion in registers/VMEM, so its % of
+# peak bandwidth is ~100 and the XLA chain's falls with fanout — that
+# ratio is the kernel's headroom on real hardware (CPU interpret-mode
+# timings in bench_kernels.py cannot show it).
+
+FOLD_SHAPES = [
+    # (n records, fanout, n_slots, buckets, channels)
+    (16384, 1, 8, 256, 2),
+    (16384, 4, 8, 256, 2),
+    (65536, 4, 16, 1024, 2),
+    (65536, 8, 16, 4096, 4),
+]
+
+
+def streaming_fold_rows(shapes=FOLD_SHAPES) -> list[dict]:
+    out = []
+    for n, fanout, n_slots, buckets, ch in shapes:
+        row_b = 5 * 4 if fanout > 1 else 4 * 4
+        s = n_slots * buckets
+        m = n * fanout                       # fan-out-expanded pair count
+        useful = n * row_b + 2 * s * ch * 4
+        tiles_s = 1                          # carry fits one VMEM tile here
+        fused = useful + (tiles_s - 1) * n * row_b
+        xla = useful + 2 * n * 4 + m * 16 * 3
+        out.append({
+            "shape": f"n{n}_f{fanout}_s{n_slots}_b{buckets}",
+            "useful_bytes": useful, "fused_bytes": fused, "xla_bytes": xla,
+            "pct_peak_bw_fused": 100.0 * useful / fused,
+            "pct_peak_bw_xla": 100.0 * useful / xla,
+            "t_mem_fused_s": fused / HBM_BW,
+            "t_mem_xla_s": xla / HBM_BW,
+            "speedup": xla / fused,
+        })
+    return out
+
+
+def print_fold_table(rows: list[dict]) -> None:
+    hdr = (f"{'streaming_fold':24s} {'useful_MB':>10s} {'fused_MB':>9s} "
+           f"{'xla_MB':>9s} {'%bw_fused':>10s} {'%bw_xla':>8s} "
+           f"{'speedup':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['shape']:24s} {r['useful_bytes']/2**20:10.2f} "
+              f"{r['fused_bytes']/2**20:9.2f} {r['xla_bytes']/2**20:9.2f} "
+              f"{r['pct_peak_bw_fused']:10.1f} {r['pct_peak_bw_xla']:8.1f} "
+              f"{r['speedup']:7.2f}x")
+
+
 def print_table(rows: list[dict]) -> None:
     hdr = (f"{'arch':18s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
            f"{'t_coll':>9s} {'dom':>10s} {'useful':>7s} {'roofline':>9s} "
@@ -143,11 +208,16 @@ def main() -> None:
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
-    rows = analyse(args.dir)
-    print_table(rows)
+    rows = analyse(args.dir) if os.path.isdir(args.dir) else []
+    if rows:
+        print_table(rows)
+        print()
+    fold_rows = streaming_fold_rows()
+    print_fold_table(fold_rows)
     if args.json_out:
         with open(args.json_out, "w") as f:
-            json.dump(rows, f, indent=1)
+            json.dump({"archs": rows, "streaming_fold": fold_rows}, f,
+                      indent=1)
 
 
 if __name__ == "__main__":

@@ -10,12 +10,13 @@ tests are untouched.  See ``engine.stages`` for the stage bodies and
 from ..engine.stages import (INVALID, ShuffleStats, bucket_owner,
                              build_send_buffers, device_hash, exchange,
                              hash_partition, local_combine_dense,
-                             shuffle_aggregate, shuffle_aggregate_windowed,
-                             shuffle_group, sort_and_group)
+                             resolve_combine_fn, shuffle_aggregate,
+                             shuffle_aggregate_windowed, shuffle_group,
+                             sort_and_group)
 
 __all__ = [
     "INVALID", "ShuffleStats", "bucket_owner", "build_send_buffers",
     "device_hash", "exchange", "hash_partition", "local_combine_dense",
-    "shuffle_aggregate", "shuffle_aggregate_windowed", "shuffle_group",
-    "sort_and_group",
+    "resolve_combine_fn", "shuffle_aggregate", "shuffle_aggregate_windowed",
+    "shuffle_group", "sort_and_group",
 ]

@@ -1,4 +1,4 @@
-"""Backend lowering: one SPMD stage body, two execution substrates.
+"""Backend lowering: one SPMD stage body, three execution substrates.
 
 Every ``ExecutionPlan`` variant bottoms out here.  A *body* is a pure
 function over per-worker arrays that may call collectives (``psum``,
@@ -9,6 +9,15 @@ SPMD, the production path).  Placement is written once, as PartitionSpecs;
 the vmap backend derives its in/out axes from them (``P(axis)`` → batched
 at axis 0, ``P()`` → replicated), so both backends share one spec language
 and the stage bodies in ``stages.py`` never mention a backend.
+
+The third substrate, ``backend="pallas"``, does not lower a generic body
+at all: the streaming aggregate fold dispatches to the fused Pallas
+kernel (``kernels/fused_fold`` — hash → window fan-out →
+scatter-accumulate in one kernel over the flat carry) inside
+``plan.CompiledStreamAggregate``, with a single-slab carry in the
+shard_map (flat) wire layout.  ``lower`` only knows enough about it to
+say so in its error; ``default_pallas_interpret`` is the one switch every
+pallas caller consults for compile-vs-interpret.
 
 This module also owns the JAX version shim: jax >= 0.5 exposes
 ``jax.shard_map`` at top level with ``check_vma``; older releases (the
@@ -30,6 +39,18 @@ if hasattr(jax, "shard_map"):
 else:  # pragma: no cover - exercised on jax 0.4.x only
     from jax.experimental.shard_map import shard_map as _shard_map
     _SM_CHECK_KW = "check_rep"
+
+
+#: backends ``ExecutionPlan.compile`` accepts; "pallas" is valid only for
+#: plan shapes the fused fold covers (see plan.CompiledStreamAggregate)
+BACKENDS = ("vmap", "shard_map", "pallas")
+
+
+def default_pallas_interpret() -> bool:
+    """Interpret Pallas kernel bodies unless a real TPU can compile them —
+    the CI/container answer is always interpret (CPU executes the kernel
+    body as jax ops, bit-identically), the production answer is Mosaic."""
+    return jax.default_backend() != "tpu"
 
 
 def make_shard_map(body: Callable, mesh: jax.sharding.Mesh, in_specs,
@@ -78,8 +99,17 @@ def lower(body: Callable, *, axis_name: str, in_specs, out_specs,
         if mesh is None:
             raise ValueError("shard_map backend needs a mesh")
         fn = make_shard_map(body, mesh, tuple(in_specs), out_specs)
+    elif backend == "pallas":
+        # the fused kernel replaces the body wholesale; only the streaming
+        # aggregate plan knows how, so generic bodies cannot lower here
+        raise ValueError(
+            "backend='pallas' lowers the streaming aggregate fold only "
+            "(the fused kernels/fused_fold kernel, dispatched inside "
+            "CompiledStreamAggregate) — this plan shape has no pallas "
+            "lowering; use 'vmap' or 'shard_map'")
     else:
-        raise ValueError(f"unknown backend {backend!r}")
+        raise ValueError(f"unknown backend {backend!r} "
+                         f"(expected one of {BACKENDS})")
     if not jit:
         return fn
     return jax.jit(fn, donate_argnums=donate_argnums or ())

@@ -13,9 +13,11 @@ was already done by the host.  ``ReduceSpec`` says how values reduce: the
 ``reduce_scatter``) or the *group* mode (arbitrary ``reduce_fn`` over each
 key's full value list via the fixed-capacity ``all_to_all``).
 
-``ExecutionPlan.compile`` lowers one plan to one of two backends
+``ExecutionPlan.compile`` lowers one plan to one of three backends
 (``vmap`` — simulated workers on one device, ``shard_map`` — a real mesh
-axis) and returns a compiled object: ``run`` for one-shot batch jobs, or
+axis, ``pallas`` — the streaming aggregate fold as one fused
+``kernels/fused_fold`` kernel over a single flat carry slab) and returns a
+compiled object: ``run`` for one-shot batch jobs, or
 ``init_carry`` / ``step`` / ``read_slot`` / ``finalize_slot`` /
 ``clear_slot`` for streaming.  Batch one-shot, streaming incremental,
 aggregate, and group are all lowerings of this one layer — there is no
@@ -34,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import stages
-from .compile import lower
+from .compile import default_pallas_interpret, lower
 from .stages import ShuffleStats
 
 P = jax.sharding.PartitionSpec
@@ -166,7 +168,7 @@ class ReduceSpec:
 
     mode: str = "aggregate"         # "aggregate" | "group" | "top_k"
     reduce_fn: str | Callable = "sum"
-    combine_fn: Callable | None = None
+    combine_fn: str | Callable | None = None  # "pallas" names the kernel
     capacity: int = 0
     k: int = 0                      # top_k mode: selection capacity
     channels: int = 2               # carry width (2 per resident plan)
@@ -230,6 +232,14 @@ class ExecutionPlan:
             if self.window.fanout_on_device or rs.mode != "aggregate":
                 raise ValueError("session windows lower to the host-wire "
                                  "aggregate fold (fan-out 1) only")
+        if backend == "pallas" and self.window is not None:
+            if rs.mode == "group":
+                raise ValueError("backend='pallas' fuses the aggregate "
+                                 "fold; group-mode plans (record buffers + "
+                                 "all_to_all) lower via vmap/shard_map")
+            if rs.combine_fn is not None:
+                raise ValueError("backend='pallas' is already the fused "
+                                 "combiner; combine_fn does not apply")
         if self.window is None:
             if map_fn is None:
                 raise ValueError("batch plans need a map_fn")
@@ -504,6 +514,16 @@ class CompiledStreamAggregate:
     int32 ``[late_pairs, folded_pairs, 0]`` vector (device-fan-out plans
     mask+count late (record, window) pairs on-chip).  Built once per stream
     so XLA compiles one program for every batch.
+
+    ``backend="pallas"`` swaps the XLA body for the fused
+    ``kernels/fused_fold`` kernel: hash, window fan-out, watermark masking
+    and the scatter-accumulate all happen in one kernel over a single flat
+    ``(n_slots * carry_buckets, channels)`` carry slab (the shard_map wire
+    layout, so the coordinator and handoff edges need no new cases); the
+    donated-carry step becomes a true in-place update via the kernel's
+    ``input_output_aliases``.  Bit-parity with the XLA backends is
+    test-enforced.  Interpret-vs-compile follows
+    ``compile.default_pallas_interpret`` (interpret off-TPU).
     """
 
     def __init__(self, plan, map_fn, backend, mesh, jit):
@@ -516,17 +536,34 @@ class CompiledStreamAggregate:
         self.backend = backend
         self._per_worker = (ws.n_slots * carry_b) // plan.n_workers
         axis = plan.axis_name
-        if ws.fanout_on_device:
-            body = partial(_stream_agg_device_body, plan=plan)
-            in_specs = (P(axis), P(axis), P())
+        if backend == "pallas":
+            if not ws.fanout_on_device and map_fn is not None:
+                raise ValueError("backend='pallas' decodes the standard "
+                                 "host wire in-kernel; a custom map_fn "
+                                 "does not apply")
+            from ..kernels.fused_fold.ops import make_fold_step
+            self._lower_step = partial(
+                make_fold_step,
+                fanout=ws.fanout if ws.fanout_on_device else 1,
+                n_slots=ws.n_slots,
+                num_buckets=plan.key_space.num_buckets,
+                carry_buckets=carry_b,
+                channel_base=plan.reduce.channel_base,
+                hashed=plan.key_space.is_hashed,
+                host_wire=not ws.fanout_on_device,
+                interpret=default_pallas_interpret())
         else:
-            body = partial(_stream_agg_host_body, plan=plan,
-                           map_fn=map_fn or streaming_record_map)
-            in_specs = (P(axis), P(axis))
-        self._lower_step = partial(lower, body, axis_name=axis,
-                                   in_specs=in_specs,
-                                   out_specs=(P(axis), P()), backend=backend,
-                                   mesh=mesh, jit=jit)
+            if ws.fanout_on_device:
+                body = partial(_stream_agg_device_body, plan=plan)
+                in_specs = (P(axis), P(axis), P())
+            else:
+                body = partial(_stream_agg_host_body, plan=plan,
+                               map_fn=map_fn or streaming_record_map)
+                in_specs = (P(axis), P(axis))
+            self._lower_step = partial(lower, body, axis_name=axis,
+                                       in_specs=in_specs,
+                                       out_specs=(P(axis), P()),
+                                       backend=backend, mesh=mesh, jit=jit)
         self._step = self._lower_step()
         self._step_donating: Callable | None = None  # lowered on first use
         self._handoffs: dict[tuple, Callable] = {}  # (kind, rows) → handoff

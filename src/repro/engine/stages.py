@@ -264,6 +264,19 @@ def shuffle_group(keys: jax.Array, values: jax.Array, axis_name: str,
     return out_k, out_v, starts, stats
 
 
+def resolve_combine_fn(combine_fn):
+    """Resolve a combiner spec to a callable: ``None`` → the dense jnp
+    combiner, the string ``"pallas"`` → the ``kernels/hash_combine`` one-hot
+    MXU kernel (interpret mode off-TPU), a callable passes through — so
+    pipeline configs can name the kernel without importing it."""
+    if combine_fn == "pallas":
+        from ..kernels.hash_combine.ops import make_combine_fn
+        from .compile import default_pallas_interpret
+        return make_combine_fn(use_pallas=True,
+                               interpret=default_pallas_interpret())
+    return combine_fn or local_combine_dense
+
+
 def shuffle_aggregate(keys: jax.Array, values: jax.Array, axis_name: str,
                       num_buckets: int, valid: jax.Array | None = None,
                       combine_fn=None) -> jax.Array:
@@ -273,9 +286,10 @@ def shuffle_aggregate(keys: jax.Array, values: jax.Array, axis_name: str,
     reduced bucket vector — hash-partitioned ownership, exactly the paper's
     reducer assignment, fused into one collective.
     ``combine_fn(keys, values, num_buckets, valid)`` defaults to the dense jnp
-    combiner; the Pallas kernel slots in through this hook.
+    combiner; the Pallas ``hash_combine`` kernel slots in through this hook
+    (pass its ``make_combine_fn(...)`` product, or just ``"pallas"``).
     """
-    combine_fn = combine_fn or local_combine_dense
+    combine_fn = resolve_combine_fn(combine_fn)
     local = combine_fn(keys, values, num_buckets, valid)
     # reduce_scatter: sum over devices, scatter bucket ranges
     return jax.lax.psum_scatter(local, axis_name, scatter_dimension=0,

@@ -2,8 +2,12 @@
 #
 # The paper's measured bottleneck is the Mapper's buffer sort + combiner
 # (Figs. 7-8) -> kernels/hash_combine re-expresses it as one-hot MXU matmul
-# bucket reduction (see DESIGN.md section 4.1).  flash_attention and mamba_scan
-# cover the serving/training hot-spots of the assigned architectures.
+# bucket reduction (see DESIGN.md section 4.1).  kernels/fused_fold
+# generalizes it to the streaming engine's whole per-batch fold — hash,
+# window fan-out, and (slot, bucket) scatter-accumulate in one kernel, the
+# `backend="pallas"` substrate of ExecutionPlan.compile.  flash_attention
+# and mamba_scan cover the serving/training hot-spots of the assigned
+# architectures.
 #
 # Each kernel package: <name>/kernel.py (pl.pallas_call + explicit BlockSpec
 # VMEM tiling), <name>/ops.py (jit'd wrapper with interpret switch),

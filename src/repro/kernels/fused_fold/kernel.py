@@ -1,0 +1,219 @@
+"""fused_fold — the engine's streaming fold as one Pallas TPU kernel.
+
+The streaming hot loop (``engine/plan._stream_agg_device_body``) lowers
+today through four XLA ops per micro-batch: ``device_hash``/``bucketize``
+→ ``window_fanout`` (broadcast + iota) → ``segment_sum`` over the
+flattened (slot, bucket) id space → carry add.  Each materializes its
+fanout-expanded intermediates in HBM.  This kernel fuses the chain: rows
+stream through VMEM once per record tile, the hash / fan-out / watermark
+masking happen in registers, and values scatter-accumulate straight into
+the resident carry block — the carry is read from and written to HBM once
+per batch instead of once per op.
+
+Generalizes ``kernels/hash_combine`` (one-hot × MXU matmul bucket
+accumulation, grid over record tiles, out block resident across steps) in
+three directions:
+
+* the id space is (window slot × bucket), flattened over the carry's
+  bucket width, with the 1..fanout sliding-window replication and the
+  ``min_window`` late-pair masking computed in-kernel from iota
+  arithmetic (a late or uncovered pair gets flat id −1, whose one-hot row
+  is all zeros — masking is free);
+* the accumulator is the streaming *carry*: the output block seeds from
+  the carry input at the first record tile (``input_output_aliases``
+  makes the update in-place under donation) and the kernel returns the
+  folded ``[late, folded, 0]`` counters the watermark books need;
+* fold kinds ``sum``/``count`` take the MXU matmul path; ``min``/``max``
+  keep a masked running extremum on the VPU (count channel still summed,
+  so emptiness stays observable).
+
+Grid: ``(carry tiles, record tiles)`` — record tiles iterate innermost,
+so each carry tile stays resident in VMEM while every record tile streams
+past it.  VMEM per step: block_n·width rows + m·block_s one-hot +
+block_s·channels carry (m = block_n·fanout), fp32; defaults (block_n=256,
+fanout ≤ 8, carry tiles ≤ 4096 ids) stay well under 16 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import FOLD_KINDS, HOST_ROW, DEVICE_ROW
+
+INT32_MIN = -(2 ** 31)
+
+
+def _bucketize(keys, num_buckets: int, hashed: bool):
+    """In-kernel murmur3 finalizer — mirrors ``ref.murmur_bucket``."""
+    keys = keys.astype(jnp.int32)
+    if not hashed:
+        return keys
+    h = keys.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return (h % jnp.uint32(num_buckets)).astype(jnp.int32)
+
+
+def _fused_fold_kernel(rows_ref, carry_ref, minw_ref, out_ref, stats_ref, *,
+                       fanout: int, n_slots: int, num_buckets: int,
+                       carry_buckets: int, channel_base: int, hashed: bool,
+                       host_wire: bool, kind: str, block_s: int):
+    s = pl.program_id(0)            # carry (flat id) tile
+    i = pl.program_id(1)            # record tile — innermost, accumulates
+
+    @pl.when(i == 0)
+    def _seed():                    # out block = carry block + batch delta
+        out_ref[...] = carry_ref[...]
+
+    @pl.when((s == 0) & (i == 0))
+    def _zero_stats():
+        stats_ref[...] = jnp.zeros_like(stats_ref)
+
+    rows = rows_ref[...]            # (block_n, width) float32 wire rows
+    n = rows.shape[0]
+
+    # -- decode + fan-out + watermark masking (registers, no HBM traffic) --
+    if host_wire:                   # host already expanded; fan-out 1
+        slot = rows[:, 0].astype(jnp.int32)[:, None]
+        bucket = _bucketize(rows[:, 1], num_buckets, hashed)[:, None]
+        val = rows[:, 2][:, None]
+        live = (rows[:, 3] > 0)[:, None]
+        late = jnp.zeros((), jnp.int32)
+    else:
+        last = rows[:, 0].astype(jnp.int32)
+        n_windows = rows[:, 1].astype(jnp.int32)
+        bucket = _bucketize(rows[:, 2], num_buckets, hashed)[:, None]
+        val = rows[:, 3][:, None]
+        valid = rows[:, 4] > 0
+        j = jax.lax.broadcasted_iota(jnp.int32, (n, fanout), 1)
+        widx = last[:, None] - j
+        covers = valid[:, None] & (j < n_windows[:, None])
+        minw = minw_ref[0, 0]
+        live = covers & (widx >= minw)
+        late = jnp.sum((covers & (widx < minw)).astype(jnp.int32))
+        slot = jnp.mod(widx, n_slots)
+    flat = slot * carry_buckets + bucket            # (n, F) fan-out pairs
+    flat = jnp.where(live, flat, -1)                # dead pair → no one-hot
+    folded = jnp.sum(live.astype(jnp.int32))
+
+    m = n * (1 if host_wire else fanout)
+    rel = flat.reshape(m, 1) - s * block_s          # id within this tile
+    ids = jax.lax.broadcasted_iota(jnp.int32, (m, block_s), 1)
+    hit = rel == ids                                # (m, block_s) one-hot
+    valf = jnp.broadcast_to(val, (n, m // n)).reshape(m, 1)
+    channels = out_ref.shape[1]
+    ch = jax.lax.broadcasted_iota(jnp.int32, (1, channels), 1)
+
+    if kind in ("sum", "count"):
+        onehot = hit.astype(jnp.float32)
+        contrib = jnp.ones((m, 1), jnp.float32) if kind == "count" else valf
+        # [Σ value-or-one, Σ 1] per flat id — one (block_s × m)·(m × 2)
+        # matmul on the MXU; dead pairs have all-zero one-hot rows
+        pair = jnp.concatenate([contrib, jnp.ones((m, 1), jnp.float32)],
+                               axis=1)
+        acc = jax.lax.dot_general(onehot, pair, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        out_ref[...] += (
+            jnp.where(ch == channel_base, acc[:, 0:1], 0.0)
+            + jnp.where(ch == channel_base + 1, acc[:, 1:2], 0.0)
+        ).astype(out_ref.dtype)
+    else:                           # min / max: masked running extremum
+        neutral = jnp.float32(jnp.inf if kind == "min" else -jnp.inf)
+        cand = jnp.where(hit, jnp.broadcast_to(valf, (m, block_s)), neutral)
+        ext = cand.min(axis=0) if kind == "min" else cand.max(axis=0)
+        cnt = jnp.sum(hit.astype(jnp.float32), axis=0)
+        old = out_ref[...]
+        old_v = old[:, channel_base]
+        old_c = old[:, channel_base + 1]
+        eff = jnp.where(old_c > 0, old_v, neutral)
+        comb = jnp.minimum(eff, ext) if kind == "min" \
+            else jnp.maximum(eff, ext)
+        new_c = old_c + cnt
+        new_v = jnp.where(new_c > 0, comb, 0.0)
+        out_ref[...] = jnp.where(
+            ch == channel_base, new_v[:, None],
+            jnp.where(ch == channel_base + 1, new_c[:, None], old)
+        ).astype(out_ref.dtype)
+
+    @pl.when(s == 0)                # each record tile counted exactly once
+    def _count():
+        stats_ref[...] += jnp.concatenate(
+            [late.reshape(1, 1), folded.reshape(1, 1),
+             jnp.zeros((1, 1), jnp.int32)], axis=1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fanout", "n_slots", "num_buckets", "carry_buckets",
+                     "channel_base", "hashed", "host_wire", "kind",
+                     "block_n", "block_s", "interpret"))
+def fused_streaming_fold(rows, carry, min_window=None, *, fanout: int,
+                         n_slots: int, num_buckets: int, carry_buckets: int,
+                         channel_base: int = 0, hashed: bool = False,
+                         host_wire: bool = False, kind: str = "sum",
+                         block_n: int = 256, block_s: int | None = None,
+                         interpret: bool = False):
+    """One fused streaming fold: ``(rows, carry[, min_window]) →
+    (carry', [late, folded, 0])``.
+
+    rows : (N, 5) float32 device wire ``[last_window_index, n_windows,
+    key, value, valid]`` (or (N, 4) host wire ``[window_slot, key, value,
+    valid]`` with ``host_wire=True``); carry : the flattened
+    ``(n_slots * carry_buckets, channels)`` slab.  N pads to ``block_n``
+    internally (pad rows are invalid); ``block_s`` tiles the flat id space
+    (default: one resident tile).  Bit-parity oracle:
+    ``ref.fused_streaming_fold_ref``.
+    """
+    if kind not in FOLD_KINDS:
+        raise ValueError(f"unknown fold kind {kind!r}")
+    size, channels = carry.shape
+    if size != n_slots * carry_buckets:
+        raise ValueError(f"carry has {size} rows, expected "
+                         f"n_slots*carry_buckets = {n_slots * carry_buckets}")
+    width = HOST_ROW if host_wire else DEVICE_ROW
+    if rows.shape[1] != width:
+        raise ValueError(f"expected width-{width} wire rows, got "
+                         f"{rows.shape}")
+    block_s = block_s or size
+    if size % block_s:
+        raise ValueError("block_s must divide n_slots * carry_buckets")
+    minw = INT32_MIN if min_window is None else min_window
+    minw = jnp.asarray(minw, jnp.int32).reshape(1, 1)
+
+    n = rows.shape[0]
+    n_pad = (-n) % block_n
+    if n_pad:                       # zero rows decode as invalid
+        rows = jnp.pad(rows, ((0, n_pad), (0, 0)))
+    grid = (size // block_s, (n + n_pad) // block_n)
+
+    new_carry, stats = pl.pallas_call(
+        functools.partial(
+            _fused_fold_kernel, fanout=fanout, n_slots=n_slots,
+            num_buckets=num_buckets, carry_buckets=carry_buckets,
+            channel_base=channel_base, hashed=hashed, host_wire=host_wire,
+            kind=kind, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, width), lambda s, i: (i, 0)),
+            pl.BlockSpec((block_s, channels), lambda s, i: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s, i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_s, channels), lambda s, i: (s, 0)),
+            pl.BlockSpec((1, 3), lambda s, i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((size, channels), carry.dtype),
+            jax.ShapeDtypeStruct((1, 3), jnp.int32),
+        ],
+        input_output_aliases={1: 0},    # carry updates in place when donated
+        interpret=interpret,
+    )(rows, carry, minw)
+    return new_carry, stats[0]

@@ -1,0 +1,137 @@
+"""XLA reference for the fused streaming fold — the bit-parity oracle.
+
+Pure jnp re-statement of what one worker's slice of the engine's streaming
+aggregate step computes per micro-batch, without collectives: decode the
+wire rows, hash raw keys into buckets (murmur3 finalizer, bit-identical to
+``engine.stages.device_hash``), fan each record out to its 1..fanout
+overlapping window slots, mask + count pairs below the watermark bound,
+and scatter-accumulate ``[value, 1]`` pairs into the flattened
+``(n_slots * carry_buckets, channels)`` carry.  The Pallas kernel in
+``kernel.py`` must match this byte-for-byte (integer-valued float32 sums
+are order-independent, so sequential-tile vs segment-sum accumulation
+cannot drift).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: streaming wire widths (mirrors engine.plan HOST_FANOUT_ROW / DEVICE_FANOUT_ROW)
+HOST_ROW = 4    # [window_slot, key, value, valid]
+DEVICE_ROW = 5  # [last_window_index, n_windows, key, value, valid]
+
+#: fold kinds the fused kernel accumulates (count folds as sum-of-ones;
+#: mean is emission-side sum/count and needs no kind of its own)
+FOLD_KINDS = ("sum", "count", "min", "max")
+
+
+def murmur_bucket(keys: jax.Array, num_buckets: int,
+                  hashed: bool) -> jax.Array:
+    """Raw int32 keys → bucket ids; bit-exact mirror of
+    ``stages.bucketize`` (murmur3 finalizer, duplicated here so the kernel
+    package stays free of engine imports — parity is test-enforced)."""
+    keys = keys.astype(jnp.int32)
+    if not hashed:
+        return keys
+    h = keys.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return (h % jnp.uint32(num_buckets)).astype(jnp.int32)
+
+
+def _decode(rows, min_window, *, fanout, n_slots, num_buckets,
+            carry_buckets, hashed, host_wire):
+    """Wire rows → flattened (slot, bucket, value, live) pairs + counters.
+
+    Device wire: each record replicates ``fanout`` ways; copy j covers
+    window ``last - j``, is live when ``j < n_windows`` and the window is
+    still admissible (``>= min_window``); late pairs are counted, not
+    folded.  Host wire: the host already expanded records (fan-out 1) and
+    never ships late rows, so ``live == valid`` and late is 0.
+    """
+    if host_wire:
+        slots = rows[:, 0].astype(jnp.int32)[:, None]
+        bucket = murmur_bucket(rows[:, 1], num_buckets, hashed)[:, None]
+        vals = rows[:, 2][:, None]
+        live = (rows[:, 3] > 0)[:, None]
+        late = jnp.zeros((), jnp.int32)
+    else:
+        last = rows[:, 0].astype(jnp.int32)
+        n_windows = rows[:, 1].astype(jnp.int32)
+        bucket = murmur_bucket(rows[:, 2], num_buckets, hashed)[:, None]
+        vals = rows[:, 3][:, None]
+        valid = rows[:, 4] > 0
+        j = jax.lax.broadcasted_iota(jnp.int32, (rows.shape[0], fanout), 1)
+        widx = last[:, None] - j
+        covers = valid[:, None] & (j < n_windows[:, None])
+        live = covers & (widx >= min_window)
+        late = jnp.sum((covers & (widx < min_window)).astype(jnp.int32))
+        slots = jnp.mod(widx, n_slots)
+    # flatten (slot, bucket) over the carry's bucket width — wider than the
+    # plan's own key space when several plans share one carry
+    flat = slots * jnp.int32(carry_buckets) + bucket   # broadcast (n, F)
+    return flat, jnp.broadcast_to(vals, flat.shape), live, late
+
+
+def fused_streaming_fold_ref(rows, carry, min_window=None, *, fanout,
+                             n_slots, num_buckets, carry_buckets,
+                             channel_base=0, hashed=False, host_wire=False,
+                             kind="sum"):
+    """Oracle fold: ``(carry', stats)`` with stats int32 ``[late, folded,
+    0]`` — the single-worker contract of ``CompiledStreamAggregate.step``.
+
+    ``carry`` is the flattened ``(n_slots * carry_buckets, channels)``
+    slab.  ``sum``/``count`` accumulate into channels ``[channel_base,
+    channel_base + 1]`` (value-or-one, one); ``min``/``max`` keep the
+    running extremum in the value channel (empty cells stay 0 — the count
+    channel says whether the extremum is populated) and the count in the
+    next.
+    """
+    if kind not in FOLD_KINDS:
+        raise ValueError(f"unknown fold kind {kind!r}")
+    if min_window is None:
+        min_window = -(2 ** 31)
+    flat, vals, live, late = _decode(
+        rows, jnp.int32(min_window), fanout=fanout, n_slots=n_slots,
+        num_buckets=num_buckets, carry_buckets=carry_buckets, hashed=hashed,
+        host_wire=host_wire)
+    size, channels = carry.shape
+    # park dead pairs on an overflow row past the carry
+    seg = jnp.where(live, flat, size).reshape(-1)
+    vals = vals.reshape(-1)
+    ones = live.astype(carry.dtype).reshape(-1)
+    folded = jnp.sum(live.astype(jnp.int32))
+    ch = jax.lax.broadcasted_iota(jnp.int32, (1, channels), 1)
+
+    if kind in ("sum", "count"):
+        v = ones if kind == "count" else jnp.where(live.reshape(-1), vals, 0.0)
+        sums = jax.ops.segment_sum(v, seg, num_segments=size + 1)[:size]
+        cnts = jax.ops.segment_sum(ones, seg, num_segments=size + 1)[:size]
+        add = (jnp.where(ch == channel_base, sums[:, None], 0.0)
+               + jnp.where(ch == channel_base + 1, cnts[:, None], 0.0))
+        new = carry + add.astype(carry.dtype)
+    else:
+        neutral = jnp.inf if kind == "min" else -jnp.inf
+        masked = jnp.where(live.reshape(-1), vals, neutral)
+        if kind == "min":
+            ext = jax.ops.segment_min(masked, seg, num_segments=size + 1)
+        else:
+            ext = jax.ops.segment_max(masked, seg, num_segments=size + 1)
+        ext = ext[:size]
+        cnts = jax.ops.segment_sum(ones, seg, num_segments=size + 1)[:size]
+        old_v = carry[:, channel_base]
+        old_c = carry[:, channel_base + 1]
+        eff = jnp.where(old_c > 0, old_v, neutral)
+        comb = jnp.minimum(eff, ext) if kind == "min" \
+            else jnp.maximum(eff, ext)
+        new_c = old_c + cnts
+        new_v = jnp.where(new_c > 0, comb, 0.0)
+        new = jnp.where(ch == channel_base, new_v[:, None],
+                        jnp.where(ch == channel_base + 1, new_c[:, None],
+                                  carry))
+    stats = jnp.stack([late, folded, jnp.zeros((), jnp.int32)])
+    return new.astype(carry.dtype), stats

@@ -460,3 +460,70 @@ def test_batch_and_streaming_share_the_plan_layer():
     carry, _ = compiled.step(rows.reshape(W, 100, 5), carry, -(2 ** 31))
     window0 = compiled.read_slot(carry, 0)
     assert np.array_equal(window0[:, 0], np.asarray(batch)[:16])
+
+
+# ---------------------------------------------------------------------------
+# min/max segment kinds under hashed collisions + ring-slot reuse (property)
+# ---------------------------------------------------------------------------
+
+def _minmax_oracle(events, kind, *, assigner, num_buckets):
+    """Host-numpy oracle: per (window, hash bucket) extremum — colliding
+    keys share a bucket, so the group reducer sees their merged value
+    list; the emitted label is whichever key the coordinator saw first,
+    so comparison is by bucket, not by label."""
+    from repro.engine.stages import fold_key24, host_bucket
+    per = defaultdict(lambda: defaultdict(list))
+    for ts, key, v in events:
+        b = host_bucket(fold_key24(key), num_buckets)
+        for widx in assigner.assign(ts):
+            per[widx][b].append(v)
+    red = np.min if kind == "min" else np.max
+    return {w: {b: float(red(vs)) for b, vs in bs.items()}
+            for w, bs in per.items()}
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1),
+       st.integers(0, 1).map(lambda i: ("min", "max")[i]))
+def test_segment_minmax_hashed_collisions_ring_reuse(seed, kind):
+    """Property: ``min``/``max`` group reducers are exact under (a) hashed
+    key collisions — 40 raw keys folded into 8 buckets, every bucket a
+    merged value list — and (b) ring-slot reuse — sliding windows with
+    n_slots=4 while the stream spans ~20 window starts, so every slot is
+    cleared and refilled several times.  Oracle: host numpy over the same
+    bucket assignment."""
+    rng = np.random.default_rng(seed)
+    n = 1200
+    ts = np.sort(rng.uniform(0, 300.0, n))
+    keys = rng.integers(0, 40, n)
+    vals = rng.integers(-50, 50, n).astype(float)
+    events = [(float(t), f"key-{k}", float(v))
+              for t, k, v in zip(ts, keys, vals)]
+    out, report = _run_stream(events, f"pmm-{kind}-{seed}",
+                              window_size=30.0, window_slide=15.0,
+                              n_slots=4, mode="group", reduce_fn=kind,
+                              capacity=4096, num_buckets=8,
+                              key_space="hashed")
+    assert report.error is None
+    assert report.hash_collisions > 0           # 40 keys into 8 buckets
+    assigner = SlidingWindows(30.0, 15.0)
+    oracle = _minmax_oracle(events, kind, assigner=assigner, num_buckets=8)
+    from repro.engine.stages import fold_key24, host_bucket
+    seen = set()
+    for blob_key, blob in out.items():
+        # "window-{lo:.3f}-{hi:.3f}" — lo may be negative (window -1 spans
+        # [-15, 15)), so recover the index from hi, which never is.
+        hi = float(blob_key.rsplit("-", 1)[1])
+        widx = round((hi - 30.0) / 15.0)
+        # Colliding buckets emit "bucket-{b}[k1|k2|...]" labels; a bucket
+        # that happened to see one key keeps the raw key label.
+        def bucket_of(label):
+            if label.startswith("bucket-"):
+                return int(label[len("bucket-"):].split("[", 1)[0])
+            return host_bucket(fold_key24(label), 8)
+        got = {bucket_of(label): value
+               for label, value in
+               (json.loads(line) for line in blob.splitlines())}
+        assert got == pytest.approx(oracle[widx]), (kind, widx)
+        seen.add(widx)
+    assert seen == set(oracle)                  # every window emitted once

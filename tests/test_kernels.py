@@ -6,6 +6,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attention.kernel import flash_attention, flash_decode
+from repro.kernels.fused_fold.kernel import fused_streaming_fold
+from repro.kernels.fused_fold.ref import fused_streaming_fold_ref
 from repro.kernels.flash_attention.ops import chunked_attention
 from repro.kernels.flash_attention.ref import decode_ref, mha_ref
 from repro.kernels.hash_combine.kernel import hash_combine
@@ -159,3 +161,138 @@ def test_ssd_chunked_matches_recurrence():
         ys[:, i] = np.einsum("bn,bhnp->bhp", Cn[:, i], s)
     np.testing.assert_allclose(y, ys, rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(s_final, s, rtol=2e-4, atol=2e-4)
+
+
+# -- fused_fold (hash -> window fan-out -> scatter-accumulate) ------------------
+
+def _device_rows(n, *, fanout, n_slots, keymax, rng):
+    """5-col device wire [last_window, n_windows, key, value, valid] with
+    integer-valued payloads so fp32 sums are exact in any order."""
+    cols = [rng.integers(0, 3 * n_slots, n), rng.integers(1, fanout + 1, n),
+            rng.integers(0, keymax, n), rng.integers(-20, 100, n),
+            rng.random(n) > 0.15]
+    return jnp.asarray(np.stack(cols, axis=1), jnp.float32)
+
+
+def _host_rows(n, *, n_slots, keymax, rng):
+    """4-col host wire [window_slot, key, value, valid] (fan-out 1)."""
+    cols = [rng.integers(0, n_slots, n), rng.integers(0, keymax, n),
+            rng.integers(-20, 100, n), rng.random(n) > 0.15]
+    return jnp.asarray(np.stack(cols, axis=1), jnp.float32)
+
+
+@pytest.mark.parametrize("kind", ["sum", "count", "min", "max"])
+@pytest.mark.parametrize("hashed", [False, True], ids=["dense", "hashed"])
+def test_fused_fold_device_wire_sweep(kind, hashed):
+    """Kernel (interpret) vs the XLA ref on the 5-col device wire: fan-out
+    4, a min_window that drops some fan-outs as late, a ragged batch that
+    exercises the zero-pad tail, and multi-tile carry grid (block_s)."""
+    rng = np.random.default_rng(7)
+    n_slots, nb = 6, 24
+    kw = dict(fanout=4, n_slots=n_slots, num_buckets=nb, carry_buckets=nb,
+              hashed=hashed, kind=kind)
+    rows = _device_rows(999, fanout=4, n_slots=n_slots,
+                        keymax=(1 << 20) if hashed else nb, rng=rng)
+    carry = jnp.asarray(rng.integers(0, 5, (n_slots * nb, 2)), jnp.float32)
+    if kind in ("min", "max"):
+        carry = carry.at[:, 0].set(          # honour the carry contract:
+            jnp.where(carry[:, 1] > 0, carry[:, 0], 0.0))   # count 0 -> 0.0
+    got_c, got_s = fused_streaming_fold(rows, carry, 2, block_n=256,
+                                        block_s=48, interpret=True, **kw)
+    want_c, want_s = fused_streaming_fold_ref(rows, carry, 2, **kw)
+    assert np.array_equal(np.asarray(got_c), np.asarray(want_c))
+    assert np.array_equal(np.asarray(got_s), np.asarray(want_s))
+    assert int(got_s[0]) > 0                 # min_window really dropped some
+
+
+@pytest.mark.parametrize("kind", ["sum", "count", "min", "max"])
+def test_fused_fold_host_wire_sweep(kind):
+    rng = np.random.default_rng(11)
+    n_slots, nb = 4, 16
+    kw = dict(fanout=1, n_slots=n_slots, num_buckets=nb, carry_buckets=nb,
+              hashed=True, host_wire=True, kind=kind)
+    rows = _host_rows(500, n_slots=n_slots, keymax=1 << 20, rng=rng)
+    carry = jnp.zeros((n_slots * nb, 2), jnp.float32)
+    got_c, got_s = fused_streaming_fold(rows, carry, block_n=128,
+                                        interpret=True, **kw)
+    want_c, want_s = fused_streaming_fold_ref(rows, carry, **kw)
+    assert np.array_equal(np.asarray(got_c), np.asarray(want_c))
+    assert np.array_equal(np.asarray(got_s), np.asarray(want_s))
+
+
+def test_fused_fold_channel_embedding_leaves_neighbours():
+    """A shared carry (joins): fold into channels [2, 4) of a 6-channel
+    slab over carry_buckets > num_buckets — the other channels and the
+    out-of-range bucket rows must come back bit-identical."""
+    rng = np.random.default_rng(13)
+    n_slots, nb, cb = 4, 12, 16
+    kw = dict(fanout=2, n_slots=n_slots, num_buckets=nb, carry_buckets=cb,
+              channel_base=2, kind="sum")
+    rows = _device_rows(300, fanout=2, n_slots=n_slots, keymax=nb, rng=rng)
+    carry = jnp.asarray(rng.integers(0, 9, (n_slots * cb, 6)), jnp.float32)
+    got_c, _ = fused_streaming_fold(rows, carry, block_n=128,
+                                    interpret=True, **kw)
+    want_c, _ = fused_streaming_fold_ref(rows, carry, **kw)
+    assert np.array_equal(np.asarray(got_c), np.asarray(want_c))
+    got, old = np.asarray(got_c), np.asarray(carry)
+    assert np.array_equal(got[:, [0, 1, 4, 5]], old[:, [0, 1, 4, 5]])
+    untouched = np.arange(n_slots * cb) % cb >= nb    # buckets [nb, cb)
+    assert np.array_equal(got[untouched], old[untouched])
+
+
+def test_fused_fold_tiling_invariance():
+    """The grid decomposition is an implementation detail: any
+    (block_n, block_s) pair must produce the same bytes."""
+    rng = np.random.default_rng(17)
+    n_slots, nb = 8, 32
+    kw = dict(fanout=3, n_slots=n_slots, num_buckets=nb, carry_buckets=nb,
+              hashed=True, kind="sum")
+    rows = _device_rows(700, fanout=3, n_slots=n_slots, keymax=1 << 20,
+                        rng=rng)
+    carry = jnp.zeros((n_slots * nb, 2), jnp.float32)
+    ref = None
+    for block_n, block_s in [(128, None), (256, 64), (512, 128), (1024, 32)]:
+        c, s = fused_streaming_fold(rows, carry, 1, block_n=block_n,
+                                    block_s=block_s, interpret=True, **kw)
+        if ref is None:
+            ref = (np.asarray(c), np.asarray(s))
+        assert np.array_equal(np.asarray(c), ref[0]), (block_n, block_s)
+        assert np.array_equal(np.asarray(s), ref[1]), (block_n, block_s)
+
+
+def test_fused_fold_in_kernel_hash_matches_engine():
+    """The kernel duplicates the murmur bucketizer rather than importing
+    the engine (kernels stay dependency-free) — pin the two to the same
+    bits so they cannot drift apart."""
+    from repro.engine.stages import device_hash
+    from repro.kernels.fused_fold.ref import murmur_bucket
+    keys = jnp.asarray(np.random.default_rng(19).integers(0, 1 << 24, 4096),
+                       jnp.float32)
+    want = (device_hash(keys.astype(jnp.uint32)) % jnp.uint32(64)
+            ).astype(jnp.int32)
+    got = murmur_bucket(keys, 64, True)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_shuffle_aggregate_pallas_combiner_parity():
+    """`combine_fn="pallas"` routes the batch shuffle through the
+    hash_combine kernel (vmap-of-pallas, interpret off-TPU) — same bytes
+    as the default dense jnp combiner, through the reduce_scatter."""
+    import jax
+    from repro.core.shuffle import resolve_combine_fn, shuffle_aggregate
+    rng = np.random.default_rng(23)
+    W, n, nb = 4, 256, 32
+    keys = jnp.asarray(rng.integers(0, nb, (W, n)), jnp.int32)
+    vals = jnp.asarray(rng.integers(0, 50, (W, n)), jnp.float32)
+    valid = jnp.asarray(rng.random((W, n)) > 0.2)
+
+    def run(combine_fn):
+        f = jax.vmap(lambda k, v, ok: shuffle_aggregate(
+            k, v, "w", nb, valid=ok, combine_fn=combine_fn), axis_name="w")
+        return np.asarray(f(keys, vals, valid))
+
+    assert np.array_equal(run("pallas"), run(None))
+    # the resolved callable is the kernel product, not the jnp fallback
+    from repro.engine.stages import local_combine_dense
+    assert resolve_combine_fn("pallas") is not local_combine_dense
+    assert resolve_combine_fn(None) is local_combine_dense

@@ -1,0 +1,229 @@
+"""The fused Pallas streaming-fold backend (`backend="pallas"`).
+
+One kernel (``kernels/fused_fold``) replaces the XLA hash → window fan-out
+→ scatter-accumulate chain inside ``CompiledStreamAggregate.step``.  These
+tests pin the dispatch seam: the pallas backend (interpret mode — the
+kernel body executes on this CPU container) must be **byte-identical** to
+the ``vmap`` backend across the whole dispatch matrix — tumbling/sliding ×
+dense/hashed key spaces × overlap on/off — and through every plan shape
+the streaming engine runs (sessions' host wire, top-k, tee fan-out, joins
+sharing one carry at a nonzero channel base), including exactly-once
+crash/restore through a pallas-compiled plan (the ``test_async_runtime``
+harness, re-aimed).  Kernel-vs-ref parity lives in ``test_kernels.py``;
+this file owns plan- and pipeline-level parity.
+"""
+
+import numpy as np
+import pytest
+
+from test_async_runtime import (SYNC, W, CountingStore, CrashingCoordinator,
+                                _Boom, _events, _region, _stream)
+
+from repro.core import MemoryStore, MetadataStore
+from repro.engine.plan import (ExecutionPlan, KeySpace, ReduceSpec,
+                               WindowSpec)
+from repro.pipeline import JoinSource, Pipeline, RunOptions, Windowing
+from repro.streaming import StreamSource
+
+TUMBLING = Windowing.tumbling(10.0)
+SLIDING = Windowing.sliding(20.0, 5.0)
+
+
+def _chain(events, *, windowing, hashed, batch_records=100):
+    p = (Pipeline.from_source(records=events, batch_records=batch_records)
+         .key_by().window(windowing).reduce("sum").sink("pal/"))
+    kw = dict(num_buckets=8, n_workers=W, job_id="pal")
+    if hashed:
+        kw["key_space"] = "hashed"
+    return p, kw
+
+
+def _collect(p, kw, backend, events, options, batch_records=100):
+    built = p.build(backend=backend, **kw)
+    store = MemoryStore()
+    _stream(built, store, options, events=events,
+            batch_records=batch_records)
+    return built.collect_outputs(store)
+
+
+# ---------------------------------------------------------------------------
+# The dispatch matrix: windowing × key space × overlap
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("windowing", [TUMBLING, SLIDING],
+                         ids=["tumbling", "sliding"])
+@pytest.mark.parametrize("hashed", [False, True], ids=["dense", "hashed"])
+def test_pallas_matches_vmap_byte_identical(windowing, hashed):
+    """Every (window kind, key space, overlap) cell: same window objects,
+    same bytes.  Integer-valued test values make float32 sums exact, so
+    the kernel's sequential-tile accumulation cannot drift from the
+    reduce_scatter's."""
+    events = _events(n=1200, seed=11)
+    p, kw = _chain(events, windowing=windowing, hashed=hashed)
+    ref = _collect(p, kw, "vmap", events, SYNC)
+    assert ref
+    for overlap in (False, True):
+        opts = RunOptions(overlap=True) if overlap else SYNC
+        got = _collect(p, kw, "pallas", events, opts)
+        assert got == ref
+
+
+def test_pallas_sessions_host_wire():
+    """Session windows ship the 4-column host wire (fan-out 1) — the
+    kernel's host_wire decode path, plus the carry cell ops."""
+    events = _events(n=900, n_keys=4, span=300.0, seed=13)
+    p = (Pipeline.from_source(records=events, batch_records=100)
+         .key_by().window(Windowing.session(3.0)).reduce("sum")
+         .sink("sess/"))
+    kw = dict(num_buckets=8, n_workers=W, job_id="pal-sess")
+    ref = _collect(p, kw, "vmap", events, SYNC)
+    got = _collect(p, kw, "pallas", events, RunOptions(overlap=True))
+    assert ref and got == ref
+
+
+def test_pallas_top_k_and_tee_branches():
+    """A teed DAG — top-k on the device-handoff branch, per-region rollup
+    on the host-record branch — emits the same bytes on every branch."""
+    events = _events(n=1200, seed=17)
+    base = (Pipeline.from_source(records=events, batch_records=150)
+            .key_by().window(Windowing.tumbling(10.0)).reduce("count"))
+    p = base.tee(
+        Pipeline.branch().window(Windowing.tumbling(50.0)).reduce("sum")
+                .top_k(3).sink("pal-top/"),
+        Pipeline.branch().map(_region).key_by()
+                .window(Windowing.tumbling(50.0)).reduce("sum")
+                .sink("pal-region/"))
+    kw = dict(num_buckets=12, n_workers=W, job_id="pal-tee")
+    ref = _collect(p, kw, "vmap", events, SYNC, batch_records=150)
+    got = _collect(p, kw, "pallas", events, RunOptions(overlap=True),
+                   batch_records=150)
+    assert ref and got == ref
+    assert {k.split("/", 1)[0] for k in ref} == {"pal-top", "pal-region"}
+
+
+def test_pallas_join_shared_carry():
+    """Two joined plans share one carry at disjoint channel bases — the
+    kernel's channel embedding must leave the other side's channels
+    untouched, batch after batch."""
+    left_ev = _events(n=800, seed=19)
+    right_ev = _events(n=800, seed=23)
+    left = (Pipeline.from_source(records=left_ev, batch_records=100)
+            .key_by().window(Windowing.tumbling(20.0)).reduce("sum"))
+    right = (Pipeline.from_source(records=right_ev, batch_records=100)
+             .key_by().window(Windowing.tumbling(20.0)).reduce("count"))
+    p = left.join(right).sink("pal-join/")
+
+    def run(backend):
+        built = p.build(num_buckets=8, n_workers=W, job_id="pal-join",
+                        backend=backend)
+        store = MemoryStore()
+        src = JoinSource(
+            StreamSource.from_records(left_ev, batch_records=100),
+            StreamSource.from_records(right_ev, batch_records=100), 100)
+        built.run(src, store=store, options=RunOptions(overlap=True),
+                  mode="streaming")
+        return built.collect_outputs(store)
+
+    ref, got = run("vmap"), run("pallas")
+    assert ref and got == ref
+
+
+# ---------------------------------------------------------------------------
+# Exactly-once crash/restore through a pallas-compiled plan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("overlap", [False, True], ids=["sync", "overlap"])
+def test_pallas_crash_restore_exactly_once(overlap):
+    """Kill the coordinator mid-stream and restore from the checkpoint:
+    the pallas-compiled plan converges to the uninterrupted vmap run byte
+    for byte, each window written exactly once — the carry checkpoints
+    (flat slab layout) round-trip through the fused kernel unchanged."""
+    events = _events(n=1000, n_keys=5, span=200.0, seed=29)
+    opts = RunOptions(prefetch_batches=2) if overlap else SYNC
+
+    def build(backend="pallas"):
+        p = (Pipeline.from_source(records=events, batch_records=100)
+             .key_by().window(Windowing.sliding(20.0, 5.0)).reduce("sum")
+             .sink("pal-crash/"))
+        return p.build(num_buckets=8, n_workers=W, checkpoint_interval=2,
+                       job_id="pal-crash", backend=backend)
+
+    vmap_store = MemoryStore()
+    _stream(build("vmap"), vmap_store, opts, events=events)
+    ref = build("vmap").collect_outputs(vmap_store)
+
+    store, meta = CountingStore(), MetadataStore()
+    dead = CrashingCoordinator(store, meta, program=build(), options=opts,
+                               crash_batch=3)
+    with pytest.raises(_Boom):
+        dead.run_stream(StreamSource.from_records(events, batch_records=100),
+                        announce=False, flush=False)
+    report = _stream(build(), store, opts, events=events, meta=meta)
+    assert report.error is None
+    got = build().collect_outputs(store)
+    assert ref and got == ref                       # no lost windows
+    for key in ref:
+        assert store.put_counts[key] == 1, key      # no duplicates
+
+
+# ---------------------------------------------------------------------------
+# Plan-level step parity (donation, carry layout, slot reads)
+# ---------------------------------------------------------------------------
+
+def _device_rows(rng, n, fanout, n_slots, keymax):
+    last = rng.integers(0, 3 * n_slots, n)
+    nw = rng.integers(1, fanout + 1, n)
+    keys = rng.integers(0, keymax, n)
+    vals = rng.integers(0, 100, n)
+    valid = rng.random(n) > 0.1
+    return np.stack([last, nw, keys, vals, valid], axis=1).astype(np.float32)
+
+
+@pytest.mark.parametrize("hashed", [False, True], ids=["dense", "hashed"])
+def test_step_parity_with_donation_and_slot_ops(hashed):
+    """Drive the compiled steps directly: two folds (second with the carry
+    donated — in-place via the kernel's input_output_aliases), identical
+    carries, stats, and read_slot/top_k_slot views across backends."""
+    rng = np.random.default_rng(31)
+    n_slots, nb = 8, 16
+    ks = KeySpace.hashed(nb, False) if hashed else KeySpace.dense(nb)
+    plan = ExecutionPlan(ks, ReduceSpec(mode="top_k", k=3), W,
+                         WindowSpec(100.0, 25.0, n_slots))
+    cv = plan.compile(backend="vmap")
+    cp = plan.compile(backend="pallas")
+    keymax = (1 << 20) if hashed else nb
+    carry_v, carry_p = cv.init_carry(), cp.init_carry()
+    assert carry_v.shape == (W, n_slots * nb // W, 2)
+    assert carry_p.shape == (n_slots * nb, 2)       # flat single slab
+    for step, donate in ((0, False), (1, True)):
+        rows = _device_rows(rng, 400, plan.window.fanout, n_slots, keymax)
+        carry_v, sv = cv.step(rows.reshape(W, 100, 5), carry_v, 2,
+                              donate=donate)
+        carry_p, sp = cp.step(rows, carry_p, 2, donate=donate)
+        assert np.array_equal(np.asarray(sv), np.asarray(sp))
+        assert np.array_equal(np.asarray(carry_v).reshape(-1, 2),
+                              np.asarray(carry_p))
+    for slot in range(n_slots):
+        assert np.array_equal(cv.read_slot(carry_v, slot),
+                              cp.read_slot(carry_p, slot))
+    for a, b in zip(cv.top_k_slot(carry_v, 3), cp.top_k_slot(carry_p, 3)):
+        assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch validation: shapes without a pallas lowering say so
+# ---------------------------------------------------------------------------
+
+def test_pallas_rejects_unsupported_plan_shapes():
+    ks, ws = KeySpace.dense(16), WindowSpec(100.0, 25.0, 8)
+    with pytest.raises(ValueError, match="group-mode"):
+        ExecutionPlan(ks, ReduceSpec(mode="group", capacity=8), W,
+                      ws).compile(backend="pallas")
+    with pytest.raises(ValueError, match="streaming aggregate fold only"):
+        ExecutionPlan(ks, ReduceSpec(), W).compile(
+            map_fn=lambda s: None, backend="pallas")
+    with pytest.raises(ValueError, match="combine_fn does not apply"):
+        ExecutionPlan(ks, ReduceSpec(combine_fn="pallas"), W,
+                      ws).compile(backend="pallas")
+    with pytest.raises(ValueError, match="unknown backend"):
+        ExecutionPlan(ks, ReduceSpec(), W, ws).compile(backend="mosaic")
