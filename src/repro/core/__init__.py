@@ -7,29 +7,31 @@ Host plane (paper-faithful components):
 
 Device plane (the TPU-native realization):
   shuffle (hash-partition all_to_all / reduce_scatter),
-  mapreduce (SPMD map→combine→shuffle→reduce→finalize).
+  mapreduce (device-engine helpers; one-shot jobs are authored as
+  ``repro.pipeline`` programs since the PR 8 shim removal).
 """
 
 from .autoscaler import AutoscalerConfig, ServerlessPool
-from .client import Job, MapReduce
+from .client import Job, JobServiceClient, MapReduce
 from .coordinator import Coordinator, JobReport, JobState
 from .events import CloudEvent, EventBus
 from .job import JobConfig, make_wordcount_job
 from .mapreduce import (DeviceJobConfig, clear_window_slot, init_window_carry,
-                        make_incremental_step, mapreduce, read_window_slot,
+                        make_incremental_step, read_window_slot,
                         segment_reduce)
 from .metadata import MetadataStore
 from .splitter import ByteRange, split_object, split_prefix
-from .storage import FileStore, MemoryStore, ObjectStore
+from .storage import (FileStore, MemoryStore, NamespacedStore, ObjectStore,
+                      QuotaExceeded)
 from .workers import read_final_output, run_mapper, run_reducer
 
 __all__ = [
     "AutoscalerConfig", "ServerlessPool", "Job", "MapReduce", "Coordinator",
     "JobReport", "JobState", "CloudEvent", "EventBus", "JobConfig",
-    "make_wordcount_job", "DeviceJobConfig", "mapreduce", "segment_reduce",
+    "make_wordcount_job", "DeviceJobConfig", "segment_reduce",
     "make_incremental_step", "init_window_carry", "read_window_slot",
     "clear_window_slot",
     "MetadataStore", "ByteRange", "split_object", "split_prefix", "FileStore",
-    "MemoryStore", "ObjectStore", "read_final_output", "run_mapper",
-    "run_reducer",
+    "MemoryStore", "NamespacedStore", "ObjectStore", "QuotaExceeded",
+    "JobServiceClient", "read_final_output", "run_mapper", "run_reducer",
 ]

@@ -61,6 +61,8 @@ class ServerlessPool:
         self.cold_starts = 0
         self.total_invocations = 0
         self.cold_start_seconds = 0.0
+        self.scale_downs = 0           # retire events (reap / scale-to-zero)
+        self._last_active = time.time()
 
     # -- KPA / KEDA sizing ----------------------------------------------------
     def _clamped_scale(self, demand: int, per_replica: int) -> int:
@@ -93,6 +95,8 @@ class ServerlessPool:
                 self.cold_starts += 1
                 self.cold_start_seconds += self.config.cold_start
                 added += 1
+            if added:
+                self._last_active = time.time()
         if added and self.config.cold_start > 0:
             # concurrent activations: one cold-start wait, not ``added``
             time.sleep(self.config.cold_start)
@@ -143,17 +147,33 @@ class ServerlessPool:
             dead = idle[:allowed]
             for i in dead:
                 del self._instances[i]
+            self.scale_downs += len(dead)
         return len(dead)
 
-    def scale_to_zero(self) -> None:
+    def scale_to_zero(self) -> int:
+        """Retire every idle instance immediately — the job server's park
+        path, which need not wait out the grace window because the barrier
+        checkpoint already made the workers' state recoverable.  Returns
+        instances retired."""
         with self._lock:
-            self._instances = {i: inst for i, inst in self._instances.items()
-                               if inst.busy}
+            keep = {i: inst for i, inst in self._instances.items()
+                    if inst.busy}
+            retired = len(self._instances) - len(keep)
+            self._instances = keep
+            self.scale_downs += retired
+        return retired
+
+    def idle_for(self) -> float:
+        """Seconds since the pool last ran (or pre-activated) anything —
+        the lifecycle controller's park signal."""
+        with self._lock:
+            return time.time() - self._last_active
 
     # -- invocation -------------------------------------------------------------
     def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> Any:
         inst, cold = self._acquire()
         self.total_invocations += 1
+        self._last_active = time.time()
         if cold:
             self.cold_starts += 1
             if self.config.cold_start > 0:
@@ -171,4 +191,5 @@ class ServerlessPool:
             "cold_starts": self.cold_starts,
             "invocations": self.total_invocations,
             "cold_start_seconds": round(self.cold_start_seconds, 6),
+            "scale_downs": self.scale_downs,
         }

@@ -126,3 +126,66 @@ class MapReduce:
 
     def run_sync(self) -> list[list[str]]:
         return asyncio.run(self.run())
+
+
+class JobServiceClient:
+    """The job server's client package — the streaming twin of
+    :class:`MapReduce`.
+
+    Submission and the lifecycle verbs (pause/resume/cancel) delegate to
+    the server's control plane, but *monitoring reads only the metadata
+    records* (``job_record_key``), exactly as the paper's client polls
+    Redis rather than the coordinator process — so a dashboard process
+    holding just the MetadataStore sees the same state the server wrote.
+    ``run()`` drives the server until every submitted job completes,
+    awaiting asynchronously like Fig. 4's multi-job runner.
+    """
+
+    def __init__(self, server, poll_interval: float = 0.02) -> None:
+        self.server = server
+        self.poll_interval = poll_interval
+
+    # -- submission / lifecycle verbs (RPC surface) --------------------------
+    def submit(self, tenant: str, program, **kwargs) -> str:
+        return self.server.submit(tenant, program, **kwargs)
+
+    def pause(self, job_id: str) -> None:
+        self.server.pause(job_id)
+
+    def resume(self, job_id: str) -> None:
+        self.server.resume(job_id)
+
+    def cancel(self, job_id: str) -> None:
+        self.server.cancel(job_id)
+
+    # -- monitoring (metadata-only, like the paper's Redis polling) ----------
+    def status(self, job_id: str) -> dict[str, Any]:
+        from .metadata import job_record_key
+        rec = self.server.meta.hgetall(job_record_key(job_id))
+        if not rec:
+            raise KeyError(f"unknown job: {job_id}")
+        return rec
+
+    def jobs(self) -> list[str]:
+        from .metadata import job_index_key
+        return list(self.server.meta.get(job_index_key(), []))
+
+    async def wait(self, job_id: str, states: tuple[str, ...] = ("DONE",
+                   "CANCELLED", "FAILED")) -> str:
+        while True:
+            state = self.status(job_id)["state"]
+            if state in states:
+                return state
+            await asyncio.sleep(self.poll_interval)
+
+    async def run(self) -> dict[str, str]:
+        """Drive the server to completion; returns {job_id: final state}."""
+        loop = asyncio.get_running_loop()
+        fut = loop.run_in_executor(None, self.server.run_until_complete)
+        while not fut.done():
+            await asyncio.sleep(self.poll_interval)
+        fut.result()
+        return {jid: self.status(jid)["state"] for jid in self.jobs()}
+
+    def run_sync(self) -> dict[str, str]:
+        return asyncio.run(self.run())

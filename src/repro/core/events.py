@@ -139,6 +139,31 @@ class EventBus:
         with self._lock:
             self._offsets[(group, topic, partition)] = offset
 
+    def fetch(self, topic: str, partition: int = 0, offset: int = 0,
+              max_records: int | None = None) -> list[Record]:
+        """Group-less record-addressed read: the log from ``offset`` on.
+
+        Consumer groups share one cursor per partition; a *subscriber*
+        keeps its own.  The job server's shared-ingest fan-out reads the
+        materialized stream this way — every subscriber replays from its
+        private record cursor (a late registrant starts at 0 and catches
+        up) without advancing anyone else's position.
+        """
+        t = self.topic(topic)
+        part = t.partitions[partition]
+        with part.cond:
+            if max_records is None:
+                return part.log[offset:]
+            return part.log[offset: offset + max_records]
+
+    def end_offset(self, topic: str, partition: int = 0) -> int:
+        """Next offset to be written — a subscriber's lag is
+        ``end_offset - cursor``."""
+        t = self.topic(topic)
+        part = t.partitions[partition]
+        with part.cond:
+            return len(part.log)
+
     def lag(self, group: str, topic: str) -> int:
         """Unconsumed records — the autoscaler's scaling signal (KPA uses
         concurrency; Kafka-based KEDA-style scaling uses consumer lag)."""
@@ -165,6 +190,21 @@ TOPIC_STATUS = "repro.status"      # worker → coordinator completion callbacks
 # window on STREAM_WINDOW for downstream consumers.
 TOPIC_STREAM_BATCH = "repro.stream.batch"
 TOPIC_STREAM_WINDOW = "repro.stream.window"
+
+# Job-service topics: the control plane announces every lifecycle
+# transition (submitted/running/parked/…) on JOB_LIFECYCLE, and each
+# shared source materializes its one physical log read onto a private
+# single-partition ``repro.ingest.<source>`` topic that all subscribing
+# jobs replay from their own record cursors.
+TOPIC_JOB_LIFECYCLE = "repro.job.lifecycle"
+TOPIC_INGEST_PREFIX = "repro.ingest."
+
+
+def ingest_topic(source_id: str) -> str:
+    """Topic name for one shared source's materialized record stream.
+    Single-partition by construction — the physical log is totally
+    ordered and every subscriber must replay it identically."""
+    return TOPIC_INGEST_PREFIX + source_id.strip("/").replace("/", ".")
 
 _event_counter = itertools.count()
 
@@ -203,6 +243,19 @@ def window_event(job_id: str, window_start: float, window_end: float,
         data={"job_id": job_id, "window_start": window_start,
               "window_end": window_end, "n_keys": n_keys,
               "output_key": output_key},
+    )
+
+
+def job_lifecycle_event(job_id: str, tenant: str, state: str,
+                        info: dict[str, Any] | None = None) -> CloudEvent:
+    """Control-plane transition notice on TOPIC_JOB_LIFECYCLE — the job
+    server's submit/pause/park/restore audit stream."""
+    return CloudEvent(
+        type=f"repro.job.{state}",
+        source="job-server",
+        subject=f"{tenant}/{job_id}",
+        data={"job_id": job_id, "tenant": tenant, "state": state,
+              **(info or {})},
     )
 
 

@@ -1,19 +1,16 @@
-"""Device-parallel MapReduce — compatibility façade over ``repro.engine``.
-
-``mapreduce()`` runs the full Coordinator workflow (split → map → combine →
-shuffle → reduce → finalize) as one SPMD program.  Workers are mesh devices;
-the Coordinator's synchronization is the collective schedule; spill traffic
-is ICI.  The host-side engine (`core.workers`) and this one implement the
-same semantics — ``tests/test_mapreduce.py`` holds them to the same answers.
+"""Device-parallel MapReduce helpers — a thin façade over ``repro.engine``.
 
 Since the execution-plan refactor the engine proper lives in
 ``repro.engine``: batch one-shot, streaming incremental, aggregate, and
 group modes are all lowerings of one ``ExecutionPlan.compile()``
 (``KeySpace`` × ``WindowSpec`` × ``ReduceSpec`` → vmap/shard_map backend).
-This module keeps the original call signatures and maps them onto plans;
-new call sites should build an ``ExecutionPlan`` directly — it also exposes
-hashed open key domains and on-device sliding-window fan-out, which this
-façade does not.
+What remains here are the original device-engine call signatures the
+streaming façade and the device tests still use — ``DeviceJobConfig``,
+the incremental-step builders, and the window-slot carry helpers.  The
+one-shot ``mapreduce()`` entry point was removed in PR 8, as its
+deprecation message scheduled: author the job as
+``repro.pipeline.Pipeline.from_source(shards=...).map(map_fn).reduce(...)``
+and drive it with ``BuiltPipeline.run(data)``.
 """
 
 from __future__ import annotations
@@ -30,7 +27,7 @@ from ..engine.plan import (ExecutionPlan, KeySpace, ReduceSpec, WindowSpec,
 from ..engine.stages import INT32_MAX, segment_reduce
 
 __all__ = [
-    "DeviceJobConfig", "mapreduce", "segment_reduce", "streaming_record_map",
+    "DeviceJobConfig", "segment_reduce", "streaming_record_map",
     "make_incremental_step", "init_window_carry", "read_window_slot",
     "clear_window_slot", "wordcount_map_factory", "INT32_MAX",
 ]
@@ -63,55 +60,6 @@ def _plan_from_config(cfg: DeviceJobConfig, mode: str, reduce_fn,
         reduce=ReduceSpec(mode=mode, reduce_fn=reduce_fn,
                           combine_fn=combine_fn, capacity=cfg.capacity),
         n_workers=cfg.n_workers, window=window, axis_name=cfg.axis_name)
-
-
-def mapreduce(map_fn: Callable, data, cfg: DeviceJobConfig, *,
-              mode: str = "aggregate", reduce_fn: str | Callable = "sum",
-              combine_fn: Callable | None = None, finalize: bool = True,
-              backend: str = "vmap", mesh: jax.sharding.Mesh | None = None,
-              data_spec=None, jit: bool = True,
-              key_space: KeySpace | None = None):
-    """Run a MapReduce job across ``cfg.n_workers`` SPMD workers.
-
-    ``map_fn(shard) -> (keys, values, valid)`` is the user's map UDF over the
-    worker's data shard (already split — the Splitter's output).  ``data`` has
-    leading axis ``n_workers`` (vmap backend) or is a global array to be
-    sharded over the mesh axis (shard_map backend).
-
-    Since the Pipeline redesign this façade is literally a two-node
-    pipeline — ``Pipeline.from_source(shards=...).map(map_fn).reduce(...)``
-    — lowered and run in batch mode, and calling it emits a
-    ``DeprecationWarning``.  Return shapes are unchanged from the
-    pre-plan engine: the aggregate bucket vector, or ``(group_keys,
-    group_values, group_valid, dropped)``.  Pass
-    ``key_space=KeySpace.hashed(...)`` (or build a ``Pipeline`` /
-    ``ExecutionPlan``) to open the key domain; collision accounting then
-    comes from ``ExecutionPlan.compile(...).run``'s ``ShuffleStats``.
-    """
-    import warnings
-    warnings.warn(
-        "mapreduce() is a deprecated shim that lowers onto the Pipeline "
-        "layer and is scheduled for removal in PR 8; author the job as "
-        "repro.pipeline.Pipeline.from_source(shards=...).map(map_fn)"
-        ".reduce(...) and drive it with BuiltPipeline.run(data) "
-        "instead", DeprecationWarning, stacklevel=2)
-    from ..pipeline import Pipeline   # lazy: core is imported by pipeline
-    p = Pipeline.from_source(shards=data).map(map_fn)
-    if mode == "group":
-        p = p.reduce(reduce_fn, mode="group", capacity=cfg.capacity)
-    else:
-        p = p.reduce("sum")           # aggregate: the fold sums map values
-    built = p.build(num_buckets=cfg.num_buckets, n_workers=cfg.n_workers,
-                    key_space=key_space if key_space is not None
-                    else "dense",
-                    backend=backend, mesh=mesh, data_spec=data_spec,
-                    finalize=finalize, jit=jit, combine_fn=combine_fn,
-                    axis_name=cfg.axis_name)
-    out, stats = built.run_batch(data=data)
-    if mode == "aggregate":
-        return out
-    gk, gv, gvalid = out
-    return gk, gv, gvalid, stats.dropped
 
 
 # ---------------------------------------------------------------------------

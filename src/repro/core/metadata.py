@@ -135,3 +135,17 @@ def task_status_key(job_id: str, role: str, worker_id: int) -> str:
 
 def stage_done_counter(job_id: str, role: str) -> str:
     return f"job:{job_id}:{role}:done"
+
+
+# -- job-service schema: the control plane's per-job records -----------------
+
+def job_record_key(job_id: str) -> str:
+    """Hash holding one submitted job's control-plane record (tenant,
+    state, sink prefixes, cursor, park/restore counters)."""
+    return f"jobsvc:job:{job_id}"
+
+
+def job_index_key() -> str:
+    """KV key whose value is the sorted list of all submitted job ids —
+    what ``status()`` and the registry's collision scan iterate."""
+    return "jobsvc:jobs"

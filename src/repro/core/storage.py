@@ -33,6 +33,10 @@ class NoSuchKey(StorageError):
     pass
 
 
+class QuotaExceeded(StorageError):
+    """A PUT would push a tenant's namespace past its byte quota."""
+
+
 @dataclass
 class ObjectMeta:
     key: str
@@ -237,6 +241,66 @@ class FileStore(ObjectStore):
                     st = os.stat(full)
                     out.append(ObjectMeta(key, st.st_size, st.st_mtime))
         return sorted(out, key=lambda m: m.key)
+
+
+class NamespacedStore(ObjectStore):
+    """A tenant's view of a shared bucket: one prefix, one byte quota.
+
+    Every key a job writes or reads through this view is transparently
+    prefixed with the tenant namespace, so two tenants running the *same*
+    program (same job id, same sink) on one physical store never touch
+    each other's objects — the multi-tenant isolation the paper gets from
+    per-team S3 prefixes and IAM policy.  ``quota_bytes`` bounds the
+    namespace's footprint: a PUT that would push the total past the quota
+    raises :class:`QuotaExceeded` *before* writing (replacing an object
+    frees its old bytes first, as S3 versioned-overwrite accounting does).
+
+    Listings come back namespace-relative, so callers — the coordinator's
+    resume scan, ``collect_outputs`` — see exactly the key space they
+    wrote.
+    """
+
+    def __init__(self, inner: ObjectStore, namespace: str,
+                 quota_bytes: int | None = None) -> None:
+        if not namespace.strip("/"):
+            raise StorageError("namespace must be non-empty")
+        self.inner = inner
+        self.namespace = namespace.strip("/") + "/"
+        self.quota_bytes = quota_bytes
+
+    def _k(self, key: str) -> str:
+        return self.namespace + key.lstrip("/")
+
+    def used_bytes(self) -> int:
+        return self.inner.total_size(self.namespace)
+
+    def put(self, key: str, data: bytes) -> None:
+        if self.quota_bytes is not None:
+            used = self.used_bytes()
+            try:
+                used -= self.inner.head(self._k(key)).size
+            except NoSuchKey:
+                pass
+            if used + len(data) > self.quota_bytes:
+                raise QuotaExceeded(
+                    f"namespace {self.namespace!r}: PUT of {len(data)} B "
+                    f"over {used} B used exceeds quota {self.quota_bytes} B")
+        self.inner.put(self._k(key), data)
+
+    def get(self, key: str, byte_range: tuple[int, int] | None = None) -> bytes:
+        return self.inner.get(self._k(key), byte_range)
+
+    def head(self, key: str) -> ObjectMeta:
+        m = self.inner.head(self._k(key))
+        return ObjectMeta(key, m.size, m.created)
+
+    def delete(self, key: str) -> None:
+        self.inner.delete(self._k(key))
+
+    def list_objects(self, prefix: str = "") -> list[ObjectMeta]:
+        ns = len(self.namespace)
+        return [ObjectMeta(m.key[ns:], m.size, m.created)
+                for m in self.inner.list_objects(self._k(prefix))]
 
 
 @dataclass

@@ -1,4 +1,5 @@
-"""Serving launcher: batched decode with a request queue.
+"""Serving launcher: batched decode with a request queue, plus the
+job-service RPC front end.
 
 CPU-scale driver (reduced configs) demonstrating the serving loop the
 decode_32k / long_500k dry-run cells lower at production scale: prefill on
@@ -7,6 +8,13 @@ batching-lite: finished sequences free their slot for queued requests).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --reduced \
       --requests 16 --max-new 32
+
+:class:`JobRPC` is the same skeleton pointed at the multi-tenant job
+server (``repro.service``): method-dispatch requests — the paper's
+HTTP-trigger role — onto the control plane's submit/pause/resume/cancel/
+status verbs, with programs referenced by registered name because a
+compiled ``BuiltPipeline`` never crosses the wire (the paper ships a JSON
+job config, not code).
 """
 
 from __future__ import annotations
@@ -91,6 +99,76 @@ class BatchedServer:
                 r.done = True
                 self.slots[i] = None       # free the slot (scale down)
         return len(active)
+
+
+class JobRPC:
+    """Transport-less RPC dispatch onto the multi-tenant job server.
+
+    One ``handle({"method": ..., ...params})`` call per request, answers
+    ``{"ok": True, "result": ...}`` or ``{"ok": False, "error": ...}`` —
+    the wire shape an HTTP trigger would carry, minus the socket.  A
+    compiled ``BuiltPipeline`` never crosses this boundary: ``register``
+    binds a program under a name server-side, and ``submit`` requests
+    reference that name (the paper submits a JSON job config the same
+    way).  Status polls answer purely from the metadata records, so a
+    monitoring process needs no server handle at all.
+    """
+
+    METHODS = ("register", "submit", "pause", "resume", "cancel",
+               "status", "jobs", "stats")
+
+    def __init__(self, server) -> None:
+        self.server = server
+        self.programs: dict[str, object] = {}
+
+    def register(self, name: str, program) -> None:
+        """Server-side program registry: name → BuiltPipeline."""
+        self.programs[name] = program
+
+    def handle(self, request: dict) -> dict:
+        method = request.get("method")
+        params = {k: v for k, v in request.items() if k != "method"}
+        if method not in self.METHODS:
+            return {"ok": False,
+                    "error": f"unknown method: {method!r}"}
+        try:
+            return {"ok": True, "result": getattr(self, f"_{method}")(
+                **params)}
+        except Exception as exc:                    # noqa: BLE001 — RPC edge
+            return {"ok": False, "error": f"{type(exc).__name__}: {exc}"}
+
+    # -- verbs ---------------------------------------------------------------
+    def _register(self, name, program):
+        self.register(name, program)
+        return name
+
+    def _submit(self, tenant, program, source_prefix, resume=False):
+        if program not in self.programs:
+            raise KeyError(f"no program registered as {program!r}")
+        return self.server.submit(tenant, self.programs[program],
+                                  source_prefix=source_prefix,
+                                  resume=resume)
+
+    def _pause(self, job_id):
+        self.server.pause(job_id)
+        return self.server.status(job_id)["state"]
+
+    def _resume(self, job_id):
+        self.server.resume(job_id)
+        return self.server.status(job_id)["state"]
+
+    def _cancel(self, job_id):
+        self.server.cancel(job_id)
+        return self.server.status(job_id)["state"]
+
+    def _status(self, job_id):
+        return self.server.status(job_id)
+
+    def _jobs(self):
+        return self.server.registry.jobs()
+
+    def _stats(self):
+        return self.server.stats()
 
 
 def _merge_slot(new, old, slot: int):

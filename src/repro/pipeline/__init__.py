@@ -12,9 +12,8 @@ in batch mode (one drive over an object-store prefix) or streaming mode
 (micro-batches via the ``StreamingCoordinator``) with bit-identical
 per-window results on every branch.
 
-The older entry points are thin shims over this package: ``mapreduce()``
-builds a two-node array pipeline, and ``StreamingConfig`` lowers to a
-single-chain record pipeline.
+This package is the only entry point: the ``mapreduce()`` and
+``StreamingConfig`` shims that once lowered onto it were removed in PR 8.
 
 Layout: ``graph`` (the chainable node vocabulary), ``lower`` (validation +
 plan lowering → ``BuiltPipeline``), ``runtime`` (the batch and streaming

@@ -136,7 +136,7 @@ class Pipeline:
         """Root a pipeline at a source: an event-log ``prefix`` in the
         object store, in-memory ``records``, device ``shards`` (array
         pipelines), or nothing — an *unbound* source whose data arrives at
-        run time (how the deprecated ``StreamingConfig`` shim lowers)."""
+        run time."""
         given = [x is not None for x in (prefix, records, shards)]
         if sum(given) > 1:
             raise PipelineError("pass at most one of prefix/records/shards")

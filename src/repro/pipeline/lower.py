@@ -337,7 +337,7 @@ class BuiltPipeline:
 
     # -- execution -------------------------------------------------------------
     def run(self, source_or_data=None, *, options=None, store=None,
-            meta=None, sources=None, bus=None, autoscaler=None,
+            meta=None, sources=None, bus=None, autoscaler=None, pool=None,
             announce: bool = True, flush: bool = True,
             mode: str | None = None):
         """The one front door for executing the program.  Dispatches by
@@ -353,8 +353,8 @@ class BuiltPipeline:
         from .runtime import run
         return run(self, source_or_data, options=options, store=store,
                    meta=meta, sources=sources, bus=bus,
-                   autoscaler=autoscaler, announce=announce, flush=flush,
-                   mode=mode)
+                   autoscaler=autoscaler, pool=pool, announce=announce,
+                   flush=flush, mode=mode)
 
     def run_streaming(self, store, meta, *, source=None, sources=None,
                       bus=None, autoscaler=None, announce: bool = True,
@@ -380,6 +380,29 @@ class BuiltPipeline:
         from .runtime import run_batch
         return run_batch(self, store, data=data, source=source,
                          sources=sources, options=options)
+
+
+def assert_no_prefix_collision(prefixes: "tuple[str, ...] | list[str]",
+                               claimed: dict[str, str]) -> None:
+    """Cross-job twin of the build-time distinctness check: reject a new
+    job whose normalized output prefixes collide with — equal, contain, or
+    fall under — a prefix another job already claimed on the *same* shared
+    ObjectStore.  ``claimed`` maps normalized prefix → owning job id.
+    Overlap (not just equality) is the collision condition because
+    ``collect_outputs`` and resume scans are prefix listings: a job whose
+    prefix nests inside another's would see — and count — its neighbor's
+    windows.
+    """
+    for pfx in prefixes:
+        p_norm = pfx.rstrip("/") + "/"
+        for other, owner in claimed.items():
+            if p_norm.startswith(other) or other.startswith(p_norm):
+                raise PipelineError(
+                    f"output prefix {p_norm!r} collides with {other!r} "
+                    f"already claimed by job {owner!r} on this store — "
+                    f"jobs sharing one ObjectStore need disjoint sink "
+                    f"prefixes (distinct sinks, job ids, or tenant "
+                    f"namespaces)")
 
 
 # ---------------------------------------------------------------------------

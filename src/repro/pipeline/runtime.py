@@ -177,8 +177,8 @@ def _shard_source(built: BuiltPipeline, store, source, sources,
 
 def run(built: BuiltPipeline, source_or_data=None, *,
         options: RunOptions | None = None, store=None, meta=None,
-        sources=None, bus=None, autoscaler=None, announce: bool = True,
-        flush: bool = True, mode: str | None = None):
+        sources=None, bus=None, autoscaler=None, pool=None,
+        announce: bool = True, flush: bool = True, mode: str | None = None):
     """The one front door for driving a built pipeline.
 
     ``source_or_data`` picks the mode: a ``StreamSource``/``JoinSource``
@@ -188,7 +188,9 @@ def run(built: BuiltPipeline, source_or_data=None, *,
     streaming, bound records → batch).  ``mode="streaming"|"batch"``
     forces the choice (what the ``run_streaming``/``run_batch`` delegates
     do).  ``options`` is the scheduler's knob block — see ``RunOptions``
-    for the lane each knob drives.
+    for the lane each knob drives.  ``pool=`` injects a shared
+    ``ServerlessPool`` so many programs (the job server's tenants) fold
+    on one physical worker pool instead of each owning a private one.
 
     Returns a ``StreamReport`` in streaming mode, ``(outputs, report)``
     for a windowed batch run, and ``(result, stats)`` for an array
@@ -237,8 +239,8 @@ def run(built: BuiltPipeline, source_or_data=None, *,
         store = store if store is not None else MemoryStore()
         meta = meta if meta is not None else MetadataStore()
         coord = StreamingCoordinator(store, meta, bus=bus,
-                                     autoscaler=autoscaler, program=built,
-                                     options=opts)
+                                     autoscaler=autoscaler, pool=pool,
+                                     program=built, options=opts)
         src = _resolve(built, store, source, sources)
         return coord.run_stream(src, announce=announce, flush=flush)
 
@@ -257,13 +259,13 @@ def run(built: BuiltPipeline, source_or_data=None, *,
 
 
 def run_streaming(built: BuiltPipeline, store, meta, *, source=None,
-                  sources=None, bus=None, autoscaler=None,
+                  sources=None, bus=None, autoscaler=None, pool=None,
                   announce: bool = True, flush: bool = True,
                   options: RunOptions | None = None):
     """Continuous mode, pinned: a thin delegate through :func:`run` with
     ``mode="streaming"`` (so a records-bound graph still streams)."""
     return run(built, source, store=store, meta=meta, sources=sources,
-               bus=bus, autoscaler=autoscaler, announce=announce,
+               bus=bus, autoscaler=autoscaler, pool=pool, announce=announce,
                flush=flush, options=options, mode="streaming")
 
 

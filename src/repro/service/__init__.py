@@ -1,0 +1,34 @@
+"""Multi-tenant job service — the control plane over the streaming engine.
+
+The paper's framework is one job per deployment: a client submits a JSON
+config, the coordinator spins workers up from zero, and everything is
+torn down at the end.  This package is the *service* form of the same
+five components — many ``BuiltPipeline`` programs from many tenants
+registered against one engine pool:
+
+* :mod:`tenancy` — tenants as namespaced, quota-bounded views of one
+  shared object store (per-team S3 prefixes + IAM, in miniature);
+* :mod:`ingest_share` — ONE physical read per source: a ``SharedIngest``
+  materializes the event log onto a single-partition bus topic and every
+  subscribing job replays it from a private record cursor (late
+  registrants catch up from offset 0);
+* :mod:`registry` — metadata-backed job records (the Redis schema) plus
+  the cross-job sink-prefix collision check;
+* :mod:`server` — the ``JobServer`` control plane: submit / pause /
+  resume / cancel / status verbs, a shared ``ServerlessPool``, and the
+  lag-driven lifecycle that parks an idle job (barrier checkpoint →
+  drop its coordinator → scale the pool to zero) and cold-restores it
+  on the next matching event, exactly-once across the round trip.
+
+``repro.core.client.JobServiceClient`` is the user-facing package over
+this control plane, polling the same metadata records the paper's
+Python client polls in Redis.
+"""
+
+from .ingest_share import SharedIngest, SubscriberSource
+from .registry import JobRegistry
+from .server import JobServer, JobStatus
+from .tenancy import Tenant
+
+__all__ = ["JobServer", "JobStatus", "JobRegistry", "SharedIngest",
+           "SubscriberSource", "Tenant"]

@@ -1,0 +1,132 @@
+"""Shared ingest — one physical log read, fanned out to every job.
+
+When N jobs consume the same source, the naive deployment reads the
+event log N times (N× the GET traffic the paper bills for).  The job
+server instead materializes each source ONCE: a :class:`SharedIngest`
+owns the only :class:`~repro.streaming.source.StreamSource` over the
+physical log and ``pump()`` appends its unread tail onto a private
+single-partition bus topic (``repro.ingest.<source>``) — the
+"materialized intermediate stream".  Every subscribing job reads that
+topic through a :class:`SubscriberSource` with a *private record
+cursor* (the bus's group-less ``fetch``), so:
+
+* subscribers never advance each other's positions,
+* a job registering late replays from offset 0 and catches up,
+* a restored job resumes from its checkpointed record offset — cursor
+  addressing is identical to the coordinator's record-addressed resume.
+
+Single-partition is by construction, not limitation: the physical log
+is totally ordered and exactly-once replay requires every subscriber to
+see the same order, so the topic mirrors the log one-to-one (offset ==
+record index).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+from ..core.events import CloudEvent, EventBus, ingest_topic
+from ..core.storage import ObjectStore
+from ..streaming.source import StreamSource
+
+__all__ = ["SharedIngest", "SubscriberSource"]
+
+
+def _record_event(source_id: str, record: tuple) -> CloudEvent:
+    return CloudEvent(type="repro.ingest.record", source=source_id,
+                      data={"record": list(record)})
+
+
+class SharedIngest:
+    """One source's single physical reader plus its materialized topic."""
+
+    def __init__(self, bus: EventBus, store: ObjectStore, prefix: str, *,
+                 source_id: str | None = None,
+                 batch_records: int = 1024) -> None:
+        self.bus = bus
+        self.prefix = prefix
+        self.source_id = source_id or prefix.strip("/")
+        self.source = StreamSource(store=store, prefix=prefix,
+                                   batch_records=batch_records)
+        self.topic = ingest_topic(self.source_id)
+        bus.create_topic(self.topic, n_partitions=1)
+        self.pumped = 0          # records materialized so far
+        self.pumps = 0           # physical tail reads taken
+        self.subscribers: dict[str, "SubscriberSource"] = {}
+
+    # -- the one physical read ----------------------------------------------
+    def pump(self) -> int:
+        """Materialize the log's unread tail onto the topic — the only
+        place the physical log is ever read, however many jobs subscribe.
+        Returns new records appended."""
+        n = 0
+        for rec in self.source.events_from(self.pumped):
+            self.bus.produce(self.topic, _record_event(self.source_id, rec))
+            n += 1
+        self.pumped += n
+        self.pumps += 1
+        return n
+
+    # -- subscriber fan-out --------------------------------------------------
+    def subscribe(self, subscriber_id: str,
+                  batch_records: int = 1024) -> "SubscriberSource":
+        """A private replay cursor over the materialized stream.  Always
+        starts at offset 0 — a late registrant catches up from the log's
+        beginning; an already-checkpointed job resumes further in because
+        the *coordinator* passes its record offset to ``batches()``."""
+        if subscriber_id in self.subscribers:
+            raise ValueError(f"subscriber {subscriber_id!r} already "
+                             f"registered on {self.topic}")
+        sub = SubscriberSource(self, subscriber_id,
+                               batch_records=batch_records)
+        self.subscribers[subscriber_id] = sub
+        return sub
+
+    def end_offset(self) -> int:
+        return self.bus.end_offset(self.topic)
+
+    def records_from(self, offset: int) -> Iterator[tuple]:
+        for rec in self.bus.fetch(self.topic, 0, offset):
+            ts, key, value = rec.value.data["record"]
+            yield (ts, key, value)
+
+    def lag(self, cursor: int) -> int:
+        """Materialized records a subscriber at ``cursor`` has not yet
+        consumed — the unpark signal."""
+        return max(0, self.end_offset() - cursor)
+
+
+class SubscriberSource(StreamSource):
+    """One job's view of a shared ingest: a ``StreamSource`` whose log is
+    the materialized topic, read from a private record cursor.
+
+    Subclassing matters — the run-time dispatch (``BuiltPipeline.run``'s
+    mode inference) and the coordinator's record-addressed ``batches(
+    start_record=...)`` contract both see exactly the source type they
+    already handle, so a job cannot tell whether it owns its log or
+    shares it.
+    """
+
+    def __init__(self, ingest: SharedIngest, subscriber_id: str, *,
+                 batch_records: int = 1024) -> None:
+        # deliberately not calling super().__init__: the log lives on the
+        # shared topic, not in a store prefix or an in-memory record list
+        if batch_records < 1:
+            raise ValueError("batch_records must be >= 1")
+        self.ingest = ingest
+        self.subscriber_id = subscriber_id
+        self.batch_records = batch_records
+        self.store = None
+        self.prefix = ingest.prefix
+        self._records = None
+
+    def _events_from(self, skip: int) -> Iterator[tuple]:
+        return self.ingest.records_from(skip)
+
+    def batch_sizes(self, start_record: int = 0) -> list[int]:
+        total = max(0, self.ingest.end_offset() - start_record)
+        sizes = []
+        while total > 0:
+            sizes.append(min(total, self.batch_records))
+            total -= sizes[-1]
+        return sizes

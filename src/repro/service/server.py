@@ -1,0 +1,360 @@
+"""The JobServer — many tenants, one engine pool, a parked-job lifecycle.
+
+One server instance holds the four shared substrates — ObjectStore,
+MetadataStore, EventBus, ServerlessPool — and multiplexes any number of
+``BuiltPipeline`` programs over them:
+
+* **submit/pause/resume/cancel/status** are the control-plane verbs the
+  paper's client exercises over HTTP against the Coordinator; here they
+  drive metadata-backed :class:`~repro.service.registry.JobRegistry`
+  records, so any process holding the MetadataStore observes the same
+  lifecycle.
+* **Ingest is physical-once**: every source prefix gets one
+  :class:`~repro.service.ingest_share.SharedIngest`; jobs subscribe with
+  private cursors and ``step()`` pumps each ingest exactly once per
+  round regardless of subscriber count.
+* **Scale-to-zero lifecycle**: a job with no new records for
+  ``park_after_idle`` rounds is *parked* — its lanes drain at the
+  micro-batch barrier (they always do), its one-pytree carry state is
+  checkpointed, its coordinator is dropped, and when no job remains
+  running the pool retires every instance.  The next matching event
+  *unparks* it: a fresh coordinator cold-restores the checkpoint
+  (measured — this is the cold start the paper's Fig. 6 charges) and
+  resumes from the checkpointed record offset.  Emission idempotence
+  makes the round trip exactly-once: re-finalized windows re-write the
+  same bytes, already-persisted ones are skipped.
+
+The drive loop is cooperative and synchronous (``step()`` /
+``run_until_complete()``): determinism is what lets the tests assert
+byte-identical sinks against standalone runs.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+from ..core.autoscaler import AutoscalerConfig, ServerlessPool
+from ..core.events import (TOPIC_JOB_LIFECYCLE, EventBus,
+                           job_lifecycle_event)
+from ..core.metadata import MetadataStore
+from ..core.storage import ObjectStore, StorageError
+from ..streaming.coordinator import (RunOptions, StreamingCoordinator,
+                                     StreamReport)
+from .ingest_share import SharedIngest, SubscriberSource
+from .registry import JobRegistry
+from .tenancy import Tenant
+
+__all__ = ["JobServer", "JobStatus"]
+
+
+class JobStatus:
+    """Lifecycle states — string constants, mirrored into the metadata
+    records so clients need no enum import to poll them."""
+
+    PENDING = "PENDING"      # submitted, coordinator not yet built
+    RUNNING = "RUNNING"      # live coordinator, folding batches
+    PAUSED = "PAUSED"        # parked by explicit request; only resume() wakes
+    PARKED = "PARKED"        # scaled to zero; next matching event wakes
+    DONE = "DONE"
+    CANCELLED = "CANCELLED"
+    FAILED = "FAILED"
+
+    TERMINAL = (DONE, CANCELLED, FAILED)
+
+
+@dataclass
+class _Job:
+    """Server-side live state for one submitted job.  Everything durable
+    lives in the registry records; this holds only what a crash may lose
+    (and restore rebuilds): the coordinator and its drive bookkeeping."""
+
+    job_id: str
+    tenant: Tenant
+    program: Any
+    options: RunOptions
+    store: ObjectStore                  # the tenant's namespaced view
+    ingest: SharedIngest
+    sub: SubscriberSource
+    state: str = JobStatus.PENDING
+    coord: StreamingCoordinator | None = None
+    report: StreamReport = None
+    cursor: int = 0                     # records consumed (live offset)
+    idle_rounds: int = 0
+    error: str | None = None
+    cold_start_latencies: list = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if self.report is None:
+            self.report = StreamReport(self.job_id)
+
+
+class JobServer:
+    """Control plane + drive loop over the shared substrates."""
+
+    def __init__(self, store: ObjectStore, meta: MetadataStore | None = None,
+                 bus: EventBus | None = None, *,
+                 autoscaler: AutoscalerConfig | None = None,
+                 park_after_idle: int = 2) -> None:
+        self.store = store
+        self.meta = meta if meta is not None else MetadataStore()
+        self.bus = bus if bus is not None else EventBus()
+        self.pool = ServerlessPool("job-server",
+                                   autoscaler or AutoscalerConfig())
+        self.registry = JobRegistry(self.meta)
+        self.park_after_idle = park_after_idle
+        self.tenants: dict[str, Tenant] = {}
+        self.ingests: dict[str, SharedIngest] = {}
+        self.jobs: dict[str, _Job] = {}
+
+    # -- tenancy / ingest setup ---------------------------------------------
+    def add_tenant(self, name: str,
+                   quota_bytes: int | None = None) -> Tenant:
+        if name in self.tenants:
+            return self.tenants[name]
+        t = Tenant(name, quota_bytes)
+        self.tenants[name] = t
+        return t
+
+    def shared_ingest(self, prefix: str,
+                      batch_records: int = 1024) -> SharedIngest:
+        """The one physical reader for ``prefix`` — created on first use,
+        shared by every later subscriber."""
+        key = prefix.rstrip("/")
+        if key not in self.ingests:
+            self.ingests[key] = SharedIngest(self.bus, self.store, prefix,
+                                             batch_records=batch_records)
+        return self.ingests[key]
+
+    # -- control-plane verbs -------------------------------------------------
+    def submit(self, tenant: str, program, *, source_prefix: str,
+               options: RunOptions | None = None,
+               resume: bool = False) -> str:
+        """Register a program for a tenant against a shared source.
+
+        The registry enforces global job-id uniqueness and rejects
+        cross-job sink-prefix collisions on the shared store before the
+        job can write anything; ``resume=True`` re-attaches a job that a
+        crashed server had already registered — its checkpoint (if any)
+        is honored on first drive, so recovery is exactly-once.
+        """
+        if tenant not in self.tenants:
+            raise KeyError(f"unknown tenant {tenant!r}; add_tenant first")
+        t = self.tenants[tenant]
+        fresh = self.registry.register(
+            program.job_id, tenant,
+            [t.qualify(p) for p in program.output_prefixes()],
+            resume=resume)
+        ingest = self.shared_ingest(source_prefix,
+                                    batch_records=program.batch_records)
+        sub = ingest.subscribe(program.job_id,
+                               batch_records=program.batch_records)
+        job = _Job(job_id=program.job_id, tenant=t, program=program,
+                   options=options or RunOptions(),
+                   store=t.store_view(self.store), ingest=ingest, sub=sub)
+        self.jobs[job.job_id] = job
+        if fresh:
+            self._transition(job, JobStatus.PENDING, verb="submitted")
+        else:
+            self._transition(job, JobStatus.PENDING, verb="reattached")
+        return job.job_id
+
+    def pause(self, job_id: str) -> None:
+        """Park immediately on explicit request; only resume() wakes it
+        (arriving events do not)."""
+        job = self._job(job_id)
+        self._check_live(job, "pause")
+        if job.coord is not None:
+            self._checkpoint(job)
+            job.coord = None
+        self._transition(job, JobStatus.PAUSED, verb="paused")
+        self._maybe_scale_to_zero()
+
+    def resume(self, job_id: str) -> None:
+        """Wake a paused job — a cold restore if it had checkpointed."""
+        job = self._job(job_id)
+        if job.state != JobStatus.PAUSED:
+            raise ValueError(f"job {job_id!r} is {job.state}, not PAUSED")
+        self._restore(job, verb="resumed")
+
+    def cancel(self, job_id: str) -> None:
+        """Stop a job for good.  No flush — half-open windows are
+        abandoned; already-persisted windows (and the prefix claim) stay,
+        as S3 objects would."""
+        job = self._job(job_id)
+        self._check_live(job, "cancel")
+        job.coord = None
+        self._transition(job, JobStatus.CANCELLED, verb="cancelled")
+        self._maybe_scale_to_zero()
+
+    def status(self, job_id: str) -> dict[str, Any]:
+        """The registry record plus live drive state — what the paper's
+        client renders while polling."""
+        job = self._job(job_id)
+        rec = self.registry.record(job_id)
+        rec.update({
+            "job_id": job_id,
+            "cursor": job.cursor,
+            "lag": job.ingest.lag(job.cursor),
+            "batches": job.report.batches,
+            "records_in": job.report.records_in,
+            "windows_emitted": job.report.windows_emitted,
+            "error": job.error,
+        })
+        return rec
+
+    # -- the drive loop ------------------------------------------------------
+    def step(self) -> int:
+        """One cooperative scheduling round: pump every shared ingest
+        once (the only physical log reads), wake parked jobs with lag,
+        drive every runnable job over its available tail, park the idle.
+        Returns records moved (pumped + folded) — 0 means quiescent."""
+        moved = 0
+        for ingest in self.ingests.values():
+            moved += ingest.pump()
+        for job in list(self.jobs.values()):
+            if job.state == JobStatus.PARKED and job.ingest.lag(job.cursor):
+                self._restore(job, verb="restored")
+            if job.state in (JobStatus.PENDING, JobStatus.RUNNING):
+                moved += self._drive(job)
+        return moved
+
+    def run_until_complete(self, flush: bool = True) -> dict[str, str]:
+        """Drive until no ingest yields new records and every job is
+        drained, then finish each live job (end-of-stream flush).  Paused
+        jobs stay paused — completing them would override an explicit
+        operator verb.  Returns {job_id: final state}."""
+        while self.step():
+            pass
+        for job in list(self.jobs.values()):
+            if job.state not in JobStatus.TERMINAL + (JobStatus.PAUSED,):
+                self.finish(job.job_id, flush=flush)
+        return {jid: j.state for jid, j in self.jobs.items()}
+
+    def finish(self, job_id: str, flush: bool = True) -> StreamReport:
+        """Drain a job's remaining tail and finalize it: end-of-stream
+        watermark through every stage, sinks flushed, final checkpoint —
+        the sink bytes now match a standalone flushed run's exactly."""
+        job = self._job(job_id)
+        self._check_live(job, "finish")
+        job.ingest.pump()
+        if job.coord is None:
+            self._restore(job, verb="restored")
+        self._drive(job, park_when_idle=False)
+        if job.state == JobStatus.FAILED:
+            return job.report
+        try:
+            if flush:
+                job.coord.flush_end_of_stream(job.report)
+        except StorageError as exc:
+            self._fail(job, exc)
+            return job.report
+        job.coord = None
+        self._transition(job, JobStatus.DONE, verb="done")
+        self.registry.update(job_id, cursor=job.cursor)
+        self._maybe_scale_to_zero()
+        return job.report
+
+    # -- lifecycle internals -------------------------------------------------
+    def _job(self, job_id: str) -> _Job:
+        if job_id not in self.jobs:
+            raise KeyError(f"unknown job: {job_id}")
+        return self.jobs[job_id]
+
+    def _check_live(self, job: _Job, verb: str) -> None:
+        if job.state in JobStatus.TERMINAL:
+            raise ValueError(f"cannot {verb} job {job.job_id!r}: "
+                             f"already {job.state}")
+
+    def _transition(self, job: _Job, state: str, *, verb: str) -> None:
+        job.state = state
+        self.registry.update(job.job_id, state=state, cursor=job.cursor)
+        self.bus.produce(TOPIC_JOB_LIFECYCLE,
+                         job_lifecycle_event(job.job_id, job.tenant.name,
+                                             verb, {"cursor": job.cursor}))
+
+    def _checkpoint(self, job: _Job) -> None:
+        """Barrier checkpoint: the drive loop only rests at micro-batch
+        barriers (lanes drained), so the one-pytree carry snapshot is
+        always consistent here."""
+        if job.report.batches:
+            job.coord.save_state()
+        self.registry.update(job.job_id, cursor=job.cursor)
+
+    def _restore(self, job: _Job, *, verb: str) -> None:
+        """Build (or cold-rebuild) the job's coordinator and restore its
+        checkpoint.  Timed end to end — pool activation, carry download,
+        tracker/dictionary rebuild — because this *is* the serverless
+        cold start the lifecycle trades against idle cost."""
+        cold = job.state in (JobStatus.PARKED, JobStatus.PAUSED)
+        t0 = time.perf_counter()
+        self.pool.ensure_scale(1)
+        job.coord = StreamingCoordinator(
+            job.store, self.meta, bus=self.bus, program=job.program,
+            options=job.options, pool=self.pool)
+        job.cursor = job.coord.restore_state()
+        dt = time.perf_counter() - t0
+        job.idle_rounds = 0
+        if cold:
+            job.cold_start_latencies.append(dt)
+            self.registry.bump(job.job_id, "restores")
+            self.registry.bump(job.job_id, "cold_start_seconds", dt)
+        self._transition(job, JobStatus.RUNNING, verb=verb)
+
+    def _drive(self, job: _Job, park_when_idle: bool = True) -> int:
+        """Fold the job's currently-available tail, batch by batch, at
+        its own cursor.  No new records → an idle round; enough idle
+        rounds → park (unless the caller — ``finish`` — is about to flush
+        this very coordinator)."""
+        if job.coord is None:
+            self._restore(job, verb="started")
+        if not job.ingest.lag(job.cursor):
+            job.idle_rounds += 1
+            if park_when_idle and job.idle_rounds >= self.park_after_idle \
+                    and job.state == JobStatus.RUNNING:
+                self._park(job)
+            return 0
+        job.idle_rounds = 0
+        start = job.cursor
+        try:
+            job.coord.announce(job.sub, start_record=start)
+            for batch in job.sub.batches(start_record=start):
+                job.coord.process_batch(batch, job.report)
+                job.cursor += len(batch)
+        except StorageError as exc:
+            self._fail(job, exc)
+            return job.cursor - start
+        return job.cursor - start
+
+    def _park(self, job: _Job) -> None:
+        """Scale-to-zero: checkpoint at the barrier, drop the coordinator
+        (frees the device carries), retire pool instances if nothing else
+        runs.  The job's next matching event cold-restores it."""
+        self._checkpoint(job)
+        job.coord = None
+        self.registry.bump(job.job_id, "parks")
+        self._transition(job, JobStatus.PARKED, verb="parked")
+        self._maybe_scale_to_zero()
+
+    def _fail(self, job: _Job, exc: Exception) -> None:
+        job.error = f"{type(exc).__name__}: {exc}"
+        job.coord = None
+        self.registry.update(job.job_id, error=job.error)
+        self._transition(job, JobStatus.FAILED, verb="failed")
+        self._maybe_scale_to_zero()
+
+    def _maybe_scale_to_zero(self) -> None:
+        if not any(j.state == JobStatus.RUNNING
+                   for j in self.jobs.values()):
+            self.pool.scale_to_zero()
+
+    # -- introspection -------------------------------------------------------
+    def stats(self) -> dict[str, Any]:
+        return {
+            "jobs": {jid: j.state for jid, j in self.jobs.items()},
+            "pool": self.pool.stats(),
+            "ingests": {key: {"pumped": ing.pumped, "pumps": ing.pumps,
+                              "subscribers": len(ing.subscribers)}
+                        for key, ing in self.ingests.items()},
+        }

@@ -1,0 +1,53 @@
+"""Tenants — namespaced, quota-bounded slices of one shared bucket.
+
+Multi-tenancy in the paper's deployment is S3 prefix conventions plus
+IAM policy: every team writes under its own prefix and a bucket quota
+bounds its footprint.  Here a :class:`Tenant` is exactly that, made
+mechanical: ``store_view`` wraps the shared :class:`~repro.core.storage.
+ObjectStore` in a :class:`~repro.core.storage.NamespacedStore`, so every
+key a tenant's jobs write — sink windows, carry checkpoints, spills —
+lands under ``tenants/<name>/`` and counts against the tenant's byte
+quota.  Two tenants running the *same* program (same job id, same sink
+prefix) therefore never collide in the store, and a runaway job fails
+with :class:`~repro.core.storage.QuotaExceeded` instead of filling the
+bucket.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..core.storage import NamespacedStore, ObjectStore
+
+__all__ = ["Tenant"]
+
+
+@dataclass(frozen=True)
+class Tenant:
+    """One tenant: a namespace under the shared bucket and an optional
+    byte quota for everything its jobs persist there."""
+
+    name: str
+    quota_bytes: int | None = None
+
+    def __post_init__(self) -> None:
+        if not self.name or "/" in self.name:
+            raise ValueError(f"tenant name must be non-empty and "
+                             f"slash-free, got {self.name!r}")
+
+    @property
+    def namespace(self) -> str:
+        return f"tenants/{self.name}"
+
+    def store_view(self, shared: ObjectStore) -> NamespacedStore:
+        """This tenant's view of the shared bucket — every job of the
+        tenant runs its coordinator against this, so checkpoints and sink
+        windows are isolated and quota-accounted without the engine
+        knowing tenancy exists."""
+        return NamespacedStore(shared, self.namespace, self.quota_bytes)
+
+    def qualify(self, prefix: str) -> str:
+        """A store-absolute key prefix for this tenant's ``prefix`` — what
+        the cross-job collision check compares, since collisions only
+        matter in the shared bucket's one key space."""
+        return f"{self.namespace}/{prefix.lstrip('/')}"

@@ -19,8 +19,7 @@ long-lived incremental dataflow:
   * ``StreamingCoordinator`` — one map→shuffle→reduce round per
     micro-batch through a compiled pipeline program
     (``repro.pipeline.BuiltPipeline`` — the declarative dataflow API is
-    the front door; ``StreamingConfig`` lowers to it as a deprecated
-    shim): records ship to the device once and fan out into their windows
+    the front door): records ship to the device once and fan out into their windows
     on-chip; aggregate-mode per-window partials merge across batches by a
     single fused ``reduce_scatter`` per batch per side (a join's two
     sides share one carry), group-mode records buffer per (worker, window
@@ -35,15 +34,15 @@ scales its mapper pool from the queue depth (consumer lag), the KEDA-style
 signal, instead of a fixed split count.
 """
 
-from .coordinator import (RunOptions, StreamingConfig, StreamingCoordinator,
-                          StreamReport, session_output_key, window_output_key)
+from .coordinator import (RunOptions, StreamingCoordinator, StreamReport,
+                          session_output_key, window_output_key)
 from .sessions import Session, SessionTracker
 from .source import MicroBatch, StreamSource, write_event_log
 from .state import LateEventError, WindowTracker
 from .windows import SlidingWindows, TumblingWindows, Window, WindowAssigner
 
 __all__ = [
-    "RunOptions", "StreamingConfig", "StreamingCoordinator", "StreamReport",
+    "RunOptions", "StreamingCoordinator", "StreamReport",
     "window_output_key", "session_output_key", "MicroBatch", "StreamSource",
     "write_event_log", "LateEventError", "WindowTracker", "Session",
     "SessionTracker", "SlidingWindows", "TumblingWindows", "Window",

@@ -55,10 +55,10 @@ and the device fan-out's masked-pair count (for pairs that ride the wire
 inside a record's window span) flows back through the same method.  A pair
 is dropped on one path or the other, never both.
 
-``StreamingConfig`` remains as a deprecated shim: it lowers itself to a
-two-node pipeline (``source → key_by → window → reduce → sink``) through
-the Pipeline API, so both front doors drive the same program shape.
-Constructing a coordinator from it emits a ``DeprecationWarning``.
+The coordinator drives exactly one program shape: a ``BuiltPipeline``.
+(The flat ``StreamingConfig`` shim that lowered itself onto the Pipeline
+API was removed in PR 8, as its deprecation message scheduled — author a
+``repro.pipeline.Pipeline`` and drive it with ``BuiltPipeline.run(...)``.)
 
 Restart tightening: on ``_restore_state`` the coordinator lists the
 windows already persisted under the job's output prefix; a replayed window
@@ -101,7 +101,6 @@ import math
 import queue
 import threading
 import time
-import uuid
 import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterator
@@ -116,14 +115,11 @@ from ..core.events import (EventBus, TOPIC_STREAM_BATCH, TOPIC_STREAM_WINDOW,
 from ..core.metadata import MetadataStore
 from ..core.storage import ObjectStore
 from ..core.workers import _encode_records
-from ..engine.plan import ExecutionPlan, KeySpace, ReduceSpec, WindowSpec
-from ..engine.stages import SEGMENT_REDUCE_KINDS as GROUP_KINDS
 from ..engine.stages import RAW_KEY_BITS, fold_key24, host_bucket
 from .source import MicroBatch
 from .state import LateEventError
-from .windows import SlidingWindows, TumblingWindows, Window, WindowAssigner
+from .windows import Window
 
-AGGREGATIONS = ("count", "sum", "mean")
 _RAW_KEY_BITS = RAW_KEY_BITS    # raw ids must survive the float32 wire
 _MAX_WIRE_INT = 1 << 24  # largest int the float32 wire carries exactly
 _NEG_INF = float("-inf")
@@ -178,12 +174,6 @@ class RunOptions:
             if count < 1 or not 0 <= index < count:
                 raise ValueError(f"shard must be (index, count) with "
                                  f"0 <= index < count, got {self.shard}")
-
-
-#: the StreamingConfig shim's behavior predates the pipelined scheduler:
-#: every lane off, exactly the synchronous PR 4/5 loop
-_LEGACY_OPTIONS = RunOptions(overlap=False, sink_batching=False,
-                             donate_carry=False)
 
 
 @dataclass
@@ -260,129 +250,6 @@ class _Prefetcher:
 
 
 @dataclass
-class StreamingConfig:
-    """Stream-job analogue of the batch ``JobConfig`` JSON document.
-
-    .. deprecated::
-        ``StreamingConfig`` is a shim over the declarative Pipeline API,
-        **scheduled for removal in PR 8**: ``build_pipeline()`` lowers it
-        to a single-chain record pipeline (``repro.pipeline.Pipeline``),
-        and the coordinator drives that program.  Author a ``Pipeline``
-        and drive it through ``BuiltPipeline.run(...)`` instead — that
-        front door also exposes session windows, windowed joins, top-k,
-        map fusion, multi-stage chains, and the pipelined scheduler's
-        ``RunOptions``, none of which this flat config can express.  The
-        shim drives the legacy synchronous loop only: handing a config to
-        ``StreamingCoordinator`` emits a ``DeprecationWarning``, and
-        combining it with ``options=`` raises ``ValueError``.
-    """
-
-    num_buckets: int = 128          # key-id space (dense bucket width)
-    n_workers: int = 8              # device-engine mesh-axis size
-    window_size: float = 60.0       # seconds of event time per window
-    window_slide: float | None = None  # None → tumbling; else sliding
-    allowed_lateness: float = 0.0   # watermark slack for out-of-order events
-    n_slots: int = 8                # in-flight window ring capacity
-    batch_records: int = 1024      # micro-batch size bound
-    aggregation: str = "count"      # aggregate mode: count | sum | mean
-    mode: str = "aggregate"         # aggregate | group (arbitrary reduce_fn)
-    reduce_fn: str | Callable = "sum"   # group mode: kind name or callable
-    capacity: int = 0               # group mode: per-(worker, slot) records
-    key_space: str = "dense"        # dense | hashed (open key domains)
-    fanout: str = "device"          # device | host (legacy baseline)
-    checkpoint_interval: int = 1    # save restart state every N batches
-    output_prefix: str = "stream-output/"
-    backend: str = "vmap"
-    job_id: str = field(default_factory=lambda: "s" + uuid.uuid4().hex[:11])
-
-    def validate(self) -> None:
-        if self.mode not in ("aggregate", "group"):
-            raise ValueError("mode must be 'aggregate' or 'group'")
-        if self.mode == "aggregate":
-            if self.aggregation not in AGGREGATIONS:
-                raise ValueError(f"aggregation must be one of {AGGREGATIONS}")
-            if self.num_buckets % self.n_workers != 0:
-                raise ValueError(
-                    "num_buckets must divide by n_workers so window "
-                    "slices stay aligned to the scattered carry")
-        else:
-            if self.capacity < 1:
-                raise ValueError("group mode needs capacity >= 1 (records "
-                                 "buffered per worker per window slot)")
-            if self.fanout != "device":
-                raise ValueError("group mode runs with fanout='device'")
-            if isinstance(self.reduce_fn, str) \
-                    and self.reduce_fn not in GROUP_KINDS:
-                raise ValueError(f"reduce_fn must be a callable or one of "
-                                 f"{GROUP_KINDS}")
-        if self.key_space not in ("dense", "hashed"):
-            raise ValueError("key_space must be 'dense' or 'hashed'")
-        if self.fanout not in ("device", "host"):
-            raise ValueError("fanout must be 'device' or 'host'")
-        if self.n_slots < 2:
-            raise ValueError("need >= 2 window slots (one closing, one open)")
-        if self.checkpoint_interval < 1:
-            raise ValueError("checkpoint_interval must be >= 1")
-        if self.window_slide is not None and self.window_slide > self.window_size:
-            raise ValueError("slide must not exceed window size")
-        # the ring must hold every window that can be open at one instant:
-        # those covering (watermark, watermark + size + lateness]
-        step = self.window_slide or self.window_size
-        need = math.ceil((self.window_size + self.allowed_lateness) / step) + 1
-        if need > self.n_slots:
-            raise ValueError(
-                f"n_slots={self.n_slots} cannot hold the "
-                f"window_size+allowed_lateness span; need >= {need} slots "
-                f"for size={self.window_size}, slide={step}, "
-                f"lateness={self.allowed_lateness}")
-
-    def assigner(self) -> WindowAssigner:
-        if self.window_slide is None:
-            return TumblingWindows(self.window_size)
-        return SlidingWindows(self.window_size, self.window_slide)
-
-    def plan(self) -> ExecutionPlan:
-        """The streaming job as a point in the execution-plan space."""
-        if self.key_space == "hashed":
-            keys = KeySpace.hashed(self.num_buckets, track_collisions=False)
-        else:
-            keys = KeySpace.dense(self.num_buckets)
-        window = WindowSpec(size=self.window_size, slide=self.window_slide,
-                            n_slots=self.n_slots,
-                            fanout_on_device=self.fanout == "device")
-        reduce = ReduceSpec(mode=self.mode, reduce_fn=self.reduce_fn,
-                            capacity=self.capacity)
-        return ExecutionPlan(key_space=keys, reduce=reduce,
-                             n_workers=self.n_workers, window=window)
-
-    def build_pipeline(self):
-        """Lower this flat config to the compiled pipeline program the
-        coordinator drives — the deprecation shim's whole body."""
-        from ..pipeline import Pipeline, Windowing
-        if self.window_slide is None:
-            w = Windowing.tumbling(self.window_size)
-        else:
-            w = Windowing.sliding(self.window_size, self.window_slide)
-        p = (Pipeline.from_source(batch_records=self.batch_records)
-             .key_by().window(w))
-        if self.mode == "aggregate":
-            p = p.reduce(self.aggregation)
-        else:
-            p = p.reduce(self.reduce_fn, mode="group",
-                         capacity=self.capacity)
-        p = p.sink(self.output_prefix)
-        return p.build(num_buckets=self.num_buckets,
-                       n_workers=self.n_workers, n_slots=self.n_slots,
-                       key_space=self.key_space, fanout=self.fanout,
-                       allowed_lateness=self.allowed_lateness,
-                       backend=self.backend,
-                       checkpoint_interval=self.checkpoint_interval,
-                       batch_records=self.batch_records,
-                       job_id=self.job_id,
-                       output_prefix=self.output_prefix)
-
-
-@dataclass
 class StreamReport:
     """Rolling accounting for a streaming run — the Fig. 6/7 quantities
     reinterpreted for sustained throughput."""
@@ -434,9 +301,9 @@ class StreamReport:
 
 def window_output_key(cfg, window: Window, prefix: str | None = None) -> str:
     """Object key for a fixed window's emission.  ``cfg`` is anything with
-    ``output_prefix`` and ``job_id`` — a ``StreamingConfig`` or a
-    ``BuiltPipeline``.  ``prefix`` overrides the config's prefix for a
-    terminal fan-out branch that sinks to its own stream."""
+    ``output_prefix`` and ``job_id`` — typically a ``BuiltPipeline``.
+    ``prefix`` overrides the program's prefix for a terminal fan-out
+    branch that sinks to its own stream."""
     return (f"{(prefix or cfg.output_prefix).rstrip('/')}/{cfg.job_id}/"
             f"window-{window.start:.3f}-{window.end:.3f}")
 
@@ -596,44 +463,37 @@ class StreamingCoordinator:
     CONSUMER_GROUP = "streaming-coordinator"
 
     def __init__(self, store: ObjectStore, meta: MetadataStore,
-                 cfg: StreamingConfig | None = None,
                  bus: EventBus | None = None,
                  autoscaler: AutoscalerConfig | None = None, *,
-                 program=None, options: RunOptions | None = None) -> None:
-        if (cfg is None) == (program is None):
-            raise ValueError("pass exactly one of cfg (deprecated shim) or "
-                             "program (a BuiltPipeline)")
-        if cfg is not None:
-            if options is not None:
-                raise ValueError(
-                    "RunOptions (the pipelined scheduler: overlap, "
-                    "prefetch, sink batching, carry donation) is part of "
-                    "the Pipeline front door and is not supported through "
-                    "the deprecated StreamingConfig shim; author a "
-                    "repro.pipeline.Pipeline and drive it with "
-                    "BuiltPipeline.run(..., options=RunOptions(...))")
-            warnings.warn(
-                "StreamingConfig is a deprecated shim that lowers onto the "
-                "Pipeline layer and is scheduled for removal in PR 8; "
-                "author the job as a repro.pipeline.Pipeline and drive it "
-                "with BuiltPipeline.run(...) instead",
-                DeprecationWarning, stacklevel=2)
-            cfg.validate()
-            program = cfg.build_pipeline()
-            options = _LEGACY_OPTIONS   # shim keeps the synchronous loop
+                 program, options: RunOptions | None = None,
+                 pool: ServerlessPool | None = None) -> None:
+        if program is None:
+            raise ValueError("pass program= (a BuiltPipeline); the flat "
+                             "StreamingConfig shim was removed in PR 8")
+        if pool is not None and autoscaler is not None:
+            raise ValueError("pass pool= (a shared ServerlessPool) or "
+                             "autoscaler= (a config for a private pool), "
+                             "not both")
         self.opts = options or RunOptions()
         self.opts.validate()
         self.store = store
         self.meta = meta
-        self.cfg = cfg                  # legacy handle (None for programs)
         self.prog = program
         self._ckpt_interval = (program.checkpoint_interval
                                if self.opts.checkpoint_interval is None
                                else self.opts.checkpoint_interval)
         self.bus = bus or EventBus()
-        self.pool = ServerlessPool(
+        # pool= shares one physical worker pool across coordinators — the
+        # job-server mode where many tenants' programs run on one engine
+        # pool; by default each coordinator owns a private pool sized to
+        # its program
+        self.pool = pool if pool is not None else ServerlessPool(
             "stream-mapper", autoscaler or AutoscalerConfig(
                 max_scale=program.n_workers))
+        self.owns_pool = pool is None
+        # per-job consumer group: coordinators sharing one bus (the job
+        # server) must not advance each other's trigger offsets
+        self.consumer_group = f"{self.CONSUMER_GROUP}:{program.job_id}"
         # the stage DAG: adjacency first (wire sizing needs the in-edges),
         # then per-stage state.  Fixed per-batch array capacity so XLA
         # compiles a single program: device fan-out ships one row per
@@ -1183,7 +1043,7 @@ class StreamingCoordinator:
         self._flush_sinks(report)
 
     # -- checkpoint / restore --------------------------------------------------
-    def _save_state(self) -> None:
+    def save_state(self) -> None:
         """Persist the full streaming state at a batch boundary: every
         stage's carry — branches included, one pytree — to the object
         store, trackers + key dictionaries + per-edge feed watermarks +
@@ -1226,7 +1086,10 @@ class StreamingCoordinator:
             } for st in self.stages],
         })
 
-    def _restore_state(self) -> int:
+    # back-compat private name (pre-PR 8 callers)
+    _save_state = save_state
+
+    def restore_state(self) -> int:
         """Load a prior run's checkpoint; returns the record offset to
         resume from (0 when starting fresh).  Also consults every terminal
         stage's output prefix for windows the prior run already persisted,
@@ -1289,7 +1152,7 @@ class StreamingCoordinator:
 
     # -- backpressure ----------------------------------------------------------
     def _autoscale(self, report: StreamReport) -> None:
-        lag = self.bus.lag(self.CONSUMER_GROUP, TOPIC_STREAM_BATCH)
+        lag = self.bus.lag(self.consumer_group, TOPIC_STREAM_BATCH)
         report.max_lag = max(report.max_lag, lag)
         want = self.pool.desired_scale_from_backlog(lag)
         if want > self.pool.replicas():
@@ -1523,7 +1386,7 @@ class StreamingCoordinator:
         and finalizes mid-batch instead of aborting."""
         prog = self.prog
         t0 = time.perf_counter()
-        self.bus.poll(self.CONSUMER_GROUP, TOPIC_STREAM_BATCH,
+        self.bus.poll(self.consumer_group, TOPIC_STREAM_BATCH,
                       timeout=0.01, max_records=1)
         self._autoscale(report)
         late_before = self._late_dropped()
@@ -1557,7 +1420,7 @@ class StreamingCoordinator:
         # disables checkpointing entirely (the batch-mode drive)
         if self._ckpt_interval and \
                 (prep.index + 1) % self._ckpt_interval == 0:
-            self._save_state()
+            self.save_state()
         report.batch_latencies.append(time.perf_counter() - t0)
 
     def process_batch(self, batch: MicroBatch,
@@ -1566,6 +1429,27 @@ class StreamingCoordinator:
         synchronous entry point (``run_stream`` overlaps the two halves
         when ``RunOptions.overlap`` is on)."""
         self._process_prepared(self._prepare_batch(batch), report)
+
+    def flush_end_of_stream(self, report: StreamReport) -> None:
+        """Finalize every still-open window as if the stream had ended:
+        checkpoint first, then ripple an end-of-stream watermark (+inf)
+        through every stage in topological order and drain the lanes.
+
+        Checkpointing happens BEFORE the artificial watermark: a later run
+        over a grown log must resume with the real watermark, not +inf
+        (which would drop every new event as late); flushed windows then
+        re-finalize idempotently.  The job server calls this when parking
+        or finishing a job, so a parked job's sink bytes match a
+        standalone flushed run's exactly."""
+        if report.batches and self._ckpt_interval:
+            self.save_state()
+        for si in range(len(self.stages)):
+            if si in self._roots:
+                self._ext_wm[si] = float("inf")
+            self.stages[si].tracker.observe(float("inf"))
+            self._finalize_ripe(report, si)
+        self._drain_stats(report)
+        self._flush_sinks(report)
 
     def run_stream(self, source, *, announce: bool = True,
                    flush: bool = True) -> StreamReport:
@@ -1581,7 +1465,7 @@ class StreamingCoordinator:
         checkpoint exactly like the synchronous loop."""
         report = StreamReport(self.prog.job_id)
         t_start = time.perf_counter()
-        start = self._restore_state()
+        start = self.restore_state()
         try:
             if announce:
                 self.announce(source, start_record=start)
@@ -1598,21 +1482,7 @@ class StreamingCoordinator:
                 for batch in source.batches(start_record=start):
                     self.process_batch(batch, report)
             if flush:
-                # checkpoint BEFORE the artificial end-of-stream watermark:
-                # a later run over a grown log must resume with the real
-                # watermark, not +inf (which would drop every new event as
-                # late); flushed windows then re-finalize idempotently.
-                # The stages flush in topological order, so by a stage's
-                # turn every upstream feed (on every in-edge) has landed
-                if report.batches and self._ckpt_interval:
-                    self._save_state()
-                for si in range(len(self.stages)):
-                    if si in self._roots:
-                        self._ext_wm[si] = float("inf")
-                    self.stages[si].tracker.observe(float("inf"))
-                    self._finalize_ripe(report, si)
-                self._drain_stats(report)
-                self._flush_sinks(report)
+                self.flush_end_of_stream(report)
         except Exception as exc:
             report.error = str(exc)
             raise

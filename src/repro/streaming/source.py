@@ -134,6 +134,11 @@ class StreamSource:
         """Every record in log order — a fresh, replayable pass."""
         return self._events_from(0)
 
+    def events_from(self, skip: int) -> Iterator[tuple[float, Any, float]]:
+        """Records from offset ``skip`` on, skipping consumed segments
+        without downloading them — the shared-ingest pump's tail read."""
+        return self._events_from(skip)
+
     def batch_sizes(self, start_record: int = 0) -> list[int]:
         """Per-batch record counts from metadata alone — key-embedded
         segment counts when available, a line count otherwise.  Lets a

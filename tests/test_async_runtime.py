@@ -6,7 +6,7 @@ crash/restore with a batch prepared-but-unconsumed in the prefetch queue,
 batched sink writes (one ``put_many`` round trip per finalization sweep,
 identical bytes), carry-donation parity, the ``RunOptions`` knob block,
 ``BuiltPipeline.run``'s dispatch by source kind, key-space sharding, and
-the escalated deprecation surface of the pre-Pipeline shims.
+the hard removal of the pre-Pipeline shims.
 """
 
 import json
@@ -21,10 +21,8 @@ except ImportError:                                 # hermetic container
     from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import MemoryStore, MetadataStore
-from repro.core.mapreduce import DeviceJobConfig, mapreduce
 from repro.pipeline import JoinSource, Pipeline, RunOptions, Windowing
-from repro.streaming import (StreamingConfig, StreamingCoordinator,
-                             StreamSource)
+from repro.streaming import StreamingCoordinator, StreamSource
 
 W = 4
 _PROPERTY_SETTINGS = settings(max_examples=4, deadline=None)
@@ -240,7 +238,7 @@ def test_checkpoint_never_passes_staged_writes():
 
 
 # ---------------------------------------------------------------------------
-# RunOptions: validation and the shim boundary
+# RunOptions: validation and the shim removal boundary
 # ---------------------------------------------------------------------------
 
 def test_run_options_validation():
@@ -256,47 +254,16 @@ def test_run_options_validation():
             RunOptions(shard=bad).validate()
 
 
-def test_streaming_config_rejects_run_options():
-    """The legacy shim predates the scheduler: combining it with
-    ``RunOptions`` is a ``ValueError`` pointing at the front door."""
-    cfg = StreamingConfig(window_size=10.0, num_buckets=8, n_workers=2,
-                          job_id="shim-opts")
-    with pytest.raises(ValueError, match=r"BuiltPipeline\.run"):
-        StreamingCoordinator(MemoryStore(), MetadataStore(), cfg,
-                             options=RunOptions())
-
-
-def test_streaming_config_shim_drives_sync_lanes():
-    """A cfg-driven coordinator runs the pre-async loop verbatim — every
-    scheduler lane off — so shim users see unchanged behavior."""
-    cfg = StreamingConfig(window_size=10.0, num_buckets=8, n_workers=2,
-                          job_id="shim-lanes")
-    with pytest.warns(DeprecationWarning, match="Pipeline"):
-        coord = StreamingCoordinator(MemoryStore(), MetadataStore(), cfg)
-    assert (coord.opts.overlap, coord.opts.sink_batching,
-            coord.opts.donate_carry) == (False, False, False)
-
-
-def test_shim_warnings_name_run_front_door_and_removal():
-    """Both pre-Pipeline shims now steer to ``BuiltPipeline.run`` and
-    carry a concrete removal milestone."""
-    cfg = StreamingConfig(window_size=10.0, num_buckets=8, n_workers=2,
-                          job_id="shim-warn")
-    with pytest.warns(DeprecationWarning, match=r"BuiltPipeline\.run") as rec:
-        StreamingCoordinator(MemoryStore(), MetadataStore(), cfg)
-    assert "removal in PR 8" in str(rec[0].message)
-
-    def map_fn(shard):
-        n = shard.shape[0]
-        return (np.zeros(n, np.int32), np.ones(n, np.float32),
-                np.ones(n, np.float32))
-
-    data = np.ones((2, 8), np.float32)
-    with pytest.warns(DeprecationWarning, match=r"BuiltPipeline\.run") as rec:
-        mapreduce(map_fn, data, DeviceJobConfig(num_buckets=4, n_workers=2))
-    warned = [str(w.message) for w in rec
-              if "mapreduce()" in str(w.message)]
-    assert warned and "removal in PR 8" in warned[0]
+def test_pre_pipeline_shims_are_gone():
+    """``StreamingConfig`` and one-shot ``mapreduce()`` were removed in
+    PR 8; the coordinator demands a compiled program and the error points
+    at what replaced the shim."""
+    import repro.core.mapreduce as mr
+    import repro.streaming as streaming
+    assert not hasattr(streaming, "StreamingConfig")
+    assert not hasattr(mr, "mapreduce")
+    with pytest.raises(ValueError, match="StreamingConfig shim was removed"):
+        StreamingCoordinator(MemoryStore(), MetadataStore(), program=None)
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,8 @@ except ImportError:  # hermetic container: seeded-sampling shim
 from repro.core import MemoryStore, MetadataStore
 from repro.engine import ExecutionPlan, KeySpace, ReduceSpec, WindowSpec
 from repro.engine.stages import INT32_MAX, device_hash
-from repro.streaming import (SlidingWindows, StreamSource, StreamingConfig,
+from repro.pipeline import Pipeline, Windowing
+from repro.streaming import (SlidingWindows, StreamSource,
                              StreamingCoordinator, TumblingWindows)
 
 settings.register_profile("ci", max_examples=20, deadline=None)
@@ -133,12 +134,21 @@ def _synth_events(n=3000, n_keys=12, span=300.0, seed=3):
             for t, k, v in zip(ts, keys, vals)]
 
 
-def _run_stream(events, job_id, **overrides):
-    overrides.setdefault("num_buckets", 16)
-    cfg = StreamingConfig(n_workers=W, batch_records=256,
-                          job_id=job_id, **overrides)
+def _run_stream(events, job_id, *, window_size, window_slide=None,
+                n_slots=8, aggregation="count", mode=None, reduce_fn=None,
+                capacity=0, fanout="device", num_buckets=16,
+                key_space="dense"):
+    w = (Windowing.sliding(window_size, window_slide) if window_slide
+         else Windowing.tumbling(window_size))
+    spec = reduce_fn if mode == "group" else aggregation
+    built = (Pipeline.from_source(batch_records=256).key_by().window(w)
+             .reduce(spec, mode=mode or "aggregate", capacity=capacity)
+             .sink("stream-output/")
+             .build(num_buckets=num_buckets, n_workers=W, n_slots=n_slots,
+                    key_space=key_space, fanout=fanout, batch_records=256,
+                    job_id=job_id))
     store = MemoryStore()
-    coord = StreamingCoordinator(store, MetadataStore(), cfg)
+    coord = StreamingCoordinator(store, MetadataStore(), program=built)
     report = coord.run_stream(
         StreamSource.from_records(events, batch_records=256))
     out = {}
@@ -414,11 +424,14 @@ def test_streaming_hashed_crash_resume_restores_labels():
     restarted hashed stream emits identical bytes."""
     events = [(float(i) / 4.0, f"key-{i % 40}", 1.0) for i in range(800)]
 
+    built = (Pipeline.from_source(batch_records=100).key_by()
+             .window(Windowing.tumbling(50.0)).reduce("count")
+             .sink("stream-output/")
+             .build(num_buckets=16, n_workers=W, key_space="hashed",
+                    batch_records=100, job_id="hres"))
+
     def make(store, meta):
-        cfg = StreamingConfig(num_buckets=16, n_workers=W, window_size=50.0,
-                              batch_records=100, key_space="hashed",
-                              aggregation="count", job_id="hres")
-        return StreamingCoordinator(store, meta, cfg)
+        return StreamingCoordinator(store, meta, program=built)
 
     ref_store = MemoryStore()
     make(ref_store, MetadataStore()).run_stream(

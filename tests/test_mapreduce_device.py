@@ -8,9 +8,10 @@ try:
 except ImportError:  # hermetic container: seeded-sampling shim
     from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core.mapreduce import DeviceJobConfig, mapreduce, segment_reduce
+from repro.core.mapreduce import segment_reduce
 from repro.core.shuffle import (build_send_buffers, hash_partition,
                                 local_combine_dense, sort_and_group)
+from repro.pipeline import Pipeline
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")
@@ -91,21 +92,27 @@ def _make_shards(n_workers, n_per, n_keys, seed):
     return np.stack([keys, vals], axis=-1)
 
 
+def _array_job(shard, *, num_buckets, n_workers, mode=None, capacity=0,
+               combine_fn=None,
+               map_fn=lambda s: (s[:, 0], s[:, 1].astype(jnp.float32),
+                                 jnp.ones(s.shape[0], bool))):
+    spec = "sum"
+    built = (Pipeline.from_source(shards=shard).map(map_fn)
+             .reduce(spec, mode=mode or "aggregate", capacity=capacity)
+             .build(num_buckets=num_buckets, n_workers=n_workers,
+                    backend="vmap", combine_fn=combine_fn))
+    return built.run_batch(data=shard)
+
+
 def test_aggregate_vs_group_modes_agree():
     W, n_keys = 4, 32
     shard = _make_shards(W, 500, n_keys, 3)
-    cfg_a = DeviceJobConfig(num_buckets=n_keys, n_workers=W)
-
-    def map_fn(s):
-        return (s[:, 0], s[:, 1].astype(jnp.float32),
-                jnp.ones(s.shape[0], bool))
-
-    agg = np.asarray(mapreduce(map_fn, shard, cfg_a, mode="aggregate",
-                               backend="vmap"))
-    cfg_g = DeviceJobConfig(num_buckets=n_keys, n_workers=W, capacity=4096)
-    gk, gv, gvalid, dropped = mapreduce(map_fn, shard, cfg_g, mode="group",
-                                        reduce_fn="sum", backend="vmap")
-    assert int(dropped) == 0
+    agg, _ = _array_job(shard, num_buckets=n_keys, n_workers=W)
+    agg = np.asarray(agg)
+    (gk, gv, gvalid), gstats = _array_job(shard, num_buckets=n_keys,
+                                          n_workers=W, mode="group",
+                                          capacity=4096)
+    assert int(np.sum(np.asarray(gstats.dropped))) == 0
     got = {int(k): float(v) for k, v, ok in
            zip(np.asarray(gk), np.asarray(gv), np.asarray(gvalid)) if ok}
     for k in range(n_keys):
@@ -115,12 +122,9 @@ def test_aggregate_vs_group_modes_agree():
 def test_group_mode_capacity_drops_are_reported():
     W = 2
     shard = _make_shards(W, 512, 4, 0)
-    cfg = DeviceJobConfig(num_buckets=4, n_workers=W, capacity=16)
-    *_, dropped = mapreduce(
-        lambda s: (s[:, 0], s[:, 1].astype(jnp.float32),
-                   jnp.ones(s.shape[0], bool)),
-        shard, cfg, mode="group", reduce_fn="sum", backend="vmap")
-    assert int(dropped) > 0
+    _, stats = _array_job(shard, num_buckets=4, n_workers=W, mode="group",
+                          capacity=16)
+    assert int(np.sum(np.asarray(stats.dropped))) > 0
 
 
 def test_pallas_combiner_in_engine():
@@ -128,15 +132,7 @@ def test_pallas_combiner_in_engine():
     from repro.kernels.hash_combine.ops import make_combine_fn
     W, n_keys = 4, 64
     shard = _make_shards(W, 256, n_keys, 5)
-    cfg = DeviceJobConfig(num_buckets=n_keys, n_workers=W)
-
-    def map_fn(s):
-        return (s[:, 0], s[:, 1].astype(jnp.float32),
-                jnp.ones(s.shape[0], bool))
-
-    ref = np.asarray(mapreduce(map_fn, shard, cfg, mode="aggregate",
-                               backend="vmap"))
-    got = np.asarray(mapreduce(map_fn, shard, cfg, mode="aggregate",
-                               backend="vmap",
-                               combine_fn=make_combine_fn(use_pallas=True)))
-    np.testing.assert_allclose(got, ref, rtol=1e-5)
+    ref, _ = _array_job(shard, num_buckets=n_keys, n_workers=W)
+    got, _ = _array_job(shard, num_buckets=n_keys, n_workers=W,
+                        combine_fn=make_combine_fn(use_pallas=True))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5)

@@ -2,7 +2,7 @@
 definition running batch + streaming with bit-identical windows, session
 windows vs a host reference, top-k exactness vs a full sort, windowed join
 parity (symmetric and per-side key spaces), multi-stage chains via carry
-handoff (reduce → map → window → reduce), the deprecation shims, shared
+handoff (reduce → map → window → reduce), the two-node array path, shared
 host/device key hashing, and restart write-idempotency."""
 
 import json
@@ -12,10 +12,9 @@ import numpy as np
 import pytest
 
 from repro.core import MemoryStore, MetadataStore
-from repro.core.mapreduce import DeviceJobConfig, mapreduce
 from repro.engine.stages import device_hash, fold_key24, host_bucket
 from repro.pipeline import Pipeline, PipelineError, Windowing
-from repro.streaming import (SessionTracker, StreamSource, StreamingConfig,
+from repro.streaming import (SessionTracker, StreamSource,
                              StreamingCoordinator, LateEventError)
 
 W = 4
@@ -653,52 +652,13 @@ def test_fold_key24_fits_wire_and_is_stable():
 
 
 # ---------------------------------------------------------------------------
-# Deprecation shims: old entry points ride the pipeline layer
+# Two-node array path: the batch mode the removed mapreduce() shim wrapped
 # ---------------------------------------------------------------------------
 
-def test_streaming_config_shim_warns_deprecation():
-    """Driving the coordinator off the flat StreamingConfig emits a
-    DeprecationWarning with the migration hint — the shim no longer
-    lowers silently."""
-    cfg = StreamingConfig(num_buckets=8, n_workers=W, window_size=10.0,
-                          batch_records=16, job_id="warn")
-    with pytest.warns(DeprecationWarning, match="Pipeline"):
-        StreamingCoordinator(MemoryStore(), MetadataStore(), cfg)
-
-
-def test_mapreduce_shim_warns_deprecation():
-    import jax.numpy as jnp
-
-    def map_fn(shard):
-        return shard[:, 0].astype(jnp.int32), shard[:, 1], shard[:, 2] > 0
-
-    rows = np.zeros((W, 4, 3), np.float32)
-    rows[:, :, 2] = 1.0
-    with pytest.warns(DeprecationWarning, match="Pipeline"):
-        mapreduce(map_fn, rows, DeviceJobConfig(num_buckets=8, n_workers=W))
-
-
-def test_streaming_config_shim_equals_pipeline():
-    """A StreamingConfig-driven run and the equivalent Pipeline build
-    produce identical window bytes — the shim really is a façade."""
-    events = _events(n=800, seed=6)
-    cfg = StreamingConfig(num_buckets=16, n_workers=W, window_size=50.0,
-                          batch_records=100, aggregation="mean",
-                          job_id="shim")
-    store_cfg = MemoryStore()
-    StreamingCoordinator(store_cfg, MetadataStore(), cfg).run_stream(
-        StreamSource.from_records(events, batch_records=100))
-    built = (Pipeline.from_source(records=events, batch_records=100)
-             .key_by().window(Windowing.tumbling(50.0)).reduce("mean")
-             .build(num_buckets=16, n_workers=W, job_id="shim"))
-    assert _streamed(built, MemoryStore()) == {
-        m.key: store_cfg.get(m.key)
-        for m in store_cfg.list_objects("stream-output/shim/")}
-
-
-def test_mapreduce_facade_is_a_two_node_pipeline():
-    """The deprecated mapreduce() call and the explicit two-node array
-    pipeline agree exactly."""
+def test_two_node_array_pipeline_matches_host_reference():
+    """``from_source(shards=).map().reduce()`` — the explicit spelling of
+    the removed ``mapreduce()`` shim — agrees with a host-side bincount,
+    whether driven through ``run_batch`` or ``run``'s array dispatch."""
     import jax.numpy as jnp
 
     def map_fn(shard):
@@ -710,11 +670,14 @@ def test_mapreduce_facade_is_a_two_node_pipeline():
     rows[:, :, 0] = rng.integers(0, 8, (W, 16))
     rows[:, :, 1] = rng.integers(0, 9, (W, 16))
     rows[:, :, 2] = 1.0
-    out = mapreduce(map_fn, rows, DeviceJobConfig(num_buckets=8, n_workers=W))
     built = (Pipeline.from_source(shards=rows).map(map_fn).reduce("sum")
              .build(num_buckets=8, n_workers=W))
     direct, _stats = built.run_batch(data=rows)
-    assert np.array_equal(np.asarray(out), np.asarray(direct))
+    expected = np.bincount(rows[:, :, 0].astype(int).ravel(),
+                           weights=rows[:, :, 1].ravel(), minlength=8)
+    np.testing.assert_allclose(np.asarray(direct), expected)
+    via_run, _stats2 = built.run(rows)
+    assert np.array_equal(np.asarray(via_run), np.asarray(direct))
 
 
 # ---------------------------------------------------------------------------

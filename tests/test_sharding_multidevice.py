@@ -85,7 +85,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp, json
 from collections import Counter
-from repro.core.mapreduce import DeviceJobConfig, mapreduce, wordcount_map_factory
+from repro.core.mapreduce import wordcount_map_factory
+from repro.pipeline import Pipeline
 
 rng = np.random.default_rng(0)
 W, n_keys, n_per = 8, 64, 512
@@ -94,19 +95,22 @@ vals = np.ones_like(keys)
 shard = np.stack([keys, vals], -1).reshape(W * n_per, 2)
 
 mesh = jax.make_mesh((8,), ("workers",))
-cfg = DeviceJobConfig(num_buckets=n_keys, n_workers=8, capacity=2048,
-                      axis_name="workers")
 map_fn = wordcount_map_factory(n_keys)
-res = np.asarray(mapreduce(map_fn, shard, cfg, mode="aggregate",
-                           backend="shard_map", mesh=mesh))
+agg = (Pipeline.from_source(shards=shard).map(map_fn).reduce("sum")
+       .build(num_buckets=n_keys, n_workers=8, backend="shard_map",
+              mesh=mesh))
+res, _stats = agg.run_batch(data=shard)
+res = np.asarray(res)
 want = np.zeros(n_keys)
 for k in keys.ravel():
     want[k] += 1
 assert np.allclose(res, want), "aggregate mismatch"
 
-gk, gv, gvalid, dropped = mapreduce(map_fn, shard, cfg, mode="group",
-                                    reduce_fn="sum", backend="shard_map",
-                                    mesh=mesh)
+grp = (Pipeline.from_source(shards=shard).map(map_fn)
+       .reduce("sum", mode="group", capacity=2048)
+       .build(num_buckets=n_keys, n_workers=8, backend="shard_map",
+              mesh=mesh))
+(gk, gv, gvalid), _gstats = grp.run_batch(data=shard)
 got = {int(k): float(v) for k, v, ok in
        zip(np.asarray(gk), np.asarray(gv), np.asarray(gvalid)) if ok}
 assert got == {i: float(want[i]) for i in range(n_keys) if want[i] > 0}

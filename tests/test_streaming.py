@@ -23,10 +23,9 @@ from repro.core.mapreduce import (DeviceJobConfig, clear_window_slot,
                                   read_window_slot)
 from repro.pipeline import Pipeline, Windowing
 from repro.streaming import (LateEventError, SessionTracker, SlidingWindows,
-                             StreamSource, StreamingConfig,
-                             StreamingCoordinator, TumblingWindows,
-                             WindowTracker, window_output_key,
-                             write_event_log)
+                             StreamSource, StreamingCoordinator,
+                             TumblingWindows, WindowTracker,
+                             window_output_key, write_event_log)
 
 # scoped per-test (no global load_profile: that would silently shrink every
 # other module's property tests for the whole session)
@@ -356,12 +355,23 @@ def _synth_events(n=4000, n_keys=12, seed=3):
             for t, k, v in zip(ts, keys, vals)]
 
 
+def _build(job_id, *, aggregation="sum", window_size=50.0, window_slide=None,
+           batch_records=100, num_buckets=16, n_workers=4, **build_opts):
+    """The canonical single-chain streaming program these tests drive —
+    what the removed flat ``StreamingConfig`` used to lower itself to."""
+    w = (Windowing.sliding(window_size, window_slide) if window_slide
+         else Windowing.tumbling(window_size))
+    p = (Pipeline.from_source(batch_records=batch_records).key_by()
+         .window(w).reduce(aggregation).sink("stream-output/"))
+    return p.build(num_buckets=num_buckets, n_workers=n_workers,
+                   batch_records=batch_records, job_id=job_id, **build_opts)
+
+
 def _run(events, batch_records, aggregation="sum", job_id="j"):
-    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=50.0,
-                          batch_records=batch_records,
-                          aggregation=aggregation, job_id=job_id)
+    built = _build(job_id, aggregation=aggregation,
+                   batch_records=batch_records)
     store = MemoryStore()
-    coord = StreamingCoordinator(store, MetadataStore(), cfg)
+    coord = StreamingCoordinator(store, MetadataStore(), program=built)
     report = coord.run_stream(
         StreamSource.from_records(events, batch_records=batch_records))
     out = {}
@@ -397,12 +407,10 @@ def test_incremental_matches_one_shot_batch(aggregation):
 
 def test_sliding_windows_end_to_end():
     events = _synth_events(n=1000)
-    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=50.0,
-                          window_slide=25.0, n_slots=8,
-                          batch_records=128, aggregation="count",
-                          job_id="slide")
+    built = _build("slide", aggregation="count", window_slide=25.0,
+                   n_slots=8, batch_records=128)
     store = MemoryStore()
-    coord = StreamingCoordinator(store, MetadataStore(), cfg)
+    coord = StreamingCoordinator(store, MetadataStore(), program=built)
     report = coord.run_stream(
         StreamSource.from_records(events, batch_records=128))
     # every event lands in exactly two overlapping windows
@@ -412,7 +420,7 @@ def test_sliding_windows_end_to_end():
         for widx in SlidingWindows(50.0, 25.0).assign(ts):
             oracle[widx] += 1
     for widx, n in oracle.items():
-        key = window_output_key(cfg, cfg.assigner().window(widx))
+        key = window_output_key(built, built.assigner().window(widx))
         got = dict(json.loads(line)
                    for line in store.get(key).splitlines())
         assert sum(got.values()) == n
@@ -420,10 +428,10 @@ def test_sliding_windows_end_to_end():
 
 def test_watermark_emission_order_and_bus_events():
     events = _synth_events(n=2000)
-    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=20.0,
-                          batch_records=100, job_id="order")
+    built = _build("order", window_size=20.0)
     bus = EventBus()
-    coord = StreamingCoordinator(MemoryStore(), MetadataStore(), cfg, bus=bus)
+    coord = StreamingCoordinator(MemoryStore(), MetadataStore(), bus=bus,
+                                 program=built)
     coord.run_stream(StreamSource.from_records(events, batch_records=100))
     recs = bus.poll("sub", TOPIC_STREAM_WINDOW, timeout=0.1, max_records=100)
     per_part = defaultdict(list)
@@ -441,11 +449,10 @@ def test_crash_resume_is_exact():
     to an uninterrupted run — including windows straddling the crash."""
     events = _synth_events(n=1000, seed=9)
 
+    built = _build("crash")
+
     def make(store, meta):
-        cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=50.0,
-                              batch_records=100, aggregation="sum",
-                              job_id="crash")
-        return StreamingCoordinator(store, meta, cfg)
+        return StreamingCoordinator(store, meta, program=built)
 
     # uninterrupted reference run
     ref_store = MemoryStore()
@@ -476,11 +483,10 @@ def test_sparse_checkpoint_resume_replays_tail():
     uninterrupted result."""
     events = _synth_events(n=1000, seed=11)
 
+    built = _build("sparse", checkpoint_interval=3)
+
     def make(store, meta):
-        cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=50.0,
-                              batch_records=100, aggregation="sum",
-                              checkpoint_interval=3, job_id="sparse")
-        return StreamingCoordinator(store, meta, cfg)
+        return StreamingCoordinator(store, meta, program=built)
 
     ref_store = MemoryStore()
     make(ref_store, MetadataStore()).run_stream(
@@ -502,15 +508,14 @@ def test_sparse_checkpoint_resume_replays_tail():
 
 def test_checkpointed_offset_resume():
     events = _synth_events(n=600)
-    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=1e9,
-                          batch_records=100, job_id="resume")
+    built = _build("resume", window_size=1e9)
     store, meta = MemoryStore(), MetadataStore()
-    coord = StreamingCoordinator(store, meta, cfg)
+    coord = StreamingCoordinator(store, meta, program=built)
     src = StreamSource.from_records(events, batch_records=100)
     coord.run_stream(src, flush=False)
     assert coord.checkpointed_offset() == 600   # records, not batches
     # a restarted coordinator consumes nothing new
-    coord2 = StreamingCoordinator(store, meta, cfg)
+    coord2 = StreamingCoordinator(store, meta, program=built)
     report = coord2.run_stream(src, announce=False, flush=False)
     assert report.batches == 0
 
@@ -520,17 +525,16 @@ def test_resume_over_grown_log_after_flush():
     end-of-stream watermark, and growth past a partial final batch must not
     shift chunk boundaries: every appended event still lands in a window."""
     store, meta = MemoryStore(), MetadataStore()
-    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=10.0,
-                          batch_records=20, aggregation="count",
-                          job_id="grow")
+    built = _build("grow", aggregation="count", window_size=10.0,
+                   batch_records=20)
     # first run ends on a partial batch (50 % 20 != 0) and flushes
     write_event_log(store, "g/log", [(float(i), "k", 1.0) for i in range(50)])
     src = StreamSource(store=store, prefix="g/log", batch_records=20)
-    StreamingCoordinator(store, meta, cfg).run_stream(src)
+    StreamingCoordinator(store, meta, program=built).run_stream(src)
     # the log grows; a fresh coordinator resumes and must see every new event
     write_event_log(store, "g/log",
                     [(float(i), "k", 1.0) for i in range(50, 100)])
-    r2 = StreamingCoordinator(store, meta, cfg).run_stream(src)
+    r2 = StreamingCoordinator(store, meta, program=built).run_stream(src)
     assert r2.records_in == 50 and r2.late_dropped == 0
     total = 0
     for m in store.list_objects("stream-output/grow/"):
@@ -543,9 +547,9 @@ def test_oversized_source_batch_raises():
     """A source chunked larger than the coordinator's batch_records must
     fail loudly, not overflow the pre-sized device arrays."""
     events = [(float(i), "k", 1.0) for i in range(50)]
-    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=100.0,
-                          batch_records=10, job_id="mismatch")
-    coord = StreamingCoordinator(MemoryStore(), MetadataStore(), cfg)
+    built = _build("mismatch", window_size=100.0, batch_records=10)
+    coord = StreamingCoordinator(MemoryStore(), MetadataStore(),
+                                 program=built)
     with pytest.raises(ValueError, match="batch_records"):
         coord.run_stream(StreamSource.from_records(events, batch_records=50))
 
@@ -555,10 +559,10 @@ def test_batch_spanning_many_windows_folds_mid_batch():
     the ring holds must fold+finalize mid-batch, not abort."""
     # 300 events at 1 event/s, 10s tumbling windows → 30 windows in one batch
     events = [(float(i), "k", 1.0) for i in range(300)]
-    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=10.0,
-                          n_slots=4, batch_records=300, job_id="span")
+    built = _build("span", window_size=10.0, n_slots=4, batch_records=300)
     store = MemoryStore()
-    report = StreamingCoordinator(store, MetadataStore(), cfg).run_stream(
+    report = StreamingCoordinator(store, MetadataStore(),
+                                  program=built).run_stream(
         StreamSource.from_records(events, batch_records=300))
     assert report.error is None and report.late_dropped == 0
     totals = {}
@@ -579,22 +583,20 @@ def test_reap_idle_respects_min_scale():
     assert pool.replicas() == 2
 
 
-def test_ring_too_small_for_window_span_rejected_at_config():
-    """A sliding config whose per-instant open-window count exceeds n_slots
-    must fail at validate(), not on the first event."""
+def test_ring_too_small_for_window_span_rejected_at_build():
+    """A sliding program whose per-instant open-window count exceeds
+    n_slots must fail at build(), not on the first event."""
     with pytest.raises(ValueError, match="n_slots"):
-        StreamingConfig(num_buckets=16, n_workers=4, window_size=50.0,
-                        window_slide=5.0, n_slots=8).validate()
+        _build("ring-small", window_slide=5.0, n_slots=8)
     # same span fits with a big enough ring
-    StreamingConfig(num_buckets=16, n_workers=4, window_size=50.0,
-                    window_slide=5.0, n_slots=11).validate()
+    _build("ring-fits", window_slide=5.0, n_slots=11)
 
 
 def test_key_space_overflow_raises():
     events = [(float(i), f"key-{i}", 1.0) for i in range(20)]
-    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=100.0,
-                          batch_records=10, job_id="ovf")
-    coord = StreamingCoordinator(MemoryStore(), MetadataStore(), cfg)
+    built = _build("ovf", window_size=100.0, batch_records=10)
+    coord = StreamingCoordinator(MemoryStore(), MetadataStore(),
+                                 program=built)
     with pytest.raises(ValueError, match="num_buckets"):
         coord.run_stream(StreamSource.from_records(events, batch_records=10))
 
@@ -623,9 +625,9 @@ def test_ensure_scale_prewarms():
 
 def test_stream_scales_pool_from_lag():
     events = _synth_events(n=3000)
-    cfg = StreamingConfig(num_buckets=16, n_workers=4, window_size=50.0,
-                          batch_records=100, job_id="lag")
-    coord = StreamingCoordinator(MemoryStore(), MetadataStore(), cfg)
+    built = _build("lag")
+    coord = StreamingCoordinator(MemoryStore(), MetadataStore(),
+                                 program=built)
     report = coord.run_stream(
         StreamSource.from_records(events, batch_records=100))
     # 30 announced batches → lag well above pool max at the start

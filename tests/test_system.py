@@ -9,9 +9,9 @@ import pytest
 
 from repro.core import (Coordinator, JobState, MemoryStore, MetadataStore,
                         make_wordcount_job, read_final_output)
-from repro.core.mapreduce import (DeviceJobConfig, mapreduce,
-                                  wordcount_map_factory)
+from repro.core.mapreduce import wordcount_map_factory
 from repro.data.pipeline import synth_corpus
+from repro.pipeline import Pipeline
 
 
 @pytest.fixture(scope="module")
@@ -83,8 +83,10 @@ def test_host_vs_device_engine(corpus):
     shard = np.stack([toks.reshape(W, -1),
                       np.ones((W, n // W), np.int32)], axis=-1)
     nb = 256
-    cfg = DeviceJobConfig(num_buckets=nb, n_workers=W)
-    res = np.asarray(mapreduce(wordcount_map_factory(nb), shard, cfg,
-                               mode="aggregate", backend="vmap"))
+    built = (Pipeline.from_source(shards=shard)
+             .map(wordcount_map_factory(nb)).reduce("sum")
+             .build(num_buckets=nb, n_workers=W, backend="vmap"))
+    res, _stats = built.run_batch(data=shard)
+    res = np.asarray(res)
     for w, c in expected.items():
         assert res[vocab[w]] == c
