@@ -58,6 +58,28 @@ def tenant_program(job_id: str, agg: str):
                    job_id=job_id))
 
 
+def rogue_program(job_id: str):
+    """A tenant submission planlint must reject at admission: it sinks
+    under the reserved ``jobs/`` checkpoint namespace, so its restore
+    scans would list the carry blob as a persisted window (PL005)."""
+    return (Pipeline.from_source(batch_records=BATCH)
+            .key_by(lambda r: r[1])
+            .window(Windowing.tumbling(WINDOW))
+            .reduce("count")
+            .sink("jobs/")
+            .build(num_buckets=8, n_workers=4, batch_records=BATCH,
+                   job_id=job_id))
+
+
+def build_pipelines():
+    """Planlint hook: every program this example builds, for
+    ``python -m repro.analysis.planlint examples`` (the CI analysis
+    gate).  The rogue program is deliberately absent — it exists to be
+    rejected, and the demo asserts that it is."""
+    return {"speed-rollup": tenant_program("gps-speed", "mean"),
+            "ping-billing": tenant_program("gps-bill", "count")}
+
+
 def standalone_sink(events, job_id: str, agg: str):
     """Ground truth: the same program on a private single-tenant store."""
     store = MemoryStore()
@@ -100,6 +122,25 @@ def main() -> None:
                     "source_prefix": "streams/gps"})["result"]
     print(f"submitted {a!r} (fleet-ops) and {b!r} (billing) against one "
           f"shared ingest")
+
+    # 2b. admission control: a program that fails planlint is rejected
+    # before it registers — the build already warned (PlanLintWarning),
+    # and the submit fails for this tenant only
+    import warnings
+
+    from repro.analysis import PlanLintWarning
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", PlanLintWarning)  # shown at submit
+        rogue = rogue_program("gps-rogue")
+    server.add_tenant("rogue-team")
+    rpc.handle({"method": "register", "name": "rogue", "program": rogue})
+    rej = rpc.handle({"method": "submit", "tenant": "rogue-team",
+                      "program": "rogue", "source_prefix": "streams/gps"})
+    assert not rej["ok"] and "PlanRejected" in rej["error"]
+    assert client.status(a)["state"] is not None     # neighbors unaffected
+    print(f"rogue submit rejected by planlint: {rej['error'].split(':')[0]} "
+          f"(PL005 — sink under the reserved jobs/ namespace); "
+          f"other tenants unaffected")
 
     # 3. drive until the stream goes quiet: both jobs drain, checkpoint,
     # park — and the pool scales to zero

@@ -40,6 +40,49 @@ def first_letter(rec):               # stage 2: bucket by first letter
     return ts, (word[:1] or "_"), one
 
 
+def build_pipelines():
+    """Planlint hook (``python -m repro.analysis.planlint examples``):
+    the demo's graph shapes — single-stage, fused-map, top-k, two-phase
+    chain, and the tee'd DAG — built over stub records (bound data does
+    not affect the lowered plan, so the checks see exactly the programs
+    ``main`` runs)."""
+    stub = [(0.0, "w", 1.0)]
+
+    def src():
+        return Pipeline.from_source(records=stub, batch_records=2048)
+
+    two_phase = (src().map(normalize).key_by()
+                 .window(Windowing.tumbling(60.0)).reduce("count")
+                 .window(Windowing.tumbling(300.0)).reduce("sum").top_k(5))
+    fan = (src().key_by()
+           .window(Windowing.tumbling(60.0)).reduce("count")
+           .tee(Pipeline.branch()
+                .window(Windowing.tumbling(300.0))
+                .reduce("sum").top_k(5).sink("gps-busy/"),
+                Pipeline.branch()
+                .map(normalize).key_by()
+                .window(Windowing.tumbling(300.0))
+                .reduce("sum").sink("gps-region/")))
+    return {
+        "words": (src().key_by().window(WINDOW).reduce("count")
+                  .build(num_buckets=BUCKETS, n_workers=WORKERS,
+                         job_id="words")),
+        "letters": (src().map(normalize).map(first_letter).key_by()
+                    .window(WINDOW).reduce("count")
+                    .build(num_buckets=BUCKETS, n_workers=WORKERS,
+                           job_id="letters")),
+        "hot": (src().map(normalize).key_by().window(WINDOW)
+                .reduce("count").top_k(8)
+                .build(num_buckets=BUCKETS, n_workers=WORKERS,
+                       job_id="hot")),
+        "two-phase": two_phase.build(num_buckets=BUCKETS,
+                                     n_workers=WORKERS,
+                                     job_id="two-phase"),
+        "gps-fan": fan.build(num_buckets=64, n_workers=WORKERS,
+                             job_id="gps-fan"),
+    }
+
+
 def main() -> None:
     corpus = synth_corpus(60_000, vocab_words=500, seed=1)
     # the Splitter's record form: one (event_time, key, value) per word

@@ -19,6 +19,18 @@ from repro.data.pipeline import synth_corpus
 from repro.pipeline import Pipeline
 
 
+def build_pipelines():
+    """Planlint hook (``python -m repro.analysis.planlint examples``):
+    the device-engine word-count as ``main`` builds it, over a stub shard
+    (the data shape doesn't change the plan)."""
+    shard = np.zeros((8, 4, 2), dtype=np.int32)
+    return {"wordcount": (Pipeline.from_source(shards=shard)
+                          .map(wordcount_map_factory(16))
+                          .reduce("sum")
+                          .build(num_buckets=16, n_workers=8,
+                                 backend="vmap", job_id="wordcount"))}
+
+
 def main() -> None:
     # 1. input data in the object store ("S3 bucket")
     corpus = synth_corpus(100_000, vocab_words=2000, seed=0)

@@ -46,6 +46,32 @@ def synth_gps_events(seed: int = 0):
             for t, r, s in zip(ts, regions, speeds)]
 
 
+def fleet_pipeline():
+    """The demo's main program: mean speed per region per minute."""
+    return (Pipeline.from_source(prefix="streams/gps", batch_records=2048)
+            .key_by(lambda r: r[1])
+            .window(Windowing.tumbling(WINDOW))
+            .reduce("mean")
+            .sink("stream-output/"))
+
+
+def build_pipelines():
+    """Planlint hook (``python -m repro.analysis.planlint examples``):
+    the example's programs, built exactly as the demo builds them (the
+    session job with stub records — sources don't affect the plan)."""
+    return {
+        "gps-fleet": fleet_pipeline().build(
+            num_buckets=8, n_workers=4, allowed_lateness=5.0,
+            job_id="gps-fleet"),
+        "gps-trips": (Pipeline.from_source(records=[], batch_records=512)
+                      .key_by()
+                      .window(Windowing.session(gap=30.0))
+                      .reduce("mean")
+                      .build(num_buckets=8, n_workers=4, n_slots=4,
+                             job_id="gps-trips")),
+    }
+
+
 def main() -> None:
     events = synth_gps_events()
 
@@ -56,13 +82,8 @@ def main() -> None:
           f"{len(store.list_objects('streams/gps'))} segments")
 
     # 2. ONE definition: mean speed per region per 1-minute window
-    pipe = (Pipeline.from_source(prefix="streams/gps", batch_records=2048)
-            .key_by(lambda r: r[1])
-            .window(Windowing.tumbling(WINDOW))
-            .reduce("mean")
-            .sink("stream-output/"))
-    built = pipe.build(num_buckets=8, n_workers=4, allowed_lateness=5.0,
-                      job_id="gps-fleet")
+    built = fleet_pipeline().build(num_buckets=8, n_workers=4,
+                                   allowed_lateness=5.0, job_id="gps-fleet")
 
     # 2a. streaming mode through the one front door: the graph's bound
     # source is a log prefix, so run() dispatches to the streaming

@@ -1,0 +1,43 @@
+"""repro.analysis — static checks for plans and for the tree.
+
+Two passes share the :class:`~repro.analysis.diagnostics.Diagnostic`
+currency:
+
+* **planlint** (:mod:`repro.analysis.planlint`) — semantic rules over a
+  lowered ``BuiltPipeline`` (ring depth, hash-collision odds, group
+  capacity, watermark wiring, sink prefixes, donation).  Runs at
+  ``Pipeline.build()`` (warnings), ``JobServer.submit()`` (errors
+  reject), and on demand via ``BuiltPipeline.check()`` / ``explain()``.
+* **reprolint** (:mod:`repro.analysis.reprolint`) — stdlib-``ast`` lint
+  of repo invariants (shard_map confinement, lane safety, SPMD purity,
+  donation rebinding), driven by ``python -m repro.analysis.lint``.
+
+Submodules resolve lazily so the jax-free lint CLI never drags in the
+plan layer (``diagnostics`` imports ``pipeline.graph`` for the
+``PipelineError`` base, nothing heavier).
+"""
+
+from __future__ import annotations
+
+from .lanes import LANES, lane
+
+_LAZY = {
+    "Diagnostic": "diagnostics", "PlanLintWarning": "diagnostics",
+    "PlanRejected": "diagnostics", "ERROR": "diagnostics",
+    "WARNING": "diagnostics", "INFO": "diagnostics",
+    "errors": "diagnostics", "format_report": "diagnostics",
+    "check_plan": "planlint", "explain_plan": "planlint",
+    "min_slots_required": "planlint", "collision_probability": "planlint",
+    "lint_source": "reprolint", "lint_file": "reprolint",
+    "lint_paths": "reprolint",
+}
+
+__all__ = ["LANES", "lane", *sorted(_LAZY)]
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f".{mod}", __name__), name)

@@ -1,0 +1,56 @@
+"""``python -m repro.analysis.lint`` — run reprolint over files/trees.
+
+Deliberately jax-free: the CLI imports only stdlib + the analysis
+package, so the CI analysis job (and a pre-commit hook) pays no device
+runtime startup.  Exit status 1 iff any non-allowlisted finding remains.
+
+Usage::
+
+    python -m repro.analysis.lint src tests benchmarks examples
+    python -m repro.analysis.lint --allowlist .reprolint-allow src
+    python -m repro.analysis.lint --list-rules
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+from .reprolint import RULES, iter_python_files, lint_paths, load_allowlist
+
+DEFAULT_ALLOWLIST = ".reprolint-allow"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="reprolint: repo-invariant AST lint")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--allowlist", default=None,
+                    help=f"allowlist file of glob::RULE lines "
+                         f"(default: {DEFAULT_ALLOWLIST} if present)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule_id in sorted(RULES):
+            print(f"{rule_id}  {RULES[rule_id]}")
+        return 0
+
+    allow_path = args.allowlist
+    if allow_path is None and pathlib.Path(DEFAULT_ALLOWLIST).exists():
+        allow_path = DEFAULT_ALLOWLIST
+    allowlist = load_allowlist(allow_path) if allow_path else []
+
+    findings = lint_paths(args.paths, allowlist)
+    n_files = sum(1 for _ in iter_python_files(args.paths))
+    for d in findings:
+        print(d.format())
+    print(f"reprolint: {n_files} file(s), {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -263,6 +263,7 @@ class BuiltPipeline:
     batch_plan: Any = None          # array pipelines: CompiledBatchPlan
     edges: tuple[StageEdge, ...] = ()
     inputs: tuple[tuple[int, int], ...] = ((0, 0),)
+    jit: bool = True                # donation needs a jitted fold (PL006)
 
     # -- stage-0 / final-stage views (the single-stage API surface) -----------
     @property
@@ -334,6 +335,26 @@ class BuiltPipeline:
         with checkpointing off — how ``run_batch`` drives it."""
         return dataclasses.replace(self, batch_records=max(total_records, 1),
                                    checkpoint_interval=0)
+
+    # -- static analysis -------------------------------------------------------
+    def check(self, options=None, *, source_prefixes=()) -> list:
+        """Run planlint over the lowered program: a list of
+        ``Diagnostic(rule_id, level, message, loc)`` records, empty when
+        clean.  ``Pipeline.build`` warns on these automatically;
+        ``JobServer.submit`` rejects error-level findings.  Pass the
+        ``RunOptions`` the program will run under to enable the donation
+        checks (PL006)."""
+        # function-level: analysis.diagnostics imports pipeline.graph, so
+        # a module-level edge back into analysis would cycle the package
+        from ..analysis.planlint import check_plan
+        return check_plan(self, options, source_prefixes=source_prefixes)
+
+    def explain(self, options=None, *, source_prefixes=()) -> str:
+        """Human-readable program summary — every stage's window/ring/
+        bucket geometry, every edge's transport, and the full planlint
+        report including advisory findings."""
+        from ..analysis.planlint import explain_plan
+        return explain_plan(self, options, source_prefixes=source_prefixes)
 
     # -- execution -------------------------------------------------------------
     def run(self, source_or_data=None, *, options=None, store=None,
@@ -542,10 +563,13 @@ def _check_windowing(w: Windowing, n_slots: int, lateness: float) -> None:
         return
     else:
         raise PipelineError(f"unknown windowing kind {w.kind!r}")
-    # the ring must hold every window open at one instant
-    step = w.slide or w.size
-    need = math.ceil((w.size + lateness) / step) + 1
+    # the ring must hold every window open at one instant — the same
+    # bound planlint's PL001 reports and WindowTracker enforces at
+    # construction, derived once in analysis.planlint
+    from ..analysis.planlint import min_slots_required
+    need = min_slots_required(w.size, w.slide, lateness)
     if need > n_slots:
+        step = w.slide or w.size
         raise PipelineError(
             f"n_slots={n_slots} cannot hold the window span; need >= "
             f"{need} for size={w.size}, slide={step}, lateness={lateness}")
@@ -834,14 +858,17 @@ def build_pipeline(p: Pipeline, *, num_buckets=128, n_workers: int = 8,
         stage = StagePlan(0, (side,), None, chain.reduce_mode, emit,
                           num_buckets, n_slots, allowed_lateness,
                           chain.capacity)
-        return BuiltPipeline(
+        built = BuiltPipeline(
             stages=(stage,), num_buckets=num_buckets, n_workers=n_workers,
             n_slots=n_slots, batch_records=batch_records,
             key_space=key_space_str, fanout=fanout,
             allowed_lateness=allowed_lateness,
             checkpoint_interval=checkpoint_interval, backend=backend,
             output_prefix=output_prefix, job_id=job_id, handoff=handoff,
-            batch_plan=batch_plan)
+            batch_plan=batch_plan, jit=jit)
+        from ..analysis.diagnostics import warn_diagnostics
+        warn_diagnostics(built.check())
+        return built
 
     # -- record pipelines: assemble the stage DAG -----------------------------
     stages: list[StagePlan] = []
@@ -956,14 +983,17 @@ def build_pipeline(p: Pipeline, *, num_buckets=128, n_workers: int = 8,
             # build option may override) stays authoritative, as ever
             stages[finals[0]] = dataclasses.replace(
                 stages[finals[0]], output_prefix=None)
-        return BuiltPipeline(
+        built = BuiltPipeline(
             stages=tuple(stages), num_buckets=carry_width,
             n_workers=n_workers, n_slots=n_slots,
             batch_records=batch_records, key_space=key_space_str,
             fanout=fanout, allowed_lateness=allowed_lateness,
             checkpoint_interval=checkpoint_interval, backend=backend,
             output_prefix=output_prefix, job_id=job_id, handoff=handoff,
-            edges=tuple(edges), inputs=inputs)
+            edges=tuple(edges), inputs=inputs, jit=jit)
+        from ..analysis.diagnostics import warn_diagnostics
+        warn_diagnostics(built.check())
+        return built
 
     # -- joins (either side may be a multi-stage chain) -----------------------
     if join_node is not None:

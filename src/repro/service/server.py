@@ -35,6 +35,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any
 
+from ..analysis.diagnostics import PlanRejected, errors
 from ..core.autoscaler import AutoscalerConfig, ServerlessPool
 from ..core.events import (TOPIC_JOB_LIFECYCLE, EventBus,
                            job_lifecycle_event)
@@ -138,9 +139,18 @@ class JobServer:
         job can write anything; ``resume=True`` re-attaches a job that a
         crashed server had already registered — its checkpoint (if any)
         is honored on first drive, so recovery is exactly-once.
+
+        Admission runs planlint first: a program with error-level
+        findings (a ring that must overflow, colliding sinks, an unfed
+        join side) raises :class:`~repro.analysis.diagnostics.PlanRejected`
+        *before* the job registers — the plan-level twin of the
+        ``QuotaExceeded`` pattern, failing only this tenant's submit.
         """
         if tenant not in self.tenants:
             raise KeyError(f"unknown tenant {tenant!r}; add_tenant first")
+        bad = errors(program.check(options))
+        if bad:
+            raise PlanRejected(bad)
         t = self.tenants[tenant]
         fresh = self.registry.register(
             program.job_id, tenant,

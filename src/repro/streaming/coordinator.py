@@ -109,6 +109,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis.lanes import lane
 from ..core.autoscaler import AutoscalerConfig, ServerlessPool
 from ..core.events import (EventBus, TOPIC_STREAM_BATCH, TOPIC_STREAM_WINDOW,
                            batch_event, window_event)
@@ -119,6 +120,26 @@ from ..engine.stages import RAW_KEY_BITS, fold_key24, host_bucket
 from .source import MicroBatch
 from .state import LateEventError
 from .windows import Window
+
+#: the three-lane scheduler's shared-state contract, machine-readable:
+#: coordinator attributes that more than one piece of the drive loop
+#: touches, mapped to the lanes allowed to mutate them (or call methods
+#: through them).  ``repro.analysis.reprolint`` reads this table — a
+#: mutation from an ``@lane``-annotated function outside the declared set
+#: is an RL103 error, the static form of the byte-identity invariant the
+#: PR 6 docstrings could only state.  Keep entries literal.
+LANE_SHARED = {
+    "_pending_stats": ("driver", "barrier"),   # deferred fold counters
+    "_pending_puts": ("driver", "barrier"),    # staged sink writes
+    "tables": ("driver",),                     # key-id dictionaries
+    "tracker": ("driver", "barrier"),          # ring + watermark state
+    "carry": ("driver", "barrier"),            # device fold state
+}
+
+#: names that hold device arrays on the hot path: ``int()``/``float()``
+#: over these inside a driver/prefetch lane forces a device->host sync
+#: mid-batch (RL102)
+LANE_DEVICE_STATE = {"carry", "stats"}
 
 _RAW_KEY_BITS = RAW_KEY_BITS    # raw ids must survive the float32 wire
 _MAX_WIRE_INT = 1 << 24  # largest int the float32 wire carries exactly
@@ -583,6 +604,7 @@ class StreamingCoordinator:
             st.tables[0].on_new = on_new
 
     # -- record transforms -----------------------------------------------------
+    @lane("prefetch")
     def _transform_recs(self, si: int,
                         raw) -> list[tuple[float, Any, float, int]]:
         """Apply stage ``si``'s fused map chain and key/value extractors;
@@ -606,6 +628,7 @@ class StreamingCoordinator:
                              float(sp.value_fn(r)), side))
         return recs
 
+    @lane("driver")
     def _grow_wire(self, si: int, recs: list) -> None:
         """Flat-maps may expand past the stage's wire capacity: grow the
         buffer (and retrace the step once per growth) instead of failing,
@@ -620,6 +643,7 @@ class StreamingCoordinator:
         if per > stage.per_worker:
             stage.per_worker = per
 
+    @lane("driver")
     def _stage_recs(self, si: int, raw, report: StreamReport,
                     count_in: bool) -> list[tuple[float, Any, float, int]]:
         """Transform + wire growth in one synchronous call — the host-edge
@@ -639,6 +663,7 @@ class StreamingCoordinator:
             return rows.reshape(self.prog.n_workers, stage.per_worker, width)
         return rows
 
+    @lane("driver")
     def _fold_device(self, si: int, rows: np.ndarray, report: StreamReport,
                      side: int = 0) -> None:
         """Fold one-row-per-record [last_window, n_windows, key, value,
@@ -656,6 +681,7 @@ class StreamingCoordinator:
             donate=self.opts.donate_carry)
         self._account_stats(si, stats, report)
 
+    @lane("driver")
     def _account_stats(self, si: int, stats, report: StreamReport) -> None:
         """Apply one fold's [late, expanded, dropped] counters.  With
         overlap on, the device→host read is deferred — the stats array
@@ -667,11 +693,14 @@ class StreamingCoordinator:
         if self.opts.overlap:
             self._pending_stats.append((si, stats))
             return
-        late, expanded, dropped = (int(x) for x in np.asarray(stats))
+        late, expanded, dropped = (
+            # the synchronous (overlap-off) path reads per fold by design
+            int(x) for x in np.asarray(stats))  # reprolint: disable=RL102
         self.stages[si].tracker.note_late(late)
         report.records_expanded += expanded
         report.capacity_dropped += dropped
 
+    @lane("barrier")
     def _drain_stats(self, report: StreamReport) -> None:
         """Batch-boundary drain: read every deferred fold's counters in one
         pass (each ``np.asarray`` waits on its already-dispatched step)."""
@@ -684,6 +713,7 @@ class StreamingCoordinator:
             report.records_expanded += expanded
             report.capacity_dropped += dropped
 
+    @lane("driver")
     def _fold_host(self, si: int, rows: np.ndarray) -> None:
         """Host-wire fold: [window_slot, key, value, valid] rows whose slot
         was assigned host-side (legacy host fan-out, or session cells)."""
@@ -694,6 +724,7 @@ class StreamingCoordinator:
                                           donate=self.opts.donate_carry)
 
     # -- window finalization --------------------------------------------------
+    @lane("driver")
     def _put_window(self, out_key: str, records: list, start: float,
                     end: float, report: StreamReport,
                     t_close: float | None = None) -> None:
@@ -725,6 +756,7 @@ class StreamingCoordinator:
                                       len(records), out_key),
                          key=f"{self.prog.job_id}/{start}")
 
+    @lane("barrier")
     def _flush_sinks(self, report: StreamReport) -> None:
         """Drain-lane sink flush: one batched store write for every window
         the sweep emitted, then the per-window bus events in emission
@@ -751,6 +783,7 @@ class StreamingCoordinator:
             return float(total)
         return float(total / count)
 
+    @lane("driver")
     def _window_records(self, si: int, slot: int) -> list[tuple[str, Any]]:
         """One finalized fixed window's output records, per the stage's
         emission spec — written to the store by the final stage, fed to
@@ -813,6 +846,7 @@ class StreamingCoordinator:
             records.sort(key=lambda kv: kv[0])
         return records
 
+    @lane("driver")
     def _emit_window(self, si: int, window_index: int, slot: int,
                      report: StreamReport) -> None:
         stage = self.stages[si]
@@ -826,6 +860,7 @@ class StreamingCoordinator:
         stage.carry = stage.compiled.clear_slot(stage.carry, slot)
         stage.tracker.release(window_index)
 
+    @lane("driver")
     def _emit_session(self, si: int, session, report: StreamReport) -> None:
         stage = self.stages[si]
         compiled = stage.compiled
@@ -844,6 +879,7 @@ class StreamingCoordinator:
         stage.tracker.release(session)
 
     # -- span admission (shared by record ingestion and the carry handoff) -----
+    @lane("driver")
     def _admit_span(self, si: int, lo: int, hi: int, seen: float,
                     ship, flush, report: StreamReport, *ship_args,
                     via: "_EdgeState | None" = None) -> None:
@@ -882,6 +918,7 @@ class StreamingCoordinator:
             ship(hi, hi - start + 1, *ship_args)
 
     # -- the carry handoff (stage N windows → successor batches) ---------------
+    @lane("driver")
     def _handoff_device(self, edge: _EdgeState, slot: int, wstart: float,
                         report: StreamReport) -> None:
         """On-device edge: re-key/re-window one finalized window of the
@@ -907,6 +944,7 @@ class StreamingCoordinator:
                                                    report),
             lambda: None, report, via=edge)
 
+    @lane("driver")
     def _handoff_step(self, edge: _EdgeState, slot: int, last: int,
                       n_windows: int, report: StreamReport) -> None:
         """One fused handoff: gather the source's finalized slot, relabel
@@ -928,6 +966,7 @@ class StreamingCoordinator:
                                             donate=self.opts.donate_carry)
         self._account_stats(edge.spec.dst, stats, report)
 
+    @lane("driver")
     def _feed(self, edge: _EdgeState, records: list,
               report: StreamReport) -> None:
         """Host edge: one finalized window's records, materialized and fed
@@ -944,6 +983,7 @@ class StreamingCoordinator:
         else:
             self._ingest_host(si, recs, report, via=edge)
 
+    @lane("driver")
     def _observe(self, si: int) -> None:
         """Advance stage ``si``'s watermark to the minimum over its input
         channels — the external stream's observed event time (roots) and
@@ -958,6 +998,7 @@ class StreamingCoordinator:
         if cands:
             self.stages[si].tracker.observe(min(cands))
 
+    @lane("driver")
     def _observe_floor(self, si: int, seen: float,
                        via: "_EdgeState | None") -> None:
         """The mid-batch ring-full recovery's watermark advance: the
@@ -977,6 +1018,7 @@ class StreamingCoordinator:
             cands.append(self._ext_wm.get(si, _NEG_INF))
         self.stages[si].tracker.observe(min(cands))
 
+    @lane("driver")
     def _finalize_stage(self, si: int, report: StreamReport) -> set[int]:
         """Emit (terminal stage) or hand off (one delivery per out-edge)
         every window stage ``si``'s watermark has passed; returns the
@@ -1043,6 +1085,7 @@ class StreamingCoordinator:
         self._flush_sinks(report)
 
     # -- checkpoint / restore --------------------------------------------------
+    @lane("barrier")
     def save_state(self) -> None:
         """Persist the full streaming state at a batch boundary: every
         stage's carry — branches included, one pytree — to the object
@@ -1180,6 +1223,7 @@ class StreamingCoordinator:
             n += 1
         return n
 
+    @lane("driver")
     def _ingest_device(self, si: int, recs, report: StreamReport,
                        via: "_EdgeState | None" = None) -> None:
         """Device fan-out ingestion: one 5-column row per record; window
@@ -1245,6 +1289,7 @@ class StreamingCoordinator:
         for s in range(n_sides):
             self._fold_device(si, rows[s], report, s)
 
+    @lane("driver")
     def _ingest_host(self, si: int, recs, report: StreamReport,
                      via: "_EdgeState | None" = None) -> None:
         """Legacy host fan-out: expand every record into one row per
@@ -1279,6 +1324,7 @@ class StreamingCoordinator:
         report.records_expanded += n
         self._fold_host(si, rows)
 
+    @lane("driver")
     def _ingest_session(self, si: int, recs, report: StreamReport) -> None:
         """Session ingestion: the tracker assigns each admitted event a
         carry cell (slot, bucket), merging bridged sessions; rows ship on
@@ -1345,6 +1391,7 @@ class StreamingCoordinator:
         return sum(table.collisions for st in self.stages
                    for table in self._unique_tables(st))
 
+    @lane("prefetch")
     def _prepare_batch(self, batch: MicroBatch) -> _PreparedBatch:
         """Prepare-lane work for one micro-batch: size check, routing each
         record to its external input's root stage, and the fused map

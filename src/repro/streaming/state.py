@@ -50,6 +50,22 @@ class WindowTracker:
     def __post_init__(self) -> None:
         if self.n_slots < 1:
             raise ValueError("need at least one window slot")
+        # fail at construction when the ring cannot hold the window span —
+        # the same bound pipeline.lower enforces at build and planlint's
+        # PL001 reports, so a hand-built tracker gets the pointed error
+        # here instead of a mid-stream "window ring full"
+        size = getattr(self.assigner, "size", None)
+        if size is not None:
+            from ..analysis.planlint import min_slots_required
+            need = min_slots_required(size, getattr(self.assigner, "slide",
+                                                    None),
+                                      self.allowed_lateness)
+            if self.n_slots < need:
+                raise ValueError(
+                    f"n_slots={self.n_slots} cannot hold the window span; "
+                    f"need >= {need} for size={size}, "
+                    f"slide={getattr(self.assigner, 'slide', None) or size},"
+                    f" lateness={self.allowed_lateness}")
         self._slots = {s: w for w, s in self.active.items()}
 
     # -- admission -----------------------------------------------------------

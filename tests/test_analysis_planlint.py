@@ -1,0 +1,271 @@
+"""planlint: golden diagnostics per rule (one trigger + one clean each),
+the build-time warning integration, explain(), and admission — a
+planlint-error program is rejected at ``JobServer.submit`` without
+touching its neighbors."""
+
+import dataclasses
+import warnings
+
+import pytest
+
+from repro.analysis import PlanLintWarning, PlanRejected
+from repro.analysis.planlint import (COLLISION_WARN_P, RAW_KEY_BITS,
+                                     collision_probability,
+                                     min_slots_required)
+from repro.core import MemoryStore, MetadataStore
+from repro.engine import stages as engine_stages
+from repro.pipeline import Pipeline, RunOptions, Windowing
+from repro.service import JobServer
+
+
+def _build(*, window=None, reduce="sum", mode="aggregate", capacity=0,
+           sink="out/", job_id="plt", **kw):
+    w = window or Windowing.tumbling(10.0)
+    kw.setdefault("num_buckets", 8)
+    kw.setdefault("n_workers", 4)
+    kw.setdefault("batch_records", 64)
+    return (Pipeline.from_source(batch_records=kw["batch_records"])
+            .key_by().window(w).reduce(reduce, mode=mode, capacity=capacity)
+            .sink(sink).build(job_id=job_id, **kw))
+
+
+def _replace_stage(built, si=0, **kw):
+    stages = list(built.stages)
+    stages[si] = dataclasses.replace(stages[si], **kw)
+    return dataclasses.replace(built, stages=tuple(stages))
+
+
+def _rules(diags, level=None):
+    return [d.rule_id for d in diags
+            if level is None or d.level == level]
+
+
+# ---------------------------------------------------------------------------
+# min_slots_required — the shared ring bound
+# ---------------------------------------------------------------------------
+
+def test_min_slots_required_golden():
+    assert min_slots_required(10.0) == 2                   # tumbling
+    assert min_slots_required(10.0, lateness=5.0) == 3
+    assert min_slots_required(60.0, 20.0) == 4             # sliding
+    assert min_slots_required(60.0, 20.0, 10.0) == 5
+
+
+# ---------------------------------------------------------------------------
+# PL001 — ring slots
+# ---------------------------------------------------------------------------
+
+def test_pl001_ring_too_small():
+    bad = _replace_stage(_build(), n_slots=1)
+    (d,) = [d for d in bad.check() if d.rule_id == "PL001"]
+    assert d.level == "error" and d.loc == "stage 0"
+    assert "n_slots=1 cannot hold the window span; need >= 2" in d.message
+    assert "window ring full" in d.message
+
+
+def test_pl001_session_single_slot():
+    built = _build(window=Windowing.session(gap=5.0), reduce="mean")
+    bad = _replace_stage(built, n_slots=1)
+    (d,) = [d for d in bad.check() if d.rule_id == "PL001"]
+    assert "session ring" in d.message and "need >= 2" in d.message
+
+
+def test_pl001_clean():
+    assert _build(n_slots=4).check() == []
+
+
+# ---------------------------------------------------------------------------
+# PL002 — hashed raw-id collisions
+# ---------------------------------------------------------------------------
+
+def test_pl002_birthday_bound_matches_engine():
+    # the estimate is only honest if it models the actual wire id width
+    assert RAW_KEY_BITS == engine_stages.RAW_KEY_BITS
+    assert collision_probability(1) == 0.0
+    assert 0.0 < collision_probability(100) < COLLISION_WARN_P
+    assert collision_probability(1000) >= COLLISION_WARN_P
+
+
+def test_pl002_hashed_warning_and_info():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", PlanLintWarning)
+        wide = _build(key_space="hashed", num_buckets=1000)
+    (d,) = [d for d in wide.check() if d.rule_id == "PL002"]
+    assert d.level == "warning"
+    assert "24-bit raw-id space" in d.message and "silent merge" in d.message
+    narrow = _build(key_space="hashed", num_buckets=64)
+    (d,) = [d for d in narrow.check() if d.rule_id == "PL002"]
+    assert d.level == "info"          # advisory only: explain() shows it
+
+
+def test_pl002_dense_clean():
+    assert "PL002" not in _rules(_build(num_buckets=1000).check())
+
+
+# ---------------------------------------------------------------------------
+# PL003 — group capacity vs one micro-batch
+# ---------------------------------------------------------------------------
+
+def test_pl003_capacity_below_batch_floor():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", PlanLintWarning)
+        built = _build(reduce="max", mode="group", capacity=8,
+                       batch_records=256)
+    (d,) = [d for d in built.check() if d.rule_id == "PL003"]
+    assert d.level == "warning"
+    assert "capacity=8" in d.message and "64 records" in d.message
+    assert "capacity_dropped" in d.message
+
+
+def test_pl003_clean():
+    built = _build(reduce="max", mode="group", capacity=64,
+                   batch_records=256)
+    assert "PL003" not in _rules(built.check())
+
+
+# ---------------------------------------------------------------------------
+# PL004 — watermark wiring
+# ---------------------------------------------------------------------------
+
+def _two_stage():
+    return (Pipeline.from_source(batch_records=64).key_by()
+            .window(Windowing.tumbling(10.0)).reduce("count")
+            .window(Windowing.tumbling(60.0)).reduce("sum")
+            .sink("out/")
+            .build(num_buckets=8, n_workers=4, batch_records=64,
+                   job_id="plt4"))
+
+
+def test_pl004_unfed_side_is_error():
+    bad = dataclasses.replace(_two_stage(), inputs=())
+    diags = [d for d in bad.check() if d.rule_id == "PL004"]
+    (d,) = [d for d in diags if d.level == "error"]
+    assert d.loc == "stage 0"
+    assert "no input channel" in d.message and "-inf" in d.message
+
+
+def test_pl004_dead_lateness_on_carry_fed_stage():
+    bad = _replace_stage(_two_stage(), si=1, allowed_lateness=3.0)
+    (d,) = [d for d in bad.check() if d.rule_id == "PL004"]
+    assert d.level == "warning" and d.loc == "stage 1"
+    assert "fed only through the carry" in d.message
+
+
+def test_pl004_clean():
+    assert _two_stage().check() == []
+
+
+# ---------------------------------------------------------------------------
+# PL005 — sink prefixes
+# ---------------------------------------------------------------------------
+
+def test_pl005_nested_sinks_across_branches():
+    # build-time distinctness only rejects exact duplicate sinks; overlap
+    # of the *normalized* `<sink>/<job_id>/` prefixes is planlint's
+    # generalization — one branch's sink nests under the other branch's
+    # job prefix, so a prefix listing of one sees the other's windows
+    fan = (Pipeline.from_source(batch_records=64).key_by()
+           .window(Windowing.tumbling(10.0)).reduce("count")
+           .tee(Pipeline.branch().window(Windowing.tumbling(60.0))
+                .reduce("sum").sink("acc/"),
+                Pipeline.branch().window(Windowing.tumbling(60.0))
+                .reduce("sum").sink("acc/plt5/deep/")))
+    with pytest.warns(PlanLintWarning, match="PL005"):
+        built = fan.build(num_buckets=8, n_workers=4, batch_records=64,
+                          job_id="plt5")
+    (d,) = [d for d in built.check() if d.rule_id == "PL005"]
+    assert d.level == "error" and "overlap" in d.message
+
+
+def test_pl005_reserved_jobs_namespace():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", PlanLintWarning)
+        built = _build(sink="jobs/")
+    (d,) = [d for d in built.check() if d.rule_id == "PL005"]
+    assert "reserved" in d.message and "carry checkpoint" in d.message
+
+
+def test_pl005_sink_under_source_log():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", PlanLintWarning)
+        built = (Pipeline.from_source(prefix="streams/gps", batch_records=64)
+                 .key_by().window(Windowing.tumbling(10.0)).reduce("sum")
+                 .sink("streams/gps/rollup/")
+                 .build(num_buckets=8, n_workers=4, batch_records=64,
+                        job_id="plt5s"))
+    (d,) = [d for d in built.check() if d.rule_id == "PL005"]
+    assert "ingest its own output" in d.message
+    # the same overlap arrives via a run-time source binding too
+    clean = _build(sink="rollup/")
+    assert clean.check() == []
+    diags = clean.check(source_prefixes=("rollup/",))
+    assert _rules(diags, "error") == ["PL005"]
+
+
+# ---------------------------------------------------------------------------
+# PL006 — donation
+# ---------------------------------------------------------------------------
+
+def test_pl006_donate_under_jit_false():
+    built = _build(jit=False)
+    assert built.check() == []                       # silent without opts
+    diags = built.check(RunOptions(donate_carry=True))
+    (d,) = [d for d in diags if d.rule_id == "PL006"]
+    assert d.level == "warning" and "silently unavailable" in d.message
+
+
+def test_pl006_join_shared_carry_info():
+    right = (Pipeline.from_source(batch_records=64).key_by()
+             .window(Windowing.tumbling(10.0)).reduce("sum"))
+    built = (Pipeline.from_source(batch_records=64).key_by()
+             .window(Windowing.tumbling(10.0)).reduce("sum")
+             .join(right)
+             .sink("out/")
+             .build(num_buckets=8, n_workers=4, batch_records=64,
+                    job_id="plt6"))
+    (d,) = [d for d in built.check(RunOptions(donate_carry=True))
+            if d.rule_id == "PL006"]
+    assert d.level == "info" and "shared carry" in d.message
+    assert "PL006" not in _rules(built.check())      # no donation, no flag
+
+
+# ---------------------------------------------------------------------------
+# integrations: build warns, explain reports, submit rejects
+# ---------------------------------------------------------------------------
+
+def test_build_emits_planlint_warnings():
+    with pytest.warns(PlanLintWarning, match="PL003"):
+        _build(reduce="max", mode="group", capacity=4, batch_records=256)
+
+
+def test_clean_build_warns_nothing():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", PlanLintWarning)
+        _build()
+
+
+def test_explain_lists_stages_and_findings():
+    text = _build(n_slots=4).explain()
+    assert "tumbling(10.0)" in text and "planlint: clean" in text
+    bad = _replace_stage(_build(), n_slots=1)
+    assert "PL001" in bad.explain()
+
+
+def test_submit_rejects_only_the_offending_tenant():
+    srv = JobServer(MemoryStore(), MetadataStore())
+    srv.add_tenant("good-co")
+    srv.add_tenant("bad-co")
+    ok = _build(job_id="ok-job")
+    srv.submit("good-co", ok, source_prefix="events/")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", PlanLintWarning)
+        bad = _build(sink="jobs/", job_id="bad-job")
+    with pytest.raises(PlanRejected) as exc:
+        srv.submit("bad-co", bad, source_prefix="events/")
+    assert "PL005" in str(exc.value)
+    assert [d.rule_id for d in exc.value.diagnostics] == ["PL005"]
+    # the neighbor's job is untouched and the bad job never registered
+    assert srv.status("ok-job")["state"] is not None
+    assert "bad-job" not in srv.jobs
+    with pytest.raises(KeyError):
+        srv.status("bad-job")

@@ -1,0 +1,300 @@
+"""reprolint: golden diagnostics per rule over inline sources (one
+trigger + one clean each), suppression + allowlist mechanics, the lane
+decorator contract, and the sweep regression — the shipped tree lints
+clean, which is what keeps the CI job blocking."""
+
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.analysis.lanes import LANES, lane
+from repro.analysis.lint import main as lint_main
+from repro.analysis.reprolint import (lint_paths, lint_source,
+                                      load_allowlist)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _lint(src, path="src/repro/streaming/foo.py"):
+    return lint_source(textwrap.dedent(src), path)
+
+
+def _rules(findings):
+    return [d.rule_id for d in findings]
+
+
+# ---------------------------------------------------------------------------
+# RL101 — shard_map confinement
+# ---------------------------------------------------------------------------
+
+def test_rl101_import_forms():
+    (d,) = _lint("import jax.experimental.shard_map as shmap\n")
+    assert d.rule_id == "RL101" and d.line == 1
+    assert "make_shard_map" in d.message
+    (d,) = _lint("from jax.experimental.shard_map import shard_map\n")
+    assert d.rule_id == "RL101"
+    (d,) = _lint("from jax.experimental import shard_map\n")
+    assert d.rule_id == "RL101"
+    (d,) = _lint("import jax\n\ndef f(g):\n    return jax.shard_map(g)\n")
+    assert d.rule_id == "RL101" and d.line == 4
+
+
+def test_rl101_allowed_in_compile_and_for_plain_jax():
+    src = "from jax.experimental.shard_map import shard_map\n"
+    assert lint_source(src, "src/repro/engine/compile.py") == []
+    assert _lint("import jax\nimport jax.numpy as jnp\n") == []
+    # the dispatch *string* is not a reference
+    assert _lint("backend = 'shard_map'\n") == []
+
+
+# ---------------------------------------------------------------------------
+# RL102 — host syncs in hot lanes
+# ---------------------------------------------------------------------------
+
+_LANE_MODULE = """\
+import numpy as np
+from repro.analysis.lanes import lane
+
+LANE_DEVICE_STATE = {{"carry", "stats"}}
+
+
+class C:
+    @lane("{lane}")
+    def f(self, stats, rows):
+        {body}
+"""
+
+
+def _lane_lint(body, lane_name="driver"):
+    return _lint(_LANE_MODULE.format(lane=lane_name, body=body))
+
+
+def test_rl102_sync_calls_in_driver():
+    for body, what in [
+            ("return np.asarray(stats)", "np.asarray"),
+            ("return rows.block_until_ready()", "block_until_ready"),
+            ("return rows.item()", ".item()"),
+            ("import jax; return jax.device_get(rows)", "jax.device_get"),
+            ("return int(stats[0])", "int() over device state"),
+    ]:
+        (d,) = _lane_lint(body)
+        assert d.rule_id == "RL102", body
+        assert what in d.message and "barrier" in d.message
+
+
+def test_rl102_barrier_lane_and_benign_calls_clean():
+    assert _lane_lint("return np.asarray(stats)", "barrier") == []
+    # host→device transfer is not a sync; ints over local names are fine
+    assert _lane_lint("import jax.numpy as jnp; "
+                      "return jnp.asarray(rows)") == []
+    assert _lane_lint("n = len(rows); return int(n)") == []
+    # unannotated functions are unrestricted
+    assert _lint("import numpy as np\n\ndef f(x):\n"
+                 "    return np.asarray(x)\n") == []
+
+
+def test_rl102_nested_def_inherits_lane():
+    src = """\
+    import numpy as np
+    from repro.analysis.lanes import lane
+
+    @lane("driver")
+    def outer(stats):
+        def inner():
+            return np.asarray(stats)
+        return inner
+    """
+    (d,) = _lint(src)
+    assert d.rule_id == "RL102"
+
+
+# ---------------------------------------------------------------------------
+# RL103 — shared-state lane table
+# ---------------------------------------------------------------------------
+
+_SHARED_MODULE = """\
+from repro.analysis.lanes import lane
+
+LANE_SHARED = {{"_pending_stats": ("driver", "barrier"),
+               "tables": ("driver",)}}
+
+
+class C:
+    @lane("{lane}")
+    def f(self, x):
+        {body}
+"""
+
+
+def _shared_lint(body, lane_name="prefetch"):
+    return _lint(_SHARED_MODULE.format(lane=lane_name, body=body))
+
+
+def test_rl103_mutations_off_lane():
+    (d,) = _shared_lint("self._pending_stats.append(x)")
+    assert d.rule_id == "RL103"
+    assert "._pending_stats" in d.message and "'prefetch'" in d.message
+    (d,) = _shared_lint("self._pending_stats = []")
+    assert d.rule_id == "RL103"
+    (d,) = _shared_lint("self._pending_stats += [x]")
+    assert d.rule_id == "RL103"
+    (d,) = _shared_lint("self.tables[0].load_state_dict(x)", "barrier")
+    assert d.rule_id == "RL103" and "('driver',)" in d.message
+
+
+def test_rl103_declared_lanes_and_unannotated_clean():
+    assert _shared_lint("self._pending_stats.append(x)", "driver") == []
+    assert _shared_lint("self._pending_stats.append(x)", "barrier") == []
+    assert _shared_lint("self.other_state = x") == []       # undeclared attr
+    assert _lint("""\
+    LANE_SHARED = {"_pending_stats": ("driver",)}
+
+    class C:
+        def f(self, x):                  # no @lane: unrestricted
+            self._pending_stats.append(x)
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# RL104 — SPMD body purity
+# ---------------------------------------------------------------------------
+
+_KPATH = "src/repro/kernels/foo.py"
+
+
+def test_rl104_impure_constructs():
+    findings = lint_source(textwrap.dedent("""\
+    import numpy as np
+    _n = 0
+
+    def body(x):
+        global _n
+        print(x)
+        if x.any():
+            return np.asarray(x)
+        return x
+    """), _KPATH)
+    assert sorted(_rules(findings)) == ["RL104", "RL104", "RL104", "RL104"]
+    msgs = " | ".join(d.message for d in findings)
+    assert "global" in msgs and "print()" in msgs
+    assert "traced reduction" in msgs and "np.asarray" in msgs
+
+
+def test_rl104_static_branches_and_other_paths_clean():
+    clean = """\
+    import jax.numpy as jnp
+
+    def body(x, hashed):
+        if hashed:                      # static python bool: fine
+            return jnp.sum(x)
+        while x.shape[0] > 1:           # shape is static under trace
+            x = x[:1]
+        return x
+    """
+    assert lint_source(textwrap.dedent(clean), _KPATH) == []
+    # the same impure code outside stages/kernels is not RL104's business
+    assert _lint("def f(x):\n    print(x)\n") == []
+
+
+def test_rl104_applies_to_engine_stages():
+    (d,) = lint_source("def f(x):\n    print(x)\n",
+                       "src/repro/engine/stages.py")
+    assert d.rule_id == "RL104"
+
+
+# ---------------------------------------------------------------------------
+# RL105 — donated buffer rebinding
+# ---------------------------------------------------------------------------
+
+def test_rl105_unrebound_donation():
+    (d,) = _lint("def f(step, c):\n    step(c, donate=True)\n")
+    assert d.rule_id == "RL105" and "stale buffer" in d.message
+    (d,) = _lint("def f(step, c):\n    out = step(c, donate=True)\n")
+    assert d.rule_id == "RL105"                  # result != donated arg
+
+
+def test_rl105_rebound_and_disabled_donation_clean():
+    assert _lint("def f(step, c):\n"
+                 "    c, stats = step(rows, c, donate=True)\n") == []
+    assert _lint("def f(self, step, st):\n"
+                 "    st.carry, _ = step(st.carry, "
+                 "donate=self.opts.donate_carry)\n") == []
+    assert _lint("def f(step, c):\n    step(c, donate=False)\n") == []
+    assert _lint("def f(step, c):\n    step(c, donate=None)\n") == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions + allowlist
+# ---------------------------------------------------------------------------
+
+def test_line_suppression_scopes_to_rule_and_line():
+    base = "import jax.experimental.shard_map as s{}\n"
+    assert _lint(base.format("  # reprolint: disable=RL101")) == []
+    assert _lint(base.format("  # reprolint: disable")) == []
+    (d,) = _lint(base.format("  # reprolint: disable=RL102"))
+    assert d.rule_id == "RL101"                  # wrong id: still reported
+    (d,) = _lint("# reprolint: disable=RL101\n" + base.format(""))
+    assert d.rule_id == "RL101"                  # wrong line: still reported
+
+
+def test_file_suppression():
+    src = ("# reprolint: disable-file=RL101\n"
+           "import jax.experimental.shard_map as s\n")
+    assert _lint(src) == []
+
+
+def test_allowlist_globs(tmp_path):
+    bad = tmp_path / "legacy" / "old.py"
+    bad.parent.mkdir()
+    bad.write_text("import jax.experimental.shard_map as s\n")
+    assert _rules(lint_paths([tmp_path])) == ["RL101"]
+    allow = tmp_path / ".reprolint-allow"
+    allow.write_text("# reviewed exception\n*legacy/*::RL101\n")
+    assert lint_paths([tmp_path], load_allowlist(allow)) == []
+    allow.write_text("*legacy/*::RL105\n")       # wrong rule: still blocks
+    assert _rules(lint_paths([tmp_path], load_allowlist(allow))) == ["RL101"]
+    allow.write_text("*legacy/*::*\n")           # rule wildcard
+    assert lint_paths([tmp_path], load_allowlist(allow)) == []
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    assert lint_main(["--list-rules"]) == 0
+    assert "RL101" in capsys.readouterr().out
+    good = tmp_path / "ok.py"
+    good.write_text("x = 1\n")
+    assert lint_main([str(good)]) == 0
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax.experimental.shard_map as s\n")
+    assert lint_main([str(bad)]) == 1
+    assert "RL101" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# lane decorator + sweep regression
+# ---------------------------------------------------------------------------
+
+def test_lane_decorator_contract():
+    @lane("driver")
+    def f():
+        pass
+
+    assert f.__lane__ == "driver" and set(LANES) >= {"driver"}
+    with pytest.raises(ValueError, match="unknown lane"):
+        lane("turbo")
+
+
+def test_coordinator_is_lane_annotated():
+    from repro.streaming.coordinator import (LANE_SHARED,
+                                             StreamingCoordinator)
+    assert LANE_SHARED["_pending_stats"] == ("driver", "barrier")
+    assert StreamingCoordinator._prepare_batch.__lane__ == "prefetch"
+    assert StreamingCoordinator._fold_device.__lane__ == "driver"
+    assert StreamingCoordinator.save_state.__lane__ == "barrier"
+
+
+def test_shipped_tree_lints_clean():
+    allow = load_allowlist(REPO / ".reprolint-allow")
+    findings = lint_paths([REPO / "src", REPO / "tests",
+                           REPO / "benchmarks", REPO / "examples"], allow)
+    assert findings == [], "\n".join(d.format() for d in findings)
