@@ -24,7 +24,7 @@ import numpy as np
 from repro.core import JobServiceClient, MemoryStore, MetadataStore
 from repro.launch.serve import JobRPC
 from repro.pipeline import Pipeline, Windowing
-from repro.service import JobServer, JobStatus
+from repro.service import JobServer, JobStatus, ParkPolicy
 from repro.streaming import (StreamSource, StreamingCoordinator,
                              write_event_log)
 
@@ -105,7 +105,9 @@ def main() -> None:
     write_event_log(store, "streams/gps", first, segment_records=4096)
 
     # 2. the control plane: one server, two tenants, the RPC skeleton
-    server = JobServer(store, MetadataStore(), park_after_idle=1)
+    # park as soon as a drive round finds a job idle (idle_seconds=0.0)
+    server = JobServer(store, MetadataStore(),
+                       park_policy=ParkPolicy(idle_seconds=0.0))
     server.add_tenant("fleet-ops")
     server.add_tenant("billing")
     rpc = JobRPC(server)

@@ -10,7 +10,11 @@ currency:
   reject), and on demand via ``BuiltPipeline.check()`` / ``explain()``.
 * **reprolint** (:mod:`repro.analysis.reprolint`) — stdlib-``ast`` lint
   of repo invariants (shard_map confinement, lane safety, SPMD purity,
-  donation rebinding), driven by ``python -m repro.analysis.lint``.
+  donation rebinding, documented exports), driven by ``python -m
+  repro.analysis.lint``.
+* **docsmoke** (:mod:`repro.analysis.docsmoke`) — executes the fenced
+  ```python`` blocks in README + ``docs/`` so documentation cannot
+  drift from the code; ``python -m repro.analysis.docsmoke``.
 
 Submodules resolve lazily so the jax-free lint CLI never drags in the
 plan layer (``diagnostics`` imports ``pipeline.graph`` for the
@@ -30,6 +34,7 @@ _LAZY = {
     "min_slots_required": "planlint", "collision_probability": "planlint",
     "lint_source": "reprolint", "lint_file": "reprolint",
     "lint_paths": "reprolint",
+    "extract_snippets": "docsmoke", "run_paths": "docsmoke",
 }
 
 __all__ = ["LANES", "lane", *sorted(_LAZY)]

@@ -31,6 +31,10 @@ RL105   donated buffer read after the donating call: a call passing
         ``donate=<truthy>`` must have its result assigned back over at
         least one of the argument expressions it donated (``x, s = f(x,
         donate=flag)``); anything else leaves a dead buffer reachable
+RL106   exported name without a docstring: a class/function defined in
+        this module and listed in its ``__all__`` must carry a docstring
+        — the public API surface is the documented surface (re-exports
+        are checked where they are defined, not where they are listed)
 ======  ====================================================================
 
 Suppressions: trailing ``# reprolint: disable=RL102`` (comma-separated
@@ -56,6 +60,7 @@ RULES = {
     "RL103": "LANE_SHARED attribute mutated from an undeclared lane",
     "RL104": "impure construct in an SPMD body file",
     "RL105": "donated buffer not rebound by the donating call's result",
+    "RL106": "name exported in __all__ has no docstring",
 }
 
 #: lanes where host syncs are part of the design (RL102 does not apply)
@@ -271,6 +276,20 @@ def lint_source(src: str, path: str) -> list:
                      "the stale buffer stays reachable after donation",
                      node)
 
+    # ---- RL106: exported names are documented ------------------------
+    exported = _literal_table(tree, "__all__") or ()
+    if exported:
+        defs = {n.name: n for n in tree.body
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef))}
+        for name in exported:
+            node = defs.get(name)
+            if node is not None and ast.get_docstring(node) is None:
+                emit("RL106",
+                     f"{name!r} is exported in __all__ but carries no "
+                     f"docstring — the public surface is the documented "
+                     f"surface", node)
+
     # ---- lane + SPMD walk -------------------------------------------
     def check_stmt(node, lane):
         if isinstance(node, ast.Call):
@@ -345,6 +364,8 @@ def lint_source(src: str, path: str) -> list:
 
 
 def lint_file(path) -> list:
+    """Lint one file from disk; unreadable or unparsable files become a
+    single ``RL000`` diagnostic instead of raising."""
     p = pathlib.Path(path)
     try:
         src = p.read_text()
@@ -384,6 +405,8 @@ def _allowed(diag, allowlist) -> bool:
 
 
 def iter_python_files(paths):
+    """Yield every ``.py`` file under ``paths`` (files pass through,
+    directories recurse, ``__pycache__`` is skipped), sorted per tree."""
     for raw in paths:
         p = pathlib.Path(raw)
         if p.is_dir():

@@ -11,7 +11,8 @@ Device plane (the TPU-native realization):
   ``repro.pipeline`` programs since the PR 8 shim removal).
 """
 
-from .autoscaler import AutoscalerConfig, ServerlessPool
+from .autoscaler import (AutoscalerConfig, ComputeMeter, MeteredPool,
+                         ServerlessPool)
 from .client import Job, JobServiceClient, MapReduce
 from .coordinator import Coordinator, JobReport, JobState
 from .events import CloudEvent, EventBus
@@ -20,17 +21,19 @@ from .mapreduce import (DeviceJobConfig, clear_window_slot, init_window_carry,
                         make_incremental_step, read_window_slot,
                         segment_reduce)
 from .metadata import MetadataStore
+from .rpc import FrameClient, FrameServer, RPCError
 from .splitter import ByteRange, split_object, split_prefix
 from .storage import (FileStore, MemoryStore, NamespacedStore, ObjectStore,
                       QuotaExceeded)
 from .workers import read_final_output, run_mapper, run_reducer
 
 __all__ = [
-    "AutoscalerConfig", "ServerlessPool", "Job", "MapReduce", "Coordinator",
+    "AutoscalerConfig", "ComputeMeter", "MeteredPool", "ServerlessPool",
+    "Job", "MapReduce", "Coordinator",
     "JobReport", "JobState", "CloudEvent", "EventBus", "JobConfig",
     "make_wordcount_job", "DeviceJobConfig", "segment_reduce",
     "make_incremental_step", "init_window_carry", "read_window_slot",
-    "clear_window_slot",
+    "clear_window_slot", "FrameClient", "FrameServer", "RPCError",
     "MetadataStore", "ByteRange", "split_object", "split_prefix", "FileStore",
     "MemoryStore", "NamespacedStore", "ObjectStore", "QuotaExceeded",
     "JobServiceClient", "read_final_output", "run_mapper", "run_reducer",

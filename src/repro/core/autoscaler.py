@@ -193,3 +193,49 @@ class ServerlessPool:
             "cold_start_seconds": round(self.cold_start_seconds, 6),
             "scale_downs": self.scale_downs,
         }
+
+
+@dataclass
+class ComputeMeter:
+    """One job's compute account: wall-clock seconds spent inside pool
+    invocations plus the invocation count — the two quantities serverless
+    platforms actually bill (GB-seconds and requests).  The job server
+    attaches one meter per job via :class:`MeteredPool` and enforces
+    per-tenant ``quota_pool_seconds`` against the summed accounts, the
+    compute-side twin of the storage byte quota."""
+
+    pool_seconds: float = 0.0
+    invocations: int = 0
+
+    def as_dict(self) -> dict[str, Any]:
+        """Metering fields in the shape ``JobServer.status()`` reports."""
+        return {"pool_seconds": round(self.pool_seconds, 6),
+                "fold_invocations": self.invocations}
+
+
+class MeteredPool:
+    """A per-job accounting view of a shared :class:`ServerlessPool`.
+
+    ``submit`` delegates to the shared pool while charging the elapsed
+    wall time and one invocation to this view's :class:`ComputeMeter`;
+    every other attribute proxies straight through, so a coordinator
+    holding a ``MeteredPool`` sees the real pool's scaling, replica, and
+    instrumentation surface unchanged.  This is how N tenants fold on
+    ONE physical pool yet each receives its own bill.
+    """
+
+    def __init__(self, inner: ServerlessPool,
+                 meter: ComputeMeter | None = None) -> None:
+        self._inner = inner
+        self.meter = meter if meter is not None else ComputeMeter()
+
+    def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> Any:
+        start = time.perf_counter()
+        try:
+            return self._inner.submit(fn, *args, **kwargs)
+        finally:
+            self.meter.pool_seconds += time.perf_counter() - start
+            self.meter.invocations += 1
+
+    def __getattr__(self, name: str) -> Any:
+        return getattr(self._inner, name)

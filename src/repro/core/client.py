@@ -132,34 +132,105 @@ class JobServiceClient:
     """The job server's client package — the streaming twin of
     :class:`MapReduce`.
 
-    Submission and the lifecycle verbs (pause/resume/cancel) delegate to
-    the server's control plane, but *monitoring reads only the metadata
-    records* (``job_record_key``), exactly as the paper's client polls
-    Redis rather than the coordinator process — so a dashboard process
-    holding just the MetadataStore sees the same state the server wrote.
+    Two transports, one surface.  *In-process* (``server=``): the
+    lifecycle verbs delegate to the server's control plane directly, and
+    monitoring reads only the metadata records (``job_record_key``),
+    exactly as the paper's client polls Redis rather than the
+    coordinator process — a dashboard holding just the MetadataStore
+    sees the same state the server wrote.  *Remote* (``address=``): the
+    same verbs travel as length-prefixed JSON frames to a
+    ``launch.serve.JobSocketServer`` in another process, with
+    ``timeout`` bounding every socket operation and ``retries`` bounding
+    reconnect attempts; programs are referenced by their server-side
+    registered name, since a compiled ``BuiltPipeline`` never crosses
+    the wire.  Exactly one of ``server``/``address`` must be given.
     ``run()`` drives the server until every submitted job completes,
     awaiting asynchronously like Fig. 4's multi-job runner.
     """
 
-    def __init__(self, server, poll_interval: float = 0.02) -> None:
+    def __init__(self, server=None, *, address: tuple[str, int] | None = None,
+                 timeout: float = 5.0, retries: int = 2,
+                 poll_interval: float = 0.02) -> None:
+        if (server is None) == (address is None):
+            raise ValueError("pass exactly one of server= (in-process) or "
+                             "address= (socket transport)")
         self.server = server
+        if address is not None:
+            from .rpc import FrameClient
+            self._rpc = FrameClient(address, timeout=timeout, retries=retries)
+        else:
+            self._rpc = None
         self.poll_interval = poll_interval
+
+    def _call(self, method: str, **params: Any) -> Any:
+        from .rpc import RPCError
+        response = self._rpc.call({"method": method, **params})
+        if not response.get("ok"):
+            raise RPCError(response.get("error", "rpc call failed"))
+        return response.get("result")
+
+    def close(self) -> None:
+        """Drop the socket connection, if any.  Idempotent; the next
+        remote call redials."""
+        if self._rpc is not None:
+            self._rpc.close()
 
     # -- submission / lifecycle verbs (RPC surface) --------------------------
     def submit(self, tenant: str, program, **kwargs) -> str:
-        return self.server.submit(tenant, program, **kwargs)
+        """Submit ``program`` for ``tenant``.  In-process, ``program`` is
+        the ``BuiltPipeline`` itself; remote, it is the name the server's
+        ``JobRPC.register`` bound."""
+        if self.server is not None:
+            return self.server.submit(tenant, program, **kwargs)
+        return self._call("submit", tenant=tenant, program=program, **kwargs)
 
     def pause(self, job_id: str) -> None:
-        self.server.pause(job_id)
+        """Park ``job_id`` until an explicit ``resume``."""
+        if self.server is not None:
+            self.server.pause(job_id)
+        else:
+            self._call("pause", job_id=job_id)
 
     def resume(self, job_id: str) -> None:
-        self.server.resume(job_id)
+        """Wake a paused job (a cold restore if it had checkpointed)."""
+        if self.server is not None:
+            self.server.resume(job_id)
+        else:
+            self._call("resume", job_id=job_id)
 
     def cancel(self, job_id: str) -> None:
-        self.server.cancel(job_id)
+        """Stop a job for good; persisted windows stay."""
+        if self.server is not None:
+            self.server.cancel(job_id)
+        else:
+            self._call("cancel", job_id=job_id)
+
+    def drain(self, timeout: float | None = None) -> dict[str, str]:
+        """Drive the server until every job completes; returns {job_id:
+        final state}.  Remote drains can far outlast a verb round-trip,
+        so ``timeout`` (when given) temporarily widens the socket
+        timeout for this one call."""
+        if self.server is not None:
+            return self.server.run_until_complete()
+        if timeout is None:
+            return self._call("drain")
+        old = self._rpc.timeout
+        self._rpc.timeout = timeout
+        self._rpc.close()          # reconnect under the widened timeout
+        try:
+            return self._call("drain")
+        finally:
+            self._rpc.timeout = old
+            self._rpc.close()
 
     # -- monitoring (metadata-only, like the paper's Redis polling) ----------
     def status(self, job_id: str) -> dict[str, Any]:
+        """One job's record: lifecycle state, cursor/checkpointed offset,
+        and its compute bill (``pool_seconds``/``fold_invocations``).
+        In-process this reads the metadata records only; remote it asks
+        the server's ``status`` verb (which reads the same records)."""
+        if self.server is None:
+            return self._call("status", job_id=job_id)
         from .metadata import job_record_key
         rec = self.server.meta.hgetall(job_record_key(job_id))
         if not rec:
@@ -167,11 +238,15 @@ class JobServiceClient:
         return rec
 
     def jobs(self) -> list[str]:
+        """Every registered job id, from the metadata index."""
+        if self.server is None:
+            return list(self._call("jobs"))
         from .metadata import job_index_key
         return list(self.server.meta.get(job_index_key(), []))
 
     async def wait(self, job_id: str, states: tuple[str, ...] = ("DONE",
                    "CANCELLED", "FAILED")) -> str:
+        """Poll until ``job_id`` reaches one of ``states``; returns it."""
         while True:
             state = self.status(job_id)["state"]
             if state in states:
@@ -181,11 +256,12 @@ class JobServiceClient:
     async def run(self) -> dict[str, str]:
         """Drive the server to completion; returns {job_id: final state}."""
         loop = asyncio.get_running_loop()
-        fut = loop.run_in_executor(None, self.server.run_until_complete)
+        fut = loop.run_in_executor(None, self.drain)
         while not fut.done():
             await asyncio.sleep(self.poll_interval)
         fut.result()
         return {jid: self.status(jid)["state"] for jid in self.jobs()}
 
     def run_sync(self) -> dict[str, str]:
+        """Synchronous wrapper over :meth:`run`."""
         return asyncio.run(self.run())

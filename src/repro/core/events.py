@@ -194,16 +194,21 @@ TOPIC_STREAM_WINDOW = "repro.stream.window"
 # Job-service topics: the control plane announces every lifecycle
 # transition (submitted/running/parked/…) on JOB_LIFECYCLE, and each
 # shared source materializes its one physical log read onto a private
-# single-partition ``repro.ingest.<source>`` topic that all subscribing
-# jobs replay from their own record cursors.
+# ``repro.ingest.<source>`` topic that all subscribing jobs replay from
+# their own record cursors.
 TOPIC_JOB_LIFECYCLE = "repro.job.lifecycle"
 TOPIC_INGEST_PREFIX = "repro.ingest."
 
 
 def ingest_topic(source_id: str) -> str:
     """Topic name for one shared source's materialized record stream.
-    Single-partition by construction — the physical log is totally
-    ordered and every subscriber must replay it identically."""
+
+    The topic may carry one partition (the default — offset equals
+    record index) or N partitions keyed by record key.  Either way every
+    record carries its global materialization sequence number (``seq``),
+    so any subset of partitions merges back into one deterministic total
+    order and replay stays exactly-once per partition — see
+    ``repro.service.ingest_share``."""
     return TOPIC_INGEST_PREFIX + source_id.strip("/").replace("/", ".")
 
 _event_counter = itertools.count()

@@ -19,6 +19,12 @@ from .ref import selective_scan_ref
 
 def scan(u, delta, A, B, C, D, *, use_pallas=False, interpret=True,
          block_d=256, block_l=256):
+    """Selective scan over a full sequence, routed to the Pallas kernel
+    (``use_pallas=True``; ``interpret=True`` runs the kernel body on CPU)
+    or the ``jax.lax.scan`` reference — identical numerics either way.
+    Shapes follow the S6 convention: ``u``/``delta`` are (batch, L, D),
+    ``A`` is (D, N), ``B``/``C`` are (batch, L, N), ``D`` is (D,);
+    returns (batch, L, D)."""
     if use_pallas:
         return _scan_pallas(u, delta, A, B, C, D, block_d=block_d,
                             block_l=block_l, interpret=interpret)

@@ -14,7 +14,10 @@ server (``repro.service``): method-dispatch requests — the paper's
 HTTP-trigger role — onto the control plane's submit/pause/resume/cancel/
 status verbs, with programs referenced by registered name because a
 compiled ``BuiltPipeline`` never crosses the wire (the paper ships a JSON
-job config, not code).
+job config, not code).  :class:`JobSocketServer` puts that dispatch
+behind a real TCP socket (length-prefixed JSON frames — see
+``repro.core.rpc``) so a ``JobServiceClient(address=...)`` in another
+process can drive the control plane.
 """
 
 from __future__ import annotations
@@ -28,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core.rpc import FrameServer
 from repro.models import decode_step, init_cache, init_params
 
 
@@ -115,7 +119,7 @@ class JobRPC:
     """
 
     METHODS = ("register", "submit", "pause", "resume", "cancel",
-               "status", "jobs", "stats")
+               "status", "jobs", "stats", "drain")
 
     def __init__(self, server) -> None:
         self.server = server
@@ -142,12 +146,13 @@ class JobRPC:
         self.register(name, program)
         return name
 
-    def _submit(self, tenant, program, source_prefix, resume=False):
+    def _submit(self, tenant, program, source_prefix, resume=False,
+                partitions=None):
         if program not in self.programs:
             raise KeyError(f"no program registered as {program!r}")
         return self.server.submit(tenant, self.programs[program],
                                   source_prefix=source_prefix,
-                                  resume=resume)
+                                  resume=resume, partitions=partitions)
 
     def _pause(self, job_id):
         self.server.pause(job_id)
@@ -169,6 +174,33 @@ class JobRPC:
 
     def _stats(self):
         return self.server.stats()
+
+    def _drain(self):
+        return self.server.run_until_complete()
+
+
+class JobSocketServer(FrameServer):
+    """The job-service control plane behind a real TCP socket.
+
+    Wraps a :class:`JobRPC` in a :class:`~repro.core.rpc.FrameServer`:
+    each client connection exchanges length-prefixed JSON frames, every
+    frame is one ``JobRPC.handle`` dispatch, and all dispatches are
+    serialized under the transport's lock (the job server is
+    single-threaded by design).  ``port=0`` binds an ephemeral port —
+    read ``address`` back and hand it to ``JobServiceClient(address=...)``
+    in another process.  Usable as a context manager::
+
+        rpc = JobRPC(server)
+        rpc.register("hourly-avg", program)
+        with JobSocketServer(rpc) as srv:
+            print("serving on", srv.address)
+            ...
+    """
+
+    def __init__(self, rpc: JobRPC, host: str = "127.0.0.1",
+                 port: int = 0) -> None:
+        super().__init__(rpc.handle, host=host, port=port)
+        self.rpc = rpc
 
 
 def _merge_slot(new, old, slot: int):

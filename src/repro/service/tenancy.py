@@ -19,21 +19,35 @@ from dataclasses import dataclass
 
 from ..core.storage import NamespacedStore, ObjectStore
 
-__all__ = ["Tenant"]
+__all__ = ["ComputeQuotaExceeded", "Tenant"]
+
+
+class ComputeQuotaExceeded(RuntimeError):
+    """A tenant's jobs have spent more pool-time than the tenant's
+    ``quota_pool_seconds`` allows — the compute-side twin of storage's
+    :class:`~repro.core.storage.QuotaExceeded`.  Raised by the job
+    server's drive loop (metered per job via ``ComputeMeter``), failing
+    only the offending tenant's job, never its neighbors."""
 
 
 @dataclass(frozen=True)
 class Tenant:
-    """One tenant: a namespace under the shared bucket and an optional
-    byte quota for everything its jobs persist there."""
+    """One tenant: a namespace under the shared bucket, an optional byte
+    quota for everything its jobs persist there, and an optional
+    pool-time quota (seconds of shared-pool compute across all the
+    tenant's jobs — the paper bills invocations, so compute is metered
+    like storage)."""
 
     name: str
     quota_bytes: int | None = None
+    quota_pool_seconds: float | None = None
 
     def __post_init__(self) -> None:
         if not self.name or "/" in self.name:
             raise ValueError(f"tenant name must be non-empty and "
                              f"slash-free, got {self.name!r}")
+        if self.quota_pool_seconds is not None and self.quota_pool_seconds < 0:
+            raise ValueError("quota_pool_seconds must be >= 0")
 
     @property
     def namespace(self) -> str:

@@ -1,0 +1,95 @@
+"""docsmoke: snippet extraction, skip markers, shared namespaces,
+failure reporting — and the sweep regression that the shipped docs
+actually run (the executable-documentation contract CI enforces)."""
+
+import pathlib
+import textwrap
+
+from repro.analysis.docsmoke import (extract_snippets, main, run_file,
+                                     run_paths)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _md(src):
+    return textwrap.dedent(src)
+
+
+def test_extracts_python_fences_only_with_lines():
+    text = _md("""\
+        # Title
+
+        ```python
+        x = 1
+        ```
+
+        ```bash
+        echo not-python
+        ```
+
+        ```
+        bare fence: prose
+        ```
+
+        ```python
+        y = x + 1
+        ```
+        """)
+    snips = extract_snippets(text, "doc.md")
+    assert [(s.line, s.source) for s in snips] == [(3, "x = 1"),
+                                                   (15, "y = x + 1")]
+
+
+def test_skip_marker_drops_the_next_block():
+    text = _md("""\
+        <!-- docsmoke: skip -->
+        ```python
+        raise RuntimeError("illustrative only")
+        ```
+
+        ```python
+        ok = True
+        ```
+        """)
+    snips = extract_snippets(text, "doc.md")
+    assert len(snips) == 1 and snips[0].source == "ok = True"
+
+
+def test_blocks_share_a_namespace_and_failures_carry_position(tmp_path):
+    good = tmp_path / "good.md"
+    good.write_text(_md("""\
+        ```python
+        acc = [1]
+        ```
+        later prose
+        ```python
+        acc.append(2)
+        assert acc == [1, 2]
+        ```
+        """))
+    assert run_file(good) == []
+
+    bad = tmp_path / "bad.md"
+    bad.write_text("line1\n\n```python\nboom()\n```\n")
+    (report,) = run_file(bad)
+    assert report.startswith(f"{bad}:3: snippet raised")
+    assert "NameError" in report
+
+
+def test_cli_exit_codes_and_directory_recursion(tmp_path, capsys):
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (docs / "a.md").write_text("```python\nx = 1\n```\n")
+    (docs / "b.md").write_text("no snippets here\n")
+    assert main([str(docs)]) == 0
+    assert "2 file(s), 0 failure(s)" in capsys.readouterr().out
+    (docs / "c.md").write_text("```python\n1 / 0\n```\n")
+    assert main([str(docs)]) == 1
+    out = capsys.readouterr()
+    assert "ZeroDivisionError" in out.err
+
+
+def test_shipped_docs_run_clean():
+    n, failures = run_paths([REPO / "README.md", REPO / "docs"])
+    assert n >= 3            # README + architecture + operations at least
+    assert failures == [], "\n".join(failures)

@@ -225,6 +225,30 @@ def test_rl105_rebound_and_disabled_donation_clean():
 
 
 # ---------------------------------------------------------------------------
+# RL106 — exported names carry docstrings
+# ---------------------------------------------------------------------------
+
+def test_rl106_undocumented_export():
+    (d,) = _lint('__all__ = ["f"]\n\ndef f():\n    return 1\n')
+    assert d.rule_id == "RL106" and d.line == 3
+    assert "'f'" in d.message and "docstring" in d.message
+    (d,) = _lint('__all__ = ["C"]\n\nclass C:\n    x = 1\n')
+    assert d.rule_id == "RL106" and d.line == 3
+
+
+def test_rl106_documented_private_and_reexported_clean():
+    assert _lint('__all__ = ["f"]\n\ndef f():\n    "Docs."\n    return 1\n'
+                 ) == []
+    # names not exported need no docstring
+    assert _lint('__all__ = ["f"]\n\ndef f():\n    "Docs."\n\ndef _g():\n'
+                 '    return 2\n') == []
+    # re-exports are someone else's definition — checked at home
+    assert _lint('from os.path import join\n__all__ = ["join"]\n') == []
+    # no __all__ at all: module opted out of the public-surface contract
+    assert _lint('def f():\n    return 1\n') == []
+
+
+# ---------------------------------------------------------------------------
 # suppressions + allowlist
 # ---------------------------------------------------------------------------
 

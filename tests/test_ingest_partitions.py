@@ -1,0 +1,214 @@
+"""Partitioned shared ingest (``repro.service.ingest_share``).
+
+The claims under test:
+
+* **Determinism across widths** — an N-partition materialization yields
+  the same merged record sequence as the single-partition topic (global
+  ``seq`` order == physical log order), so partitioning never changes a
+  subscriber's bytes.
+* **Per-(subscriber, partition) cursors** — a subscriber's scalar
+  cursor dissects into per-partition replay cursors that sum to it,
+  grow monotonically, and are stable across crash/re-materialization —
+  exactly-once per partition.
+* **Edge cases from the issue** — late subscriber replaying from 0
+  across partitions, partition-skewed traffic (every record one key),
+  and crash re-attach with per-partition cursors mid-segment.
+* **Partition subsets** — parallel subscribers can split one source by
+  partition and together see every record exactly once.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import EventBus, MemoryStore, MetadataStore
+from repro.pipeline import Pipeline, Windowing
+from repro.service import JobServer, JobStatus, ParkPolicy, SharedIngest
+from repro.streaming import (StreamSource, StreamingCoordinator,
+                             write_event_log)
+
+W = 4
+
+
+def _events(n=400, n_keys=6, span=100.0, seed=0, t0=0.0):
+    rng = np.random.default_rng(seed)
+    ts = np.sort(rng.uniform(t0, t0 + span, n))
+    keys = rng.integers(0, n_keys, n)
+    vals = rng.integers(0, 9, n).astype(float)
+    return [(float(t), f"k{k}", float(v)) for t, k, v in zip(ts, keys, vals)]
+
+
+def _program(job_id, *, agg="sum", batch_records=100):
+    return (Pipeline.from_source(batch_records=batch_records).key_by()
+            .window(Windowing.tumbling(25.0)).reduce(agg)
+            .sink("stream-output/")
+            .build(num_buckets=16, n_workers=W, batch_records=batch_records,
+                   job_id=job_id))
+
+
+def _standalone(events, job_id, *, agg="sum", batch_records=100):
+    built = _program(job_id, agg=agg, batch_records=batch_records)
+    store = MemoryStore()
+    coord = StreamingCoordinator(store, MetadataStore(), program=built)
+    coord.run_stream(
+        StreamSource.from_records(events, batch_records=batch_records))
+    return {m.key: store.get(m.key)
+            for m in store.list_objects(f"stream-output/{job_id}/")}
+
+
+def _sink_bytes(store, tenant, job_id):
+    ns = f"tenants/{tenant}/"
+    return {m.key[len(ns):]: store.get(m.key)
+            for m in store.list_objects(f"{ns}stream-output/{job_id}/")}
+
+
+def _ingest(events, n_partitions, *, prefix="part/", seg=64):
+    store = MemoryStore()
+    write_event_log(store, prefix, events, segment_records=seg)
+    ing = SharedIngest(EventBus(), store, prefix, n_partitions=n_partitions)
+    ing.pump()
+    return ing
+
+
+# ---------------------------------------------------------------------------
+# Merged-view determinism + cursor dissection
+# ---------------------------------------------------------------------------
+
+def test_partitioned_merge_equals_single_partition_order():
+    events = _events(n=300, seed=1)
+    one = _ingest(events, 1)
+    four = _ingest(events, 4)
+    assert one.end_offset() == four.end_offset() == len(events)
+    assert list(four.records_from(0)) == list(one.records_from(0)) == events
+    # records actually spread over multiple partitions
+    widths = [four.bus.end_offset(four.topic, p) for p in range(4)]
+    assert sum(widths) == len(events) and sum(1 for w in widths if w) > 1
+    # offsets address the merged view at any position
+    for off in (0, 1, 99, 250, len(events)):
+        assert list(four.records_from(off)) == events[off:]
+
+
+def test_partition_cursors_dissect_scalar_cursor_exactly():
+    events = _events(n=257, seed=2)
+    ing = _ingest(events, 3)
+    prev = {p: 0 for p in range(3)}
+    for cursor in (0, 1, 64, 200, 257):
+        cur = ing.partition_cursors(cursor)
+        assert sum(cur.values()) == cursor
+        assert all(cur[p] >= prev[p] for p in cur)     # monotone
+        prev = cur
+    # replaying each partition from its cursor covers exactly the
+    # merged-view tail: together the partitions hold each record once
+    cursor = 100
+    cur = ing.partition_cursors(cursor)
+    tail = []
+    for p in range(3):
+        for rec in ing.bus.fetch(ing.topic, p, cur[p]):
+            tail.append(tuple(rec.value.data["record"]))
+    assert sorted(tail) == sorted(tuple(e) for e in events[cursor:])
+
+
+def test_subscriber_partition_subsets_split_the_source():
+    events = _events(n=300, seed=3)
+    ing = _ingest(events, 4)
+    left = ing.subscribe("left", partitions=[0, 1])
+    right = ing.subscribe("right", partitions=[2, 3])
+    got_left = list(left._events_from(0))
+    got_right = list(right._events_from(0))
+    assert len(got_left) == left.ingest.end_offset(left.partitions)
+    assert sorted(got_left + got_right) == sorted(events)
+    assert left.lag(0) + right.lag(0) == len(events)
+    # subset views stay in global order too
+    seqs = {tuple(e): i for i, e in enumerate(events)}
+    assert [seqs[tuple(e)] for e in got_left] == \
+        sorted(seqs[tuple(e)] for e in got_left)
+    with pytest.raises(ValueError, match="out of range"):
+        ing.subscribe("bad", partitions=[7])
+    with pytest.raises(ValueError, match="non-empty"):
+        ing.subscribe("empty", partitions=[])
+
+
+# ---------------------------------------------------------------------------
+# Issue edge cases, end to end through the JobServer
+# ---------------------------------------------------------------------------
+
+def test_late_subscriber_replays_from_zero_across_partitions():
+    events = _events(n=400, seed=4)
+    store = MemoryStore()
+    write_event_log(store, "gps/", events, segment_records=64)
+    server = JobServer(store, MetadataStore(), ingest_partitions=3)
+    server.add_tenant("alice")
+    server.add_tenant("bob")
+    server.submit("alice", _program("early-p"), source_prefix="gps/")
+    server.step()                       # fully materialized, alice ahead
+    assert server.ingests["gps"].n_partitions == 3
+    assert server.ingests["gps"].pumped == len(events)
+    late = server.submit("bob", _program("late-p", agg="count"),
+                         source_prefix="gps/")
+    assert server.jobs[late].cursor == 0
+    server.run_until_complete()
+    assert _sink_bytes(store, "alice", "early-p") == \
+        _standalone(events, "early-p")
+    assert _sink_bytes(store, "bob", "late-p") == \
+        _standalone(events, "late-p", agg="count")
+
+
+def test_partition_skewed_traffic_single_hot_key():
+    """Every record carries one key → every record lands one partition;
+    the merged view, cursors, and job bytes must not care."""
+    events = [(float(t), "hot", float(v % 9))
+              for t, v in zip(np.linspace(0, 100, 300), range(300))]
+    ing = _ingest(events, 4)
+    widths = [ing.bus.end_offset(ing.topic, p) for p in range(4)]
+    assert sorted(widths)[-1] == len(events)        # all on the hot partition
+    assert list(ing.records_from(0)) == events
+    cur = ing.partition_cursors(123)
+    assert sum(cur.values()) == 123 and max(cur.values()) == 123
+
+    store = MemoryStore()
+    write_event_log(store, "gps/", events, segment_records=64)
+    server = JobServer(store, MetadataStore(), ingest_partitions=4)
+    server.add_tenant("alice")
+    jid = server.submit("alice", _program("skew-p"), source_prefix="gps/")
+    states = server.run_until_complete()
+    assert states[jid] == JobStatus.DONE
+    assert _sink_bytes(store, "alice", "skew-p") == \
+        _standalone(events, "skew-p")
+
+
+def test_crash_reattach_mid_segment_keeps_partition_cursors():
+    """Park at a checkpoint that falls mid-segment (290 records, 64 per
+    segment), crash the server, re-materialize on a fresh bus: the
+    partition layout and the checkpoint's per-partition cursor dissection
+    must come back identical (stable FNV-1a routing + seq merge), and the
+    resumed job must finish with standalone byte parity — exactly-once
+    per partition across the crash."""
+    events = _events(n=400, seed=5)
+    first, second = events[:290], events[290:]
+    store = MemoryStore()
+    meta = MetadataStore()
+    write_event_log(store, "gps/", first, segment_records=64)
+    server = JobServer(store, meta, ingest_partitions=3,
+                       park_policy=ParkPolicy(idle_seconds=0.0))
+    server.add_tenant("alice")
+    jid = server.submit("alice", _program("crashp-1"), source_prefix="gps/")
+    while server.step():
+        pass
+    assert server.jobs[jid].state == JobStatus.PARKED
+    ckpt = server.status(jid)["checkpointed_offset"]
+    assert ckpt == 290
+    cursors_before = server.jobs[jid].sub.partition_cursors(ckpt)
+    del server                          # crash: bus + topics gone with it
+
+    write_event_log(store, "gps/", second, segment_records=64)
+    server2 = JobServer(store, meta, ingest_partitions=3)
+    server2.add_tenant("alice")
+    server2.submit("alice", _program("crashp-1"), source_prefix="gps/",
+                   resume=True)
+    server2.ingests["gps"].pump()       # re-materialize from the log
+    cursors_after = server2.jobs[jid].sub.partition_cursors(ckpt)
+    assert cursors_after == cursors_before
+    assert sum(cursors_after.values()) == ckpt
+    states = server2.run_until_complete()
+    assert states[jid] == JobStatus.DONE
+    assert _sink_bytes(store, "alice", "crashp-1") == \
+        _standalone(events, "crashp-1")

@@ -28,7 +28,7 @@ from repro.core import (JobServiceClient, MemoryStore, MetadataStore,
                         QuotaExceeded)
 from repro.launch.serve import JobRPC
 from repro.pipeline import Pipeline, PipelineError, Windowing
-from repro.service import JobServer, JobStatus
+from repro.service import JobServer, JobStatus, ParkPolicy
 from repro.streaming import (StreamSource, StreamingCoordinator,
                              write_event_log)
 
@@ -145,7 +145,8 @@ def test_park_scales_to_zero_and_cold_restore_is_exactly_once():
     first, second = events[:250], events[250:]
     store = MemoryStore()
     write_event_log(store, "gps/", first, segment_records=64)
-    server = JobServer(store, MetadataStore(), park_after_idle=1)
+    server = JobServer(store, MetadataStore(),
+                       park_policy=ParkPolicy(idle_seconds=0.0))
     server.add_tenant("alice")
     jid = server.submit("alice", _program("cold-1"), source_prefix="gps/")
     while server.step():
@@ -176,7 +177,8 @@ def test_crashed_server_reattaches_and_finishes_exactly_once():
     store = MemoryStore()
     meta = MetadataStore()
     write_event_log(store, "gps/", events[:300], segment_records=64)
-    server = JobServer(store, meta, park_after_idle=1)
+    server = JobServer(store, meta,
+                       park_policy=ParkPolicy(idle_seconds=0.0))
     server.add_tenant("alice")
     server.submit("alice", _program("crash-1"), source_prefix="gps/")
     while server.step():

@@ -1,0 +1,349 @@
+"""The overlapped multi-tenant drive, ParkPolicy, and compute metering.
+
+The claims under test:
+
+* **Byte-identity** — the overlapped drive (per-job prefetch lanes
+  multiplexed over one driver thread) emits exactly the serial
+  round-robin's sink bytes for every tenant, property-tested over
+  seeds, and still exactly-once when the server crashes mid-overlap
+  with other tenants' batches prepared-but-unconsumed.
+* **ParkPolicy** — parking is wall-clock + lag based: a drained job
+  stays RUNNING until ``idle_seconds`` elapses, a parked job ignores
+  backlog at or below ``max_lag`` and wakes above it, and the final
+  bytes match a standalone run regardless.
+* **Metering** — ``status()`` carries the job's compute bill
+  (pool-seconds + fold invocations), persisted into the metadata
+  records, and a tenant's ``quota_pool_seconds`` fails only that
+  tenant's job.
+* **Status fix** — a parked or crash-re-attached job reports its
+  checkpointed offset, not the dead coordinator's in-memory cursor.
+"""
+
+import time
+from collections import Counter
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                 # hermetic container
+    from _hypothesis_compat import given, settings, strategies as st
+
+import repro.service.server as server_mod
+from repro.core import MemoryStore, MetadataStore
+from repro.pipeline import Pipeline, Windowing
+from repro.service import (ComputeQuotaExceeded, JobServer, JobStatus,
+                           ParkPolicy)
+from repro.streaming import (StreamSource, StreamingCoordinator,
+                             write_event_log)
+
+W = 4
+_PROPERTY_SETTINGS = settings(max_examples=4, deadline=None)
+
+
+class CountingStore(MemoryStore):
+    def __init__(self):
+        super().__init__()
+        self.put_counts = Counter()
+
+    def put(self, key, data):
+        self.put_counts[key] += 1
+        return super().put(key, data)
+
+
+def _events(n=600, n_keys=5, span=120.0, seed=0, t0=0.0):
+    rng = np.random.default_rng(seed)
+    ts = np.sort(rng.uniform(t0, t0 + span, n))
+    keys = rng.integers(0, n_keys, n)
+    vals = rng.integers(0, 9, n).astype(float)
+    return [(float(t), f"k{k}", float(v)) for t, k, v in zip(ts, keys, vals)]
+
+
+def _program(job_id, *, agg="sum", batch_records=100):
+    return (Pipeline.from_source(batch_records=batch_records).key_by()
+            .window(Windowing.tumbling(25.0)).reduce(agg)
+            .sink("stream-output/")
+            .build(num_buckets=16, n_workers=W, batch_records=batch_records,
+                   checkpoint_interval=2, job_id=job_id))
+
+
+def _standalone(events, job_id, *, agg="sum", batch_records=100):
+    built = _program(job_id, agg=agg, batch_records=batch_records)
+    store = MemoryStore()
+    coord = StreamingCoordinator(store, MetadataStore(), program=built)
+    coord.run_stream(
+        StreamSource.from_records(events, batch_records=batch_records))
+    return {m.key: store.get(m.key)
+            for m in store.list_objects(f"stream-output/{job_id}/")}
+
+
+def _sink_bytes(store, tenant, job_id):
+    ns = f"tenants/{tenant}/"
+    return {m.key[len(ns):]: store.get(m.key)
+            for m in store.list_objects(f"{ns}stream-output/{job_id}/")}
+
+
+_TENANTS = (("alice", "sum"), ("bob", "count"), ("carol", "mean"))
+
+
+def _run_service(events, *, overlap, store=None, resume=False,
+                 server_kwargs=None):
+    """All three tenants on one shared source, driven to completion."""
+    store = store if store is not None else MemoryStore()
+    if not resume:
+        write_event_log(store, "gps/", events, segment_records=128)
+    server = JobServer(store, MetadataStore(), overlap=overlap,
+                       **(server_kwargs or {}))
+    for name, agg in _TENANTS:
+        server.add_tenant(name)
+        server.submit(name, _program(f"ov-{name}", agg=agg),
+                      source_prefix="gps/", resume=resume)
+    states = server.run_until_complete()
+    return store, states
+
+
+# ---------------------------------------------------------------------------
+# Overlapped drive: byte-identical to serial, property-tested
+# ---------------------------------------------------------------------------
+
+@_PROPERTY_SETTINGS
+@given(st.integers(0, 2 ** 31 - 1))
+def test_overlapped_drive_byte_identical_to_serial(seed):
+    events = _events(n=700, seed=seed)
+    serial_store, serial_states = _run_service(events, overlap=False)
+    over_store, over_states = _run_service(events, overlap=True)
+    assert set(serial_states.values()) == {JobStatus.DONE} == \
+        set(over_states.values())
+    for name, agg in _TENANTS:
+        serial = _sink_bytes(serial_store, name, f"ov-{name}")
+        assert serial, f"{name} emitted nothing"
+        assert _sink_bytes(over_store, name, f"ov-{name}") == serial
+        assert serial == _standalone(events, f"ov-{name}", agg=agg)
+
+
+class _Boom(RuntimeError):
+    pass
+
+
+def _crashing_coordinator(crash_job, crash_after):
+    """A coordinator class that raises mid-drive for one job only — with
+    the overlapped drive on, the other tenants have batches prepared and
+    sitting unconsumed in their prefetch lanes at that instant."""
+
+    class _Crashing(StreamingCoordinator):
+        def __init__(self, *args, **kwargs):
+            super().__init__(*args, **kwargs)
+            self._survived = 0
+
+        def _process_prepared(self, prep, report):
+            if self.prog.job_id == crash_job:
+                if self._survived >= crash_after:
+                    raise _Boom(f"injected crash before batch {prep.index}")
+                self._survived += 1
+            return super()._process_prepared(prep, report)
+
+    return _Crashing
+
+
+@_PROPERTY_SETTINGS
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 5))
+def test_crash_mid_overlap_reattaches_exactly_once(seed, crash_after):
+    """Kill the server while the overlapped drive is in flight (one
+    tenant's coordinator raises; the others' prefetch lanes hold
+    prepared-but-unconsumed batches), then re-attach every job on a
+    fresh server: every tenant's sink converges to the serial ground
+    truth, each window object written exactly once."""
+    events = _events(n=700, seed=seed)
+    store = CountingStore()
+    write_event_log(store, "gps/", events, segment_records=128)
+    meta = MetadataStore()
+    crash_job = f"ov-{_TENANTS[seed % len(_TENANTS)][0]}"
+
+    server = JobServer(store, meta, overlap=True)
+    for name, agg in _TENANTS:
+        server.add_tenant(name)
+        server.submit(name, _program(f"ov-{name}", agg=agg),
+                      source_prefix="gps/")
+    original = server_mod.StreamingCoordinator
+    server_mod.StreamingCoordinator = _crashing_coordinator(crash_job,
+                                                            crash_after)
+    try:
+        with pytest.raises(_Boom):
+            while server.step():
+                pass
+            server.run_until_complete()
+    finally:
+        server_mod.StreamingCoordinator = original
+    del server                                   # the crash: live state gone
+
+    server2 = JobServer(store, meta, overlap=True)
+    for name, agg in _TENANTS:
+        server2.add_tenant(name)
+        server2.submit(name, _program(f"ov-{name}", agg=agg),
+                       source_prefix="gps/", resume=True)
+    states = server2.run_until_complete()
+    assert set(states.values()) == {JobStatus.DONE}
+    for name, agg in _TENANTS:
+        sink = _sink_bytes(store, name, f"ov-{name}")
+        assert sink == _standalone(events, f"ov-{name}", agg=agg)
+        for key in sink:
+            full = f"tenants/{name}/{key}"
+            assert store.put_counts[full] == 1, full
+
+
+# ---------------------------------------------------------------------------
+# ParkPolicy: wall-clock idleness + lag thresholds
+# ---------------------------------------------------------------------------
+
+def test_park_waits_out_idle_seconds_and_max_lag_batches_dribbles():
+    events = _events(n=300, seed=11, span=60.0)
+    store = MemoryStore()
+    write_event_log(store, "gps/", events, segment_records=64)
+    server = JobServer(store, MetadataStore(),
+                       park_policy=ParkPolicy(idle_seconds=0.05, max_lag=8))
+    server.add_tenant("alice")
+    jid = server.submit("alice", _program("park-1"), source_prefix="gps/")
+    while server.step():
+        pass
+    job = server.jobs[jid]
+    # drained, but the idle clock has not run out — still RUNNING
+    assert job.state == JobStatus.RUNNING
+    time.sleep(0.06)
+    server.step()
+    assert job.state == JobStatus.PARKED
+    assert server.pool.stats()["replicas"] == 0
+
+    # a dribble at or below max_lag does NOT wake it (no cold start paid)
+    dribble1 = _events(n=5, seed=12, span=10.0, t0=60.0)
+    write_event_log(store, "gps/", dribble1, segment_records=64)
+    server.step()
+    assert job.state == JobStatus.PARKED
+    assert server.status(jid)["lag"] == 5
+
+    # crossing max_lag wakes it and the whole backlog drains
+    dribble2 = _events(n=10, seed=13, span=10.0, t0=70.0)
+    write_event_log(store, "gps/", dribble2, segment_records=64)
+    server.step()
+    assert job.state == JobStatus.RUNNING
+    assert server.registry.record(jid)["restores"] >= 1
+    states = server.run_until_complete()
+    assert states[jid] == JobStatus.DONE
+    assert _sink_bytes(store, "alice", "park-1") == \
+        _standalone(events + dribble1 + dribble2, "park-1")
+
+
+def test_park_policy_validates():
+    with pytest.raises(ValueError, match="idle_seconds"):
+        JobServer(MemoryStore(), MetadataStore(),
+                  park_policy=ParkPolicy(idle_seconds=-1.0))
+    with pytest.raises(ValueError, match="max_lag"):
+        ParkPolicy(max_lag=-1).validate()
+
+
+def test_per_job_park_policy_overrides_server_default():
+    events = _events(n=200, seed=14)
+    store = MemoryStore()
+    write_event_log(store, "gps/", events, segment_records=64)
+    # server default would never park in this test; the job's own policy
+    # parks on the first idle observation
+    server = JobServer(store, MetadataStore(),
+                       park_policy=ParkPolicy(idle_seconds=60.0))
+    server.add_tenant("alice")
+    jid = server.submit("alice", _program("park-2"), source_prefix="gps/",
+                        park_policy=ParkPolicy(idle_seconds=0.0))
+    while server.step():
+        pass
+    server.step()
+    assert server.jobs[jid].state == JobStatus.PARKED
+
+
+# ---------------------------------------------------------------------------
+# Compute metering + pool-time quotas
+# ---------------------------------------------------------------------------
+
+def test_status_reports_per_job_compute_bill():
+    events = _events(n=400, seed=15)
+    store = MemoryStore()
+    write_event_log(store, "gps/", events, segment_records=64)
+    server = JobServer(store, MetadataStore())
+    server.add_tenant("alice")
+    server.add_tenant("bob")
+    a = server.submit("alice", _program("meter-a"), source_prefix="gps/")
+    b = server.submit("bob", _program("meter-b", agg="count"),
+                      source_prefix="gps/")
+    server.run_until_complete()
+    for jid in (a, b):
+        s = server.status(jid)
+        assert s["pool_seconds"] > 0
+        assert s["fold_invocations"] > 0
+        # persisted into the metadata record, so the metadata-only client
+        # sees the same bill
+        rec = server.registry.record(jid)
+        assert rec["pool_seconds"] == s["pool_seconds"]
+        assert rec["fold_invocations"] == s["fold_invocations"]
+    # the meters split the one shared pool's accounting, not duplicate it
+    total = server.pool.stats()["invocations"]
+    metered = sum(j.meter.invocations for j in server.jobs.values())
+    assert 0 < metered <= total
+
+
+def test_pool_time_quota_fails_only_the_offending_tenant():
+    events = _events(n=400, seed=16)
+    store = MemoryStore()
+    write_event_log(store, "gps/", events, segment_records=64)
+    server = JobServer(store, MetadataStore())
+    server.add_tenant("rich")
+    server.add_tenant("broke", quota_pool_seconds=1e-9)
+    r = server.submit("rich", _program("quota-ok"), source_prefix="gps/")
+    p = server.submit("broke", _program("quota-poor", agg="count"),
+                      source_prefix="gps/")
+    states = server.run_until_complete()
+    assert states[r] == JobStatus.DONE
+    assert states[p] == JobStatus.FAILED
+    assert "ComputeQuotaExceeded" in server.jobs[p].error
+    assert "ComputeQuotaExceeded" in server.status(p)["error"]
+    assert _sink_bytes(store, "rich", "quota-ok") == \
+        _standalone(events, "quota-ok")
+
+
+def test_compute_quota_exceeded_is_exported():
+    assert issubclass(ComputeQuotaExceeded, RuntimeError)
+
+
+# ---------------------------------------------------------------------------
+# Status fix: parked / re-attached jobs report the checkpointed position
+# ---------------------------------------------------------------------------
+
+def test_reattached_job_status_reports_checkpointed_offset_not_zero():
+    events = _events(n=400, seed=17)
+    store = MemoryStore()
+    meta = MetadataStore()
+    write_event_log(store, "gps/", events[:300], segment_records=64)
+    server = JobServer(store, meta,
+                       park_policy=ParkPolicy(idle_seconds=0.0))
+    server.add_tenant("alice")
+    jid = server.submit("alice", _program("stat-1"), source_prefix="gps/")
+    while server.step():
+        pass
+    assert server.jobs[jid].state == JobStatus.PARKED
+    parked = server.status(jid)
+    assert parked["cursor"] == 300 == parked["checkpointed_offset"]
+    assert parked["lag"] == 0
+    del server                                  # crash
+
+    write_event_log(store, "gps/", events[300:], segment_records=64)
+    server2 = JobServer(store, meta)
+    server2.add_tenant("alice")
+    server2.submit("alice", _program("stat-1"), source_prefix="gps/",
+                   resume=True)
+    # the regression: before its first drive the re-attached job's live
+    # cursor is 0 — status must answer from the durable checkpoint
+    s = server2.status(jid)
+    assert s["cursor"] == 300 == s["checkpointed_offset"]
+    server2.ingests["gps"].pump()
+    assert server2.status(jid)["lag"] == 100
+    states = server2.run_until_complete()
+    assert states[jid] == JobStatus.DONE
+    assert _sink_bytes(store, "alice", "stat-1") == \
+        _standalone(events, "stat-1")

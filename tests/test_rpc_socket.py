@@ -1,0 +1,213 @@
+"""Frame RPC transport (``repro.core.rpc``) and the socket control plane.
+
+Unit tests pin the wire contract — length-prefixed JSON frames, the
+oversize cap, error replies instead of torn connections, dispatch
+serialization under the server lock, and bounded client retries.  The
+end-to-end test then runs a real :class:`JobSocketServer` in a *child
+process* and drives submit/pause/resume/status/drain through a
+``JobServiceClient(address=...)`` from the parent — the issue's
+acceptance criterion that control-plane verbs round-trip across a
+process boundary.
+"""
+
+import multiprocessing as mp
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.core.rpc import (MAX_FRAME_BYTES, FrameClient, FrameServer,
+                            RPCError, recv_frame, send_frame)
+
+# ---------------------------------------------------------------------------
+# Wire-format units
+# ---------------------------------------------------------------------------
+
+
+def test_send_recv_frame_roundtrip_over_socketpair():
+    a, b = socket.socketpair()
+    try:
+        msg = {"method": "status", "job_id": "j1", "n": [1, 2, 3]}
+        send_frame(a, msg)
+        assert recv_frame(b) == msg
+        # several frames back to back stay framed
+        for i in range(3):
+            send_frame(a, {"i": i})
+        assert [recv_frame(b)["i"] for _ in range(3)] == [0, 1, 2]
+    finally:
+        a.close()
+        b.close()
+
+
+def test_recv_frame_returns_none_on_clean_eof_and_raises_mid_frame():
+    a, b = socket.socketpair()
+    a.close()
+    assert recv_frame(b) is None          # EOF between frames: orderly
+    b.close()
+
+    a, b = socket.socketpair()
+    try:
+        a.sendall(b"\x00\x00")            # half a length header
+        a.close()
+        with pytest.raises(ConnectionError, match="mid-frame"):
+            recv_frame(b)
+    finally:
+        b.close()
+
+
+def test_oversize_frames_rejected_both_directions():
+    a, b = socket.socketpair()
+    try:
+        with pytest.raises(ValueError, match="exceeds"):
+            send_frame(a, "x" * MAX_FRAME_BYTES)   # + quotes > cap
+        # a corrupt header claiming gigabytes must not allocate them
+        import struct
+        a.sendall(struct.pack(">I", MAX_FRAME_BYTES + 1))
+        with pytest.raises(RPCError, match="MAX_FRAME_BYTES"):
+            recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# FrameServer / FrameClient
+# ---------------------------------------------------------------------------
+
+
+def test_frame_server_echo_roundtrip():
+    with FrameServer(lambda req: {"ok": True, "echo": req}) as srv:
+        with FrameClient(srv.address) as client:
+            assert client.call({"x": 1}) == {"ok": True, "echo": {"x": 1}}
+            # the connection persists across calls
+            for i in range(5):
+                assert client.call({"i": i})["echo"]["i"] == i
+
+
+def test_handler_errors_become_error_replies_not_disconnects():
+    def handle(req):
+        if req.get("boom"):
+            raise ValueError("kaput")
+        return {"ok": True, "obj": object()}    # not JSON-serializable
+
+    with FrameServer(handle) as srv, FrameClient(srv.address) as client:
+        resp = client.call({"boom": True})
+        assert resp["ok"] is False and "ValueError: kaput" in resp["error"]
+        resp = client.call({})
+        assert resp["ok"] is False and "TypeError" in resp["error"]
+        # and the connection survived both
+        assert client.call({"boom": True})["ok"] is False
+
+
+def test_concurrent_clients_serialize_through_the_dispatch_lock():
+    state = {"n": 0}
+
+    def handle(req):
+        seen = state["n"]
+        time.sleep(0.002)                 # widen any race window
+        state["n"] = seen + 1
+        return {"ok": True, "n": state["n"]}
+
+    with FrameServer(handle) as srv:
+        def worker():
+            with FrameClient(srv.address) as c:
+                for _ in range(10):
+                    c.call({})
+
+        threads = [threading.Thread(target=worker) for _ in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert state["n"] == 30               # lost updates ⇒ lock is broken
+
+
+def test_client_exhausts_retries_then_raises_rpcerror():
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()                         # nobody listening here now
+    client = FrameClient(("127.0.0.1", port), timeout=0.2, retries=1,
+                         retry_delay=0.01)
+    with pytest.raises(RPCError, match="after 2 attempt"):
+        client.call({"method": "status"})
+
+
+# ---------------------------------------------------------------------------
+# End to end: control plane across a real process boundary
+# ---------------------------------------------------------------------------
+
+
+def _serve_job_service(conn):
+    """Child process: stand up a JobServer behind a JobSocketServer,
+    report the bound address, serve until the parent says done."""
+    from repro.core import MemoryStore, MetadataStore
+    from repro.launch.serve import JobRPC, JobSocketServer
+    from repro.pipeline import Pipeline, Windowing
+    from repro.service import JobServer
+    from repro.streaming import write_event_log
+
+    events = [(float(i) * 0.5, f"k{i % 4}", float(i % 7)) for i in range(200)]
+    store = MemoryStore()
+    write_event_log(store, "gps/", events, segment_records=64)
+    server = JobServer(store, MetadataStore())
+    server.add_tenant("alice")
+    program = (Pipeline.from_source(batch_records=50).key_by()
+               .window(Windowing.tumbling(25.0)).reduce("sum")
+               .sink("stream-output/")
+               .build(num_buckets=16, n_workers=4, batch_records=50,
+                      job_id="rollup-1"))
+    rpc = JobRPC(server)
+    rpc.register("rollup", program)
+    with JobSocketServer(rpc) as srv:
+        conn.send(list(srv.address))
+        conn.recv()                       # block until the parent is done
+    conn.close()
+
+
+def test_control_plane_verbs_round_trip_between_processes():
+    from repro.core import JobServiceClient
+
+    ctx = mp.get_context("spawn")         # fresh interpreter: no inherited
+    parent_conn, child_conn = ctx.Pipe()  # JAX/thread state from pytest
+    proc = ctx.Process(target=_serve_job_service, args=(child_conn,),
+                       daemon=True)
+    proc.start()
+    try:
+        assert parent_conn.poll(120), "server child never came up"
+        address = tuple(parent_conn.recv())
+        client = JobServiceClient(address=address, timeout=30.0)
+        try:
+            jid = client.submit("alice", "rollup", source_prefix="gps/")
+            assert client.status(jid)["state"] == "PENDING"
+
+            client.pause(jid)
+            assert client.status(jid)["state"] == "PAUSED"
+            client.resume(jid)
+            assert client.status(jid)["state"] != "PAUSED"
+
+            states = client.drain(timeout=120.0)
+            assert states[jid] == "DONE"
+            st = client.status(jid)
+            assert st["state"] == "DONE"
+            assert st["windows_emitted"] > 0
+            assert st["checkpointed_offset"] == 200 and st["lag"] == 0
+            assert st["fold_invocations"] > 0 and st["pool_seconds"] > 0
+            assert jid in client.jobs()
+
+            # server-side exceptions surface as RPCError with the cause
+            with pytest.raises(RPCError, match="KeyError"):
+                client.status("no-such-job")
+            # unknown program name likewise
+            with pytest.raises(RPCError, match="no program registered"):
+                client.submit("alice", "ghost", source_prefix="gps/")
+        finally:
+            client.close()
+        parent_conn.send("done")
+        proc.join(timeout=30)
+        assert proc.exitcode == 0
+    finally:
+        if proc.is_alive():
+            proc.terminate()
+            proc.join(timeout=10)
